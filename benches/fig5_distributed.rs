@@ -1,0 +1,110 @@
+//! Figure 5 — Learning Speed by Distributed Deep Learning.
+//!
+//! The paper varies 1–4 browser clients training the conv layers while
+//! the server trains the FC layers, and plots training speed relative to
+//! stand-alone:
+//!
+//! * FC line: ≈1.5× stand-alone, flat in the number of clients (the
+//!   server is devoted to FC work);
+//! * conv line: grows ∝ clients;
+//! * total at 4 clients ≈ 2× stand-alone.
+//!
+//! Here every device (server and clients) is modelled at the same speed
+//! factor (DESIGN.md §7), so the ratios are internally consistent:
+//! stand-alone = the padded server running the fused full train-step;
+//! distributed = the hybrid algorithm on a live cluster.  The paper's
+//! Fig 4 net has no published layer table, so the Fig 2 CIFAR topology
+//! is reused (DESIGN.md §5); because its FC block is far cheaper
+//! relative to conv than the paper's (unknown) Fig 4 net, the *FC ratio
+//! level* differs while the *shape* (flat FC, ∝N conv) is reproduced —
+//! see EXPERIMENTS.md §Fig5.
+
+use sashimi::data;
+use sashimi::dist::{self, Cluster, ClusterConfig};
+use sashimi::nn::{ParamSet, TrainEngine, XlaEngine};
+use sashimi::runtime;
+use sashimi::util::bench::{Series, Table};
+use sashimi::util::clock::PaddedTimer;
+use sashimi::util::rng::SplitMix64;
+use sashimi::worker::DeviceProfile;
+
+// Every modelled device (server + up to 4 clients) runs at 0.15x host
+// speed: 5 x 0.15 = 0.75 <= 1, so the single host core can sustain the
+// modelled fleet without queueing artifacts (DESIGN.md §7).
+const DEVICE_SPEED: f64 = 0.15;
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime::open_shared()?;
+    let net = std::env::var("SASHIMI_FIG5_NET").unwrap_or_else(|_| "cifar".into());
+    let spec = rt.net(&net)?.clone();
+    let dataset =
+        if net == "cifar" { data::cifar_train(1_000, 9) } else { data::mnist_train(1_000, 9) };
+    let rounds: u64 = std::env::var("SASHIMI_FIG5_ROUNDS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    // --- stand-alone baseline: padded server runs the fused step -------
+    let mut rng = SplitMix64::new(4);
+    let init = ParamSet::init(&spec, &mut rng);
+    let mut engine = XlaEngine::from_params(rt.clone(), &net, init)?;
+    engine.warm()?;
+    let mut loader = data::loader::BatchLoader::new(&dataset, spec.batch, 5);
+    let steps = 10;
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let (x, y, _) = loader.next_batch();
+        let timer = PaddedTimer::start();
+        engine.train_batch(&x, &y)?;
+        timer.pad_to(timer.elapsed_ms(), DEVICE_SPEED);
+    }
+    let standalone_rate = steps as f64 / t0.elapsed().as_secs_f64();
+    eprintln!("stand-alone (padded server): {standalone_rate:.3} batches/s");
+
+    // --- hybrid with 1..4 clients ---------------------------------------
+    let mut table = Table::new(
+        "Figure 5 — training speed relative to stand-alone",
+        &["clients", "conv rate", "conv ratio", "fc rate", "fc ratio", "paper conv", "paper fc"],
+    );
+    let mut series = Series::new("Fig 5 series", "clients", &["conv_ratio", "fc_ratio"]);
+    // Paper's reading from the bars: conv ∝ N (≈0.5, 1.0, 1.5, 2.0 of
+    // stand-alone for their setup), FC flat at ≈1.5.
+    let paper_conv = [0.5, 1.0, 1.5, 2.0];
+    for clients in 1..=4usize {
+        let mut cfg = ClusterConfig::quick_test(&net, clients);
+        cfg.profile = DeviceProfile::with_speed("fleet", DEVICE_SPEED);
+        cfg.n_shards = clients * 2;
+        let cluster = Cluster::start(cfg, rt.clone(), &dataset)?;
+        let hycfg = dist::hybrid::HybridConfig {
+            rounds,
+            seed: 42,
+            max_replay_per_round: 400,
+            poll_ms: 2,
+            server_speed: DEVICE_SPEED,
+        };
+        let r = dist::hybrid::train(&cluster, &hycfg)?;
+        cluster.shutdown();
+        let conv_ratio = r.stats.conv_batches_per_s / standalone_rate;
+        let fc_ratio = r.stats.fc_steps_per_s / standalone_rate;
+        table.row(&[
+            clients.to_string(),
+            format!("{:.3}", r.stats.conv_batches_per_s),
+            format!("{:.2}", conv_ratio),
+            format!("{:.3}", r.stats.fc_steps_per_s),
+            format!("{:.2}", fc_ratio),
+            format!("{:.2}", paper_conv[clients - 1]),
+            "1.50".into(),
+        ]);
+        series.point(clients as f64, &[conv_ratio, fc_ratio]);
+        eprintln!(
+            "clients={clients}: conv {:.2}x, fc {:.2}x ({} replay fc steps), loss {:.3}",
+            conv_ratio, fc_ratio, r.replay_steps, r.stats.mean_loss_last_round
+        );
+    }
+    table.print();
+    series.print();
+    println!(
+        "shape checks: conv ratio grows ≈linearly with clients; fc ratio\n\
+         is flat in clients and >1 (server devoted to FC).  The fc *level*\n\
+         exceeds the paper's 1.5 because Fig 2's FC block is far cheaper\n\
+         than conv — the paper's Fig 4 net is unpublished (DESIGN.md §5)."
+    );
+    Ok(())
+}

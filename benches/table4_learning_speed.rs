@@ -1,0 +1,110 @@
+//! Table 4 — Numbers of Batches Learned per 1 min (+ Figure 2's model).
+//!
+//! Paper (MacBook Pro, Fig 2 CIFAR CNN, batch 50):
+//!
+//! |            | ConvNetJS Node.js | ConvNetJS Firefox | Sukiyaki Node.js | Sukiyaki Firefox |
+//! |------------|-------------------|-------------------|------------------|------------------|
+//! | batches/min| 17.55             | 2.44              | 545.39           | 31.39            |
+//!
+//! Here: ConvNetJS → the faithful scalar baseline (`nn::convnetjs`),
+//! Sukiyaki → the AOT/XLA engine whose hot path is the Pallas matmul
+//! (`cifar_train_step`), both from identical weights on identical batch
+//! streams.  Two derived columns:
+//!
+//! * "browser-throttled" applies the paper's own measured engine ratios
+//!   (Firefox/Node: 7.2x for ConvNetJS, 17.4x for Sukiyaki) — we cannot
+//!   run a JS engine, so those two constants are taken from Table 4
+//!   itself and only redistribute our measured native numbers;
+//! * `cifar_train_step_jnp` (pure-jnp lowering, no Pallas) isolates the
+//!   interpret-mode kernel overhead for the §Perf log.
+
+use sashimi::data::{self, loader::BatchLoader};
+use sashimi::nn::{NativeEngine, ParamSet, TrainEngine, XlaEngine};
+use sashimi::runtime;
+use sashimi::util::bench::Table;
+use sashimi::util::rng::SplitMix64;
+use sashimi::worker::DeviceProfile;
+
+fn batches_per_min(engine: &mut dyn TrainEngine, loader: &mut BatchLoader, warmup: usize, steps: usize) -> anyhow::Result<(f64, f64)> {
+    for _ in 0..warmup {
+        let (x, y, _) = loader.next_batch();
+        engine.train_batch(&x, &y)?;
+    }
+    let t0 = std::time::Instant::now();
+    let mut last_loss = 0.0f32;
+    for _ in 0..steps {
+        let (x, y, _) = loader.next_batch();
+        last_loss = engine.train_batch(&x, &y)?;
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    Ok((60_000.0 / ms, last_loss as f64))
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime::open_shared()?;
+    let spec = rt.net("cifar")?.clone();
+    let dataset = data::cifar_train(1_000, 9);
+    let mut rng = SplitMix64::new(4);
+    let init = ParamSet::init(&spec, &mut rng);
+
+    let steps = 20;
+    let mut results: Vec<(String, f64)> = Vec::new();
+
+    {
+        let mut naive = NativeEngine::from_params(&spec, init.clone());
+        let mut loader = BatchLoader::new(&dataset, spec.batch, 5);
+        let (bpm, _) = batches_per_min(&mut naive, &mut loader, 2, steps)?;
+        results.push(("convnetjs (native rust)".into(), bpm));
+    }
+    {
+        let mut xla = XlaEngine::from_params(rt.clone(), "cifar", init.clone())?;
+        xla.warm()?;
+        let mut loader = BatchLoader::new(&dataset, spec.batch, 5);
+        let (bpm, _) = batches_per_min(&mut xla, &mut loader, 2, steps)?;
+        results.push(("sukiyaki (xla+pallas)".into(), bpm));
+    }
+    {
+        let mut jnp = XlaEngine::from_params(rt.clone(), "cifar", init.clone())?
+            .with_train_artifact("cifar_train_step_jnp");
+        let mut loader = BatchLoader::new(&dataset, spec.batch, 5);
+        let (bpm, _) = batches_per_min(&mut jnp, &mut loader, 2, steps)?;
+        results.push(("sukiyaki (pure-jnp ref)".into(), bpm));
+    }
+
+    let naive_bpm = results[0].1;
+    let pallas_bpm = results[1].1;
+
+    let mut table = Table::new(
+        "Table 4 — batches learned per minute (Fig 2 CIFAR CNN, batch 50)",
+        &["engine", "measured bpm", "browser-throttled bpm", "paper bpm (Node/Firefox)"],
+    );
+    table.row(&[
+        "ConvNetJS-analog".into(),
+        format!("{:.1}", naive_bpm),
+        format!("{:.1}", naive_bpm / DeviceProfile::firefox_convnetjs_factor()),
+        "17.55 / 2.44".into(),
+    ]);
+    table.row(&[
+        "Sukiyaki (pallas)".into(),
+        format!("{:.1}", pallas_bpm),
+        format!("{:.1}", pallas_bpm / DeviceProfile::firefox_sukiyaki_factor()),
+        "545.39 / 31.39".into(),
+    ]);
+    table.row(&[
+        "Sukiyaki (jnp ref)".into(),
+        format!("{:.1}", results[2].1),
+        format!("{:.1}", results[2].1 / DeviceProfile::firefox_sukiyaki_factor()),
+        "—".into(),
+    ]);
+    table.print();
+
+    println!(
+        "shape check: Sukiyaki/ConvNetJS speedup = {:.1}x (paper: 31.1x on Node).\n\
+         The gap narrows here because (a) the ConvNetJS stand-in runs as\n\
+         native Rust rather than a JS engine, and (b) 'GPGPU' is a single\n\
+         CPU core — see EXPERIMENTS.md §Table4 for the full analysis.",
+        pallas_bpm / naive_bpm
+    );
+    anyhow::ensure!(pallas_bpm > naive_bpm, "Sukiyaki must beat the ConvNetJS baseline");
+    Ok(())
+}

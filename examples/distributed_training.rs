@@ -1,0 +1,109 @@
+//! End-to-end driver: distributed training of the paper's Fig 2 CIFAR
+//! CNN with the §4 hybrid algorithm, on a live Sashimi cluster.
+//!
+//! This is the repository's full-stack validation (EXPERIMENTS.md §E2E):
+//! L3 coordination (tickets, distributor, browser-loop workers, dataset
+//! caching) driving L2/L1 AOT artifacts (JAX graph + Pallas kernels) for
+//! several hundred FC update steps and dozens of distributed conv
+//! rounds, logging the loss curve and finishing with a held-out
+//! error-rate evaluation — the loss must actually fall through the
+//! whole distributed pipeline, not just in a unit test.
+//!
+//! ```bash
+//! cargo run --release --example distributed_training -- \
+//!     --net cifar --clients 2 --rounds 30
+//! ```
+
+use sashimi::data::{self, loader::BatchLoader};
+use sashimi::dist::{self, Cluster, ClusterConfig};
+use sashimi::nn::{metrics, TrainEngine, XlaEngine};
+use sashimi::runtime;
+use sashimi::util::cli::Args;
+use sashimi::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let net = args.str_or("net", "cifar");
+    let clients = args.usize_or("clients", 2)?;
+    let rounds = args.u64_or("rounds", 30)?;
+    let out = args.str_or("curve-out", "");
+    args.reject_unknown()?;
+
+    let rt = runtime::open_shared()?;
+    let spec = rt.net(&net)?.clone();
+    println!(
+        "== distributed deep learning: {} ({} params, batch {}) on {clients} clients ==",
+        net,
+        spec.param_count(),
+        spec.batch
+    );
+    let dataset = if net == "cifar" {
+        data::cifar_train(2_000, 31)
+    } else {
+        data::mnist_train(2_000, 31)
+    };
+
+    let mut cfg = ClusterConfig::quick_test(&net, clients);
+    cfg.n_shards = clients.max(2) * 2; // more shards than clients: real queueing
+    let cluster = Cluster::start(cfg, rt.clone(), &dataset)?;
+    let hycfg = dist::hybrid::HybridConfig {
+        rounds,
+        seed: 42,
+        max_replay_per_round: 16,
+        poll_ms: 2,
+        ..Default::default()
+    };
+    let result = dist::hybrid::train(&cluster, &hycfg)?;
+    let reports = cluster.shutdown();
+
+    println!("\nloss curve (round, wall ms, mean loss):");
+    print!("{}", result.loss_curve.dump("hybrid-cifar"));
+    if !out.is_empty() {
+        std::fs::write(&out, result.loss_curve.dump("hybrid-cifar"))?;
+        println!("curve written to {out}");
+    }
+    println!(
+        "\nconv: {} batches ({:.2}/s) | fc: {} steps ({:.2}/s, {} replay) | {:.1} MB moved",
+        result.conv_batches,
+        result.stats.conv_batches_per_s,
+        result.fc_steps,
+        result.stats.fc_steps_per_s,
+        result.replay_steps,
+        (result.stats.bytes.0 + result.stats.bytes.1) as f64 / 1e6,
+    );
+    for (i, r) in reports.iter().enumerate() {
+        println!("client{i}: {} tickets, {} data fetches", r.tickets_completed, r.data_fetches);
+    }
+
+    let head = result.loss_curve.head_mean(3);
+    let tail = result.loss_curve.tail_mean(3);
+    println!("\nloss: first rounds {head:.4} -> last rounds {tail:.4}");
+    anyhow::ensure!(tail < head, "distributed training failed to reduce the loss");
+
+    // Held-out evaluation: train a standalone reference for the same
+    // number of gradient steps and compare error rates, closing the loop
+    // between the distributed pipeline and the standalone engine.
+    let eval_data =
+        if net == "cifar" { data::cifar_test(500, 32) } else { data::mnist_test(500, 32) };
+    let mut rng = SplitMix64::new(42);
+    let mut standalone = XlaEngine::new(rt, &net, &mut rng)?;
+    standalone.warm()?;
+    let mut loader = BatchLoader::new(&dataset, spec.batch, 5);
+    for _ in 0..result.conv_batches {
+        let (x, y, _) = loader.next_batch();
+        standalone.train_batch(&x, &y)?;
+    }
+    let mut eval_loader = BatchLoader::new(&eval_data, spec.batch, 6);
+    let mut errs = Vec::new();
+    for _ in 0..5 {
+        let (x, _, labels) = eval_loader.next_batch();
+        errs.push(metrics::error_rate(&standalone.forward(&x)?, &labels) as f64);
+    }
+    let err = errs.iter().sum::<f64>() / errs.len() as f64;
+    println!(
+        "standalone reference after {} steps: held-out error {:.1}% (chance 90%)",
+        result.conv_batches,
+        err * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! PrimeListMakerProject — the paper's appendix sample, line for line.
+//!
+//! Source Code 1 (`prime_list_maker_project.js`):
+//! ```js
+//! var task = this.createTask(IsPrimeTask);
+//! var inputs = [];
+//! for (var i = 1; i <= 10000; i++) inputs.push({ candidate: i });
+//! task.calculate(inputs);
+//! task.block(function(results) { ... });
+//! ```
+//!
+//! Here: the same project through `Framework::create_task` /
+//! `TaskHandle::calculate` / `TaskHandle::block`, with four simulated
+//! browser nodes pulling tickets from the distributor, then the console
+//! the paper's HTTPServer would render.
+//!
+//! ```bash
+//! cargo run --release --example prime_list
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sashimi::coordinator::{console, Distributor, Framework};
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::transport::{local, Conn, LinkModel};
+use sashimi::util::json::Value;
+use sashimi::worker::{DeviceProfile, Worker};
+
+fn main() -> anyhow::Result<()> {
+    // PrimeListMakerProject.run()
+    let fw = Framework::builder().build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    let inputs: Vec<Value> =
+        (1..=10_000).map(|i| Value::obj(vec![("candidate", Value::num(i as f64))])).collect();
+    task.calculate(inputs);
+
+    // The Distributor + four browsers that "accessed the website".
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..4)
+        .map(|i| {
+            let connector = connector.clone();
+            let registry = fw.registry_snapshot();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut w = Worker::new(&format!("browser{i}"), DeviceProfile::native(), registry);
+                w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+            })
+        })
+        .collect();
+
+    // task.block(function(results) { ... })
+    let t0 = std::time::Instant::now();
+    let results = task.block();
+    let elapsed = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::SeqCst);
+
+    let primes: Vec<usize> = results
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.get("is_prime").unwrap().as_bool().unwrap())
+        .map(|(i, _)| i + 1)
+        .collect();
+    for p in primes.iter().take(10) {
+        println!("{p} is a prime number.");
+    }
+    println!("... {} primes below 10,000 in {:.2}s across 4 browser nodes", primes.len(), elapsed);
+    assert_eq!(primes.len(), 1229); // π(10000)
+
+    println!("\n{}", console::render(&console::snapshot(&dist)));
+    for w in workers {
+        let report = w.join().unwrap();
+        println!(
+            "worker: {:>5} tickets, {} task fetch, {} reloads",
+            report.tickets_completed, report.task_fetches, report.reloads
+        );
+    }
+    Ok(())
+}

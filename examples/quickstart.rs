@@ -1,0 +1,80 @@
+//! Quickstart: the Sukiyaki engine API in five minutes.
+//!
+//! Trains the MNIST-shaped CNN through the AOT/XLA engine, evaluates the
+//! error rate, round-trips the model through the paper's JSON+base64
+//! model file, and shows the ConvNetJS-style baseline on the same init.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use sashimi::data::{self, loader::BatchLoader};
+use sashimi::nn::model_file::ModelFile;
+use sashimi::nn::{metrics, NativeEngine, ParamSet, TrainEngine, XlaEngine};
+use sashimi::runtime;
+use sashimi::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the PJRT runtime over the AOT artifacts (`make artifacts`).
+    let rt = runtime::open_shared()?;
+    println!("runtime: {} | nets: {:?}", rt.platform(), rt.manifest().nets.keys());
+    let spec = rt.net("mnist")?.clone();
+
+    // 2. Synthetic MNIST (no network access in this environment; see
+    //    DESIGN.md §2) and a deterministic batch stream.
+    let train = data::mnist_train(2_000, 1);
+    let test = data::mnist_test(500, 2);
+    let mut loader = BatchLoader::new(&train, spec.batch, 3);
+
+    // 3. Sukiyaki engine: one fused train-step artifact per mini-batch.
+    let mut rng = SplitMix64::new(7);
+    let init = ParamSet::init(&spec, &mut rng);
+    let mut engine = XlaEngine::from_params(rt.clone(), "mnist", init.clone())?;
+    engine.warm()?; // compile outside the timed loop
+
+    let t0 = std::time::Instant::now();
+    let steps = 60;
+    for step in 0..steps {
+        let (x, y, _) = loader.next_batch();
+        let loss = engine.train_batch(&x, &y)?;
+        if step % 10 == 0 {
+            println!("step {step:>3}  loss {loss:.4}");
+        }
+    }
+    let ms_per_step = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    println!("sukiyaki-xla: {:.1} ms/step = {:.0} batches/min", ms_per_step, 60_000.0 / ms_per_step);
+
+    // 4. Evaluate on held-out data.
+    let mut test_loader = BatchLoader::new(&test, spec.batch, 4);
+    let mut errs = Vec::new();
+    for _ in 0..5 {
+        let (x, _, labels) = test_loader.next_batch();
+        errs.push(metrics::error_rate(&engine.forward(&x)?, &labels));
+    }
+    let err = errs.iter().sum::<f32>() / errs.len() as f32;
+    println!("held-out error rate after {steps} steps: {:.1}% (chance 90%)", err * 100.0);
+
+    // 5. Model file round-trip (§3.1: JSON + base64, no rounding error).
+    let path = std::env::temp_dir().join("sukiyaki_mnist.json");
+    ModelFile { net: "mnist".into(), step: steps as u64, params: engine.params().clone(), accums: None }
+        .save(&path)?;
+    let loaded = ModelFile::load(&path, &spec.param_names)?;
+    assert_eq!(loaded.params.get("fc_w")?.data(), engine.params().get("fc_w")?.data());
+    println!("model file round-trip OK: {}", path.display());
+
+    // 6. The ConvNetJS-style baseline from the identical init.
+    let mut baseline = NativeEngine::from_params(&spec, init);
+    let mut loader2 = BatchLoader::new(&train, spec.batch, 3);
+    let t1 = std::time::Instant::now();
+    for _ in 0..10 {
+        let (x, y, _) = loader2.next_batch();
+        baseline.train_batch(&x, &y)?;
+    }
+    let base_ms = t1.elapsed().as_secs_f64() * 1e3 / 10.0;
+    println!(
+        "convnetjs-naive: {:.1} ms/step — sukiyaki speedup {:.1}x (Table 4's comparison)",
+        base_ms,
+        base_ms / ms_per_step
+    );
+    Ok(())
+}

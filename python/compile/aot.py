@@ -1,0 +1,359 @@
+"""AOT lowering: every L2 graph -> artifacts/<name>.hlo.txt + manifest.json.
+
+Run via `make artifacts` (a no-op when inputs are unchanged).  The Rust
+runtime (`rust/src/runtime`) loads the manifest, compiles each HLO text
+module on the PJRT CPU client once, and executes from the request path.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` crate binds) rejects; the text parser reassigns ids.
+
+Besides the HLO, this writes `artifacts/golden.json`: for every artifact,
+a SplitMix64 seed for each input plus checksums of every output computed
+here with the same jitted function.  The Rust test-suite regenerates the
+inputs bit-identically (util::rng) and compares — cross-language numeric
+validation without shipping megabytes of tensors.
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--only NAME] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, prand
+from .model import CIFAR, MNIST, NETS, NetSpec
+
+F32 = jnp.float32
+
+
+def spec(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def _param_specs(net: NetSpec) -> list[jax.ShapeDtypeStruct]:
+    shapes = net.param_shapes()
+    return [spec(shapes[n]) for n in net.param_names()]
+
+
+def _named(net: NetSpec, suffix: str = "") -> list[str]:
+    return [n + suffix for n in net.param_names()]
+
+
+class Artifact:
+    """One lowerable graph: flat f32 inputs -> tuple of f32 outputs."""
+
+    def __init__(self, name, fn, input_names, input_specs, output_names):
+        assert len(input_names) == len(input_specs)
+        self.name = name
+        self.fn = fn
+        self.input_names = input_names
+        self.input_specs = input_specs
+        self.output_names = output_names
+
+    def lower_hlo_text(self) -> str:
+        lowered = jax.jit(self.fn).lower(*self.input_specs)
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        return comp.as_hlo_text()
+
+    def golden(self, seed_base: int) -> dict:
+        """Seeded inputs -> output checksums (inputs regenerable in Rust)."""
+        inputs, seeds = [], []
+        for i, s in enumerate(self.input_specs):
+            seed = seed_base + i
+            arr = prand.uniform_f32_array(seed, s.shape)
+            # One-hot label inputs must be valid distributions for the loss
+            # to be meaningful, but checksum validation only needs numeric
+            # agreement, so plain uniform values are fine and simpler.
+            inputs.append(jnp.asarray(arr))
+            seeds.append(seed)
+        outs = jax.jit(self.fn)(*inputs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        return {
+            "input_seeds": seeds,
+            "outputs": {
+                name: prand.checksum(np.asarray(o))
+                for name, o in zip(self.output_names, outs)
+            },
+        }
+
+    def manifest_entry(self, filename: str) -> dict:
+        return {
+            "file": filename,
+            "inputs": [
+                {"name": n, "shape": list(s.shape)}
+                for n, s in zip(self.input_names, self.input_specs)
+            ],
+            "outputs": [{"name": n} for n in self.output_names],
+        }
+
+
+def build_artifacts() -> list[Artifact]:
+    arts: list[Artifact] = []
+
+    # --- tiny smoke graph for runtime unit tests --------------------------
+    arts.append(
+        Artifact(
+            "smoke_matmul",
+            model.smoke_matmul,
+            ["a", "b"],
+            [spec((8, 16)), spec((16, 4))],
+            ["out"],
+        )
+    )
+
+    # --- per-net graphs ----------------------------------------------------
+    for net in (CIFAR, MNIST):
+        pn = net.param_names()
+        np_ = len(pn)
+        nconv = len(net.conv_param_names())
+        x_s, y_s = spec(net.x_shape), spec((net.batch, net.n_classes))
+        feat_s = spec((net.batch, net.fc_in))
+        psets = _param_specs(net)
+        conv_psets = psets[:nconv]
+
+        def mk_train(net=net, np_=np_):
+            def f(*args):
+                params, accums = list(args[:np_]), list(args[np_ : 2 * np_])
+                x, y = args[2 * np_], args[2 * np_ + 1]
+                new_p, new_a, loss = model.train_step(net, params, accums, x, y)
+                return (*new_p, *new_a, loss)
+
+            return f
+
+        arts.append(
+            Artifact(
+                f"{net.name}_train_step",
+                mk_train(),
+                pn + [n + "_acc" for n in pn] + ["x", "y"],
+                psets + psets + [x_s, y_s],
+                [n + "_new" for n in pn] + [n + "_acc_new" for n in pn] + ["loss"],
+            )
+        )
+
+        def mk_forward(net=net, np_=np_):
+            def f(*args):
+                return (model.forward(net, list(args[:np_]), args[np_]),)
+
+            return f
+
+        arts.append(
+            Artifact(
+                f"{net.name}_forward",
+                mk_forward(),
+                pn + ["x"],
+                psets + [x_s],
+                ["probs"],
+            )
+        )
+
+        def mk_grad(net=net, np_=np_):
+            def f(*args):
+                grads, loss = model.grad_all(net, list(args[:np_]), args[np_], args[np_ + 1])
+                return (*grads, loss)
+
+            return f
+
+        arts.append(
+            Artifact(
+                f"{net.name}_grad",
+                mk_grad(),
+                pn + ["x", "y"],
+                psets + [x_s, y_s],
+                [n + "_grad" for n in pn] + ["loss"],
+            )
+        )
+
+        def mk_conv_fwd(net=net, nconv=nconv):
+            def f(*args):
+                return (model.conv_forward(net, list(args[:nconv]), args[nconv]),)
+
+            return f
+
+        arts.append(
+            Artifact(
+                f"{net.name}_conv_fwd",
+                mk_conv_fwd(),
+                net.conv_param_names() + ["x"],
+                conv_psets + [x_s],
+                ["feat"],
+            )
+        )
+
+        def mk_conv_grad(net=net, nconv=nconv):
+            def f(*args):
+                grads = model.conv_grad(net, list(args[:nconv]), args[nconv], args[nconv + 1])
+                return tuple(grads)
+
+            return f
+
+        arts.append(
+            Artifact(
+                f"{net.name}_conv_grad",
+                mk_conv_grad(),
+                net.conv_param_names() + ["x", "dfeat"],
+                conv_psets + [x_s, feat_s],
+                [n + "_grad" for n in net.conv_param_names()],
+            )
+        )
+
+        def mk_fc_step(net=net):
+            def f(fc_w, fc_b, acc_w, acc_b, feat, y):
+                return model.fc_step(net, fc_w, fc_b, acc_w, acc_b, feat, y)
+
+            return f
+
+        shapes = net.param_shapes()
+        arts.append(
+            Artifact(
+                f"{net.name}_fc_step",
+                mk_fc_step(),
+                ["fc_w", "fc_b", "fc_w_acc", "fc_b_acc", "feat", "y"],
+                [spec(shapes["fc_w"]), spec(shapes["fc_b"]), spec(shapes["fc_w"]), spec(shapes["fc_b"]), feat_s, y_s],
+                ["fc_w_new", "fc_b_new", "fc_w_acc_new", "fc_b_acc_new", "dfeat", "loss"],
+            )
+        )
+
+    # --- pure-jnp oracle variant of the CIFAR train step (perf baseline) ---
+    def cifar_train_jnp(*args):
+        np_ = len(CIFAR.param_names())
+        params, accums = list(args[:np_]), list(args[np_ : 2 * np_])
+        x, y = args[2 * np_], args[2 * np_ + 1]
+        new_p, new_a, loss = model.train_step(CIFAR, params, accums, x, y, oracle=True)
+        return (*new_p, *new_a, loss)
+
+    pn = CIFAR.param_names()
+    psets = _param_specs(CIFAR)
+    arts.append(
+        Artifact(
+            "cifar_train_step_jnp",
+            cifar_train_jnp,
+            pn + [n + "_acc" for n in pn] + ["x", "y"],
+            psets + psets + [spec(CIFAR.x_shape), spec((CIFAR.batch, CIFAR.n_classes))],
+            [n + "_new" for n in pn] + [n + "_acc_new" for n in pn] + ["loss"],
+        )
+    )
+
+    # --- kNN chunk (Table 2) ------------------------------------------------
+    for qn, cn, tag in ((100, 2000, ""), (20, 200, "_small")):
+        def mk_knn(qn=qn, cn=cn):
+            def f(q, t):
+                return model.knn_chunk(q, t)
+
+            return f
+
+        arts.append(
+            Artifact(
+                f"knn_chunk{tag}",
+                mk_knn(),
+                ["q", "t"],
+                [spec((qn, 784)), spec((cn, 784))],
+                ["min_dist2", "argmin"],
+            )
+        )
+
+    # --- standalone AdaGrad-β update (server-side aggregated apply) --------
+    def adagrad_fn(theta, accum, grad):
+        from .kernels import adagrad as k
+
+        return k.adagrad_update(theta, accum, grad, model.LR, model.BETA)
+
+    arts.append(
+        Artifact(
+            "adagrad_update",
+            adagrad_fn,
+            ["theta", "accum", "grad"],
+            [spec((4096,))] * 3,
+            ["theta_new", "accum_new"],
+        )
+    )
+
+    return arts
+
+
+def _nets_manifest() -> dict:
+    out = {}
+    for net in NETS.values():
+        out[net.name] = {
+            "input_hw": net.input_hw,
+            "input_c": net.input_c,
+            "batch": net.batch,
+            "n_classes": net.n_classes,
+            "fc_in": net.fc_in,
+            "convs": [
+                {"kh": c.kh, "kw": c.kw, "cin": c.cin, "cout": c.cout, "pad": c.pad}
+                for c in net.convs
+            ],
+            "param_names": net.param_names(),
+            "param_shapes": {k: list(v) for k, v in net.param_shapes().items()},
+            "lr": model.LR,
+            "beta": model.BETA,
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower just one artifact")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    arts = build_artifacts()
+    if args.list:
+        for a in arts:
+            print(a.name)
+        return
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "nets": _nets_manifest(), "artifacts": {}}
+    golden: dict = {}
+    man_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest["artifacts"] = json.load(f).get("artifacts", {})
+        gpath = os.path.join(out_dir, "golden.json")
+        if os.path.exists(gpath):
+            with open(gpath) as f:
+                golden = json.load(f)
+
+    for a in arts:
+        if args.only and a.name != args.only:
+            continue
+        t0 = time.time()
+        filename = f"{a.name}.hlo.txt"
+        text = a.lower_hlo_text()
+        with open(os.path.join(out_dir, filename), "w") as f:
+            f.write(text)
+        manifest["artifacts"][a.name] = a.manifest_entry(filename)
+        if not args.skip_golden:
+            seed_base = int.from_bytes(hashlib.sha256(a.name.encode()).digest()[:4], "big")
+            golden[a.name] = a.golden(seed_base)
+        print(f"lowered {a.name}: {len(text)} chars in {time.time() - t0:.1f}s", flush=True)
+
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    print(f"manifest: {man_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

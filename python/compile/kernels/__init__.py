@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp oracles."""

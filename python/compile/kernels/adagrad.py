@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: element-wise AdaGrad-β parameter update.
+
+The paper modifies AdaGrad with a constant β under the square root
+(§3.1) because Σg² is minuscule early in training and the vanilla rule
+diverges.  This kernel is the per-element WebCL update kernel re-shaped
+for the VPU: parameters are flattened to 1-D and processed in 1-D VMEM
+blocks; each block does two multiplies, an add, a rsqrt and an fma —
+purely element-wise, so any block size that divides into VMEM works.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Element-wise update: any block size is VMEM-legal; big blocks mean one
+# interpreter step per tensor on CPU (the dominant cost under
+# interpret=True — see EXPERIMENTS.md §Perf).  4M floats = 16 MiB.
+BLOCK = int(__import__("os").environ.get("SASHIMI_ADAGRAD_BLOCK", 4 * 1024 * 1024))
+
+
+def _adagrad_kernel(lr: float, beta: float, theta_ref, accum_ref, grad_ref, new_theta_ref, new_accum_ref):
+    g = grad_ref[...]
+    acc = accum_ref[...] + g * g
+    new_accum_ref[...] = acc
+    new_theta_ref[...] = theta_ref[...] - lr * g * jax.lax.rsqrt(beta + acc)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "beta"))
+def adagrad_update(
+    theta: jax.Array, accum: jax.Array, grad: jax.Array, lr: float, beta: float
+) -> tuple[jax.Array, jax.Array]:
+    """Apply one AdaGrad-β step to a parameter tensor of any shape.
+
+    Returns (theta', accum').  lr/β are compile-time constants — they are
+    baked into the artifact, mirroring Sukiyaki's per-run configuration.
+    """
+    shape = theta.shape
+    n = theta.size
+    blk = min(BLOCK, n)
+    gridn = -(-n // blk)
+    padded = gridn * blk
+
+    def flat(x):
+        f = x.astype(jnp.float32).reshape(-1)
+        return jnp.pad(f, (0, padded - n)) if padded != n else f
+
+    new_theta, new_accum = pl.pallas_call(
+        functools.partial(_adagrad_kernel, lr, beta),
+        grid=(gridn,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((blk,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((padded,), jnp.float32)] * 2,
+        interpret=True,
+    )(flat(theta), flat(accum), flat(grad))
+    return new_theta[:n].reshape(shape), new_accum[:n].reshape(shape)

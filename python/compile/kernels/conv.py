@@ -1,0 +1,51 @@
+"""L1 composite: convolution = im2col + Pallas matmul (the Sushi trick).
+
+Sukiyaki implements its conv layers exactly this way on WebCL: patches are
+unfolded and the whole layer becomes one big matmul against the weight
+matrix in [kh*kw*cin, cout] layout.  We keep the identical layout on the
+Rust/model-file side so parameters round-trip without permutation.
+
+im2col itself is differentiable jnp slicing (its transpose is the
+col2im scatter, derived automatically), so jax.grad through `conv2d`
+yields a backward pass whose FLOPs all land in the Pallas matmul kernel:
+    dW = patches^T @ g        (Pallas matmul)
+    dpatches = g @ W^T        (Pallas matmul)  -> col2im -> dx
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def im2col(x: jax.Array, kh: int, kw: int, pad: int) -> jax.Array:
+    """[B,H,W,C] -> [B,Ho,Wo,kh*kw*C], stride 1, symmetric zero padding.
+
+    Patch channel order is (dy, dx, c) row-major — matches ref.im2col and
+    the Rust-side weight layout.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h_out = h + 2 * pad - kh + 1
+    w_out = w + 2 * pad - kw + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h_out, dx : dx + w_out, :])
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b, h_out, w_out, kh * kw * c)
+
+
+def conv2d(x: jax.Array, w: jax.Array, bias: jax.Array, kh: int, kw: int, pad: int) -> jax.Array:
+    """NHWC stride-1 convolution through the Pallas matmul kernel.
+
+    w: [kh*kw*cin, cout] (im2col layout), bias: [cout].
+    """
+    b = x.shape[0]
+    patches = im2col(x, kh, kw, pad)
+    h_out, w_out, pk = patches.shape[1], patches.shape[2], patches.shape[3]
+    flat = patches.reshape(b * h_out * w_out, pk)
+    out = mm.matmul_bias(flat, w, bias)
+    return out.reshape(b, h_out, w_out, w.shape[1])

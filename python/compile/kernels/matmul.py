@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: tiled f32 matmul — the Sushi hot spot.
+
+The paper's Sukiyaki runs every FC layer and (via im2col) every conv layer
+through one generic WebCL matmul in the Sushi library.  This file is the
+TPU-shaped equivalent: a Pallas kernel with a (M/bm, N/bn, K/bk) grid,
+VMEM-resident blocks, and an MXU-shaped `jnp.dot` per block.  The K axis
+is the innermost grid dimension and accumulates into the output block,
+which stays resident in VMEM across the K loop (revisiting grid dims keeps
+the block mapped — the Pallas equivalent of the WebCL local-memory
+accumulator).
+
+Lowered with interpret=True everywhere (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation for the VMEM/MXU
+utilisation estimate on real hardware.
+
+`matmul` is wrapped in jax.custom_vjp so jax.grad flows through the model:
+the backward pass is itself two Pallas matmuls (dA = g @ B^T, dB = A^T @ g)
+— the gradient path exercises the same kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block selection is budget-driven: pick the largest tiles whose
+# (a, b, out) triple fits the scratchpad budget, shrinking M first (the
+# streaming axis), then K, then N.
+#
+# * On real TPU the budget is VMEM: SASHIMI_BLOCK_BUDGET=16MiB yields the
+#   classic 128x128 tiling for large matmuls (DESIGN.md §Hardware-
+#   Adaptation analyses that configuration).
+# * Under interpret=True on CPU (this image), every grid step costs ~ms
+#   of interpreter dispatch, so the budget defaults to 256 MiB — all of
+#   this model zoo's matmuls then run as a single block and the kernel
+#   is one fused dot, which is the correct "tile" for a cache-coherent
+#   CPU.  The §Perf log in EXPERIMENTS.md records the 56x train-step
+#   delta between the two settings.
+#
+# The multi-block path stays correctness-tested via explicit block
+# arguments in python/tests/test_kernels.py regardless of the budget.
+DEFAULT_BUDGET_BYTES = int(
+    __import__("os").environ.get("SASHIMI_BLOCK_BUDGET", 256 * 1024 * 1024)
+)
+
+
+def _round8(x: int) -> int:
+    return max(8, ((x + 7) // 8) * 8)
+
+
+def _pick_blocks(m: int, k: int, n: int, budget: int = DEFAULT_BUDGET_BYTES) -> tuple[int, int, int]:
+    """(bm, bk, bn) with (bm*bk + bk*bn + bm*bn)*4 <= budget."""
+
+    def fits(bm, bk, bn):
+        return 4 * (bm * bk + bk * bn + bm * bn) <= budget
+
+    # Single-block fast path: when the whole matmul fits the budget, use
+    # the exact dims — zero padding, zero operand copies (§Perf: padding
+    # a 51200x75 conv-im2col operand to x80 cost ~2x on the train step).
+    if fits(m, k, n):
+        return m, k, n
+
+    bm, bk, bn = _round8(m), _round8(k), _round8(n)
+    # Shrink M (halving, floor 128), then K, then N until the triple fits.
+    while not fits(bm, bk, bn) and bm > 128:
+        bm = _round8(bm // 2)
+    while not fits(bm, bk, bn) and bk > 128:
+        bk = _round8(bk // 2)
+    while not fits(bm, bk, bn) and bn > 128:
+        bn = _round8(bn // 2)
+    return bm, bk, bn
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def _matmul_impl(
+    a: jax.Array,
+    b: jax.Array,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    auto_m, auto_k, auto_n = _pick_blocks(m, k, n)
+    bm = block_m or auto_m
+    bn = block_n or auto_n
+    bk = block_k or auto_k
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    ap = _pad_to(a.astype(jnp.float32), gm * bm, gk * bk)
+    bp = _pad_to(b.astype(jnp.float32), gk * bk, gn * bn)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable tiled Pallas matmul: [M,K] @ [K,N] -> [M,N] (f32)."""
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # Both cotangents run through the same Pallas kernel.
+    da = _matmul_impl(g, b.T)
+    db = _matmul_impl(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_bias(a: jax.Array, b: jax.Array, bias: jax.Array) -> jax.Array:
+    """Matmul + broadcast bias: the FC layer primitive."""
+    return matmul(a, b) + bias[None, :]

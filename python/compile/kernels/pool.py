@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: 2x2/stride-2 max pooling (NHWC), with custom VJP.
+
+Sukiyaki's max-pooling layer.  The kernel processes one batch sample per
+grid step; a 32x32x20 f32 sample is 80 KiB — the whole activation block
+sits in VMEM and the reduction is a register-level max over the 2x2
+window axes (no HBM round-trips inside a sample).
+
+The backward pass routes the cotangent to the argmax position.  Like
+ConvNetJS (which remembers the winning switch), we recompute the winner
+mask from the saved input; ties (measure-zero for conv outputs) split the
+gradient equally, which keeps the VJP a true linear transpose.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [nb, H, W, C]
+    nb, h, w, c = x.shape
+    xr = x.reshape(nb, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = xr.max(axis=(2, 4))
+
+
+# Samples per grid step.  One 32x32x20 f32 sample is 80 KiB, so a whole
+# 50-batch block is 4 MiB — within VMEM on TPU and one interpreter step
+# on CPU (each grid step costs ~ms under interpret=True; see the §Perf
+# log).  Shrink via SASHIMI_POOL_BLOCK for tighter VMEM co-residency.
+POOL_BLOCK = int(__import__("os").environ.get("SASHIMI_POOL_BLOCK", 64))
+
+
+@jax.jit
+def _maxpool2_impl(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"maxpool2 needs even H,W, got {x.shape}"
+    nb = min(b, POOL_BLOCK)
+    grid = -(-b // nb)
+    padded = grid * nb
+    xp = jnp.pad(x.astype(jnp.float32), ((0, padded - b), (0, 0), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _pool_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((nb, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((nb, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:b]
+
+
+@jax.custom_vjp
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool over NHWC input with even H, W."""
+    return _maxpool2_impl(x)
+
+
+def _maxpool2_fwd(x):
+    out = _maxpool2_impl(x)
+    return out, (x, out)
+
+
+def _upsample2(y: jax.Array) -> jax.Array:
+    """Nearest-neighbour 2x upsample of NHWC (inverse-shape of maxpool2)."""
+    return jnp.repeat(jnp.repeat(y, 2, axis=1), 2, axis=2)
+
+
+def _maxpool2_bwd(res, g):
+    x, out = res
+    winners = (x == _upsample2(out)).astype(jnp.float32)
+    # Split gradient across ties so the transpose stays linear.
+    counts = _maxpool2_sum(winners)
+    gx = winners * _upsample2(g / jnp.maximum(counts, 1.0))
+    return (gx,)
+
+
+@jax.jit
+def _maxpool2_sum(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).sum(axis=(2, 4))
+
+
+maxpool2.defvjp(_maxpool2_fwd, _maxpool2_bwd)

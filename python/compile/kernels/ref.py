@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the pytest suite compares the Pallas kernels
+against, and they double as the "pure-jnp roofline" engine for the §Perf
+L1 comparison (aot.py can lower the whole model through either path).
+
+The paper's analogue: Sukiyaki's layer implementations, which were checked
+against ConvNetJS outputs.  Here the oracle is jnp/XLA itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain f32 matmul: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_bias(a: jax.Array, b: jax.Array, bias: jax.Array) -> jax.Array:
+    """Matmul with broadcast bias add along N: [M,K]@[K,N] + [N]."""
+    return matmul(a, b) + bias[None, :]
+
+
+def im2col(x: jax.Array, kh: int, kw: int, pad: int) -> jax.Array:
+    """Extract kh*kw patches (stride 1, symmetric zero pad) from NHWC input.
+
+    Returns [B, H_out, W_out, kh*kw*C] with the (dy, dx, c) axis ordered
+    row-major — the same layout the Rust side stores conv weights in
+    ([kh*kw*cin, cout]), so conv == matmul(im2col(x), w).
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h_out = h + 2 * pad - kh + 1
+    w_out = w + 2 * pad - kw + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h_out, dx : dx + w_out, :])
+    # [B, Ho, Wo, kh*kw, C] -> [B, Ho, Wo, kh*kw*C]
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b, h_out, w_out, kh * kw * c)
+
+
+def conv2d(x: jax.Array, w: jax.Array, bias: jax.Array, kh: int, kw: int, pad: int) -> jax.Array:
+    """Direct convolution oracle, NHWC, stride 1.
+
+    `w` is in im2col layout [kh*kw*cin, cout]; `bias` is [cout].
+    """
+    b, h, ww, c = x.shape
+    cout = w.shape[1]
+    patches = im2col(x, kh, kw, pad)
+    h_out, w_out = patches.shape[1], patches.shape[2]
+    flat = patches.reshape(b * h_out * w_out, kh * kw * c)
+    out = matmul(flat, w) + bias[None, :]
+    return out.reshape(b, h_out, w_out, cout)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max pooling, stride 2, NHWC. H and W must be even."""
+    b, h, w, c = x.shape
+    xr = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return xr.max(axis=(2, 4))
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def softmax(logits: jax.Array) -> jax.Array:
+    z = logits - logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def softmax_xent(logits: jax.Array, y_onehot: jax.Array) -> jax.Array:
+    """Mean cross-entropy over the batch (the paper's training loss)."""
+    z = logits - logits.max(axis=-1, keepdims=True)
+    logp = z - jnp.log(jnp.exp(z).sum(axis=-1, keepdims=True))
+    return -(y_onehot * logp).sum(axis=-1).mean()
+
+
+def adagrad_update(
+    theta: jax.Array, accum: jax.Array, grad: jax.Array, lr: float, beta: float
+) -> tuple[jax.Array, jax.Array]:
+    """The paper's modified AdaGrad (§3.1):
+
+        G_t   = G_{t-1} + g_t^2
+        θ_t   = θ_{t-1} - α / sqrt(β + G_t) * g_t
+
+    β stabilises the early steps where Σg² is minuscule.
+    """
+    new_accum = accum + grad * grad
+    new_theta = theta - lr * grad / jnp.sqrt(beta + new_accum)
+    return new_theta, new_accum

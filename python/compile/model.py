@@ -1,0 +1,229 @@
+"""L2: the Sukiyaki model zoo as JAX functions over the L1 Pallas kernels.
+
+Everything here is traced once by aot.py and shipped to the Rust runtime
+as HLO text; Python never touches the request path.
+
+Parameter convention (shared with the Rust side, see rust/src/nn):
+  * conv weights live in im2col layout [kh*kw*cin, cout], biases [cout];
+  * parameters are ordered  conv1_w, conv1_b, ..., fc_w, fc_b;
+  * the AdaGrad accumulator set has identical names/shapes/order;
+  * every tensor is f32 (labels enter as one-hot f32, argmins leave as
+    f32 holding small exact integers).
+
+Nets:
+  * `cifar` — the paper's Fig 2 benchmark CNN: 32x32x3 input, three
+    5x5 conv(+ReLU+2x2 maxpool) blocks with 16/20/20 maps, then a
+    320->10 FC + softmax.  Batch 50 (the paper's mini-batch).
+  * `mnist` — a smaller 28x28x1 net (conv5x5x8 + pool + FC 1568->10)
+    used by the quickstart and the kNN example's sanity classifier.
+The distributed-deep-learning benchmark (the paper's Fig 4 net) reuses
+the `cifar` topology — the paper does not give Fig 4's layer table, so we
+keep Fig 2's, documented in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adagrad as kadagrad
+from .kernels import conv as kconv
+from .kernels import matmul as kmm
+from .kernels import pool as kpool
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    pad: int
+
+    @property
+    def w_shape(self) -> tuple[int, int]:
+        return (self.kh * self.kw * self.cin, self.cout)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """A conv-stack + single-FC classifier, i.e. the paper's model family."""
+
+    name: str
+    input_hw: int
+    input_c: int
+    convs: tuple[ConvLayer, ...]
+    fc_in: int
+    n_classes: int
+    batch: int
+
+    @property
+    def x_shape(self) -> tuple[int, int, int, int]:
+        return (self.batch, self.input_hw, self.input_hw, self.input_c)
+
+    def param_names(self) -> list[str]:
+        names = []
+        for i in range(len(self.convs)):
+            names += [f"conv{i + 1}_w", f"conv{i + 1}_b"]
+        names += ["fc_w", "fc_b"]
+        return names
+
+    def conv_param_names(self) -> list[str]:
+        return self.param_names()[:-2]
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        shapes: dict[str, tuple[int, ...]] = {}
+        for i, c in enumerate(self.convs):
+            shapes[f"conv{i + 1}_w"] = c.w_shape
+            shapes[f"conv{i + 1}_b"] = (c.cout,)
+        shapes["fc_w"] = (self.fc_in, self.n_classes)
+        shapes["fc_b"] = (self.n_classes,)
+        return shapes
+
+
+CIFAR = NetSpec(
+    name="cifar",
+    input_hw=32,
+    input_c=3,
+    convs=(
+        ConvLayer(5, 5, 3, 16, 2),
+        ConvLayer(5, 5, 16, 20, 2),
+        ConvLayer(5, 5, 20, 20, 2),
+    ),
+    fc_in=4 * 4 * 20,  # 320, as in the paper
+    n_classes=10,
+    batch=50,
+)
+
+MNIST = NetSpec(
+    name="mnist",
+    input_hw=28,
+    input_c=1,
+    convs=(ConvLayer(5, 5, 1, 8, 2),),
+    fc_in=14 * 14 * 8,  # 1568
+    n_classes=10,
+    batch=50,
+)
+
+NETS = {"cifar": CIFAR, "mnist": MNIST}
+
+LR = 0.01
+BETA = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss (Pallas path and pure-jnp oracle path)
+# ---------------------------------------------------------------------------
+
+
+def conv_forward(spec: NetSpec, conv_params: list[jax.Array], x: jax.Array, *, oracle: bool = False) -> jax.Array:
+    """The conv stack: (conv -> relu -> maxpool2)* then flatten to [B, fc_in].
+
+    This is exactly the piece the paper's hybrid algorithm runs on the
+    browser clients.
+    """
+    c2d = ref.conv2d if oracle else kconv.conv2d
+    pool = ref.maxpool2 if oracle else kpool.maxpool2
+    h = x
+    for i, layer in enumerate(spec.convs):
+        w, b = conv_params[2 * i], conv_params[2 * i + 1]
+        h = c2d(h, w, b, layer.kh, layer.kw, layer.pad)
+        h = jnp.maximum(h, 0.0)
+        h = pool(h)
+    return h.reshape(spec.batch, spec.fc_in)
+
+
+def fc_forward(fc_w: jax.Array, fc_b: jax.Array, feat: jax.Array, *, oracle: bool = False) -> jax.Array:
+    mmb = ref.matmul_bias if oracle else kmm.matmul_bias
+    return mmb(feat, fc_w, fc_b)
+
+
+def forward(spec: NetSpec, params: list[jax.Array], x: jax.Array, *, oracle: bool = False) -> jax.Array:
+    """Full net -> class probabilities [B, n_classes]."""
+    feat = conv_forward(spec, params[:-2], x, oracle=oracle)
+    logits = fc_forward(params[-2], params[-1], feat, oracle=oracle)
+    return ref.softmax(logits)
+
+
+def loss_fn(spec: NetSpec, params: list[jax.Array], x: jax.Array, y1h: jax.Array, *, oracle: bool = False) -> jax.Array:
+    feat = conv_forward(spec, params[:-2], x, oracle=oracle)
+    logits = fc_forward(params[-2], params[-1], feat, oracle=oracle)
+    return ref.softmax_xent(logits, y1h)
+
+
+# ---------------------------------------------------------------------------
+# Training steps (AdaGrad-β through the L1 update kernel)
+# ---------------------------------------------------------------------------
+
+
+def _apply_adagrad(params, accums, grads, *, oracle: bool = False):
+    upd = ref.adagrad_update if oracle else kadagrad.adagrad_update
+    new_p, new_a = [], []
+    for p, a, g in zip(params, accums, grads):
+        np_, na_ = upd(p, a, g, LR, BETA)
+        new_p.append(np_)
+        new_a.append(na_)
+    return new_p, new_a
+
+
+def train_step(spec: NetSpec, params, accums, x, y1h, *, oracle: bool = False):
+    """One full SGD/AdaGrad step: the standalone Sukiyaki path (Table 4)."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(spec, ps, x, y1h, oracle=oracle))(list(params))
+    new_p, new_a = _apply_adagrad(params, accums, grads, oracle=oracle)
+    return new_p, new_a, loss
+
+
+def grad_all(spec: NetSpec, params, x, y1h, *, oracle: bool = False):
+    """Gradients of every parameter + loss: the MLitB client's work unit."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(spec, ps, x, y1h, oracle=oracle))(list(params))
+    return grads, loss
+
+
+def fc_step(spec: NetSpec, fc_w, fc_b, acc_w, acc_b, feat, y1h, *, oracle: bool = False):
+    """The hybrid server's work unit: train the FC layer on a feature batch
+    and emit the boundary cotangent dL/dfeat for the owning client."""
+
+    def _loss(fw, fb, ft):
+        return ref.softmax_xent(fc_forward(fw, fb, ft, oracle=oracle), y1h)
+
+    loss, (gw, gb, dfeat) = jax.value_and_grad(_loss, argnums=(0, 1, 2))(fc_w, fc_b, feat)
+    (nw, nb), (naw, nab) = _apply_adagrad([fc_w, fc_b], [acc_w, acc_b], [gw, gb], oracle=oracle)
+    return nw, nb, naw, nab, dfeat, loss
+
+
+def conv_grad(spec: NetSpec, conv_params, x, dfeat, *, oracle: bool = False):
+    """The hybrid client's backward work unit: conv-stack gradients given
+    the boundary cotangent.  Recomputes the forward pass (ships 320
+    floats/sample instead of every activation — DESIGN.md §6.1)."""
+    _, vjp = jax.vjp(lambda ps: conv_forward(spec, ps, x, oracle=oracle), list(conv_params))
+    (grads,) = vjp(dfeat)
+    return grads
+
+
+# ---------------------------------------------------------------------------
+# kNN (Table 2's workload) and smoke graph
+# ---------------------------------------------------------------------------
+
+
+def knn_chunk(q: jax.Array, t: jax.Array, *, oracle: bool = False):
+    """Nearest neighbour of each query against one training chunk.
+
+    q: [Q, D], t: [C, D] -> (min_dist2 [Q], argmin [Q] as f32).
+    Distance matrix via the Pallas matmul: ||q-t||² = ||q||² - 2q·tᵀ + ||t||².
+    The Rust coordinator folds (min, argmin) across chunk tickets.
+    """
+    mm = ref.matmul if oracle else kmm.matmul
+    qq = (q * q).sum(axis=1, keepdims=True)  # [Q,1]
+    tt = (t * t).sum(axis=1)[None, :]  # [1,C]
+    d2 = qq + tt - 2.0 * mm(q, t.T)
+    idx = jnp.argmin(d2, axis=1)
+    return d2.min(axis=1), idx.astype(jnp.float32)
+
+
+def smoke_matmul(a: jax.Array, b: jax.Array):
+    """Tiny end-to-end artifact used by Rust runtime unit tests."""
+    return kmm.matmul(a, b) + 2.0

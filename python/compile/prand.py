@@ -1,0 +1,51 @@
+"""SplitMix64-based deterministic float streams, bit-identical to the Rust
+`util::rng` implementation.
+
+Used to generate golden artifact inputs: aot.py records only (seed, shape,
+checksum) and the Rust test suite regenerates the same inputs locally, so
+goldens stay tiny even for 150k-element batches.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64(state: int) -> tuple[int, int]:
+    """One SplitMix64 step: returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def uniform_f32(seed: int, n: int, lo: float = -1.0, hi: float = 1.0) -> np.ndarray:
+    """n f32 values in [lo, hi) from the top 24 bits of each output."""
+    out = np.empty(n, dtype=np.float32)
+    state = seed & MASK
+    scale = np.float32(hi - lo)
+    for i in range(n):
+        state, z = splitmix64(state)
+        u = np.float32((z >> 40) * (1.0 / (1 << 24)))  # [0,1) with 24-bit mantissa
+        out[i] = np.float32(lo) + u * scale
+    return out
+
+
+def uniform_f32_array(seed: int, shape: tuple[int, ...], lo: float = -1.0, hi: float = 1.0) -> np.ndarray:
+    n = int(np.prod(shape))
+    return uniform_f32(seed, n, lo, hi).reshape(shape)
+
+
+def checksum(x: np.ndarray) -> dict:
+    """Compact numeric fingerprint compared (to tolerance) by Rust tests."""
+    f = np.asarray(x, dtype=np.float64).reshape(-1)
+    return {
+        "sum": float(f.sum()),
+        "abs_sum": float(np.abs(f).sum()),
+        "first": [float(v) for v in f[: min(8, f.size)]],
+        "len": int(f.size),
+    }

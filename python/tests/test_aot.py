@@ -1,0 +1,111 @@
+"""AOT layer: the artifact registry is complete, coherent, and lowerable."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, prand
+
+ARTS = {a.name: a for a in aot.build_artifacts()}
+
+REQUIRED = [
+    "smoke_matmul",
+    "cifar_train_step",
+    "cifar_forward",
+    "cifar_grad",
+    "cifar_conv_fwd",
+    "cifar_conv_grad",
+    "cifar_fc_step",
+    "cifar_train_step_jnp",
+    "mnist_train_step",
+    "mnist_forward",
+    "mnist_grad",
+    "mnist_conv_fwd",
+    "mnist_conv_grad",
+    "mnist_fc_step",
+    "knn_chunk",
+    "knn_chunk_small",
+    "adagrad_update",
+]
+
+
+def test_registry_complete():
+    assert sorted(ARTS) == sorted(REQUIRED)
+
+
+@pytest.mark.parametrize("name", REQUIRED)
+def test_artifact_callable_with_declared_shapes(name):
+    a = ARTS[name]
+    inputs = [jnp.zeros(s.shape, jnp.float32) for s in a.input_specs]
+    outs = a.fn(*inputs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    assert len(outs) == len(a.output_names), name
+
+
+def test_train_step_io_symmetry():
+    """params/accums appear in inputs and outputs in the same order —
+    the Rust driver threads outputs straight back as next-step inputs."""
+    for net in ("cifar", "mnist"):
+        a = ARTS[f"{net}_train_step"]
+        n = (len(a.input_names) - 2) // 2
+        for i in range(n):
+            assert a.output_names[i] == a.input_names[i] + "_new"
+            assert a.input_specs[i].shape == a.input_specs[n + i].shape
+
+
+def test_smoke_matmul_value():
+    a = ARTS["smoke_matmul"]
+    x = jnp.ones((8, 16))
+    y = jnp.ones((16, 4))
+    (out,) = (a.fn(x, y),) if not isinstance(a.fn(x, y), tuple) else (a.fn(x, y),)
+    np.testing.assert_allclose(np.asarray(out).reshape(8, 4), 18.0 * np.ones((8, 4)), rtol=1e-6)
+
+
+def test_lowering_produces_hlo_text():
+    text = ARTS["smoke_matmul"].lower_hlo_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_golden_self_consistent():
+    a = ARTS["adagrad_update"]
+    g = a.golden(seed_base=99)
+    assert list(g["outputs"]) == ["theta_new", "accum_new"]
+    # Recompute from the recorded seeds and compare checksums.
+    inputs = [jnp.asarray(prand.uniform_f32_array(s, sp.shape)) for s, sp in zip(g["input_seeds"], a.input_specs)]
+    outs = a.fn(*inputs)
+    for name, o in zip(a.output_names, outs):
+        c = prand.checksum(np.asarray(o))
+        assert abs(c["sum"] - g["outputs"][name]["sum"]) < 1e-3
+
+
+def test_manifest_on_disk_matches_registry():
+    man_path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    for name in REQUIRED:
+        assert name in man["artifacts"], f"{name} missing from manifest — rerun make artifacts"
+        entry = man["artifacts"][name]
+        a = ARTS[name]
+        assert [i["name"] for i in entry["inputs"]] == a.input_names
+        assert [tuple(i["shape"]) for i in entry["inputs"]] == [tuple(s.shape) for s in a.input_specs]
+    for net_name, net in model.NETS.items():
+        m = man["nets"][net_name]
+        assert m["param_names"] == net.param_names()
+        assert m["batch"] == net.batch
+
+
+def test_nets_manifest_shapes():
+    nets = aot._nets_manifest()
+    assert nets["cifar"]["fc_in"] == 320
+    assert nets["mnist"]["input_hw"] == 28
+    for net in nets.values():
+        for name in net["param_names"]:
+            assert name in net["param_shapes"]

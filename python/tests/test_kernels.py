@@ -1,0 +1,226 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the VJPs, since the gradient path also runs
+through the kernels).  Tolerances are f32-accumulation-order tolerances,
+not correctness slack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adagrad as kadagrad
+from compile.kernels import conv as kconv
+from compile.kernels import matmul as kmm
+from compile.kernels import pool as kpool
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rnd(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a, b = rnd(seed, (m, k)), rnd(seed + 1, (k, n))
+    np.testing.assert_allclose(kmm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(2, 64), k=st.integers(2, 96), n=st.integers(2, 24), seed=st.integers(0, 2**31 - 1))
+def test_matmul_vjp_matches_ref(m, k, n, seed):
+    a, b = rnd(seed, (m, k)), rnd(seed + 1, (k, n))
+    g = rnd(seed + 2, (m, n))
+    f = lambda a, b: (kmm.matmul(a, b) * g).sum()
+    fr = lambda a, b: (ref.matmul(a, b) * g).sum()
+    da, db = jax.grad(f, (0, 1))(a, b)
+    ra, rb = jax.grad(fr, (0, 1))(a, b)
+    np.testing.assert_allclose(da, ra, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db, rb, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_block_multiple():
+    a, b = rnd(0, (256, 128)), rnd(1, (128, 128))
+    np.testing.assert_allclose(kmm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_forced_multiblock_tiling():
+    # The production artifacts pick single-block tiles on CPU (budget
+    # heuristic); force the full (M/bm, N/bn, K/bk) grid with the K-axis
+    # accumulator here so the tiled path stays correctness-pinned.
+    a, b = rnd(2, (200, 96)), rnd(3, (96, 40))
+    out = kmm._matmul_impl(a, b, block_m=64, block_n=16, block_k=32)
+    np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_budget_heuristic_respects_budget():
+    for m, k, n in [(51200, 75, 16), (1 << 17, 4096, 4096), (8, 8, 8)]:
+        bm, bk, bn = kmm._pick_blocks(m, k, n, budget=16 * 1024 * 1024)
+        assert 4 * (bm * bk + bk * bn + bm * bn) <= 16 * 1024 * 1024 or (bm, bk, bn) <= (128, 128, 128)
+        assert bm % 8 == 0 and bk % 8 == 0 and bn % 8 == 0
+
+
+def test_matmul_bias():
+    a, b, bias = rnd(0, (33, 17)), rnd(1, (17, 9)), rnd(2, (9,))
+    np.testing.assert_allclose(
+        kmm.matmul_bias(a, b, bias), ref.matmul_bias(a, b, bias), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        kmm.matmul(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 16),
+    w=st.integers(1, 16),
+    c=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(b, h, w, c, seed):
+    x = rnd(seed, (b, 2 * h, 2 * w, c))
+    np.testing.assert_allclose(kpool.maxpool2(x), ref.maxpool2(x), rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 3), hw=st.integers(1, 8), c=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_maxpool_vjp_matches_ref(b, hw, c, seed):
+    x = rnd(seed, (b, 2 * hw, 2 * hw, c))
+    g = rnd(seed + 1, (b, hw, hw, c))
+    gp = jax.grad(lambda x: (kpool.maxpool2(x) * g).sum())(x)
+    gr = jax.grad(lambda x: (ref.maxpool2(x) * g).sum())(x)
+    np.testing.assert_allclose(gp, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool_tie_splits_gradient():
+    # A constant input ties everywhere; VJP must stay a linear transpose
+    # (gradient split equally), not double-count.
+    x = jnp.ones((1, 2, 2, 1))
+    g = jax.grad(lambda x: kpool.maxpool2(x).sum())(x)
+    np.testing.assert_allclose(g, 0.25 * jnp.ones_like(x), rtol=1e-6)
+
+
+def test_maxpool_rejects_odd():
+    with pytest.raises(AssertionError):
+        kpool.maxpool2(jnp.zeros((1, 3, 4, 1)))
+
+
+# ---------------------------------------------------------------------------
+# adagrad
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    lr=st.floats(1e-4, 1.0),
+    beta=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adagrad_matches_ref(n, lr, beta, seed):
+    theta = rnd(seed, (n,))
+    accum = jnp.abs(rnd(seed + 1, (n,)))
+    grad = rnd(seed + 2, (n,))
+    nt, na = kadagrad.adagrad_update(theta, accum, grad, lr, beta)
+    rt, ra = ref.adagrad_update(theta, accum, grad, lr, beta)
+    np.testing.assert_allclose(nt, rt, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(na, ra, rtol=1e-6, atol=1e-7)
+
+
+def test_adagrad_beta_stabilises_first_step():
+    # The paper's motivation: with zero accumulator and tiny gradients the
+    # vanilla rule (beta=0) explodes; beta=1 keeps the step bounded by lr*|g|.
+    theta = jnp.zeros((4,))
+    accum = jnp.zeros((4,))
+    grad = jnp.full((4,), 1e-6)
+    nt, _ = kadagrad.adagrad_update(theta, accum, grad, 0.01, 1.0)
+    assert jnp.abs(nt).max() < 1e-6  # bounded
+    rt, _ = ref.adagrad_update(theta, accum, grad, 0.01, 0.0)
+    assert jnp.abs(rt).max() > 1e-3  # vanilla step is ~lr regardless of |g|
+
+
+def test_adagrad_multidim_shapes():
+    theta = rnd(0, (7, 11, 3))
+    accum = jnp.abs(rnd(1, (7, 11, 3)))
+    grad = rnd(2, (7, 11, 3))
+    nt, na = kadagrad.adagrad_update(theta, accum, grad, 0.05, 1.0)
+    rt, ra = ref.adagrad_update(theta, accum, grad, 0.05, 1.0)
+    assert nt.shape == theta.shape
+    np.testing.assert_allclose(nt, rt, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(na, ra, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# conv (im2col + matmul)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([6, 8, 12, 16]),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref(b, hw, cin, cout, seed):
+    x = rnd(seed, (b, hw, hw, cin))
+    w = rnd(seed + 1, (25 * cin, cout), scale=0.2)
+    bias = rnd(seed + 2, (cout,))
+    np.testing.assert_allclose(
+        kconv.conv2d(x, w, bias, 5, 5, 2), ref.conv2d(x, w, bias, 5, 5, 2), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_im2col_layout_matches_ref():
+    x = rnd(3, (2, 8, 8, 3))
+    np.testing.assert_allclose(kconv.im2col(x, 5, 5, 2), ref.im2col(x, 5, 5, 2), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv_vjp_matches_ref(seed):
+    x = rnd(seed, (2, 8, 8, 3))
+    w = rnd(seed + 1, (75, 4), scale=0.2)
+    bias = rnd(seed + 2, (4,))
+
+    def f(mod):
+        return lambda x, w, b: (mod.conv2d(x, w, b, 5, 5, 2) ** 2).sum()
+
+    gx, gw, gb = jax.grad(f(kconv), (0, 1, 2))(x, w, bias)
+    rx, rw, rb = jax.grad(f(ref), (0, 1, 2))(x, w, bias)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gb, rb, rtol=1e-3, atol=1e-3)
+
+
+def test_conv_3x3_kernel():
+    x = rnd(0, (1, 6, 6, 2))
+    w = rnd(1, (9 * 2, 5))
+    bias = jnp.zeros((5,))
+    np.testing.assert_allclose(
+        kconv.conv2d(x, w, bias, 3, 3, 1), ref.conv2d(x, w, bias, 3, 3, 1), rtol=1e-4, atol=1e-4
+    )

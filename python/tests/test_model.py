@@ -1,0 +1,192 @@
+"""L2 correctness: model graphs, the hybrid split, and training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import CIFAR, MNIST
+
+
+def small_net(batch=4):
+    """A shrunken CIFAR-family net so tests stay fast on one core."""
+    return model.NetSpec(
+        name="tiny",
+        input_hw=8,
+        input_c=3,
+        convs=(model.ConvLayer(5, 5, 3, 4, 2), model.ConvLayer(5, 5, 4, 6, 2)),
+        fc_in=2 * 2 * 6,
+        n_classes=5,
+        batch=batch,
+    )
+
+
+def init_params(spec, seed=0, scale=0.3):
+    shapes = spec.param_shapes()
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return [
+        scale * jax.random.normal(k, shapes[n], dtype=jnp.float32)
+        for k, n in zip(keys, spec.param_names())
+    ]
+
+
+def batch_for(spec, seed=1):
+    x = jax.random.normal(jax.random.PRNGKey(seed), spec.x_shape, dtype=jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (spec.batch,), 0, spec.n_classes)
+    y = jax.nn.one_hot(labels, spec.n_classes, dtype=jnp.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# shapes & probability axioms
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [CIFAR, MNIST], ids=lambda s: s.name)
+def test_param_shapes_consistent(spec):
+    shapes = spec.param_shapes()
+    assert shapes["fc_w"][0] == spec.fc_in
+    # conv chain: each cout feeds the next cin; three pools divide hw by 8.
+    for a, b in zip(spec.convs, spec.convs[1:]):
+        assert a.cout == b.cin
+    hw = spec.input_hw // (2 ** len(spec.convs))
+    assert spec.fc_in == hw * hw * spec.convs[-1].cout
+
+
+def test_cifar_matches_paper_fig2():
+    # 32x32x16 -> 16x16x20 -> 8x8x20 feature maps, FC 320 -> 10.
+    assert CIFAR.convs[0].cout == 16
+    assert CIFAR.convs[1].cout == 20 and CIFAR.convs[2].cout == 20
+    assert CIFAR.fc_in == 320 and CIFAR.n_classes == 10
+    assert CIFAR.batch == 50  # the paper's mini-batch
+
+
+def test_forward_is_distribution():
+    spec = small_net()
+    params = init_params(spec)
+    x, _ = batch_for(spec)
+    probs = model.forward(spec, params, x)
+    assert probs.shape == (spec.batch, spec.n_classes)
+    np.testing.assert_allclose(probs.sum(axis=1), np.ones(spec.batch), rtol=1e-5)
+    assert (np.asarray(probs) >= 0).all()
+
+
+def test_pallas_forward_matches_oracle_forward():
+    spec = small_net()
+    params = init_params(spec)
+    x, _ = batch_for(spec)
+    np.testing.assert_allclose(
+        model.forward(spec, params, x),
+        model.forward(spec, params, x, oracle=True),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the hybrid split (§4): fc_step + conv_grad must equal the full gradient
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_split_equals_full_gradient():
+    """conv_grad(conv_params, x, dfeat-from-fc_step) == grad_all[:nconv].
+
+    This is the invariant that makes the paper's algorithm *correct* at
+    zero staleness: the split graphs compose to the full backward pass.
+    """
+    spec = small_net()
+    params = init_params(spec)
+    x, y = batch_for(spec)
+    nconv = len(spec.conv_param_names())
+
+    full_grads, full_loss = model.grad_all(spec, params, x, y)
+
+    feat = model.conv_forward(spec, params[:nconv], x)
+    *_, dfeat, loss = model.fc_step(spec, params[-2], params[-1], jnp.zeros_like(params[-2]), jnp.zeros_like(params[-1]), feat, y)
+    conv_grads = model.conv_grad(spec, params[:nconv], x, dfeat)
+
+    np.testing.assert_allclose(loss, full_loss, rtol=1e-5)
+    for cg, fg in zip(conv_grads, full_grads[:nconv]):
+        np.testing.assert_allclose(cg, fg, rtol=1e-3, atol=1e-4)
+
+
+def test_fc_step_gradients_match_grad_all():
+    spec = small_net()
+    params = init_params(spec)
+    x, y = batch_for(spec)
+    nconv = len(spec.conv_param_names())
+    full_grads, _ = model.grad_all(spec, params, x, y)
+    feat = model.conv_forward(spec, params[:nconv], x)
+    zw, zb = jnp.zeros_like(params[-2]), jnp.zeros_like(params[-1])
+    nw, nb, naw, nab, _, _ = model.fc_step(spec, params[-2], params[-1], zw, zb, feat, y)
+    # Recover the gradient from the AdaGrad update: acc' = acc + g².
+    np.testing.assert_allclose(jnp.sqrt(naw), jnp.abs(full_grads[-2]), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(jnp.sqrt(nab), jnp.abs(full_grads[-1]), rtol=1e-3, atol=1e-4)
+
+
+def test_train_step_equals_grad_plus_adagrad():
+    spec = small_net()
+    params = init_params(spec)
+    accums = [jnp.zeros_like(p) for p in params]
+    x, y = batch_for(spec)
+    new_p, new_a, loss = model.train_step(spec, params, accums, x, y)
+    grads, loss2 = model.grad_all(spec, params, x, y)
+    np.testing.assert_allclose(loss, loss2, rtol=1e-6)
+    from compile.kernels import ref as kref
+
+    for p, a, g, np_, na_ in zip(params, accums, grads, new_p, new_a):
+        rp, ra = kref.adagrad_update(p, a, g, model.LR, model.BETA)
+        np.testing.assert_allclose(np_, rp, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(na_, ra, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# learning actually happens
+# ---------------------------------------------------------------------------
+
+
+def test_training_reduces_loss_on_learnable_batch():
+    spec = small_net(batch=8)
+    params = init_params(spec, scale=0.2)
+    accums = [jnp.zeros_like(p) for p in params]
+    # class-dependent means -> learnable
+    labels = jnp.arange(8) % spec.n_classes
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(0), spec.x_shape) + labels[:, None, None, None] / 2.0
+    y = jax.nn.one_hot(labels, spec.n_classes, dtype=jnp.float32)
+    losses = []
+    for _ in range(15):
+        params, accums, loss = model.train_step(spec, params, accums, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_accumulators_monotone():
+    spec = small_net()
+    params = init_params(spec)
+    accums = [jnp.zeros_like(p) for p in params]
+    x, y = batch_for(spec)
+    _, new_a, _ = model.train_step(spec, params, accums, x, y)
+    for a in new_a:
+        assert (np.asarray(a) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# kNN graph (Table 2 workload)
+# ---------------------------------------------------------------------------
+
+
+def test_knn_chunk_matches_bruteforce():
+    q = jax.random.normal(jax.random.PRNGKey(0), (7, 784))
+    t = jax.random.normal(jax.random.PRNGKey(1), (50, 784))
+    mind, argm = model.knn_chunk(q, t)
+    d2 = ((q[:, None, :] - t[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(mind, d2.min(axis=1), rtol=1e-3, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(argm, dtype=np.int64), d2.argmin(axis=1))
+
+
+def test_knn_chunk_self_query_is_zero():
+    t = jax.random.normal(jax.random.PRNGKey(2), (20, 784))
+    mind, argm = model.knn_chunk(t[:5], t)
+    np.testing.assert_allclose(mind, np.zeros(5), atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(argm, dtype=np.int64), np.arange(5))

@@ -1,0 +1,82 @@
+//! The control console (§2.1.2): progress, clients, errors — the view
+//! the paper's HTTPServer renders with responsive web design; here a
+//! plain-text snapshot (printed by `sashimi console` / examples) since
+//! there is no browser to style for.
+
+use crate::coordinator::distributor::Distributor;
+use crate::store::Progress;
+
+/// A renderable snapshot of a running distributor.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub progress: Progress,
+    pub clients: Vec<(String, String, u64, u64, u64)>, // id, profile, tickets, results, errors
+    pub tickets_served: u64,
+    pub results_accepted: u64,
+    pub duplicates: u64,
+    pub errors: u64,
+}
+
+pub fn snapshot(d: &Distributor) -> Snapshot {
+    use std::sync::atomic::Ordering;
+    Snapshot {
+        progress: d.store().progress(None),
+        clients: d
+            .clients()
+            .into_iter()
+            .map(|c| (c.client, c.profile, c.tickets_served, c.results, c.errors))
+            .collect(),
+        tickets_served: d.stats.tickets_served.load(Ordering::Relaxed),
+        results_accepted: d.stats.results_accepted.load(Ordering::Relaxed),
+        duplicates: d.stats.results_duplicate.load(Ordering::Relaxed),
+        errors: d.stats.errors_reported.load(Ordering::Relaxed),
+    }
+}
+
+pub fn render(s: &Snapshot) -> String {
+    let mut out = String::new();
+    out.push_str("== Sashimi console ==\n");
+    out.push_str(&format!(
+        "tickets: {} total | {} waiting | {} in-flight | {} executed | {} error reports | {} redistributions | {} duplicate results\n",
+        s.progress.total,
+        s.progress.pending,
+        s.progress.in_flight,
+        s.progress.done,
+        s.progress.errors,
+        s.progress.redistributions,
+        s.progress.duplicate_results,
+    ));
+    out.push_str(&format!(
+        "distributor: {} served | {} accepted | {} duplicates | {} errors\n",
+        s.tickets_served, s.results_accepted, s.duplicates, s.errors
+    ));
+    out.push_str("clients:\n");
+    let mut clients = s.clients.clone();
+    clients.sort();
+    for (id, profile, t, r, e) in &clients {
+        out.push_str(&format!("  {id:<12} {profile:<10} tickets={t:<6} results={r:<6} errors={e}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_counts() {
+        let s = Snapshot {
+            progress: Progress { total: 10, pending: 3, in_flight: 2, done: 5, ..Default::default() },
+            clients: vec![("w1".into(), "tablet".into(), 4, 3, 1)],
+            tickets_served: 6,
+            results_accepted: 5,
+            duplicates: 1,
+            errors: 1,
+        };
+        let text = render(&s);
+        assert!(text.contains("10 total"));
+        assert!(text.contains("5 executed"));
+        assert!(text.contains("w1"));
+        assert!(text.contains("tablet"));
+    }
+}

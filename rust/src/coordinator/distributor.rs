@@ -1,0 +1,413 @@
+//! The TicketDistributor: serves the browser protocol.
+//!
+//! One thread per connection (the paper's TicketDistributor is a single
+//! Node.js process multiplexing WebSockets; with blocking sockets the
+//! thread-per-conn layout is the idiomatic equivalent, and the shared
+//! state is the same ticket store the SQL server held).
+//!
+//! Handles, per §2.1.2:
+//! * `TicketRequest` → next ticket by virtual created time (or NoTicket
+//!   with a retry hint);
+//! * `TaskRequest` → task code metadata (code bytes accounted);
+//! * `DataRequest` → dataset payloads (the HTTPServer API);
+//! * `TicketResult` → store completion (first result wins);
+//! * `ErrorReport` → recorded, ticket requeued, client told to reload.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::framework::Framework;
+use crate::store::TicketStore;
+use crate::tasks::{DatasetStore, Registry};
+use crate::transport::{Conn, Listener, Message};
+use crate::util::clock;
+
+/// Per-client info shown on the console.
+#[derive(Debug, Clone, Default)]
+pub struct ClientInfo {
+    pub client: String,
+    pub profile: String,
+    pub tickets_served: u64,
+    pub results: u64,
+    pub errors: u64,
+    pub connected_ms: u64,
+}
+
+#[derive(Default)]
+pub struct DistributorStats {
+    pub connections: AtomicU64,
+    pub tickets_served: AtomicU64,
+    pub results_accepted: AtomicU64,
+    pub results_duplicate: AtomicU64,
+    pub errors_reported: AtomicU64,
+    pub data_requests: AtomicU64,
+    pub task_requests: AtomicU64,
+    /// Bytes moved over all finished connections (server side).
+    pub bytes_sent: AtomicU64,
+    pub bytes_received: AtomicU64,
+}
+
+pub struct Distributor {
+    store: Arc<TicketStore>,
+    registry: Registry,
+    datasets: Arc<DatasetStore>,
+    pub stats: DistributorStats,
+    clients: Mutex<HashMap<String, ClientInfo>>,
+    stop: AtomicBool,
+    /// Retry hint handed to idle workers.
+    pub idle_retry_ms: u64,
+}
+
+impl Distributor {
+    pub fn new(fw: &Arc<Framework>) -> Arc<Distributor> {
+        Arc::new(Distributor {
+            store: fw.store().clone(),
+            registry: fw.registry_snapshot(),
+            datasets: fw.datasets().clone(),
+            stats: DistributorStats::default(),
+            clients: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+            idle_retry_ms: 20,
+        })
+    }
+
+    /// Build from raw parts (dist drivers that bypass Framework).
+    pub fn from_parts(
+        store: Arc<TicketStore>,
+        registry: Registry,
+        datasets: Arc<DatasetStore>,
+    ) -> Arc<Distributor> {
+        Arc::new(Distributor {
+            store,
+            registry,
+            datasets,
+            stats: DistributorStats::default(),
+            clients: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+            idle_retry_ms: 20,
+        })
+    }
+
+    pub fn stop(&self) {
+        self.stop.load(Ordering::SeqCst); // touch for lint symmetry
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    pub fn clients(&self) -> Vec<ClientInfo> {
+        self.clients.lock().unwrap().values().cloned().collect()
+    }
+
+    pub fn store(&self) -> &Arc<TicketStore> {
+        &self.store
+    }
+
+    pub fn datasets(&self) -> &Arc<DatasetStore> {
+        &self.datasets
+    }
+
+    /// Accept-loop: spawn a handler thread per connection.  Returns the
+    /// acceptor handle; stop by making `listener.accept()` fail (drop
+    /// all connectors / close the socket) after calling [`stop`].
+    pub fn serve(self: &Arc<Self>, mut listener: Box<dyn Listener>) -> JoinHandle<()> {
+        let this = Arc::clone(self);
+        std::thread::spawn(move || {
+            let mut handlers = Vec::new();
+            while !this.stopped() {
+                match listener.accept() {
+                    Ok(conn) => {
+                        this.stats.connections.fetch_add(1, Ordering::Relaxed);
+                        let d = Arc::clone(&this);
+                        handlers.push(std::thread::spawn(move || {
+                            if let Err(e) = d.handle_conn(conn) {
+                                crate::log_debug!("distributor", "connection ended: {e:#}");
+                            }
+                        }));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+        })
+    }
+
+    /// Serve one connection until Shutdown/EOF, accounting its bytes
+    /// incrementally (so live benches see traffic as it happens).
+    pub fn handle_conn(&self, mut conn: Box<dyn Conn>) -> Result<()> {
+        self.handle_conn_inner(&mut *conn)
+    }
+
+    fn handle_conn_inner(&self, conn: &mut dyn Conn) -> Result<()> {
+        let mut client = String::from("unknown");
+        let (mut acc_sent, mut acc_recv) = (0u64, 0u64);
+        let mut account = |conn: &mut dyn Conn, stats: &DistributorStats| {
+            let (s, r) = conn.bytes();
+            stats.bytes_sent.fetch_add(s - acc_sent, Ordering::Relaxed);
+            stats.bytes_received.fetch_add(r - acc_recv, Ordering::Relaxed);
+            acc_sent = s;
+            acc_recv = r;
+        };
+        loop {
+            if self.stopped() {
+                let _ = conn.send(&Message::Shutdown);
+                account(conn, &self.stats);
+                return Ok(());
+            }
+            let msg = match conn.recv() {
+                Ok(m) => m,
+                Err(e) => {
+                    account(conn, &self.stats);
+                    return Err(e);
+                }
+            };
+            account(conn, &self.stats);
+            match msg {
+                Message::Hello { client: c, profile } => {
+                    client = c.clone();
+                    self.clients.lock().unwrap().insert(
+                        c.clone(),
+                        ClientInfo {
+                            client: c,
+                            profile,
+                            connected_ms: clock::now_ms(),
+                            ..Default::default()
+                        },
+                    );
+                    conn.send(&Message::Ack)?;
+                }
+                Message::TicketRequest => {
+                    if self.stopped() {
+                        conn.send(&Message::Shutdown)?;
+                        return Ok(());
+                    }
+                    match self.store.next_ticket(&client, clock::now_ms()) {
+                        Some(t) => {
+                            self.stats.tickets_served.fetch_add(1, Ordering::Relaxed);
+                            if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                                ci.tickets_served += 1;
+                            }
+                            conn.send(&Message::Ticket {
+                                ticket: t.id,
+                                task: t.task,
+                                task_name: t.task_name.clone(),
+                                index: t.index,
+                                payload: t.payload.clone(),
+                            })?;
+                        }
+                        None => conn.send(&Message::NoTicket { retry_after_ms: self.idle_retry_ms })?,
+                    }
+                }
+                Message::TaskRequest { task_name } => {
+                    self.stats.task_requests.fetch_add(1, Ordering::Relaxed);
+                    let def = self.registry.get(&task_name)?;
+                    // dataset_refs are per-ticket; the static advertisement
+                    // is empty (workers resolve refs from each payload).
+                    conn.send(&Message::TaskCode {
+                        task_name,
+                        code_bytes: def.code_bytes(),
+                        dataset_refs: Vec::new(),
+                    })?;
+                }
+                Message::DataRequest { key } => {
+                    self.stats.data_requests.fetch_add(1, Ordering::Relaxed);
+                    let enc = self.datasets.encoded(&key)?;
+                    conn.send(&Message::Data { key, shape: enc.0.clone(), b64: enc.1.clone() })?;
+                }
+                Message::TicketResult { ticket, result } => {
+                    let fresh = self.store.complete(ticket, result)?;
+                    if fresh {
+                        self.stats.results_accepted.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.stats.results_duplicate.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                        ci.results += 1;
+                    }
+                    conn.send(&Message::Ack)?;
+                }
+                Message::ErrorReport { ticket, message, stack } => {
+                    self.stats.errors_reported.fetch_add(1, Ordering::Relaxed);
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                        ci.errors += 1;
+                    }
+                    crate::log_warn!("distributor", "error report from {client}: {message}");
+                    self.store.report_error(ticket, format!("{message}\n{stack}"))?;
+                    // The paper: the browser reloads itself after reporting.
+                    conn.send(&Message::Reload)?;
+                }
+                Message::Shutdown => {
+                    return Ok(());
+                }
+                other => {
+                    anyhow::bail!("unexpected message from {client}: {other:?}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::TaskId;
+    use crate::tasks::is_prime::IsPrimeTask;
+    use crate::transport::local;
+    use crate::transport::LinkModel;
+    use crate::util::json::Value;
+
+    fn framework_with_tickets(n: usize) -> (Arc<Framework>, TaskId) {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(
+            (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+        );
+        let id = task.id;
+        (fw, id)
+    }
+
+    #[test]
+    fn protocol_happy_path() {
+        let (fw, _task) = framework_with_tickets(1);
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || d.handle_conn(Box::new(server)).unwrap());
+
+        client.send(&Message::Hello { client: "w0".into(), profile: "desktop".into() }).unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Ack);
+
+        client.send(&Message::TicketRequest).unwrap();
+        let (ticket, payload) = match client.recv().unwrap() {
+            Message::Ticket { ticket, payload, task_name, .. } => {
+                assert_eq!(task_name, "is_prime");
+                (ticket, payload)
+            }
+            m => panic!("expected ticket, got {m:?}"),
+        };
+        assert_eq!(payload.get("candidate").unwrap().as_u64().unwrap(), 2);
+
+        client.send(&Message::TaskRequest { task_name: "is_prime".into() }).unwrap();
+        match client.recv().unwrap() {
+            Message::TaskCode { code_bytes, .. } => assert!(code_bytes > 0),
+            m => panic!("expected task code, got {m:?}"),
+        }
+
+        client
+            .send(&Message::TicketResult {
+                ticket,
+                result: Value::obj(vec![("is_prime", Value::Bool(true))]),
+            })
+            .unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Ack);
+
+        // No tickets left.
+        client.send(&Message::TicketRequest).unwrap();
+        assert!(matches!(client.recv().unwrap(), Message::NoTicket { .. }));
+
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+        assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 1);
+        assert_eq!(dist.clients()[0].results, 1);
+    }
+
+    #[test]
+    fn error_report_triggers_reload_and_requeue() {
+        let (fw, _) = framework_with_tickets(1);
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || d.handle_conn(Box::new(server)).unwrap());
+        client.send(&Message::Hello { client: "w0".into(), profile: "tablet".into() }).unwrap();
+        client.recv().unwrap();
+        client.send(&Message::TicketRequest).unwrap();
+        let ticket = match client.recv().unwrap() {
+            Message::Ticket { ticket, .. } => ticket,
+            m => panic!("{m:?}"),
+        };
+        client
+            .send(&Message::ErrorReport {
+                ticket,
+                message: "TypeError: x is undefined".into(),
+                stack: "at task.run".into(),
+            })
+            .unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Reload);
+        // Ticket is immediately available again.
+        client.send(&Message::TicketRequest).unwrap();
+        assert!(matches!(client.recv().unwrap(), Message::Ticket { .. }));
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+        assert_eq!(fw.store().errors().len(), 1);
+    }
+
+    #[test]
+    fn dataset_requests_served() {
+        let (fw, _) = framework_with_tickets(1);
+        fw.datasets().register("d1", crate::runtime::Tensor::new(vec![2], vec![1.0, 2.0]).unwrap());
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        client.send(&Message::DataRequest { key: "d1".into() }).unwrap();
+        match client.recv().unwrap() {
+            Message::Data { key, shape, b64 } => {
+                assert_eq!(key, "d1");
+                assert_eq!(shape, vec![2]);
+                assert_eq!(crate::util::base64::decode_f32(&b64).unwrap(), vec![1.0, 2.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+        // Unknown dataset kills the connection (worker will reconnect).
+        client.send(&Message::DataRequest { key: "nope".into() }).unwrap();
+        assert!(client.recv().is_err());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn serve_accepts_multiple_connections() {
+        let (fw, task) = framework_with_tickets(4);
+        let dist = Distributor::new(&fw);
+        let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+        let acceptor = dist.serve(Box::new(listener));
+        let mut joins = Vec::new();
+        for w in 0..2 {
+            let connector = connector.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut c = connector.connect().unwrap();
+                c.send(&Message::Hello { client: format!("w{w}"), profile: "t".into() }).unwrap();
+                c.recv().unwrap();
+                loop {
+                    c.send(&Message::TicketRequest).unwrap();
+                    match c.recv().unwrap() {
+                        Message::Ticket { ticket, .. } => {
+                            c.send(&Message::TicketResult { ticket, result: Value::Null }).unwrap();
+                            c.recv().unwrap();
+                        }
+                        Message::NoTicket { .. } => break,
+                        m => panic!("{m:?}"),
+                    }
+                }
+                c.send(&Message::Shutdown).unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(fw.store().progress(Some(task)).done, 4);
+        dist.stop();
+        drop(connector);
+        acceptor.join().unwrap();
+        assert_eq!(dist.stats.connections.load(Ordering::Relaxed), 2);
+    }
+}

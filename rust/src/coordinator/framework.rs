@@ -1,0 +1,178 @@
+//! CalculationFramework: the project/task programming model.
+//!
+//! The appendix's PrimeListMakerProject maps 1:1 onto this API:
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use sashimi::coordinator::Framework;
+//! # use sashimi::tasks::is_prime::IsPrimeTask;
+//! # use sashimi::util::json::Value;
+//! let fw = Framework::builder().build();
+//! let task = fw.create_task(Arc::new(IsPrimeTask));          // createTask
+//! let inputs = (1..=10_000)
+//!     .map(|i| Value::obj(vec![("candidate", Value::num(i as f64))]))
+//!     .collect();
+//! task.calculate(inputs);                                     // divide + enqueue
+//! let results = task.block();                                 // collect, in order
+//! # let _ = results;
+//! ```
+//!
+//! `calculate` divides the argument list into tickets in the store;
+//! workers (browsers) pull and execute them through the distributor;
+//! `block` waits and returns results "as if they were processed by the
+//! local machine".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::store::{Progress, StoreConfig, TaskId, TicketStore};
+use crate::tasks::{DatasetStore, Registry, TaskDef};
+use crate::util::clock;
+use crate::util::json::Value;
+
+pub struct FrameworkBuilder {
+    store_cfg: StoreConfig,
+    registry: Registry,
+}
+
+impl FrameworkBuilder {
+    pub fn store_config(mut self, cfg: StoreConfig) -> Self {
+        self.store_cfg = cfg;
+        self
+    }
+
+    pub fn register(mut self, def: Arc<dyn TaskDef>) -> Self {
+        self.registry.register(def);
+        self
+    }
+
+    pub fn build(self) -> Arc<Framework> {
+        Arc::new(Framework {
+            store: Arc::new(TicketStore::new(self.store_cfg)),
+            registry: Arc::new(std::sync::Mutex::new(self.registry)),
+            datasets: Arc::new(DatasetStore::new()),
+            next_task: AtomicU64::new(1),
+        })
+    }
+}
+
+/// The running framework: ticket store + task registry + dataset store.
+pub struct Framework {
+    store: Arc<TicketStore>,
+    registry: Arc<std::sync::Mutex<Registry>>,
+    datasets: Arc<DatasetStore>,
+    next_task: AtomicU64,
+}
+
+impl Framework {
+    pub fn builder() -> FrameworkBuilder {
+        FrameworkBuilder { store_cfg: StoreConfig::default(), registry: Registry::new() }
+    }
+
+    /// `this.createTask(SomeTask)`: register (idempotent) and get a handle.
+    pub fn create_task(self: &Arc<Self>, def: Arc<dyn TaskDef>) -> TaskHandle {
+        let name = def.name().to_string();
+        self.registry.lock().unwrap().register(def);
+        TaskHandle {
+            id: TaskId(self.next_task.fetch_add(1, Ordering::SeqCst)),
+            name,
+            fw: Arc::clone(self),
+        }
+    }
+
+    pub fn store(&self) -> &Arc<TicketStore> {
+        &self.store
+    }
+
+    pub fn datasets(&self) -> &Arc<DatasetStore> {
+        &self.datasets
+    }
+
+    /// Snapshot of the registry (workers resolve task code through this).
+    pub fn registry_snapshot(&self) -> Registry {
+        self.registry.lock().unwrap().clone()
+    }
+
+    pub fn progress(&self) -> Progress {
+        self.store.progress(None)
+    }
+}
+
+/// Handle to one created task (the project's `task` object).
+pub struct TaskHandle {
+    pub id: TaskId,
+    pub name: String,
+    fw: Arc<Framework>,
+}
+
+impl TaskHandle {
+    /// `task.calculate(inputs)`: divide the arguments into tickets.
+    pub fn calculate(&self, inputs: Vec<Value>) {
+        self.fw.store.create_tickets(self.id, &self.name, inputs, clock::now_ms());
+    }
+
+    /// `task.block(cb)`: wait for every ticket, results in input order.
+    pub fn block(&self) -> Vec<Value> {
+        self.fw.store.wait_results(self.id)
+    }
+
+    pub fn block_timeout(&self, timeout_ms: u64) -> Option<Vec<Value>> {
+        self.fw.store.wait_results_timeout(self.id, timeout_ms)
+    }
+
+    /// Streaming consumption (hybrid trainer): next accepted result.
+    pub fn next_completion(&self, timeout_ms: u64) -> Option<(usize, Value)> {
+        self.fw.store.next_completion(self.id, timeout_ms)
+    }
+
+    pub fn progress(&self) -> Progress {
+        self.fw.store.progress(Some(self.id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::is_prime::IsPrimeTask;
+    use crate::util::json::Value;
+
+    #[test]
+    fn calculate_creates_tickets_and_block_waits() {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate((0..5).map(|i| Value::num(i as f64)).collect());
+        assert_eq!(task.progress().total, 5);
+        assert_eq!(task.progress().pending, 5);
+
+        // Simulate a worker completing tickets directly via the store.
+        let store = fw.store().clone();
+        let tid = task.id;
+        let h = std::thread::spawn(move || {
+            for _ in 0..5 {
+                let t = store.next_ticket("w", clock::now_ms()).unwrap();
+                store.complete(t.id, Value::num(t.index as f64 * 2.0)).unwrap();
+            }
+            let _ = tid;
+        });
+        let results = task.block();
+        h.join().unwrap();
+        assert_eq!(results.len(), 5);
+        assert_eq!(results[3], Value::num(6.0));
+    }
+
+    #[test]
+    fn task_ids_are_unique() {
+        let fw = Framework::builder().build();
+        let a = fw.create_task(Arc::new(IsPrimeTask));
+        let b = fw.create_task(Arc::new(IsPrimeTask));
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn block_timeout_on_unfinished_task() {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(vec![Value::num(3.0)]);
+        assert!(task.block_timeout(20).is_none());
+    }
+}

@@ -1,0 +1,20 @@
+//! Sashimi's server side: the CalculationFramework (projects & tasks),
+//! the Distributor (ticket traffic + dataset APIs) and the control
+//! console.
+//!
+//! Paper → module map:
+//!
+//! | Paper (§2.1)            | Here                         |
+//! |-------------------------|------------------------------|
+//! | CalculationFramework    | [`framework::Framework`]     |
+//! | project / task / ticket | [`framework::TaskHandle`], [`crate::store`] |
+//! | TicketDistributor       | [`distributor::Distributor`] |
+//! | HTTPServer dataset APIs | `DataRequest` handling in the distributor + [`crate::tasks::DatasetStore`] |
+//! | control console         | [`console`]                  |
+
+pub mod console;
+pub mod distributor;
+pub mod framework;
+
+pub use distributor::Distributor;
+pub use framework::{Framework, TaskHandle};

@@ -1,0 +1,90 @@
+//! Mini-batch streams over a [`Dataset`] — deterministic, shuffled per
+//! epoch, shared by both engines so comparisons see identical batches.
+
+use super::Dataset;
+use crate::runtime::Tensor;
+use crate::util::rng::SplitMix64;
+
+pub struct BatchLoader<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: SplitMix64,
+    pub epoch: u64,
+}
+
+impl<'a> BatchLoader<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> Self {
+        assert!(batch <= data.len(), "batch {batch} > dataset {}", data.len());
+        let mut rng = SplitMix64::new(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        Self { data, batch, order, cursor: 0, rng, epoch: 0 }
+    }
+
+    /// Next (images, one-hot labels, integer labels); reshuffles at epoch
+    /// boundaries (drop-last semantics, like the paper's 50-image
+    /// mini-batches over 50k train images).
+    pub fn next_batch(&mut self) -> (Tensor, Tensor, Vec<usize>) {
+        if self.cursor + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        let x = self.data.batch_images(idx);
+        let y = self.data.batch_onehot(idx);
+        let labels = idx.iter().map(|&i| self.data.labels[i]).collect();
+        (x, y, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mnist_train;
+
+    #[test]
+    fn batches_have_right_shapes() {
+        let d = mnist_train(120, 1);
+        let mut l = BatchLoader::new(&d, 50, 2);
+        let (x, y, labels) = l.next_batch();
+        assert_eq!(x.shape(), &[50, 28, 28, 1]);
+        assert_eq!(y.shape(), &[50, 10]);
+        assert_eq!(labels.len(), 50);
+    }
+
+    #[test]
+    fn epoch_reshuffles_and_counts() {
+        let d = mnist_train(100, 1);
+        let mut l = BatchLoader::new(&d, 50, 3);
+        let (a, _, _) = l.next_batch();
+        let _ = l.next_batch();
+        assert_eq!(l.epoch, 0);
+        let (c, _, _) = l.next_batch(); // triggers epoch 1
+        assert_eq!(l.epoch, 1);
+        assert_ne!(a.data(), c.data());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = mnist_train(100, 1);
+        let mut l1 = BatchLoader::new(&d, 20, 9);
+        let mut l2 = BatchLoader::new(&d, 20, 9);
+        for _ in 0..7 {
+            let (a, _, la) = l1.next_batch();
+            let (b, _, lb) = l2.next_batch();
+            assert_eq!(a, b);
+            assert_eq!(la, lb);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_batch_panics() {
+        let d = mnist_train(10, 1);
+        let _ = BatchLoader::new(&d, 11, 0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Synthetic datasets standing in for MNIST and CIFAR-10 downloads.
+//!
+//! The image has no network access, so the paper's datasets are replaced
+//! by deterministic generators with class-dependent structure
+//! (DESIGN.md §2).  Two properties matter for the experiments:
+//!
+//! 1. *learnability* — a CNN's error rate must actually fall (Fig 3) and
+//!    nearest-neighbour must beat chance (Table 2's workload is "classify
+//!    1,000 of the 10,000 test images against 60,000 training images");
+//! 2. *shape fidelity* — same tensor shapes and set sizes as the real
+//!    datasets so all throughput/communication numbers are comparable.
+//!
+//! Each class k gets a smooth prototype image built from k-seeded
+//! sinusoid bumps; samples are `prototype + uniform pixel noise`, so
+//! intra-class distances are smaller than inter-class distances (kNN
+//! works) while noise keeps the problem non-trivial for the CNN.
+
+pub mod loader;
+
+use crate::runtime::Tensor;
+use crate::util::rng::SplitMix64;
+
+/// An in-memory labelled image dataset, NHWC f32 in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub hw: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    /// [N, hw, hw, channels] flattened.
+    pub images: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+
+    /// One image as a flat row (for kNN distance workloads).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.image_elems();
+        &self.images[i * d..(i + 1) * d]
+    }
+
+    /// Pack `indices` into an NHWC batch tensor.
+    pub fn batch_images(&self, indices: &[usize]) -> Tensor {
+        let d = self.image_elems();
+        let mut out = Vec::with_capacity(indices.len() * d);
+        for &i in indices {
+            out.extend_from_slice(self.row(i));
+        }
+        Tensor::new(vec![indices.len(), self.hw, self.hw, self.channels], out).unwrap()
+    }
+
+    /// Pack `indices` into a one-hot label tensor.
+    pub fn batch_onehot(&self, indices: &[usize]) -> Tensor {
+        let mut out = vec![0.0f32; indices.len() * self.n_classes];
+        for (row, &i) in indices.iter().enumerate() {
+            out[row * self.n_classes + self.labels[i]] = 1.0;
+        }
+        Tensor::new(vec![indices.len(), self.n_classes], out).unwrap()
+    }
+
+    /// Pack rows `[start, start+count)` as a [count, D] matrix (kNN chunks).
+    pub fn rows_matrix(&self, start: usize, count: usize) -> Tensor {
+        let d = self.image_elems();
+        let mut out = Vec::with_capacity(count * d);
+        for i in start..start + count {
+            out.extend_from_slice(self.row(i));
+        }
+        Tensor::new(vec![count, d], out).unwrap()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.images.len() * 4
+    }
+}
+
+/// Class prototype pixel: a smooth function of (x, y) with k-dependent
+/// frequencies/phases per channel — distinct, smooth, bounded.
+fn prototype_pixel(class: usize, c: usize, x: f64, y: f64) -> f64 {
+    let k = class as f64 + 1.0;
+    let ch = c as f64 + 1.0;
+    let v = 0.5
+        + 0.25 * ((k * 1.3 + ch) * x * std::f64::consts::PI).sin()
+        + 0.25 * ((k * 0.7 + 2.0 * ch) * y * std::f64::consts::PI + k).cos();
+    v.clamp(0.0, 1.0)
+}
+
+/// Generate a synthetic dataset: `n` samples, `hw`x`hw`x`channels`,
+/// `n_classes` classes, balanced labels in round-robin order then
+/// shuffled; noise amplitude 0.25 keeps kNN accuracy high but not 100%.
+pub fn synthetic(
+    name: &str,
+    n: usize,
+    hw: usize,
+    channels: usize,
+    n_classes: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = SplitMix64::new(seed);
+    let d = hw * hw * channels;
+    // Precompute prototypes.
+    let mut protos = vec![0.0f32; n_classes * d];
+    for k in 0..n_classes {
+        for y in 0..hw {
+            for x in 0..hw {
+                for c in 0..channels {
+                    protos[k * d + (y * hw + x) * channels + c] =
+                        prototype_pixel(k, c, x as f64 / hw as f64, y as f64 / hw as f64) as f32;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).map(|i| i % n_classes).collect();
+    rng.shuffle(&mut order);
+    let mut images = Vec::with_capacity(n * d);
+    for &k in &order {
+        for j in 0..d {
+            let noise = rng.uniform_f32(-0.25, 0.25);
+            images.push((protos[k * d + j] + noise).clamp(0.0, 1.0));
+        }
+    }
+    Dataset { name: name.to_string(), hw, channels, n_classes, images, labels: order }
+}
+
+/// MNIST-shaped: 28x28x1, 10 classes.
+pub fn mnist_train(n: usize, seed: u64) -> Dataset {
+    synthetic("mnist-train", n, 28, 1, 10, seed)
+}
+
+pub fn mnist_test(n: usize, seed: u64) -> Dataset {
+    synthetic("mnist-test", n, 28, 1, 10, seed ^ 0x5EED_7E57)
+}
+
+/// CIFAR-shaped: 32x32x3, 10 classes.
+pub fn cifar_train(n: usize, seed: u64) -> Dataset {
+    synthetic("cifar-train", n, 32, 3, 10, seed)
+}
+
+pub fn cifar_test(n: usize, seed: u64) -> Dataset {
+    synthetic("cifar-test", n, 32, 3, 10, seed ^ 0x5EED_7E57)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = mnist_train(100, 1);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.image_elems(), 784);
+        let b = mnist_train(100, 1);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = mnist_train(100, 2);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn pixels_in_unit_range_and_balanced_labels() {
+        let d = cifar_train(200, 3);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn nearest_prototype_structure_holds() {
+        // Intra-class distance must be systematically below inter-class:
+        // the property that makes kNN and the CNN work on this data.
+        let d = mnist_train(60, 4);
+        let (mut intra, mut inter) = (0.0f64, 0.0f64);
+        let (mut ni, mut nx) = (0, 0);
+        for i in 0..30 {
+            for j in 30..60 {
+                let dist: f64 = d
+                    .row(i)
+                    .iter()
+                    .zip(d.row(j))
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum();
+                if d.labels[i] == d.labels[j] {
+                    intra += dist;
+                    ni += 1;
+                } else {
+                    inter += dist;
+                    nx += 1;
+                }
+            }
+        }
+        let (intra, inter) = (intra / ni as f64, inter / nx as f64);
+        assert!(intra * 1.5 < inter, "intra {intra} vs inter {inter}");
+    }
+
+    #[test]
+    fn batch_packing() {
+        let d = mnist_train(20, 5);
+        let x = d.batch_images(&[0, 3, 7]);
+        assert_eq!(x.shape(), &[3, 28, 28, 1]);
+        assert_eq!(&x.data()[..784], d.row(0));
+        let y = d.batch_onehot(&[0, 3]);
+        assert_eq!(y.shape(), &[2, 10]);
+        assert_eq!(y.data().iter().sum::<f32>(), 2.0);
+        assert_eq!(y.data()[d.labels[0]], 1.0);
+    }
+
+    #[test]
+    fn rows_matrix_slices() {
+        let d = mnist_train(10, 6);
+        let m = d.rows_matrix(2, 3);
+        assert_eq!(m.shape(), &[3, 784]);
+        assert_eq!(&m.data()[784..1568], d.row(3));
+    }
+}

@@ -1,0 +1,33 @@
+//! # Sashimi / Sukiyaki — volunteer-grid distributed deep learning
+//!
+//! A reproduction of *"Implementation of a Practical Distributed
+//! Calculation System with Browsers and JavaScript, and Application to
+//! Distributed Deep Learning"* (Miura & Harada, 2015) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Sashimi coordination system: a
+//!   [`coordinator`] running projects/tasks/tickets, a [`store`] with the
+//!   paper's virtual-created-time redistribution policy, a [`transport`]
+//!   layer (JSON-lines TCP and in-process), and [`worker`] nodes that
+//!   replay the browser loop of §2.1.2.  The distributed deep-learning
+//!   algorithms of §4 live in [`dist`].
+//! * **L2/L1 (build time)** — `python/compile` lowers the Sukiyaki CNNs
+//!   (whose hot paths are Pallas kernels) to HLO text; the [`runtime`]
+//!   module loads and executes those artifacts through PJRT.  Python is
+//!   never on the request path.
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
+//! the reproduced tables and figures.
+
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod nn;
+pub mod runtime;
+pub mod store;
+pub mod tasks;
+pub mod transport;
+pub mod util;
+pub mod worker;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,299 @@
+//! `sashimi` — leader/worker CLI.
+//!
+//! Subcommands:
+//! * `serve`   — run the Distributor over TCP with the built-in task
+//!   registry (prime + kNN tasks) and a synthetic-MNIST dataset API;
+//!   prints the control console periodically.
+//! * `worker`  — join a server as a browser-node (`--connect host:port`,
+//!   `--profile desktop|tablet|native`, `--speed x.y`).
+//! * `prime`   — the appendix's PrimeListMakerProject, distributed over
+//!   in-process workers (see also examples/prime_list.rs).
+//! * `train`   — standalone Sukiyaki training (`--engine xla|naive|jnp`).
+//! * `hybrid` / `mlitb` / `hesync` — the §4 distributed algorithms.
+//! * `info`    — artifact manifest summary.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use sashimi::coordinator::{console, Distributor, Framework};
+use sashimi::data;
+use sashimi::data::loader::BatchLoader;
+use sashimi::dist::{self, Cluster, ClusterConfig};
+use sashimi::nn::{NativeEngine, TrainEngine, XlaEngine};
+use sashimi::runtime::Runtime;
+use sashimi::store::StoreConfig;
+use sashimi::tasks::{self, is_prime::IsPrimeTask};
+use sashimi::transport::tcp::{TcpConn, TcpListenerWrap};
+use sashimi::transport::{Conn, LinkModel};
+use sashimi::util::cli::Args;
+use sashimi::util::json::Value;
+use sashimi::util::rng::SplitMix64;
+use sashimi::worker::{DeviceProfile, Worker};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(args),
+        Some("worker") => worker(args),
+        Some("prime") => prime(args),
+        Some("train") => train(args),
+        Some("hybrid") | Some("mlitb") | Some("hesync") => dist_train(args),
+        Some("info") => info(args),
+        other => {
+            if other.is_some() {
+                eprintln!("unknown subcommand {other:?}\n");
+            }
+            println!(
+                "usage: sashimi <serve|worker|prime|train|hybrid|mlitb|hesync|info> [--flags]\n\
+                 \n\
+                 serve   --port 7070 [--knn-queries 100] [--knn-train 2000]\n\
+                 worker  --connect 127.0.0.1:7070 [--profile native|desktop|tablet] [--speed X]\n\
+                 prime   [--limit 10000] [--workers 2]\n\
+                 train   [--engine xla|naive|jnp] [--net cifar|mnist] [--steps 20] [--data 2000]\n\
+                 hybrid  [--net mnist] [--clients 2] [--rounds 3] (also mlitb, hesync)\n\
+                 info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn profile_from(args: &Args) -> Result<DeviceProfile> {
+    let p = args.str_or("profile", "native");
+    let mut prof = match p.as_str() {
+        "native" => DeviceProfile::native(),
+        "desktop" => DeviceProfile::desktop(),
+        "tablet" => DeviceProfile::tablet(),
+        other => bail!("unknown profile {other:?}"),
+    };
+    if let Some(s) = args.get("speed") {
+        let name = prof.name.clone();
+        prof = DeviceProfile::with_speed(&name, s.parse()?);
+    }
+    Ok(prof)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let port = args.usize_or("port", 7070)?;
+    let nq = args.usize_or("knn-queries", 100)?;
+    let nt = args.usize_or("knn-train", 2000)?;
+    args.reject_unknown()?;
+
+    let fw = Framework::builder()
+        .store_config(StoreConfig::default())
+        .register(Arc::new(IsPrimeTask))
+        .register(Arc::new(tasks::knn::KnnChunkTask::standard()))
+        .build();
+
+    // Dataset APIs: synthetic MNIST for the kNN workload.
+    let train = data::mnist_train(nt.max(2000), 1);
+    let test = data::mnist_test(nq.max(100), 2);
+    fw.datasets().register("knn_train_0", train.rows_matrix(0, 2000));
+    fw.datasets().register("knn_queries_0", test.rows_matrix(0, 100));
+
+    // Enqueue a kNN project so joining workers have work.
+    let knn = tasks::knn::KnnChunkTask::standard();
+    let task = fw.create_task(Arc::new(tasks::knn::KnnChunkTask::standard()));
+    task.calculate(vec![knn.ticket("knn_queries_0", "knn_train_0", 0)]);
+
+    let dist = Distributor::new(&fw);
+    let listener = TcpListenerWrap::bind(&format!("0.0.0.0:{port}"))?;
+    println!("sashimi distributor on {}", listener.local_addr);
+    let handle = dist.serve(Box::new(listener));
+    loop {
+        sashimi::util::clock::sleep_ms(5000);
+        println!("{}", console::render(&console::snapshot(&dist)));
+        if dist.stopped() {
+            break;
+        }
+    }
+    let _ = handle.join();
+    Ok(())
+}
+
+fn worker(args: &Args) -> Result<()> {
+    let addr = args.str_or("connect", "127.0.0.1:7070");
+    let profile = profile_from(args)?;
+    let max = args.u64_or("max-tickets", 0)?;
+    args.reject_unknown()?;
+
+    let mut registry = tasks::Registry::new();
+    registry.register(Arc::new(IsPrimeTask));
+    registry.register(Arc::new(tasks::knn::KnnChunkTask::standard()));
+    let rt = sashimi::runtime::open_shared()?;
+    let mut w =
+        Worker::new(&format!("tcp-{}", std::process::id()), profile, registry).with_runtime(rt);
+    if max > 0 {
+        w.max_tickets = Some(max);
+    }
+    let stop = AtomicBool::new(false);
+    let report = w.run(|| Ok(Box::new(TcpConn::connect(&addr)?) as Box<dyn Conn>), &stop);
+    println!(
+        "worker done: {} tickets, {} errors, {} reloads, busy {:.1} ms",
+        report.tickets_completed, report.errors_reported, report.reloads, report.busy_ms
+    );
+    Ok(())
+}
+
+fn prime(args: &Args) -> Result<()> {
+    let limit = args.usize_or("limit", 10_000)?;
+    let n_workers = args.usize_or("workers", 2)?;
+    args.reject_unknown()?;
+
+    let fw = Framework::builder().build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate(
+        (1..=limit).map(|i| Value::obj(vec![("candidate", Value::num(i as f64))])).collect(),
+    );
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = sashimi::transport::local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for i in 0..n_workers {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        joins.push(std::thread::spawn(move || {
+            let mut w = Worker::new(&format!("w{i}"), DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        }));
+    }
+    let results = task.block();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let primes: Vec<usize> = results
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.opt("is_prime").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false))
+        .map(|(i, _)| i + 1)
+        .collect();
+    for j in joins {
+        let _ = j.join();
+    }
+    println!("{} primes up to {limit}; last: {:?}", primes.len(), primes.last());
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let engine_kind = args.str_or("engine", "xla");
+    let net = args.str_or("net", "mnist");
+    let steps = args.usize_or("steps", 20)?;
+    let n_data = args.usize_or("data", 2000)?;
+    args.reject_unknown()?;
+
+    let rt = sashimi::runtime::open_shared()?;
+    let spec = rt.net(&net)?.clone();
+    let dataset =
+        if net == "cifar" { data::cifar_train(n_data, 3) } else { data::mnist_train(n_data, 3) };
+    let mut loader = BatchLoader::new(&dataset, spec.batch, 5);
+    let mut rng = SplitMix64::new(42);
+    let mut engine: Box<dyn TrainEngine> = match engine_kind.as_str() {
+        "xla" => Box::new(XlaEngine::new(rt.clone(), &net, &mut rng)?),
+        "jnp" => Box::new(
+            XlaEngine::new(rt.clone(), &net, &mut rng)?
+                .with_train_artifact(&format!("{net}_train_step_jnp")),
+        ),
+        "naive" => Box::new(NativeEngine::new(&spec, &mut rng)),
+        other => bail!("unknown engine {other:?}"),
+    };
+    println!("training {net} with {} for {steps} steps", engine.name());
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, y, _) = loader.next_batch();
+        let loss = engine.train_batch(&x, &y)?;
+        if step % 5 == 0 || step == steps - 1 {
+            println!(
+                "step {step:>4}  loss {loss:.4}  ({:.1} ms/step)",
+                t0.elapsed().as_secs_f64() * 1e3 / (step + 1) as f64
+            );
+        }
+    }
+    let per = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    println!("{} batches/min: {:.1}", engine.name(), 60_000.0 / per);
+    Ok(())
+}
+
+fn dist_train(args: &Args) -> Result<()> {
+    let algo = args.subcommand.clone().unwrap();
+    let net = args.str_or("net", "mnist");
+    let clients = args.usize_or("clients", 2)?;
+    let rounds = args.u64_or("rounds", 3)?;
+    args.reject_unknown()?;
+
+    let rt = sashimi::runtime::open_shared()?;
+    let dataset =
+        if net == "cifar" { data::cifar_train(1000, 3) } else { data::mnist_train(1000, 3) };
+    let cluster = Cluster::start(ClusterConfig::quick_test(&net, clients), rt, &dataset)?;
+    let stats = match algo.as_str() {
+        "hybrid" => {
+            let r = dist::hybrid::train(
+                &cluster,
+                &dist::hybrid::HybridConfig { rounds, ..Default::default() },
+            )?;
+            println!("loss curve:\n{}", r.loss_curve.dump("hybrid"));
+            r.stats
+        }
+        "mlitb" => dist::mlitb::train(&cluster, &dist::mlitb::MlitbConfig { rounds, seed: 11 })?.stats,
+        "hesync" => {
+            dist::he_sync::train(&cluster, &dist::he_sync::HeSyncConfig { rounds, seed: 11 })?.stats
+        }
+        _ => unreachable!(),
+    };
+    println!(
+        "{}: clients={} conv {:.2} batches/s, fc {:.2} steps/s, loss {:.4}, {:.1} MB moved",
+        stats.algorithm,
+        stats.clients,
+        stats.conv_batches_per_s,
+        stats.fc_steps_per_s,
+        stats.mean_loss_last_round,
+        (stats.bytes.0 + stats.bytes.1) as f64 / 1e6
+    );
+    cluster.shutdown();
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    args.reject_unknown()?;
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("nets:");
+    for (name, net) in &rt.manifest().nets {
+        println!(
+            "  {name}: {}x{}x{} batch={} params={}",
+            net.input_hw,
+            net.input_hw,
+            net.input_c,
+            net.batch,
+            net.param_count()
+        );
+    }
+    println!("artifacts:");
+    for (name, sig) in &rt.manifest().artifacts {
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            sig.inputs.len(),
+            sig.outputs.len(),
+            sig.file.display()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Native AdaGrad-β (the paper's §3.1 update rule), used where the
+//! gradient was produced *outside* an artifact — i.e. the hybrid server
+//! applying aggregated conv gradients, and the ConvNetJS-naive engine.
+//!
+//! Must agree numerically with the Pallas kernel
+//! (`python/compile/kernels/adagrad.py`); the golden artifact
+//! `adagrad_update` pins both against the same checksums, and a unit
+//! test here checks the closed form directly.
+
+use anyhow::Result;
+
+use crate::nn::params::ParamSet;
+use crate::runtime::Tensor;
+
+/// θ' = θ - lr * g / sqrt(β + G + g²);  G' = G + g².
+pub fn update_tensor(theta: &mut Tensor, accum: &mut Tensor, grad: &Tensor, lr: f32, beta: f32) -> Result<()> {
+    anyhow::ensure!(
+        theta.shape() == accum.shape() && theta.shape() == grad.shape(),
+        "adagrad shape mismatch: {:?} / {:?} / {:?}",
+        theta.shape(),
+        accum.shape(),
+        grad.shape()
+    );
+    let t = theta.data_mut();
+    let a = accum.data_mut();
+    let g = grad.data();
+    for i in 0..t.len() {
+        let gi = g[i];
+        let acc = a[i] + gi * gi;
+        a[i] = acc;
+        t[i] -= lr * gi / (beta + acc).sqrt();
+    }
+    Ok(())
+}
+
+/// Apply one step across a whole parameter set.
+pub fn update_set(params: &mut ParamSet, accums: &mut ParamSet, grads: &ParamSet, lr: f32, beta: f32) -> Result<()> {
+    let names: Vec<String> = params.names().to_vec();
+    for n in &names {
+        let g = grads.get(n)?.clone();
+        let mut t = params.get(n)?.clone();
+        let mut a = accums.get(n)?.clone();
+        update_tensor(&mut t, &mut a, &g, lr, beta)?;
+        params.set(n, t)?;
+        accums.set(n, a)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::params::test_support::tiny_net;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn closed_form_single_element() {
+        let mut theta = Tensor::scalar(1.0);
+        let mut accum = Tensor::scalar(0.25);
+        let grad = Tensor::scalar(0.5);
+        update_tensor(&mut theta, &mut accum, &grad, 0.1, 1.0).unwrap();
+        // G' = 0.25 + 0.25 = 0.5; θ' = 1 - 0.1*0.5/sqrt(1.5)
+        assert!((accum.item().unwrap() - 0.5).abs() < 1e-7);
+        let expect = 1.0 - 0.1 * 0.5 / 1.5f32.sqrt();
+        assert!((theta.item().unwrap() - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn beta_bounds_first_step() {
+        // The paper's motivation: tiny first gradients must not blow up.
+        let mut theta = Tensor::zeros(&[8]);
+        let mut accum = Tensor::zeros(&[8]);
+        let grad = Tensor::filled(&[8], 1e-6);
+        update_tensor(&mut theta, &mut accum, &grad, 0.01, 1.0).unwrap();
+        assert!(theta.data().iter().all(|v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn without_beta_first_step_is_full_lr() {
+        let mut theta = Tensor::scalar(0.0);
+        let mut accum = Tensor::scalar(0.0);
+        let grad = Tensor::scalar(1e-6);
+        update_tensor(&mut theta, &mut accum, &grad, 0.01, 0.0).unwrap();
+        // g/sqrt(g²) = 1 -> step = lr regardless of gradient magnitude.
+        assert!((theta.item().unwrap().abs() - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn set_update_touches_every_tensor() {
+        let net = tiny_net();
+        let mut rng = SplitMix64::new(5);
+        let mut params = ParamSet::init(&net, &mut rng);
+        let before = params.clone();
+        let mut accums = ParamSet::zeros(&net);
+        let mut grads = ParamSet::zeros(&net);
+        for n in ["conv1_w", "conv1_b", "fc_w", "fc_b"] {
+            for v in grads.get_mut(n).unwrap().data_mut() {
+                *v = 0.1;
+            }
+        }
+        update_set(&mut params, &mut accums, &grads, 0.01, 1.0).unwrap();
+        for n in ["conv1_w", "conv1_b", "fc_w", "fc_b"] {
+            assert_ne!(params.get(n).unwrap(), before.get(n).unwrap(), "{n} unchanged");
+            assert!(accums.get(n).unwrap().data().iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn accumulator_is_monotone_over_steps() {
+        let mut theta = Tensor::scalar(0.0);
+        let mut accum = Tensor::scalar(0.0);
+        let mut last = 0.0;
+        for i in 0..10 {
+            let grad = Tensor::scalar(0.1 * (i as f32 + 1.0));
+            update_tensor(&mut theta, &mut accum, &grad, 0.01, 1.0).unwrap();
+            let a = accum.item().unwrap();
+            assert!(a >= last);
+            last = a;
+        }
+    }
+}

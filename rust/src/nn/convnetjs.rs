@@ -1,0 +1,445 @@
+//! The ConvNetJS stand-in: a faithful single-threaded scalar CNN.
+//!
+//! Table 4 / Fig 3 compare Sukiyaki against ConvNetJS (Karpathy's
+//! JavaScript library).  We cannot run a browser, so this module
+//! re-implements ConvNetJS's algorithmic profile in Rust with the same
+//! characteristics the JS engine executes:
+//!
+//! * direct (non-im2col) convolution with per-output-pixel scalar loops;
+//! * f64 arithmetic throughout (JS numbers are doubles);
+//! * a single thread, no blocking, no SIMD intrinsics;
+//! * max-pool "switches" remembered for the backward pass, like
+//!   ConvNetJS's `Vol`-based pooling layer;
+//! * the same AdaGrad-β update as the rest of the system.
+//!
+//! Parameters interchange with the XLA engine via [`ParamSet`] (same
+//! im2col weight layout `[kh*kw*cin, cout]`, (dy,dx,c) row-major), so
+//! both engines can start from identical weights — Fig 3 plots both
+//! error curves from the same init.
+
+use anyhow::{ensure, Result};
+
+use crate::nn::adagrad;
+use crate::nn::params::ParamSet;
+use crate::runtime::{NetSpec, Tensor};
+use crate::util::rng::SplitMix64;
+
+/// Per-layer forward cache for one batch.
+struct ConvCache {
+    input: Vec<f64>,          // [B, h, w, cin] layer input
+    relu_mask: Vec<bool>,     // [B, h, w, cout] post-conv activation sign
+    switches: Vec<usize>,     // [B, h/2, w/2, cout] pooled argmax (flat idx into conv out)
+    pooled: Vec<f64>,         // [B, h/2, w/2, cout]
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+}
+
+pub struct NaiveNet {
+    spec: NetSpec,
+    pub params: ParamSet,
+    pub accums: ParamSet,
+    pub step: u64,
+}
+
+impl NaiveNet {
+    pub fn new(spec: &NetSpec, rng: &mut SplitMix64) -> NaiveNet {
+        NaiveNet {
+            spec: spec.clone(),
+            params: ParamSet::init(spec, rng),
+            accums: ParamSet::zeros(spec),
+            step: 0,
+        }
+    }
+
+    pub fn from_params(spec: &NetSpec, params: ParamSet) -> NaiveNet {
+        NaiveNet { spec: spec.clone(), params, accums: ParamSet::zeros(spec), step: 0 }
+    }
+
+    fn conv_forward_layer(
+        &self,
+        li: usize,
+        input: &[f64],
+        b: usize,
+        h: usize,
+        w: usize,
+    ) -> ConvCache {
+        let l = &self.spec.convs[li];
+        let (kh, kw, cin, cout, pad) = (l.kh, l.kw, l.cin, l.cout, l.pad);
+        let wname = format!("conv{}_w", li + 1);
+        let bname = format!("conv{}_b", li + 1);
+        let wt = self.params.get(&wname).unwrap();
+        let bt = self.params.get(&bname).unwrap();
+        let wd: Vec<f64> = wt.data().iter().map(|&v| v as f64).collect();
+        let bd: Vec<f64> = bt.data().iter().map(|&v| v as f64).collect();
+
+        let mut conv_out = vec![0.0f64; b * h * w * cout];
+        let mut relu_mask = vec![false; b * h * w * cout];
+        // ConvNetJS ConvLayer.forward: per output pixel, scan the filter
+        // window with scalar multiply-adds and bounds checks.
+        for n in 0..b {
+            for oy in 0..h {
+                for ox in 0..w {
+                    for oc in 0..cout {
+                        let mut acc = bd[oc];
+                        for dy in 0..kh {
+                            let iy = oy as isize + dy as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ix = ox as isize + dx as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let in_base = ((n * h + iy as usize) * w + ix as usize) * cin;
+                                let w_base = (dy * kw + dx) * cin;
+                                for c in 0..cin {
+                                    acc += input[in_base + c] * wd[(w_base + c) * cout + oc];
+                                }
+                            }
+                        }
+                        let idx = ((n * h + oy) * w + ox) * cout + oc;
+                        // relu fused, remembering the mask (activation layer)
+                        if acc > 0.0 {
+                            conv_out[idx] = acc;
+                            relu_mask[idx] = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 2x2/2 max pool with switches (PoolLayer.forward).
+        let (ph, pw) = (h / 2, w / 2);
+        let mut pooled = vec![0.0f64; b * ph * pw * cout];
+        let mut switches = vec![0usize; b * ph * pw * cout];
+        for n in 0..b {
+            for py in 0..ph {
+                for px in 0..pw {
+                    for c in 0..cout {
+                        let mut best = f64::NEG_INFINITY;
+                        let mut best_idx = 0usize;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let idx = ((n * h + 2 * py + dy) * w + 2 * px + dx) * cout + c;
+                                if conv_out[idx] > best {
+                                    best = conv_out[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let pidx = ((n * ph + py) * pw + px) * cout + c;
+                        pooled[pidx] = best;
+                        switches[pidx] = best_idx;
+                    }
+                }
+            }
+        }
+
+        ConvCache { input: input.to_vec(), relu_mask, switches, pooled, h, w, cin, cout }
+    }
+
+    /// Full forward pass; returns (per-layer caches, features, probs).
+    fn forward_full(&self, x: &Tensor) -> (Vec<ConvCache>, Vec<f64>, Vec<f64>) {
+        let b = self.spec.batch;
+        let mut cur: Vec<f64> = x.data().iter().map(|&v| v as f64).collect();
+        let mut h = self.spec.input_hw;
+        let mut w = self.spec.input_hw;
+        let mut caches = Vec::new();
+        for li in 0..self.spec.convs.len() {
+            let cache = self.conv_forward_layer(li, &cur, b, h, w);
+            cur = cache.pooled.clone();
+            h /= 2;
+            w /= 2;
+            caches.push(cache);
+        }
+        // cur is now [B, fc_in]
+        let fc_w = self.params.get("fc_w").unwrap();
+        let fc_b = self.params.get("fc_b").unwrap();
+        let (fin, nc) = (self.spec.fc_in, self.spec.n_classes);
+        let mut logits = vec![0.0f64; b * nc];
+        for n in 0..b {
+            for k in 0..nc {
+                let mut acc = fc_b.data()[k] as f64;
+                for j in 0..fin {
+                    acc += cur[n * fin + j] * fc_w.data()[j * nc + k] as f64;
+                }
+                logits[n * nc + k] = acc;
+            }
+        }
+        // softmax
+        let mut probs = vec![0.0f64; b * nc];
+        for n in 0..b {
+            let row = &logits[n * nc..(n + 1) * nc];
+            let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0;
+            for k in 0..nc {
+                let e = (row[k] - m).exp();
+                probs[n * nc + k] = e;
+                z += e;
+            }
+            for k in 0..nc {
+                probs[n * nc + k] /= z;
+            }
+        }
+        (caches, cur, probs)
+    }
+
+    /// Inference: class probabilities [B, n_classes].
+    pub fn forward_probs(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(x.shape() == self.spec.x_shape().as_slice(), "bad input shape {:?}", x.shape());
+        let (_, _, probs) = self.forward_full(x);
+        Tensor::new(
+            vec![self.spec.batch, self.spec.n_classes],
+            probs.iter().map(|&v| v as f32).collect(),
+        )
+    }
+
+    /// Gradients + loss without applying an update (for tests/aggregation).
+    pub fn gradients(&self, x: &Tensor, y1h: &Tensor) -> Result<(ParamSet, f64)> {
+        ensure!(x.shape() == self.spec.x_shape().as_slice(), "bad x shape {:?}", x.shape());
+        ensure!(y1h.shape() == self.spec.y_shape().as_slice(), "bad y shape {:?}", y1h.shape());
+        let b = self.spec.batch;
+        let nc = self.spec.n_classes;
+        let fin = self.spec.fc_in;
+        let (caches, feat, probs) = self.forward_full(x);
+
+        // loss + dlogits
+        let mut loss = 0.0f64;
+        let mut dlogits = vec![0.0f64; b * nc];
+        for n in 0..b {
+            for k in 0..nc {
+                let yv = y1h.data()[n * nc + k] as f64;
+                if yv > 0.0 {
+                    loss -= yv * probs[n * nc + k].max(1e-300).ln();
+                }
+                dlogits[n * nc + k] = (probs[n * nc + k] - yv) / b as f64;
+            }
+        }
+        loss /= b as f64;
+
+        let mut grads = ParamSet::zeros(&self.spec);
+        // FC grads + dfeat
+        let fc_w = self.params.get("fc_w").unwrap();
+        {
+            let gw = grads.get_mut("fc_w").unwrap();
+            let gwd = gw.data_mut();
+            for n in 0..b {
+                for j in 0..fin {
+                    let f = feat[n * fin + j];
+                    for k in 0..nc {
+                        gwd[j * nc + k] += (f * dlogits[n * nc + k]) as f32;
+                    }
+                }
+            }
+        }
+        {
+            let gb = grads.get_mut("fc_b").unwrap().data_mut();
+            for n in 0..b {
+                for k in 0..nc {
+                    gb[k] += dlogits[n * nc + k] as f32;
+                }
+            }
+        }
+        let mut dcur = vec![0.0f64; b * fin];
+        for n in 0..b {
+            for j in 0..fin {
+                let mut acc = 0.0;
+                for k in 0..nc {
+                    acc += dlogits[n * nc + k] * fc_w.data()[j * nc + k] as f64;
+                }
+                dcur[n * fin + j] = acc;
+            }
+        }
+
+        // conv stack backward, last layer first
+        for li in (0..self.spec.convs.len()).rev() {
+            let l = &self.spec.convs[li];
+            let cache = &caches[li];
+            let (h, w, cin, cout) = (cache.h, cache.w, cache.cin, cache.cout);
+            let (ph, pw) = (h / 2, w / 2);
+            let (kh, kw, pad) = (l.kh, l.kw, l.pad);
+
+            // pool backward: route cotangent to the switch position
+            let mut dconv = vec![0.0f64; b * h * w * cout];
+            for i in 0..b * ph * pw * cout {
+                dconv[cache.switches[i]] += dcur[i];
+            }
+            // relu backward
+            for i in 0..dconv.len() {
+                if !cache.relu_mask[i] {
+                    dconv[i] = 0.0;
+                }
+            }
+            // conv backward: dW, db, dinput
+            let wname = format!("conv{}_w", li + 1);
+            let bname = format!("conv{}_b", li + 1);
+            let wt: Vec<f64> = self.params.get(&wname).unwrap().data().iter().map(|&v| v as f64).collect();
+            let mut dw = vec![0.0f64; kh * kw * cin * cout];
+            let mut db = vec![0.0f64; cout];
+            let mut dinput = vec![0.0f64; b * h * w * cin];
+            for n in 0..b {
+                for oy in 0..h {
+                    for ox in 0..w {
+                        let out_base = ((n * h + oy) * w + ox) * cout;
+                        for oc in 0..cout {
+                            let d = dconv[out_base + oc];
+                            if d == 0.0 {
+                                continue;
+                            }
+                            db[oc] += d;
+                            for dy in 0..kh {
+                                let iy = oy as isize + dy as isize - pad as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                for dx in 0..kw {
+                                    let ix = ox as isize + dx as isize - pad as isize;
+                                    if ix < 0 || ix >= w as isize {
+                                        continue;
+                                    }
+                                    let in_base = ((n * h + iy as usize) * w + ix as usize) * cin;
+                                    let w_base = (dy * kw + dx) * cin;
+                                    for c in 0..cin {
+                                        dw[(w_base + c) * cout + oc] += input_at(&cache.input, in_base + c) * d;
+                                        dinput[in_base + c] += wt[(w_base + c) * cout + oc] * d;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            {
+                let g = grads.get_mut(&wname).unwrap().data_mut();
+                for i in 0..g.len() {
+                    g[i] = dw[i] as f32;
+                }
+            }
+            {
+                let g = grads.get_mut(&bname).unwrap().data_mut();
+                for i in 0..g.len() {
+                    g[i] = db[i] as f32;
+                }
+            }
+            dcur = dinput;
+        }
+
+        Ok((grads, loss))
+    }
+
+    /// One training step: forward, backward, AdaGrad-β update.
+    pub fn train_batch(&mut self, x: &Tensor, y1h: &Tensor) -> Result<f32> {
+        let (grads, loss) = self.gradients(x, y1h)?;
+        adagrad::update_set(&mut self.params, &mut self.accums, &grads, self.spec.lr, self.spec.beta)?;
+        self.step += 1;
+        Ok(loss as f32)
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+}
+
+#[inline]
+fn input_at(input: &[f64], idx: usize) -> f64 {
+    input[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::params::test_support::tiny_net;
+
+    fn tiny_batch(net: &NetSpec, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = SplitMix64::new(seed);
+        let x = Tensor::uniform(&net.x_shape(), &mut rng, 1.0);
+        let mut y = Tensor::zeros(&net.y_shape());
+        for n in 0..net.batch {
+            let k = rng.gen_range(net.n_classes as u64) as usize;
+            y.data_mut()[n * net.n_classes + k] = 1.0;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn forward_is_distribution() {
+        let net = tiny_net();
+        let nn = NaiveNet::new(&net, &mut SplitMix64::new(1));
+        let (x, _) = tiny_batch(&net, 2);
+        let probs = nn.forward_probs(&x).unwrap();
+        for n in 0..net.batch {
+            let row = &probs.data()[n * net.n_classes..(n + 1) * net.n_classes];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gradient_check_against_finite_differences() {
+        let net = tiny_net();
+        let mut rng = SplitMix64::new(3);
+        let nn = NaiveNet::new(&net, &mut rng);
+        let (x, y) = tiny_batch(&net, 4);
+        let (grads, loss0) = nn.gradients(&x, &y).unwrap();
+        assert!(loss0 > 0.0);
+
+        let eps = 1e-3f32;
+        // Sample a few coordinates from every tensor and compare to the
+        // symmetric difference quotient.
+        for name in ["conv1_w", "conv1_b", "fc_w", "fc_b"] {
+            let len = nn.params.get(name).unwrap().len();
+            for probe in 0..3.min(len) {
+                let idx = (probe * 7919) % len;
+                let mut plus = NaiveNet::from_params(&net, nn.params.clone());
+                plus.params.get_mut(name).unwrap().data_mut()[idx] += eps;
+                let (_, lp) = plus.gradients(&x, &y).unwrap();
+                let mut minus = NaiveNet::from_params(&net, nn.params.clone());
+                minus.params.get_mut(name).unwrap().data_mut()[idx] -= eps;
+                let (_, lm) = minus.gradients(&x, &y).unwrap();
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grads.get(name).unwrap().data()[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 * fd.abs().max(an.abs()).max(0.05),
+                    "{name}[{idx}]: analytic {an} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_learnable_batch() {
+        let net = tiny_net();
+        let mut rng = SplitMix64::new(5);
+        let mut nn = NaiveNet::new(&net, &mut rng);
+        // class-dependent constant images: trivially separable
+        let mut x = Tensor::zeros(&net.x_shape());
+        let mut y = Tensor::zeros(&net.y_shape());
+        let hw = net.input_hw * net.input_hw * net.input_c;
+        for n in 0..net.batch {
+            let k = n % net.n_classes;
+            for i in 0..hw {
+                x.data_mut()[n * hw + i] = k as f32 / net.n_classes as f32 + 0.1;
+            }
+            y.data_mut()[n * net.n_classes + k] = 1.0;
+        }
+        let first = nn.train_batch(&x, &y).unwrap();
+        let mut last = first;
+        for _ in 0..120 {
+            last = nn.train_batch(&x, &y).unwrap();
+        }
+        assert!(last < first * 0.6, "loss {first} -> {last}");
+        assert_eq!(nn.step, 121);
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let net = tiny_net();
+        let nn = NaiveNet::new(&net, &mut SplitMix64::new(6));
+        let bad = Tensor::zeros(&[1, 8, 8, 1]);
+        assert!(nn.forward_probs(&bad).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! The two training engines behind one interface.
+//!
+//! * [`XlaEngine`] — "Sukiyaki": one fused AOT train-step artifact per
+//!   batch; the whole fwd/bwd/update runs inside XLA, parameters round-
+//!   trip as tensors.
+//! * [`NativeEngine`] — "ConvNetJS": the scalar baseline.
+//!
+//! Table 4 / Fig 3 drive both through this trait from identical inits
+//! and identical batch streams, so the comparison isolates the engine.
+
+use anyhow::Result;
+
+use crate::nn::convnetjs::NaiveNet;
+use crate::nn::params::ParamSet;
+use crate::runtime::{NetSpec, SharedRuntime, Tensor};
+use crate::util::rng::SplitMix64;
+
+pub trait TrainEngine {
+    fn name(&self) -> &str;
+    /// One mini-batch train step; returns the batch loss.
+    fn train_batch(&mut self, x: &Tensor, y1h: &Tensor) -> Result<f32>;
+    /// Class probabilities for a batch.
+    fn forward(&self, x: &Tensor) -> Result<Tensor>;
+    fn params(&self) -> &ParamSet;
+    fn step(&self) -> u64;
+}
+
+/// Sukiyaki: the AOT/XLA engine.
+pub struct XlaEngine {
+    rt: SharedRuntime,
+    spec: NetSpec,
+    params: ParamSet,
+    accums: ParamSet,
+    step: u64,
+    train_artifact: String,
+    forward_artifact: String,
+    label: String,
+}
+
+impl XlaEngine {
+    pub fn new(rt: SharedRuntime, net: &str, rng: &mut SplitMix64) -> Result<XlaEngine> {
+        let spec = rt.net(net)?.clone();
+        let params = ParamSet::init(&spec, rng);
+        Self::from_params(rt, net, params)
+    }
+
+    pub fn from_params(rt: SharedRuntime, net: &str, params: ParamSet) -> Result<XlaEngine> {
+        let spec = rt.net(net)?.clone();
+        let accums = ParamSet::zeros(&spec);
+        Ok(XlaEngine {
+            rt,
+            params,
+            accums,
+            step: 0,
+            train_artifact: format!("{net}_train_step"),
+            forward_artifact: format!("{net}_forward"),
+            label: format!("sukiyaki-xla[{net}]"),
+            spec,
+        })
+    }
+
+    /// Swap the train-step artifact (e.g. `cifar_train_step_jnp` for the
+    /// pure-jnp ablation engine).
+    pub fn with_train_artifact(mut self, artifact: &str) -> XlaEngine {
+        self.train_artifact = artifact.to_string();
+        self.label = format!("sukiyaki-xla[{artifact}]");
+        self
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn accums(&self) -> &ParamSet {
+        &self.accums
+    }
+
+    /// Pre-compile the artifacts so the first measured batch is not a
+    /// compilation sample.
+    pub fn warm(&self) -> Result<()> {
+        self.rt.load(&self.train_artifact)?;
+        self.rt.load(&self.forward_artifact)?;
+        Ok(())
+    }
+}
+
+impl TrainEngine for XlaEngine {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn train_batch(&mut self, x: &Tensor, y1h: &Tensor) -> Result<f32> {
+        let mut inputs = self.params.ordered();
+        inputs.extend(self.accums.ordered());
+        inputs.push(x.clone());
+        inputs.push(y1h.clone());
+        let outs = self.rt.exec(&self.train_artifact, &inputs)?;
+        let n = self.params.names().len();
+        anyhow::ensure!(outs.len() == 2 * n + 1, "train step returned {} outputs", outs.len());
+        self.params.update_from(&outs[..n])?;
+        self.accums.update_from(&outs[n..2 * n])?;
+        self.step += 1;
+        outs[2 * n].item()
+    }
+
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let mut inputs = self.params.ordered();
+        inputs.push(x.clone());
+        let outs = self.rt.exec(&self.forward_artifact, &inputs)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    fn step(&self) -> u64 {
+        self.step
+    }
+}
+
+/// ConvNetJS: the scalar baseline engine.
+pub struct NativeEngine {
+    nn: NaiveNet,
+    label: String,
+}
+
+impl NativeEngine {
+    pub fn new(spec: &NetSpec, rng: &mut SplitMix64) -> NativeEngine {
+        NativeEngine { nn: NaiveNet::new(spec, rng), label: format!("convnetjs-naive[{}]", spec.name) }
+    }
+
+    pub fn from_params(spec: &NetSpec, params: ParamSet) -> NativeEngine {
+        NativeEngine { nn: NaiveNet::from_params(spec, params), label: format!("convnetjs-naive[{}]", spec.name) }
+    }
+}
+
+impl TrainEngine for NativeEngine {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn train_batch(&mut self, x: &Tensor, y1h: &Tensor) -> Result<f32> {
+        self.nn.train_batch(x, y1h)
+    }
+
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.nn.forward_probs(x)
+    }
+
+    fn params(&self) -> &ParamSet {
+        &self.nn.params
+    }
+
+    fn step(&self) -> u64 {
+        self.nn.step
+    }
+}

@@ -1,0 +1,93 @@
+//! Training metrics: error rate, loss curves (the Fig 3 data series).
+
+use crate::runtime::Tensor;
+
+/// Top-1 error rate of probability rows vs integer labels.
+pub fn error_rate(probs: &Tensor, labels: &[usize]) -> f32 {
+    let nc = *probs.shape().last().unwrap();
+    let b = probs.len() / nc;
+    assert_eq!(b, labels.len(), "batch/labels mismatch");
+    let mut wrong = 0usize;
+    for n in 0..b {
+        let row = &probs.data()[n * nc..(n + 1) * nc];
+        let mut best = 0usize;
+        for k in 1..nc {
+            if row[k] > row[best] {
+                best = k;
+            }
+        }
+        if best != labels[n] {
+            wrong += 1;
+        }
+    }
+    wrong as f32 / b as f32
+}
+
+/// A recorded training curve: (step, wall-clock ms, value).
+#[derive(Debug, Default, Clone)]
+pub struct Curve {
+    pub points: Vec<(u64, f64, f64)>,
+}
+
+impl Curve {
+    pub fn push(&mut self, step: u64, wall_ms: f64, value: f64) {
+        self.points.push((step, wall_ms, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.2)
+    }
+
+    /// Mean of the first/last `k` recorded values (trend check).
+    pub fn head_mean(&self, k: usize) -> f64 {
+        let k = k.min(self.points.len());
+        self.points[..k].iter().map(|p| p.2).sum::<f64>() / k.max(1) as f64
+    }
+
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let n = self.points.len();
+        let k = k.min(n);
+        self.points[n - k..].iter().map(|p| p.2).sum::<f64>() / k.max(1) as f64
+    }
+
+    /// Render as "x y" rows for EXPERIMENTS.md / gnuplot.
+    pub fn dump(&self, label: &str) -> String {
+        let mut s = format!("# {label}: step wall_ms value\n");
+        for (step, ms, v) in &self.points {
+            s.push_str(&format!("{step} {ms:.1} {v:.6}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_rate_counts_mismatches() {
+        let probs = Tensor::new(
+            vec![3, 2],
+            vec![
+                0.9, 0.1, // -> 0
+                0.2, 0.8, // -> 1
+                0.6, 0.4, // -> 0
+            ],
+        )
+        .unwrap();
+        assert_eq!(error_rate(&probs, &[0, 1, 1]), 1.0 / 3.0);
+        assert_eq!(error_rate(&probs, &[0, 1, 0]), 0.0);
+        assert_eq!(error_rate(&probs, &[1, 0, 1]), 1.0);
+    }
+
+    #[test]
+    fn curve_trend_helpers() {
+        let mut c = Curve::default();
+        for i in 0..10u64 {
+            c.push(i, i as f64, 10.0 - i as f64);
+        }
+        assert!(c.head_mean(3) > c.tail_mean(3));
+        assert_eq!(c.last(), Some(1.0));
+        assert!(c.dump("loss").lines().count() == 11);
+    }
+}

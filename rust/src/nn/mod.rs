@@ -1,0 +1,28 @@
+//! Sukiyaki (L3 side): parameter state, AdaGrad-β, model files, the two
+//! training engines, and metrics.
+//!
+//! The heavy math lives in the AOT artifacts (L2/L1); this module owns
+//! everything the coordinator touches directly:
+//!
+//! * [`params`] — named parameter/accumulator sets in the canonical
+//!   ordering shared with `python/compile/model.py`;
+//! * [`model_file`] — the paper's JSON + base64 model interchange format
+//!   (§3.1: platform-independent, no rounding errors);
+//! * [`adagrad`] — a native AdaGrad-β used by the hybrid server to apply
+//!   *aggregated* conv gradients (everything else updates inside the
+//!   artifacts);
+//! * [`convnetjs`] — the faithful single-threaded scalar baseline
+//!   standing in for ConvNetJS in Table 4 / Fig 3;
+//! * [`engine`] — one `TrainEngine` interface over the XLA artifact
+//!   engine (Sukiyaki) and the naive engine (ConvNetJS);
+//! * [`metrics`] — error rate, loss curves.
+
+pub mod adagrad;
+pub mod convnetjs;
+pub mod engine;
+pub mod metrics;
+pub mod model_file;
+pub mod params;
+
+pub use engine::{NativeEngine, TrainEngine, XlaEngine};
+pub use params::ParamSet;

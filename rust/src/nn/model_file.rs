@@ -1,0 +1,182 @@
+//! The paper's model interchange format (§3.1): JSON with base64-encoded
+//! parameters — "a platform independent string format ... exchanged among
+//! machines without rounding errors".
+//!
+//! Layout:
+//! ```json
+//! {
+//!   "format": 1,
+//!   "net": "cifar",
+//!   "step": 1200,
+//!   "params":  { "conv1_w": {"shape": [75,16], "data": "<base64 LE f32>"}, ... },
+//!   "accums":  { ... same structure, optional ... }
+//! }
+//! ```
+//! Tensor bytes are little-endian f32, so round-trips are bit-exact
+//! (tested below with NaN payloads and ±0).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::params::ParamSet;
+use crate::runtime::Tensor;
+use crate::util::base64;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct ModelFile {
+    pub net: String,
+    pub step: u64,
+    pub params: ParamSet,
+    pub accums: Option<ParamSet>,
+}
+
+fn set_to_json(set: &ParamSet) -> Value {
+    let mut obj = BTreeMap::new();
+    for (name, t) in set.iter() {
+        obj.insert(
+            name.clone(),
+            Value::obj(vec![
+                ("shape", Value::arr(t.shape().iter().map(|&d| Value::num(d as f64)))),
+                ("data", Value::str(base64::encode_f32(t.data()))),
+            ]),
+        );
+    }
+    Value::Obj(obj)
+}
+
+fn set_from_json(v: &Value, order_hint: &[String]) -> Result<ParamSet> {
+    let obj = v.as_obj()?;
+    // Preserve canonical order if the hint covers the keys, else sorted.
+    let names: Vec<String> = if !order_hint.is_empty()
+        && order_hint.iter().all(|n| obj.contains_key(n))
+        && obj.len() == order_hint.len()
+    {
+        order_hint.to_vec()
+    } else {
+        obj.keys().cloned().collect()
+    };
+    let mut pairs = Vec::new();
+    for n in names {
+        let e = &obj[&n];
+        let shape = e.get("shape")?.as_usize_vec()?;
+        let data = base64::decode_f32(e.get("data")?.as_str()?)
+            .with_context(|| format!("decoding parameter {n:?}"))?;
+        pairs.push((n, Tensor::new(shape, data)?));
+    }
+    Ok(ParamSet::from_pairs(pairs))
+}
+
+impl ModelFile {
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("format", Value::num(1.0)),
+            ("net", Value::str(self.net.clone())),
+            ("step", Value::num(self.step as f64)),
+            ("params", set_to_json(&self.params)),
+        ];
+        if let Some(a) = &self.accums {
+            fields.push(("accums", set_to_json(a)));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn to_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse(text: &str, order_hint: &[String]) -> Result<ModelFile> {
+        let v = Value::parse(text)?;
+        let format = v.get("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported model file format {format}");
+        }
+        Ok(ModelFile {
+            net: v.get("net")?.as_str()?.to_string(),
+            step: v.get("step")?.as_u64()?,
+            params: set_from_json(v.get("params")?, order_hint)?,
+            accums: match v.opt("accums") {
+                Some(a) => Some(set_from_json(a, order_hint)?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_string()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path, order_hint: &[String]) -> Result<ModelFile> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text, order_hint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::params::test_support::tiny_net;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let net = tiny_net();
+        let mut params = ParamSet::init(&net, &mut SplitMix64::new(1));
+        // Plant exact-bit hazards.
+        params.get_mut("fc_b").unwrap().data_mut()[0] = f32::NAN;
+        params.get_mut("fc_b").unwrap().data_mut()[1] = -0.0;
+        let mf = ModelFile { net: "tiny".into(), step: 42, params: params.clone(), accums: None };
+        let back = ModelFile::parse(&mf.to_string(), &net.param_names).unwrap();
+        assert_eq!(back.net, "tiny");
+        assert_eq!(back.step, 42);
+        for (n, t) in params.iter() {
+            let b = back.params.get(n).unwrap();
+            assert_eq!(t.shape(), b.shape());
+            for (x, y) in t.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn accums_roundtrip() {
+        let net = tiny_net();
+        let params = ParamSet::init(&net, &mut SplitMix64::new(2));
+        let mut accums = ParamSet::zeros(&net);
+        accums.get_mut("conv1_w").unwrap().data_mut()[3] = 0.5;
+        let mf = ModelFile { net: "tiny".into(), step: 0, params, accums: Some(accums.clone()) };
+        let back = ModelFile::parse(&mf.to_string(), &net.param_names).unwrap();
+        assert_eq!(back.accums.unwrap().get("conv1_w").unwrap().data()[3], 0.5);
+    }
+
+    #[test]
+    fn canonical_order_preserved() {
+        let net = tiny_net();
+        let params = ParamSet::init(&net, &mut SplitMix64::new(3));
+        let mf = ModelFile { net: "tiny".into(), step: 0, params, accums: None };
+        let back = ModelFile::parse(&mf.to_string(), &net.param_names).unwrap();
+        assert_eq!(back.params.names(), net.param_names.as_slice());
+    }
+
+    #[test]
+    fn rejects_future_format() {
+        let text = r#"{"format": 2, "net": "x", "step": 0, "params": {}}"#;
+        assert!(ModelFile::parse(text, &[]).is_err());
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let net = tiny_net();
+        let params = ParamSet::init(&net, &mut SplitMix64::new(4));
+        let mf = ModelFile { net: "tiny".into(), step: 7, params, accums: None };
+        let dir = std::env::temp_dir().join("sashimi_model_file_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        mf.save(&path).unwrap();
+        let back = ModelFile::load(&path, &net.param_names).unwrap();
+        assert_eq!(back.step, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,261 @@
+//! Named parameter sets in the canonical cross-language ordering.
+//!
+//! Ordering and shapes come from the manifest's `NetSpec` (which mirrors
+//! `model.py`), so a `ParamSet` can be flattened straight into an
+//! artifact's input list and rebuilt from its output list without any
+//! permutation logic anywhere else.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{NetSpec, Tensor};
+use crate::util::rng::SplitMix64;
+
+/// An ordered, named set of tensors (parameters, accumulators or
+/// gradients — same structure for all three).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    names: Vec<String>,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    /// Zero-initialised set with the net's parameter shapes (used for
+    /// AdaGrad accumulators and gradient accumulation buffers).
+    pub fn zeros(net: &NetSpec) -> ParamSet {
+        let mut tensors = BTreeMap::new();
+        for n in &net.param_names {
+            tensors.insert(n.clone(), Tensor::zeros(&net.param_shapes[n]));
+        }
+        ParamSet { names: net.param_names.clone(), tensors }
+    }
+
+    /// LeCun-style uniform init: w ~ U[-1/sqrt(fan_in), 1/sqrt(fan_in)],
+    /// biases zero.  Both engines (XLA and ConvNetJS-naive) initialise
+    /// through this so Table 4 / Fig 3 start from identical weights.
+    pub fn init(net: &NetSpec, rng: &mut SplitMix64) -> ParamSet {
+        let mut tensors = BTreeMap::new();
+        for n in &net.param_names {
+            let shape = &net.param_shapes[n];
+            let t = if n.ends_with("_b") {
+                Tensor::zeros(shape)
+            } else {
+                let fan_in = shape[0] as f32;
+                Tensor::uniform(shape, rng, 1.0 / fan_in.sqrt())
+            };
+            tensors.insert(n.clone(), t);
+        }
+        ParamSet { names: net.param_names.clone(), tensors }
+    }
+
+    /// Build from explicit (name, tensor) pairs in the given order.
+    pub fn from_pairs(pairs: Vec<(String, Tensor)>) -> ParamSet {
+        let names = pairs.iter().map(|(n, _)| n.clone()).collect();
+        ParamSet { names, tensors: pairs.into_iter().collect() }
+    }
+
+    /// Restrict to the conv-stack parameters (the hybrid client's share).
+    pub fn conv_subset(&self, net: &NetSpec) -> ParamSet {
+        let names: Vec<String> = net.conv_param_names().to_vec();
+        let tensors = names.iter().map(|n| (n.clone(), self.tensors[n].clone())).collect();
+        ParamSet { names, tensors }
+    }
+
+    /// Restrict to the FC parameters (the hybrid server's share).
+    pub fn fc_subset(&self) -> ParamSet {
+        let names: Vec<String> = self.names.iter().filter(|n| n.starts_with("fc_")).cloned().collect();
+        let tensors = names.iter().map(|n| (n.clone(), self.tensors[n].clone())).collect();
+        ParamSet { names, tensors }
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow::anyhow!("no parameter {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.tensors.get_mut(name).ok_or_else(|| anyhow::anyhow!("no parameter {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        if !self.tensors.contains_key(name) {
+            bail!("no parameter {name:?}");
+        }
+        self.tensors.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    /// Tensors in canonical order — exactly the artifact argument order.
+    pub fn ordered(&self) -> Vec<Tensor> {
+        self.names.iter().map(|n| self.tensors[n].clone()).collect()
+    }
+
+    /// Replace all tensors from an artifact's output slice (same order).
+    pub fn update_from(&mut self, outputs: &[Tensor]) -> Result<()> {
+        if outputs.len() != self.names.len() {
+            bail!("expected {} tensors, got {}", self.names.len(), outputs.len());
+        }
+        for (n, t) in self.names.iter().zip(outputs) {
+            let cur = &self.tensors[n];
+            if cur.shape() != t.shape() {
+                bail!("{n}: shape {:?} -> {:?} mismatch", cur.shape(), t.shape());
+            }
+            self.tensors.insert(n.clone(), t.clone());
+        }
+        Ok(())
+    }
+
+    /// Merge another set's tensors for the names it has (hybrid: fold the
+    /// server-trained FC params back into the full set).
+    pub fn merge(&mut self, other: &ParamSet) -> Result<()> {
+        for n in &other.names {
+            if !self.tensors.contains_key(n) {
+                bail!("merge: unknown parameter {n:?}");
+            }
+            self.tensors.insert(n.clone(), other.tensors[n].clone());
+        }
+        Ok(())
+    }
+
+    /// In-place axpy over the whole set: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &ParamSet) -> Result<()> {
+        if self.names != other.names {
+            bail!("axpy over mismatched param sets");
+        }
+        for n in &self.names {
+            let o = other.tensors[n].clone();
+            self.tensors.get_mut(n).unwrap().axpy(alpha, &o)?;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for t in self.tensors.values_mut() {
+            t.scale(s);
+        }
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.total_elements() * 4
+    }
+
+    /// Global L2 norm across all tensors.
+    pub fn norm(&self) -> f32 {
+        self.tensors.values().map(|t| {
+            let n = t.norm();
+            n * n
+        }).sum::<f32>().sqrt()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.names.iter().map(move |n| (n, &self.tensors[n]))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::runtime::artifact::ConvLayerSpec;
+
+    /// A miniature NetSpec for unit tests that don't need artifacts.
+    pub fn tiny_net() -> NetSpec {
+        let mut param_shapes = BTreeMap::new();
+        param_shapes.insert("conv1_w".into(), vec![25, 4]);
+        param_shapes.insert("conv1_b".into(), vec![4]);
+        param_shapes.insert("fc_w".into(), vec![64, 3]);
+        param_shapes.insert("fc_b".into(), vec![3]);
+        NetSpec {
+            name: "tiny".into(),
+            input_hw: 8,
+            input_c: 1,
+            batch: 2,
+            n_classes: 3,
+            fc_in: 64,
+            convs: vec![ConvLayerSpec { kh: 5, kw: 5, cin: 1, cout: 4, pad: 2 }],
+            param_names: vec!["conv1_w".into(), "conv1_b".into(), "fc_w".into(), "fc_b".into()],
+            param_shapes,
+            lr: 0.01,
+            beta: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::tiny_net;
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_bias_zero() {
+        let net = tiny_net();
+        let p = ParamSet::init(&net, &mut SplitMix64::new(1));
+        assert_eq!(p.get("conv1_w").unwrap().shape(), &[25, 4]);
+        assert!(p.get("conv1_b").unwrap().data().iter().all(|&v| v == 0.0));
+        let w = p.get("fc_w").unwrap();
+        let bound = 1.0 / (64f32).sqrt() + 1e-6;
+        assert!(w.data().iter().all(|&v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn ordered_matches_canonical_order() {
+        let net = tiny_net();
+        let p = ParamSet::init(&net, &mut SplitMix64::new(2));
+        let v = p.ordered();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].shape(), &[25, 4]); // conv1_w first, not BTreeMap order
+        assert_eq!(v[3].shape(), &[3]);
+    }
+
+    #[test]
+    fn update_from_roundtrip() {
+        let net = tiny_net();
+        let mut p = ParamSet::init(&net, &mut SplitMix64::new(3));
+        let mut outs = p.ordered();
+        outs[0].data_mut()[0] = 42.0;
+        p.update_from(&outs).unwrap();
+        assert_eq!(p.get("conv1_w").unwrap().data()[0], 42.0);
+        outs.pop();
+        assert!(p.update_from(&outs).is_err());
+    }
+
+    #[test]
+    fn subsets_and_merge() {
+        let net = tiny_net();
+        let mut p = ParamSet::init(&net, &mut SplitMix64::new(4));
+        let conv = p.conv_subset(&net);
+        assert_eq!(conv.names(), &["conv1_w", "conv1_b"]);
+        let mut fc = p.fc_subset();
+        assert_eq!(fc.names(), &["fc_w", "fc_b"]);
+        fc.get_mut("fc_b").unwrap().data_mut()[0] = 9.0;
+        p.merge(&fc).unwrap();
+        assert_eq!(p.get("fc_b").unwrap().data()[0], 9.0);
+    }
+
+    #[test]
+    fn axpy_accumulates_gradients() {
+        let net = tiny_net();
+        let mut acc = ParamSet::zeros(&net);
+        let mut g = ParamSet::zeros(&net);
+        g.get_mut("fc_b").unwrap().data_mut()[1] = 2.0;
+        acc.axpy(0.5, &g).unwrap();
+        assert_eq!(acc.get("fc_b").unwrap().data()[1], 1.0);
+        acc.scale(2.0);
+        assert_eq!(acc.get("fc_b").unwrap().data()[1], 2.0);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let net = tiny_net();
+        let a = ParamSet::init(&net, &mut SplitMix64::new(7));
+        let b = ParamSet::init(&net, &mut SplitMix64::new(7));
+        assert_eq!(a, b);
+    }
+}

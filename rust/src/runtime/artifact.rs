@@ -1,0 +1,244 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` is the only contract between the build-time
+//! Python world and the Rust runtime: artifact names, HLO file names and
+//! exact input/output signatures, plus the net descriptions (parameter
+//! names/shapes, batch, lr/β) the coordinator needs to allocate state.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvLayerSpec {
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub pad: usize,
+}
+
+/// Mirror of model.NetSpec, read from the manifest so both languages
+/// agree by construction.
+#[derive(Debug, Clone)]
+pub struct NetSpec {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub batch: usize,
+    pub n_classes: usize,
+    pub fc_in: usize,
+    pub convs: Vec<ConvLayerSpec>,
+    pub param_names: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub lr: f32,
+    pub beta: f32,
+}
+
+impl NetSpec {
+    pub fn conv_param_names(&self) -> &[String] {
+        &self.param_names[..self.param_names.len() - 2]
+    }
+
+    pub fn x_shape(&self) -> Vec<usize> {
+        vec![self.batch, self.input_hw, self.input_hw, self.input_c]
+    }
+
+    pub fn y_shape(&self) -> Vec<usize> {
+        vec![self.batch, self.n_classes]
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes.values().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+    pub nets: BTreeMap<String, NetSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v.get("artifacts")?.as_obj()? {
+            let mut inputs = Vec::new();
+            for inp in entry.get("inputs")?.as_arr()? {
+                inputs.push(TensorSig {
+                    name: inp.get("name")?.as_str()?.to_string(),
+                    shape: inp.get("shape")?.as_usize_vec()?,
+                });
+            }
+            let outputs = entry
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.get("name")?.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    name: name.clone(),
+                    file: dir.join(entry.get("file")?.as_str()?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut nets = BTreeMap::new();
+        for (name, n) in v.get("nets")?.as_obj()? {
+            let mut convs = Vec::new();
+            for c in n.get("convs")?.as_arr()? {
+                convs.push(ConvLayerSpec {
+                    kh: c.get("kh")?.as_usize()?,
+                    kw: c.get("kw")?.as_usize()?,
+                    cin: c.get("cin")?.as_usize()?,
+                    cout: c.get("cout")?.as_usize()?,
+                    pad: c.get("pad")?.as_usize()?,
+                });
+            }
+            let param_names = n
+                .get("param_names")?
+                .as_arr()?
+                .iter()
+                .map(|p| Ok(p.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            let mut param_shapes = BTreeMap::new();
+            for (k, s) in n.get("param_shapes")?.as_obj()? {
+                param_shapes.insert(k.clone(), s.as_usize_vec()?);
+            }
+            nets.insert(
+                name.clone(),
+                NetSpec {
+                    name: name.clone(),
+                    input_hw: n.get("input_hw")?.as_usize()?,
+                    input_c: n.get("input_c")?.as_usize()?,
+                    batch: n.get("batch")?.as_usize()?,
+                    n_classes: n.get("n_classes")?.as_usize()?,
+                    fc_in: n.get("fc_in")?.as_usize()?,
+                    convs,
+                    param_names,
+                    param_shapes,
+                    lr: n.get("lr")?.as_f64()? as f32,
+                    beta: n.get("beta")?.as_f64()? as f32,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, nets })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!("artifact {name:?} not in manifest (have: {:?})", self.artifacts.keys())
+        })
+    }
+
+    pub fn net(&self, name: &str) -> Result<&NetSpec> {
+        self.nets
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("net {name:?} not in manifest"))
+    }
+}
+
+/// Locate the artifacts directory: $SASHIMI_ARTIFACTS or ./artifacts
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("SASHIMI_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("artifacts/manifest.json not found — run `make artifacts`");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "nets": {"tiny": {
+        "input_hw": 8, "input_c": 1, "batch": 2, "n_classes": 3, "fc_in": 16,
+        "convs": [{"kh":5,"kw":5,"cin":1,"cout":4,"pad":2}],
+        "param_names": ["conv1_w","conv1_b","fc_w","fc_b"],
+        "param_shapes": {"conv1_w":[25,4],"conv1_b":[4],"fc_w":[16,3],"fc_b":[3]},
+        "lr": 0.01, "beta": 1.0
+      }},
+      "artifacts": {"f": {
+        "file": "f.hlo.txt",
+        "inputs": [{"name":"x","shape":[2,3]}],
+        "outputs": [{"name":"y"}]
+      }}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let a = m.artifact("f").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].numel(), 6);
+        assert_eq!(a.file, Path::new("/tmp/a/f.hlo.txt"));
+        let n = m.net("tiny").unwrap();
+        assert_eq!(n.conv_param_names(), &["conv1_w", "conv1_b"]);
+        assert_eq!(n.x_shape(), vec![2, 8, 8, 1]);
+        assert_eq!(n.param_count(), 25 * 4 + 4 + 16 * 3 + 3);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.net("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if let Ok(dir) = default_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("smoke_matmul"));
+            let cifar = m.net("cifar").unwrap();
+            assert_eq!(cifar.fc_in, 320);
+            assert_eq!(cifar.batch, 50);
+        }
+    }
+}

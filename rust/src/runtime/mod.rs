@@ -1,0 +1,229 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! request path.
+//!
+//! This is the Rust half of the AOT bridge (see `python/compile/aot.py`):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → compile →
+//! execute.  One `Runtime` per process; executables are compiled lazily
+//! on first use and cached, so the hot path is literal-in / literal-out.
+//!
+//! Python is *never* involved here — the binary is self-contained once
+//! `make artifacts` has run.
+
+pub mod artifact;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use artifact::{default_artifacts_dir, ArtifactSig, Manifest, NetSpec};
+pub use tensor::Tensor;
+
+use crate::util::stats::Welford;
+
+/// A compiled artifact plus its signature; cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Executable {
+    sig: Arc<ArtifactSig>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla crate wraps raw PJRT pointers without auto traits, but
+// the PJRT C API contract makes clients and loaded executables safe to
+// use from multiple threads concurrently (execution is internally
+// synchronised; buffers/literals here are created fresh per call and
+// never shared across threads).  The coordinator relies on this to let
+// worker threads execute artifacts in parallel.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Executable {
+    /// Execute with shape-checked tensors; returns one tensor per
+    /// declared output.  Rank-0 outputs come back as shape [] tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.sig.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, sig) in inputs.iter().zip(&self.sig.inputs) {
+            if t.shape() != sig.shape.as_slice() {
+                bail!(
+                    "{}: input {:?} expects shape {:?}, got {:?}",
+                    self.sig.name,
+                    sig.name,
+                    sig.shape,
+                    t.shape()
+                );
+            }
+            literals.push(tensor_to_literal(t)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.sig.name,
+                self.sig.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+
+    pub fn sig(&self) -> &ArtifactSig {
+        &self.sig
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes = t.to_le_bytes();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), &bytes)
+        .map_err(Into::into)
+}
+
+fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    // All artifacts are f32-only by convention (enforced by aot.py).
+    let data = l.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}
+
+/// Per-artifact execution statistics (for the perf pass and console).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ms: f64,
+    pub compile_ms: f64,
+    pub per_call: Welford,
+}
+
+/// The process-wide PJRT runtime: one CPU client, lazily compiled and
+/// cached executables, execution statistics.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Executable>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+    /// Serialises `exec_exclusive` so the measured time is the
+    /// *uncontended* single-stream cost — the quantity device-speed
+    /// padding must scale (DESIGN.md §7).  On a 1-core host concurrent
+    /// XLA executions would interleave anyway; the lock makes the
+    /// timing deterministic instead of contention-dependent.
+    exec_lock: Mutex<()>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    /// Open the default artifacts directory (walking up from cwd).
+    pub fn open_default() -> Result<Runtime> {
+        Self::new(&default_artifacts_dir()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn net(&self, name: &str) -> Result<&NetSpec> {
+        self.manifest.net(name)
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            sig.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let executable = Executable { sig: Arc::new(sig), exe: Arc::new(exe) };
+        self.stats.lock().unwrap().entry(name.to_string()).or_default().compile_ms = compile_ms;
+        crate::log_debug!("runtime", "compiled {name} in {compile_ms:.1} ms");
+        self.cache.lock().unwrap().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// One-shot execute with stats accounting.
+    pub fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let out = exe.run(inputs)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_ms += ms;
+        s.per_call.push(ms);
+        Ok(out)
+    }
+
+    /// Execute under the runtime's exclusive lock and return the
+    /// *uncontended* execution time alongside the outputs.  Simulated
+    /// devices (worker tasks, the hybrid server) use this time as the
+    /// modelled compute cost so device-speed padding is independent of
+    /// how many simulated devices currently share the host core.
+    pub fn exec_exclusive(&self, name: &str, inputs: &[Tensor]) -> Result<(Vec<Tensor>, f64)> {
+        let exe = self.load(name)?;
+        let _guard = self.exec_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let out = exe.run(inputs)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        drop(_guard);
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_ms += ms;
+        s.per_call.push(ms);
+        Ok((out, ms))
+    }
+
+    /// Snapshot of per-artifact stats (name, calls, mean ms, total ms).
+    pub fn stats(&self) -> Vec<(String, u64, f64, f64)> {
+        let stats = self.stats.lock().unwrap();
+        let mut rows: Vec<_> = stats
+            .iter()
+            .map(|(k, s)| (k.clone(), s.calls, s.per_call.mean(), s.total_ms))
+            .collect();
+        rows.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+        rows
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Shared runtime handle used across coordinator/worker threads.
+pub type SharedRuntime = Arc<Runtime>;
+
+pub fn open_shared() -> Result<SharedRuntime> {
+    Ok(Arc::new(Runtime::open_default()?))
+}

@@ -1,0 +1,212 @@
+//! Host-side dense f32 tensor.
+//!
+//! The whole stack is f32 end-to-end (labels travel as one-hot f32,
+//! argmins come back as exact small-integer f32s — see model.py), so one
+//! buffer type covers every artifact input/output and every native-engine
+//! activation.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Uniform [-scale, scale) fill from a SplitMix64 stream — the shared
+    /// init convention for both engines (and for golden inputs at
+    /// scale=1).
+    pub fn uniform(shape: &[usize], rng: &mut SplitMix64, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.uniform_vec(n, -scale, scale) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.data.len(), shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Element-wise in-place axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// L2 norm (for metrics / divergence guards).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Compact checksum matching prand.checksum on the Python side.
+    pub fn checksum(&self) -> (f64, f64) {
+        let sum: f64 = self.data.iter().map(|&v| v as f64).sum();
+        let abs: f64 = self.data.iter().map(|&v| (v as f64).abs()).sum();
+        (sum, abs)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Wire format: little-endian f32 bytes.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_le_bytes(shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        if bytes.len() % 4 != 0 {
+            bail!("byte length {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> =
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        Tensor::new(shape, data)
+    }
+}
+
+/// One (min, argmin) fold step used by the kNN reducer; lives here so it
+/// is unit-testable away from the coordinator.
+pub fn fold_min_argmin(
+    acc: &mut [(f32, usize)],
+    mins: &[f32],
+    argmins: &[f32],
+    chunk_offset: usize,
+) {
+    for (i, (m, a)) in mins.iter().zip(argmins).enumerate() {
+        let idx = chunk_offset + *a as usize;
+        if *m < acc[i].0 {
+            acc[i] = (*m, idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked_construction() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_and_item() {
+        let t = Tensor::new(vec![6], (0..6).map(|i| i as f32).collect()).unwrap();
+        let t = t.reshape(&[2, 3]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.clone().reshape(&[4]).is_err());
+        assert_eq!(Tensor::scalar(7.0).item().unwrap(), 7.0);
+        assert!(t.item().is_err());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let mut rng = SplitMix64::new(4);
+        let t = Tensor::uniform(&[3, 5], &mut rng, 2.0);
+        let back = Tensor::from_le_bytes(vec![3, 5], &t.to_le_bytes()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = Tensor::filled(&[4], 1.0);
+        let b = Tensor::filled(&[4], 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[2.0; 4]);
+        assert!((a.norm() - 4.0).abs() < 1e-6);
+        let c = Tensor::filled(&[5], 0.0);
+        assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn fold_min_argmin_across_chunks() {
+        let mut acc = vec![(f32::INFINITY, 0usize); 2];
+        fold_min_argmin(&mut acc, &[5.0, 2.0], &[1.0, 3.0], 0);
+        fold_min_argmin(&mut acc, &[3.0, 4.0], &[0.0, 1.0], 100);
+        assert_eq!(acc[0], (3.0, 100));
+        assert_eq!(acc[1], (2.0, 3));
+    }
+
+    #[test]
+    fn uniform_deterministic() {
+        let a = Tensor::uniform(&[10], &mut SplitMix64::new(1), 1.0);
+        let b = Tensor::uniform(&[10], &mut SplitMix64::new(1), 1.0);
+        assert_eq!(a, b);
+    }
+}

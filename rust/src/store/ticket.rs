@@ -1,0 +1,72 @@
+//! Ticket: one divided argument of a task, plus its distribution state.
+//!
+//! A "ticket" in the paper is a row in the MySQL table carrying the task
+//! reference, one slice of the divided arguments, and the bookkeeping
+//! the Distributor uses for redistribution.
+
+use crate::store::TaskId;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TicketId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketStatus {
+    /// Never distributed, or returned to the pool by an error report.
+    Pending,
+    /// Handed to at least one client; may be redistributed on timeout.
+    InFlight,
+    /// A result has been accepted (first result wins).
+    Done,
+}
+
+#[derive(Debug, Clone)]
+pub struct Ticket {
+    pub id: TicketId,
+    pub task: TaskId,
+    /// Task name: what the worker asks the registry for when its cache
+    /// misses (the paper's browser downloads the task's JS code).
+    pub task_name: String,
+    /// Position within the task's divided argument list; results are
+    /// collected back in this order.
+    pub index: usize,
+    /// The divided argument (JSON, as in the paper's Node.js framework).
+    pub payload: Value,
+    pub created_ms: u64,
+    pub status: TicketStatus,
+    pub last_distributed_ms: Option<u64>,
+    pub distribution_count: u32,
+    pub result: Option<Value>,
+    pub assigned_to: Option<String>,
+}
+
+impl Ticket {
+    /// Approximate wire size of the ticket payload (bandwidth modelling).
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.to_string().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_size_tracks_json() {
+        let t = Ticket {
+            id: TicketId(0),
+            task: TaskId(0),
+            task_name: "t".into(),
+            index: 0,
+            payload: Value::obj(vec![("candidate", Value::num(17.0))]),
+            created_ms: 0,
+            status: TicketStatus::Pending,
+            last_distributed_ms: None,
+            distribution_count: 0,
+            result: None,
+            assigned_to: None,
+        };
+        assert_eq!(t.payload_bytes(), t.payload.to_string().len());
+        assert!(t.payload_bytes() > 10);
+    }
+}

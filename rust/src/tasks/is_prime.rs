@@ -1,0 +1,80 @@
+//! The paper's appendix sample: IsPrimeTask / PrimeListMakerProject.
+//!
+//! `examples/prime_list.rs` reproduces Source Code 1–3 with the Rust
+//! API; this is the task half (`is_prime_task.js` + `is_prime.js`).
+
+use anyhow::Result;
+
+use super::{TaskContext, TaskDef, TaskOutput};
+use crate::util::json::Value;
+
+pub struct IsPrimeTask;
+
+/// `is_prime.js`: trial division (the external static code file).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3u64;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+impl TaskDef for IsPrimeTask {
+    fn name(&self) -> &str {
+        "is_prime"
+    }
+
+    fn code_bytes(&self) -> usize {
+        // is_prime_task.js + is_prime.js, roughly.
+        700
+    }
+
+    fn execute(&self, input: &Value, _ctx: &mut dyn TaskContext) -> Result<TaskOutput> {
+        let candidate = input.get("candidate")?.as_u64()?;
+        Ok(TaskOutput::new(Value::obj(vec![(
+            "is_prime",
+            Value::Bool(is_prime(candidate)),
+        )])))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::test_support::FakeContext;
+
+    #[test]
+    fn primality_reference_values() {
+        let primes: Vec<u64> =
+            (1..=50).filter(|&n| is_prime(n)).collect();
+        assert_eq!(primes, vec![2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47]);
+        assert!(!is_prime(0) && !is_prime(1));
+        assert!(is_prime(7919));
+        assert!(!is_prime(7917));
+    }
+
+    #[test]
+    fn task_contract() {
+        let t = IsPrimeTask;
+        let mut ctx = FakeContext::default();
+        let out = t
+            .execute(&Value::obj(vec![("candidate", Value::num(97.0))]), &mut ctx)
+            .unwrap();
+        assert_eq!(out.value.get("is_prime").unwrap().as_bool().unwrap(), true);
+        let out = t
+            .execute(&Value::obj(vec![("candidate", Value::num(98.0))]), &mut ctx)
+            .unwrap();
+        assert_eq!(out.value.get("is_prime").unwrap().as_bool().unwrap(), false);
+        // Malformed input is an error (becomes an error report upstream).
+        assert!(t.execute(&Value::Null, &mut ctx).is_err());
+    }
+}

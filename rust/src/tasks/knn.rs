@@ -1,0 +1,250 @@
+//! Table 2's workload: nearest-neighbour MNIST classification, chunked.
+//!
+//! The paper classifies 1,000 test images against 60,000 training images
+//! by splitting the work across browsers.  Here each ticket carries
+//! (query window, training chunk window); the worker fetches both as
+//! datasets (cached — training chunks are reused across query windows),
+//! runs the `knn_chunk` artifact (whose distance matrix is the L1 Pallas
+//! matmul), and returns per-query (min distance², argmin within chunk).
+//! The project folds chunk results with `fold_min_argmin` and maps the
+//! winning global index to its label.
+
+use anyhow::Result;
+
+use super::{tensor_to_json, TaskContext, TaskDef, TaskOutput};
+use crate::util::json::Value;
+
+pub struct KnnChunkTask {
+    /// Artifact to run: `knn_chunk` (100x2000) or `knn_chunk_small`.
+    pub artifact: String,
+    pub query_rows: usize,
+    pub chunk_rows: usize,
+}
+
+impl KnnChunkTask {
+    pub fn standard() -> KnnChunkTask {
+        KnnChunkTask { artifact: "knn_chunk".into(), query_rows: 100, chunk_rows: 2000 }
+    }
+
+    pub fn small() -> KnnChunkTask {
+        KnnChunkTask { artifact: "knn_chunk_small".into(), query_rows: 20, chunk_rows: 200 }
+    }
+
+    /// Ticket payload for (query window q, train chunk c).
+    pub fn ticket(&self, query_key: &str, chunk_key: &str, chunk_offset: usize) -> Value {
+        Value::obj(vec![
+            ("query_key", Value::str(query_key)),
+            ("chunk_key", Value::str(chunk_key)),
+            ("chunk_offset", Value::num(chunk_offset as f64)),
+        ])
+    }
+}
+
+impl TaskDef for KnnChunkTask {
+    fn name(&self) -> &str {
+        "knn_chunk"
+    }
+
+    fn code_bytes(&self) -> usize {
+        2048
+    }
+
+    fn dataset_refs(&self, input: &Value) -> Vec<String> {
+        let mut keys = Vec::new();
+        for k in ["query_key", "chunk_key"] {
+            if let Some(v) = input.opt(k) {
+                if let Ok(s) = v.as_str() {
+                    keys.push(s.to_string());
+                }
+            }
+        }
+        keys
+    }
+
+    fn execute(&self, input: &Value, ctx: &mut dyn TaskContext) -> Result<TaskOutput> {
+        let q = ctx.dataset(input.get("query_key")?.as_str()?)?;
+        let t = ctx.dataset(input.get("chunk_key")?.as_str()?)?;
+        anyhow::ensure!(
+            q.shape() == [self.query_rows, 784],
+            "query shape {:?} != [{}, 784]",
+            q.shape(),
+            self.query_rows
+        );
+        anyhow::ensure!(
+            t.shape() == [self.chunk_rows, 784],
+            "chunk shape {:?} != [{}, 784]",
+            t.shape(),
+            self.chunk_rows
+        );
+        let rt = ctx.runtime()?;
+        // Exclusive timing -> the modelled device cost is the uncontended
+        // single-stream compute, not whatever contention happens to be.
+        let (outs, exclusive_ms) = rt.exec_exclusive(&self.artifact, &[(*q).clone(), (*t).clone()])?;
+        let chunk_offset = input.get("chunk_offset")?.as_usize()?;
+        Ok(TaskOutput {
+            value: Value::obj(vec![
+                ("chunk_offset", Value::num(chunk_offset as f64)),
+                ("min_dist2", tensor_to_json(&outs[0])),
+                ("argmin", tensor_to_json(&outs[1])),
+            ]),
+            modelled_ms: Some(exclusive_ms),
+        })
+    }
+}
+
+/// Full Table-2-style project driver: distribute the (query window ×
+/// train chunk) grid across N simulated devices and fold the results.
+/// Shared by `examples/knn_mnist.rs` and `benches/table2_knn.rs`.
+pub mod project {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use anyhow::Result;
+
+    use super::KnnChunkTask;
+    use crate::coordinator::{Distributor, Framework};
+    use crate::data::Dataset;
+    use crate::runtime::SharedRuntime;
+    use crate::store::StoreConfig;
+    use crate::transport::{local, Conn, LinkModel};
+    use crate::util::json::Value;
+    use crate::worker::{DeviceProfile, Worker, WorkerReport};
+
+    #[derive(Clone)]
+    pub struct KnnRunConfig {
+        pub n_queries: usize,
+        pub n_train: usize,
+        pub clients: usize,
+        pub profile: DeviceProfile,
+        pub link: LinkModel,
+        pub sleep_on_link: bool,
+        /// Use the small artifact (20x200) instead of 100x2000.
+        pub small: bool,
+    }
+
+    pub struct KnnRunResult {
+        pub elapsed_s: f64,
+        pub predictions: Vec<usize>,
+        pub accuracy: f64,
+        pub reports: Vec<WorkerReport>,
+        pub redistributions: u64,
+        pub tickets: usize,
+    }
+
+    /// The per-ticket compute cost modelled for device padding: measured
+    /// once on the reference host, scaled by (q*c) work, then divided by
+    /// the profile speed inside the worker.
+    pub fn run(rt: SharedRuntime, queries: &Dataset, train: &Dataset, cfg: &KnnRunConfig) -> Result<KnnRunResult> {
+        let def = if cfg.small { KnnChunkTask::small() } else { KnnChunkTask::standard() };
+        let (qrows, crows) = (def.query_rows, def.chunk_rows);
+        anyhow::ensure!(cfg.n_queries % qrows == 0, "queries {} % {qrows} != 0", cfg.n_queries);
+        anyhow::ensure!(cfg.n_train % crows == 0, "train {} % {crows} != 0", cfg.n_train);
+        rt.load(&def.artifact)?; // compile before timing
+
+        let fw = Framework::builder()
+            .store_config(StoreConfig {
+                requeue_after_ms: 10_000,
+                min_redistribute_ms: 1_000,
+                requeue_on_error: true,
+            })
+            .build();
+        for (w, start) in (0..cfg.n_queries).step_by(qrows).enumerate() {
+            fw.datasets().register(&format!("q{w}"), queries.rows_matrix(start, qrows));
+        }
+        for (c, start) in (0..cfg.n_train).step_by(crows).enumerate() {
+            fw.datasets().register(&format!("chunk{c}"), train.rows_matrix(start, crows));
+        }
+        let task = fw.create_task(Arc::new(if cfg.small {
+            KnnChunkTask::small()
+        } else {
+            KnnChunkTask::standard()
+        }));
+        let mut payloads = Vec::new();
+        for w in 0..cfg.n_queries / qrows {
+            for c in 0..cfg.n_train / crows {
+                payloads.push(def.ticket(&format!("q{w}"), &format!("chunk{c}"), c * crows));
+            }
+        }
+        let n_tickets = payloads.len();
+        task.calculate(payloads);
+
+        let dist = Distributor::new(&fw);
+        let (listener, connector) = local::endpoint(cfg.link, cfg.sleep_on_link);
+        dist.serve(Box::new(listener));
+        let stop = Arc::new(AtomicBool::new(false));
+        let t0 = std::time::Instant::now();
+        let workers: Vec<_> = (0..cfg.clients)
+            .map(|i| {
+                let connector = connector.clone();
+                let registry = fw.registry_snapshot();
+                let stop = Arc::clone(&stop);
+                let rt = rt.clone();
+                let profile = cfg.profile.clone();
+                std::thread::spawn(move || {
+                    let mut w =
+                        Worker::new(&format!("client{i}"), profile, registry).with_runtime(rt);
+                    w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+                })
+            })
+            .collect();
+
+        let results = task.block();
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::SeqCst);
+        let reports = workers.into_iter().map(|w| w.join().expect("worker")).collect();
+
+        // Fold (min, argmin): results arrive ordered by ticket index =
+        // (query window, chunk) row-major.
+        let mut acc = vec![(f32::INFINITY, 0usize); cfg.n_queries];
+        let folds_per_window = cfg.n_train / crows;
+        for (i, r) in results.iter().enumerate() {
+            let window = i / folds_per_window;
+            let offset = r.get("chunk_offset")?.as_usize()?;
+            let mins = crate::tasks::tensor_from_json(r.get("min_dist2")?)?;
+            let argmins = crate::tasks::tensor_from_json(r.get("argmin")?)?;
+            crate::runtime::tensor::fold_min_argmin(
+                &mut acc[window * qrows..(window + 1) * qrows],
+                mins.data(),
+                argmins.data(),
+                offset,
+            );
+        }
+        let predictions: Vec<usize> = acc.iter().map(|(_, i)| train.labels[*i]).collect();
+        let correct = predictions
+            .iter()
+            .zip(&queries.labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        let _ = Value::Null;
+        Ok(KnnRunResult {
+            elapsed_s,
+            accuracy: correct as f64 / cfg.n_queries as f64,
+            predictions,
+            reports,
+            redistributions: fw.store().progress(None).redistributions,
+            tickets: n_tickets,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::test_support::FakeContext;
+
+    #[test]
+    fn dataset_refs_extracted() {
+        let t = KnnChunkTask::standard();
+        let payload = t.ticket("q0", "chunk3", 6000);
+        assert_eq!(t.dataset_refs(&payload), vec!["q0".to_string(), "chunk3".to_string()]);
+        assert_eq!(payload.get("chunk_offset").unwrap().as_usize().unwrap(), 6000);
+    }
+
+    #[test]
+    fn missing_dataset_is_an_error() {
+        let t = KnnChunkTask::small();
+        let mut ctx = FakeContext::default();
+        let payload = t.ticket("q", "c", 0);
+        assert!(t.execute(&payload, &mut ctx).is_err());
+    }
+}

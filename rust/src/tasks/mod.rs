@@ -1,0 +1,220 @@
+//! Task definitions — the code the paper ships to browsers.
+//!
+//! In Sashimi a task is a JavaScript file the browser downloads and
+//! `eval()`s.  Rust cannot load code over the wire, so tasks are
+//! compiled in and selected *by name*: the worker still performs the
+//! TaskRequest/TaskCode exchange (and pays the modelled download bytes,
+//! and caches the "code" in its LRU exactly like a browser), but the
+//! implementation comes from a [`Registry`] both sides share.  DESIGN.md
+//! §2 documents this substitution.
+//!
+//! Built-in tasks:
+//! * [`is_prime::IsPrimeTask`] — the paper's appendix sample project;
+//! * [`knn::KnnChunkTask`] — Table 2's MNIST nearest-neighbour workload;
+//! * [`train::ConvFwdTask`] / [`train::ConvGradTask`] — the hybrid
+//!   algorithm's client-side work units (Fig 5);
+//! * [`train::GradTask`] — the MLitB baseline's full-gradient work unit.
+
+pub mod is_prime;
+pub mod knn;
+pub mod train;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::runtime::{SharedRuntime, Tensor};
+use crate::util::json::Value;
+
+/// What a task execution produces: the result value (returned to the
+/// server) and an optional *modelled* compute time.  `None` means "use
+/// the measured execution time" — the worker pads either to
+/// `ms / profile.speed` to emulate the device (DESIGN.md §7).
+pub struct TaskOutput {
+    pub value: Value,
+    pub modelled_ms: Option<f64>,
+}
+
+impl TaskOutput {
+    pub fn new(value: Value) -> TaskOutput {
+        TaskOutput { value, modelled_ms: None }
+    }
+}
+
+/// Services a task can use while executing on a worker: dataset fetch
+/// (through the worker's LRU cache and the wire) and the XLA runtime.
+pub trait TaskContext {
+    /// Fetch a dataset tensor by key; cached per the paper's browser GC.
+    fn dataset(&mut self, key: &str) -> Result<Arc<Tensor>>;
+    /// The PJRT runtime for artifact execution.
+    fn runtime(&self) -> Result<&SharedRuntime>;
+}
+
+/// A distributable task (the paper's TaskBase subclass).
+pub trait TaskDef: Send + Sync {
+    fn name(&self) -> &str;
+    /// Simulated size of the task's code blob (download accounting).
+    fn code_bytes(&self) -> usize {
+        4096
+    }
+    /// Dataset keys this ticket needs (step 4 of the browser loop).
+    fn dataset_refs(&self, input: &Value) -> Vec<String> {
+        let _ = input;
+        Vec::new()
+    }
+    /// Run the task against one ticket's divided argument.
+    fn execute(&self, input: &Value, ctx: &mut dyn TaskContext) -> Result<TaskOutput>;
+}
+
+/// Name -> implementation map shared by framework, distributor, workers.
+#[derive(Default, Clone)]
+pub struct Registry {
+    map: BTreeMap<String, Arc<dyn TaskDef>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn register(&mut self, def: Arc<dyn TaskDef>) {
+        self.map.insert(def.name().to_string(), def);
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn TaskDef>> {
+        self.map
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("task {name:?} not registered"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.map.keys().cloned().collect()
+    }
+}
+
+/// Server-side dataset store (the HTTPServer's dataset API).  Tensors
+/// are registered by key; the wire encoding (base64 of LE f32) is
+/// produced lazily and cached because big chunks are requested by every
+/// worker.
+#[derive(Default)]
+pub struct DatasetStore {
+    tensors: Mutex<HashMap<String, Arc<Tensor>>>,
+    encoded: Mutex<HashMap<String, Arc<(Vec<usize>, String)>>>,
+}
+
+impl DatasetStore {
+    pub fn new() -> DatasetStore {
+        DatasetStore::default()
+    }
+
+    pub fn register(&self, key: &str, t: Tensor) {
+        self.tensors.lock().unwrap().insert(key.to_string(), Arc::new(t));
+        self.encoded.lock().unwrap().remove(key); // invalidate
+    }
+
+    pub fn get(&self, key: &str) -> Result<Arc<Tensor>> {
+        self.tensors
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("dataset {key:?} not registered"))
+    }
+
+    /// (shape, base64) wire form, cached.
+    pub fn encoded(&self, key: &str) -> Result<Arc<(Vec<usize>, String)>> {
+        if let Some(e) = self.encoded.lock().unwrap().get(key) {
+            return Ok(e.clone());
+        }
+        let t = self.get(key)?;
+        let enc = Arc::new((
+            t.shape().to_vec(),
+            crate::util::base64::encode_f32(t.data()),
+        ));
+        self.encoded.lock().unwrap().insert(key.to_string(), enc.clone());
+        Ok(enc)
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        self.tensors.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Helpers for tensors embedded in JSON payloads (the paper's base64
+/// model-file convention applied to the wire).
+pub fn tensor_to_json(t: &Tensor) -> Value {
+    Value::obj(vec![
+        ("shape", Value::arr(t.shape().iter().map(|&d| Value::num(d as f64)))),
+        ("b64", Value::str(crate::util::base64::encode_f32(t.data()))),
+    ])
+}
+
+pub fn tensor_from_json(v: &Value) -> Result<Tensor> {
+    let shape = v.get("shape")?.as_usize_vec()?;
+    let data = crate::util::base64::decode_f32(v.get("b64")?.as_str()?)?;
+    Tensor::new(shape, data)
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// A context with preloaded datasets and no runtime.
+    #[derive(Default)]
+    pub struct FakeContext {
+        pub datasets: HashMap<String, Arc<Tensor>>,
+        pub fetches: Vec<String>,
+    }
+
+    impl TaskContext for FakeContext {
+        fn dataset(&mut self, key: &str) -> Result<Arc<Tensor>> {
+            self.fetches.push(key.to_string());
+            self.datasets
+                .get(key)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("no dataset {key:?}"))
+        }
+
+        fn runtime(&self) -> Result<&SharedRuntime> {
+            anyhow::bail!("no runtime in FakeContext")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        let mut r = Registry::new();
+        r.register(Arc::new(is_prime::IsPrimeTask));
+        assert!(r.get("is_prime").is_ok());
+        assert!(r.get("nope").is_err());
+        assert_eq!(r.names(), vec!["is_prime".to_string()]);
+    }
+
+    #[test]
+    fn dataset_store_roundtrip() {
+        let ds = DatasetStore::new();
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        ds.register("m", t.clone());
+        assert_eq!(*ds.get("m").unwrap(), t);
+        let enc = ds.encoded("m").unwrap();
+        assert_eq!(enc.0, vec![2, 2]);
+        let back = crate::util::base64::decode_f32(&enc.1).unwrap();
+        assert_eq!(back, t.data());
+        // Cache hit returns the same Arc.
+        assert!(Arc::ptr_eq(&enc, &ds.encoded("m").unwrap()));
+        assert!(ds.get("x").is_err());
+    }
+
+    #[test]
+    fn tensor_json_roundtrip() {
+        let t = Tensor::new(vec![3], vec![0.5, -1.5, 2.0]).unwrap();
+        let v = tensor_to_json(&t);
+        assert_eq!(tensor_from_json(&v).unwrap(), t);
+    }
+}

@@ -1,0 +1,254 @@
+//! Distributed-training work units (the paper's §4 algorithm + the
+//! MLitB baseline).
+//!
+//! Hybrid (paper) — two client-side tasks:
+//! * [`ConvFwdTask`]: run the conv stack forward on a batch shard with
+//!   the round's conv parameters; return the boundary features.
+//! * [`ConvGradTask`]: given the server's boundary cotangent `dfeat`,
+//!   recompute the conv forward and return conv-parameter gradients
+//!   (recompute-vs-ship ablation: DESIGN.md §6.1).
+//!
+//! MLitB baseline — one task:
+//! * [`GradTask`]: full-network gradients on a batch shard; the server
+//!   averages and updates (Meeds et al.'s scheme, §4.1).
+//!
+//! Conv parameters travel as *round datasets* (`<net>_convp_r<round>`):
+//! every client of a round fetches the same blob once and caches it,
+//! exactly like the paper's browsers cache external data files.  Batch
+//! shards are datasets too (`<net>_x_<shard>` / `<net>_y_<shard>`),
+//! cached across rounds when the trainer reuses shards.
+
+
+use anyhow::Result;
+
+use super::{tensor_to_json, TaskContext, TaskDef, TaskOutput};
+use crate::runtime::Tensor;
+use crate::util::json::Value;
+
+/// Unpack a flat parameter blob `[total]` into tensors of `shapes`.
+pub fn unflatten(blob: &Tensor, shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+    let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    anyhow::ensure!(blob.len() == total, "param blob {} != expected {}", blob.len(), total);
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut off = 0;
+    for s in shapes {
+        let n: usize = s.iter().product();
+        out.push(Tensor::new(s.clone(), blob.data()[off..off + n].to_vec())?);
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Pack tensors into one flat blob (inverse of [`unflatten`]).
+pub fn flatten(tensors: &[Tensor]) -> Tensor {
+    let mut data = Vec::with_capacity(tensors.iter().map(|t| t.len()).sum());
+    for t in tensors {
+        data.extend_from_slice(t.data());
+    }
+    let n = data.len();
+    Tensor::new(vec![n], data).unwrap()
+}
+
+fn common_keys(input: &Value) -> Result<(String, String, String)> {
+    Ok((
+        input.get("params_key")?.as_str()?.to_string(),
+        input.get("x_key")?.as_str()?.to_string(),
+        input.get("y_key")?.as_str()?.to_string(),
+    ))
+}
+
+/// Client-side conv forward (hybrid round, phase 1).
+pub struct ConvFwdTask {
+    pub net: String,
+    pub conv_shapes: Vec<Vec<usize>>,
+}
+
+impl ConvFwdTask {
+    pub fn ticket(params_key: &str, x_key: &str, y_key: &str, shard: usize) -> Value {
+        Value::obj(vec![
+            ("params_key", Value::str(params_key)),
+            ("x_key", Value::str(x_key)),
+            ("y_key", Value::str(y_key)),
+            ("shard", Value::num(shard as f64)),
+        ])
+    }
+}
+
+impl TaskDef for ConvFwdTask {
+    fn name(&self) -> &str {
+        "conv_fwd"
+    }
+
+    fn dataset_refs(&self, input: &Value) -> Vec<String> {
+        ["params_key", "x_key"]
+            .iter()
+            .filter_map(|k| input.opt(k).and_then(|v| v.as_str().ok()).map(String::from))
+            .collect()
+    }
+
+    fn execute(&self, input: &Value, ctx: &mut dyn TaskContext) -> Result<TaskOutput> {
+        let (pk, xk, _) = common_keys(input)?;
+        let blob = ctx.dataset(&pk)?;
+        let x = ctx.dataset(&xk)?;
+        let mut args = unflatten(&blob, &self.conv_shapes)?;
+        args.push((*x).clone());
+        let rt = ctx.runtime()?;
+        let (outs, ms) = rt.exec_exclusive(&format!("{}_conv_fwd", self.net), &args)?;
+        Ok(TaskOutput {
+            value: Value::obj(vec![
+                ("shard", input.get("shard")?.clone()),
+                ("feat", tensor_to_json(&outs[0])),
+            ]),
+            modelled_ms: Some(ms),
+        })
+    }
+}
+
+/// Client-side conv backward (hybrid round, phase 2).
+pub struct ConvGradTask {
+    pub net: String,
+    pub conv_shapes: Vec<Vec<usize>>,
+}
+
+impl ConvGradTask {
+    pub fn ticket(params_key: &str, x_key: &str, dfeat: &Tensor, shard: usize) -> Value {
+        Value::obj(vec![
+            ("params_key", Value::str(params_key)),
+            ("x_key", Value::str(x_key)),
+            ("dfeat", tensor_to_json(dfeat)),
+            ("shard", Value::num(shard as f64)),
+        ])
+    }
+}
+
+impl TaskDef for ConvGradTask {
+    fn name(&self) -> &str {
+        "conv_grad"
+    }
+
+    fn dataset_refs(&self, input: &Value) -> Vec<String> {
+        ["params_key", "x_key"]
+            .iter()
+            .filter_map(|k| input.opt(k).and_then(|v| v.as_str().ok()).map(String::from))
+            .collect()
+    }
+
+    fn execute(&self, input: &Value, ctx: &mut dyn TaskContext) -> Result<TaskOutput> {
+        let pk = input.get("params_key")?.as_str()?.to_string();
+        let xk = input.get("x_key")?.as_str()?.to_string();
+        let dfeat = super::tensor_from_json(input.get("dfeat")?)?;
+        let blob = ctx.dataset(&pk)?;
+        let x = ctx.dataset(&xk)?;
+        let mut args = unflatten(&blob, &self.conv_shapes)?;
+        args.push((*x).clone());
+        args.push(dfeat);
+        let rt = ctx.runtime()?;
+        let (outs, ms) = rt.exec_exclusive(&format!("{}_conv_grad", self.net), &args)?;
+        Ok(TaskOutput {
+            value: Value::obj(vec![
+                ("shard", input.get("shard")?.clone()),
+                ("grads", tensor_to_json(&flatten(&outs))),
+            ]),
+            modelled_ms: Some(ms),
+        })
+    }
+}
+
+/// MLitB baseline: full-network gradient on a batch shard.
+pub struct GradTask {
+    pub net: String,
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl GradTask {
+    pub fn ticket(params_key: &str, x_key: &str, y_key: &str, shard: usize) -> Value {
+        ConvFwdTask::ticket(params_key, x_key, y_key, shard)
+    }
+}
+
+impl TaskDef for GradTask {
+    fn name(&self) -> &str {
+        "grad_all"
+    }
+
+    fn dataset_refs(&self, input: &Value) -> Vec<String> {
+        ["params_key", "x_key", "y_key"]
+            .iter()
+            .filter_map(|k| input.opt(k).and_then(|v| v.as_str().ok()).map(String::from))
+            .collect()
+    }
+
+    fn execute(&self, input: &Value, ctx: &mut dyn TaskContext) -> Result<TaskOutput> {
+        let (pk, xk, yk) = common_keys(input)?;
+        let blob = ctx.dataset(&pk)?;
+        let x = ctx.dataset(&xk)?;
+        let y = ctx.dataset(&yk)?;
+        let mut args = unflatten(&blob, &self.param_shapes)?;
+        args.push((*x).clone());
+        args.push((*y).clone());
+        let rt = ctx.runtime()?;
+        let (mut outs, ms) = rt.exec_exclusive(&format!("{}_grad", self.net), &args)?;
+        let loss = outs.pop().unwrap(); // last output is the scalar loss
+        Ok(TaskOutput {
+            value: Value::obj(vec![
+                ("shard", input.get("shard")?.clone()),
+                ("grads", tensor_to_json(&flatten(&outs))),
+                ("loss", Value::num(loss.item()? as f64)),
+            ]),
+            modelled_ms: Some(ms),
+        })
+    }
+}
+
+/// Round-dataset key helpers shared with the dist drivers.
+pub fn params_key(net: &str, round: u64) -> String {
+    format!("{net}_convp_r{round}")
+}
+
+pub fn shard_x_key(net: &str, shard: usize) -> String {
+    format!("{net}_x_{shard}")
+}
+
+pub fn shard_y_key(net: &str, shard: usize) -> String {
+    format!("{net}_y_{shard}")
+}
+
+/// Pack a set of tensors for the dataset store (flat blob).
+pub fn pack_params(tensors: &[Tensor]) -> Tensor {
+    flatten(tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let a = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let b = Tensor::new(vec![4], vec![9.0, 8.0, 7.0, 6.0]).unwrap();
+        let blob = flatten(&[a.clone(), b.clone()]);
+        assert_eq!(blob.shape(), &[10]);
+        let back = unflatten(&blob, &[vec![2, 3], vec![4]]).unwrap();
+        assert_eq!(back[0], a);
+        assert_eq!(back[1], b);
+        assert!(unflatten(&blob, &[vec![3, 3], vec![4]]).is_err());
+    }
+
+    #[test]
+    fn ticket_payloads_carry_keys() {
+        let p = ConvFwdTask::ticket("pk", "xk", "yk", 3);
+        assert_eq!(p.get("params_key").unwrap().as_str().unwrap(), "pk");
+        assert_eq!(p.get("shard").unwrap().as_usize().unwrap(), 3);
+        let d = Tensor::new(vec![2], vec![1.0, -1.0]).unwrap();
+        let g = ConvGradTask::ticket("pk", "xk", &d, 1);
+        let back = crate::tasks::tensor_from_json(g.get("dfeat").unwrap()).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn key_naming_is_stable() {
+        assert_eq!(params_key("cifar", 12), "cifar_convp_r12");
+        assert_eq!(shard_x_key("cifar", 0), "cifar_x_0");
+        assert_eq!(shard_y_key("mnist", 3), "mnist_y_3");
+    }
+}

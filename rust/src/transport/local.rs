@@ -1,0 +1,212 @@
+//! In-process transport: channel pairs with a link model and fault
+//! injection.  Deterministic stand-in for Internet WebSocket links in
+//! tests and benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{Conn, LinkModel, Listener, Message};
+
+/// Fault plan for one endpoint: cut the connection after N sends.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Drop the connection (subsequent send/recv error) after this many
+    /// successful sends from this endpoint.  None = healthy.
+    pub die_after_sends: Option<u64>,
+}
+
+struct Shared {
+    sent_bytes: AtomicU64,
+    recv_bytes: AtomicU64,
+}
+
+pub struct LocalConn {
+    tx: Sender<String>,
+    rx: Receiver<String>,
+    link: LinkModel,
+    fault: FaultPlan,
+    sends: u64,
+    dead: bool,
+    shared: Arc<Shared>,
+    /// When false (bench mode measuring pure dispatch), the link model
+    /// cost is accounted but not slept.
+    sleep_on_link: bool,
+}
+
+impl LocalConn {
+    fn apply_link(&self, bytes: usize) {
+        if self.sleep_on_link {
+            let ms = self.link.transfer_ms(bytes);
+            if ms > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+            }
+        }
+    }
+}
+
+impl Conn for LocalConn {
+    fn send(&mut self, m: &Message) -> Result<()> {
+        if self.dead {
+            bail!("connection dead (fault injection)");
+        }
+        if let Some(n) = self.fault.die_after_sends {
+            if self.sends >= n {
+                self.dead = true;
+                bail!("connection dropped after {n} sends (fault injection)");
+            }
+        }
+        let line = m.encode();
+        self.apply_link(line.len());
+        self.shared.sent_bytes.fetch_add(line.len() as u64, Ordering::Relaxed);
+        self.sends += 1;
+        self.tx.send(line).map_err(|_| anyhow::anyhow!("peer closed"))
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        if self.dead {
+            bail!("connection dead (fault injection)");
+        }
+        let line = self.rx.recv().map_err(|_| anyhow::anyhow!("peer closed"))?;
+        // Downloads pay the link too: dataset payloads (the paper's
+        // per-browser MNIST download) dominate a worker's fixed cost.
+        self.apply_link(line.len());
+        self.shared.recv_bytes.fetch_add(line.len() as u64, Ordering::Relaxed);
+        Message::decode(&line)
+    }
+
+    fn bytes(&self) -> (u64, u64) {
+        (self.shared.sent_bytes.load(Ordering::Relaxed), self.shared.recv_bytes.load(Ordering::Relaxed))
+    }
+}
+
+/// Create a connected (client, server) pair over `link`.
+pub fn pair(link: LinkModel, sleep_on_link: bool) -> (LocalConn, LocalConn) {
+    pair_with_fault(link, sleep_on_link, FaultPlan::default())
+}
+
+/// Like [`pair`] but the *client* endpoint carries a fault plan.
+pub fn pair_with_fault(link: LinkModel, sleep_on_link: bool, client_fault: FaultPlan) -> (LocalConn, LocalConn) {
+    let (tx_a, rx_b) = channel();
+    let (tx_b, rx_a) = channel();
+    let mk_shared = || Arc::new(Shared { sent_bytes: AtomicU64::new(0), recv_bytes: AtomicU64::new(0) });
+    let client = LocalConn {
+        tx: tx_a,
+        rx: rx_a,
+        link,
+        fault: client_fault,
+        sends: 0,
+        dead: false,
+        shared: mk_shared(),
+        sleep_on_link,
+    };
+    let server = LocalConn {
+        tx: tx_b,
+        rx: rx_b,
+        link,
+        fault: FaultPlan::default(),
+        sends: 0,
+        dead: false,
+        shared: mk_shared(),
+        sleep_on_link: false, // model the link once, on the client side
+    };
+    (client, server)
+}
+
+/// Listener over an mpsc of pre-built server endpoints: the distributor
+/// accepts them exactly like TCP connections.
+pub struct LocalListener {
+    rx: Receiver<LocalConn>,
+}
+
+pub struct LocalConnector {
+    tx: Sender<LocalConn>,
+    link: LinkModel,
+    sleep_on_link: bool,
+}
+
+impl LocalConnector {
+    /// Create a new client connection to the listener.
+    pub fn connect(&self) -> Result<LocalConn> {
+        self.connect_with_fault(FaultPlan::default())
+    }
+
+    pub fn connect_with_fault(&self, fault: FaultPlan) -> Result<LocalConn> {
+        let (client, server) = pair_with_fault(self.link, self.sleep_on_link, fault);
+        self.tx.send(server).map_err(|_| anyhow::anyhow!("listener closed"))?;
+        Ok(client)
+    }
+}
+
+impl Clone for LocalConnector {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone(), link: self.link, sleep_on_link: self.sleep_on_link }
+    }
+}
+
+/// An in-process "endpoint": (listener for the server, connector for
+/// clients).
+pub fn endpoint(link: LinkModel, sleep_on_link: bool) -> (LocalListener, LocalConnector) {
+    let (tx, rx) = channel();
+    (LocalListener { rx }, LocalConnector { tx, link, sleep_on_link })
+}
+
+impl Listener for LocalListener {
+    fn accept(&mut self) -> Result<Box<dyn Conn>> {
+        let conn = self.rx.recv().map_err(|_| anyhow::anyhow!("all connectors dropped"))?;
+        Ok(Box::new(conn))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_flow_both_ways() {
+        let (mut c, mut s) = pair(LinkModel::FAST_LAN, false);
+        c.send(&Message::TicketRequest).unwrap();
+        assert_eq!(s.recv().unwrap(), Message::TicketRequest);
+        s.send(&Message::NoTicket { retry_after_ms: 5 }).unwrap();
+        assert_eq!(c.recv().unwrap(), Message::NoTicket { retry_after_ms: 5 });
+        assert!(c.bytes().0 > 0);
+    }
+
+    #[test]
+    fn fault_kills_after_n_sends() {
+        let (mut c, mut s) =
+            pair_with_fault(LinkModel::FAST_LAN, false, FaultPlan { die_after_sends: Some(2) });
+        c.send(&Message::TicketRequest).unwrap();
+        c.send(&Message::TicketRequest).unwrap();
+        assert!(c.send(&Message::TicketRequest).is_err());
+        assert!(c.recv().is_err()); // dead both ways
+        // Server sees the two delivered messages then closed channel.
+        assert!(s.recv().is_ok());
+        assert!(s.recv().is_ok());
+    }
+
+    #[test]
+    fn listener_accepts_connections() {
+        let (mut listener, connector) = endpoint(LinkModel::FAST_LAN, false);
+        let h = std::thread::spawn(move || {
+            let mut server = listener.accept().unwrap();
+            let m = server.recv().unwrap();
+            server.send(&m).unwrap(); // echo
+        });
+        let mut client = connector.connect().unwrap();
+        client.send(&Message::Ack).unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Ack);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn link_sleep_adds_latency() {
+        let (mut c, mut s) = pair(LinkModel { latency_ms: 10.0, bytes_per_ms: 1e9 }, true);
+        let t = std::time::Instant::now();
+        c.send(&Message::Ack).unwrap();
+        let _ = s.recv().unwrap();
+        assert!(t.elapsed().as_secs_f64() * 1e3 >= 9.0);
+    }
+}

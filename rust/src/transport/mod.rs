@@ -1,0 +1,263 @@
+//! Wire protocol + transports — the WebSocket/HTTP substitute.
+//!
+//! The paper's browsers speak WebSocket to the TicketDistributor and
+//! HTTP to the HTTPServer (static program, dataset APIs).  Here both
+//! roles share one JSON-lines protocol ([`Message`]) over two
+//! interchangeable transports:
+//!
+//! * [`tcp`] — real sockets (std::net), one JSON document per line, for
+//!   multi-process deployments (`sashimi serve` / `sashimi worker`);
+//! * [`local`] — in-process channel pairs with an explicit [`LinkModel`]
+//!   (RTT + bandwidth) and fault injection, used by benches and tests to
+//!   emulate Internet-grade links deterministically.
+//!
+//! Every message carries its encoded size through the link model, so
+//! communication costs scale with real payload bytes (the quantity the
+//! paper's §4 algorithm is designed to minimise).
+
+pub mod local;
+pub mod tcp;
+
+use anyhow::{bail, Context, Result};
+
+use crate::store::{TaskId, TicketId};
+use crate::util::json::Value;
+
+/// Protocol messages (both directions).  Mirrors the browser loop in
+/// §2.1.2 of the paper step by step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker -> server: join with a client id and device profile name.
+    Hello { client: String, profile: String },
+    /// Worker -> server: step 2, "a ticket request is sent".
+    TicketRequest,
+    /// Server -> worker: a ticket to execute.
+    Ticket { ticket: TicketId, task: TaskId, task_name: String, index: usize, payload: Value },
+    /// Server -> worker: nothing available; retry after the hint.
+    NoTicket { retry_after_ms: u64 },
+    /// Worker -> server: step 3, fetch task code it has not cached.
+    TaskRequest { task_name: String },
+    /// Server -> worker: task code metadata (code itself is resolved
+    /// through the worker's registry — see DESIGN.md §2 on eval()).
+    TaskCode { task_name: String, code_bytes: usize, dataset_refs: Vec<String> },
+    /// Worker -> server: step 4, fetch an external dataset/file.
+    DataRequest { key: String },
+    /// Server -> worker: dataset payload (base64 of little-endian f32s).
+    Data { key: String, shape: Vec<usize>, b64: String },
+    /// Worker -> server: step 6, the calculated result.
+    TicketResult { ticket: TicketId, result: Value },
+    /// Worker -> server: error report with stack trace; the worker
+    /// reloads itself afterwards (paper behaviour).
+    ErrorReport { ticket: TicketId, message: String, stack: String },
+    /// Server -> worker: acknowledge (keeps the protocol strictly
+    /// request/response so links can be modelled per round trip).
+    Ack,
+    /// Server -> worker: console-initiated reload/redirect (§2.1.2).
+    Reload,
+    /// Either direction: orderly shutdown.
+    Shutdown,
+}
+
+impl Message {
+    pub fn encode(&self) -> String {
+        let v = match self {
+            Message::Hello { client, profile } => Value::obj(vec![
+                ("t", Value::str("hello")),
+                ("client", Value::str(client.clone())),
+                ("profile", Value::str(profile.clone())),
+            ]),
+            Message::TicketRequest => Value::obj(vec![("t", Value::str("ticket_req"))]),
+            Message::Ticket { ticket, task, task_name, index, payload } => Value::obj(vec![
+                ("t", Value::str("ticket")),
+                ("ticket", Value::num(ticket.0 as f64)),
+                ("task", Value::num(task.0 as f64)),
+                ("task_name", Value::str(task_name.clone())),
+                ("index", Value::num(*index as f64)),
+                ("payload", payload.clone()),
+            ]),
+            Message::NoTicket { retry_after_ms } => Value::obj(vec![
+                ("t", Value::str("no_ticket")),
+                ("retry_after_ms", Value::num(*retry_after_ms as f64)),
+            ]),
+            Message::TaskRequest { task_name } => Value::obj(vec![
+                ("t", Value::str("task_req")),
+                ("task_name", Value::str(task_name.clone())),
+            ]),
+            Message::TaskCode { task_name, code_bytes, dataset_refs } => Value::obj(vec![
+                ("t", Value::str("task_code")),
+                ("task_name", Value::str(task_name.clone())),
+                ("code_bytes", Value::num(*code_bytes as f64)),
+                ("dataset_refs", Value::arr(dataset_refs.iter().map(|s| Value::str(s.clone())))),
+            ]),
+            Message::DataRequest { key } => Value::obj(vec![
+                ("t", Value::str("data_req")),
+                ("key", Value::str(key.clone())),
+            ]),
+            Message::Data { key, shape, b64 } => Value::obj(vec![
+                ("t", Value::str("data")),
+                ("key", Value::str(key.clone())),
+                ("shape", Value::arr(shape.iter().map(|&d| Value::num(d as f64)))),
+                ("b64", Value::str(b64.clone())),
+            ]),
+            Message::TicketResult { ticket, result } => Value::obj(vec![
+                ("t", Value::str("result")),
+                ("ticket", Value::num(ticket.0 as f64)),
+                ("result", result.clone()),
+            ]),
+            Message::ErrorReport { ticket, message, stack } => Value::obj(vec![
+                ("t", Value::str("error")),
+                ("ticket", Value::num(ticket.0 as f64)),
+                ("message", Value::str(message.clone())),
+                ("stack", Value::str(stack.clone())),
+            ]),
+            Message::Ack => Value::obj(vec![("t", Value::str("ack"))]),
+            Message::Reload => Value::obj(vec![("t", Value::str("reload"))]),
+            Message::Shutdown => Value::obj(vec![("t", Value::str("shutdown"))]),
+        };
+        v.to_string()
+    }
+
+    pub fn decode(line: &str) -> Result<Message> {
+        let v = Value::parse(line).context("decoding message")?;
+        let t = v.get("t")?.as_str()?;
+        Ok(match t {
+            "hello" => Message::Hello {
+                client: v.get("client")?.as_str()?.to_string(),
+                profile: v.get("profile")?.as_str()?.to_string(),
+            },
+            "ticket_req" => Message::TicketRequest,
+            "ticket" => Message::Ticket {
+                ticket: TicketId(v.get("ticket")?.as_u64()?),
+                task: TaskId(v.get("task")?.as_u64()?),
+                task_name: v.get("task_name")?.as_str()?.to_string(),
+                index: v.get("index")?.as_usize()?,
+                payload: v.get("payload")?.clone(),
+            },
+            "no_ticket" => Message::NoTicket { retry_after_ms: v.get("retry_after_ms")?.as_u64()? },
+            "task_req" => Message::TaskRequest { task_name: v.get("task_name")?.as_str()?.to_string() },
+            "task_code" => Message::TaskCode {
+                task_name: v.get("task_name")?.as_str()?.to_string(),
+                code_bytes: v.get("code_bytes")?.as_usize()?,
+                dataset_refs: v
+                    .get("dataset_refs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "data_req" => Message::DataRequest { key: v.get("key")?.as_str()?.to_string() },
+            "data" => Message::Data {
+                key: v.get("key")?.as_str()?.to_string(),
+                shape: v.get("shape")?.as_usize_vec()?,
+                b64: v.get("b64")?.as_str()?.to_string(),
+            },
+            "result" => Message::TicketResult {
+                ticket: TicketId(v.get("ticket")?.as_u64()?),
+                result: v.get("result")?.clone(),
+            },
+            "error" => Message::ErrorReport {
+                ticket: TicketId(v.get("ticket")?.as_u64()?),
+                message: v.get("message")?.as_str()?.to_string(),
+                stack: v.get("stack")?.as_str()?.to_string(),
+            },
+            "ack" => Message::Ack,
+            "reload" => Message::Reload,
+            "shutdown" => Message::Shutdown,
+            other => bail!("unknown message type {other:?}"),
+        })
+    }
+}
+
+/// Bidirectional, blocking, message-oriented connection.
+pub trait Conn: Send {
+    fn send(&mut self, m: &Message) -> Result<()>;
+    fn recv(&mut self) -> Result<Message>;
+    /// Bytes moved so far (sent, received) — for the communication-cost
+    /// accounting in the Fig 5 / ablation benches.
+    fn bytes(&self) -> (u64, u64);
+}
+
+/// Server side: accept worker connections.
+pub trait Listener: Send {
+    fn accept(&mut self) -> Result<Box<dyn Conn>>;
+}
+
+/// Internet-link model applied by the local transport (and available to
+/// the benches for calibration): per-message RTT share + bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// One-way latency added per message, ms.
+    pub latency_ms: f64,
+    /// Link throughput in bytes/ms (e.g. 1 MB/s = 1000.0).
+    pub bytes_per_ms: f64,
+}
+
+impl LinkModel {
+    pub const FAST_LAN: LinkModel = LinkModel { latency_ms: 0.1, bytes_per_ms: 100_000.0 };
+    /// Campus/office LAN (the paper's testbed): 5 ms one-way, ~50 MB/s.
+    pub const CAMPUS: LinkModel = LinkModel { latency_ms: 5.0, bytes_per_ms: 50_000.0 };
+    /// Home-broadband-ish: 20 ms one-way, ~2 MB/s.
+    pub const INTERNET: LinkModel = LinkModel { latency_ms: 20.0, bytes_per_ms: 2_000.0 };
+    /// 3G-tablet-ish: 50 ms one-way, ~250 KB/s.
+    pub const MOBILE: LinkModel = LinkModel { latency_ms: 50.0, bytes_per_ms: 250.0 };
+
+    pub fn transfer_ms(&self, bytes: usize) -> f64 {
+        self.latency_ms + bytes as f64 / self.bytes_per_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let enc = m.encode();
+        let dec = Message::decode(&enc).unwrap();
+        assert_eq!(m, dec, "encoded: {enc}");
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Message::Hello { client: "w1".into(), profile: "desktop".into() });
+        roundtrip(Message::TicketRequest);
+        roundtrip(Message::Ticket {
+            ticket: TicketId(3),
+            task: TaskId(1),
+            task_name: "is_prime".into(),
+            index: 7,
+            payload: Value::obj(vec![("candidate", Value::num(97.0))]),
+        });
+        roundtrip(Message::NoTicket { retry_after_ms: 250 });
+        roundtrip(Message::TaskRequest { task_name: "knn".into() });
+        roundtrip(Message::TaskCode {
+            task_name: "knn".into(),
+            code_bytes: 4096,
+            dataset_refs: vec!["mnist_train_0".into(), "mnist_train_1".into()],
+        });
+        roundtrip(Message::DataRequest { key: "mnist_train_0".into() });
+        roundtrip(Message::Data { key: "d".into(), shape: vec![2, 3], b64: "AAAA".into() });
+        roundtrip(Message::TicketResult { ticket: TicketId(9), result: Value::Bool(true) });
+        roundtrip(Message::ErrorReport {
+            ticket: TicketId(2),
+            message: "panic: index out of bounds".into(),
+            stack: "worker::execute\ncoordinator::...".into(),
+        });
+        roundtrip(Message::Ack);
+        roundtrip(Message::Reload);
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn decode_rejects_unknown() {
+        assert!(Message::decode(r#"{"t":"warp"}"#).is_err());
+        assert!(Message::decode("not json").is_err());
+    }
+
+    #[test]
+    fn link_model_costs() {
+        let m = LinkModel::INTERNET;
+        assert!((m.transfer_ms(0) - 20.0).abs() < 1e-9);
+        assert!((m.transfer_ms(2_000_000) - (20.0 + 1000.0)).abs() < 1e-6);
+        assert!(LinkModel::MOBILE.transfer_ms(1000) > LinkModel::FAST_LAN.transfer_ms(1000));
+    }
+}

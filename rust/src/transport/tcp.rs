@@ -1,0 +1,133 @@
+//! TCP transport: one JSON document per line over std::net sockets.
+//!
+//! This is the deployment transport (`sashimi serve` / `sashimi worker
+//! --connect host:port`); the protocol is identical to the in-process
+//! transport, so the distributor and worker are transport-agnostic.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{Conn, Listener, Message};
+
+pub struct TcpConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    sent: Arc<AtomicU64>,
+    received: Arc<AtomicU64>,
+}
+
+impl TcpConn {
+    pub fn connect(addr: &str) -> Result<TcpConn> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Self::from_stream(stream)
+    }
+
+    pub fn from_stream(stream: TcpStream) -> Result<TcpConn> {
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(TcpConn {
+            reader,
+            writer: stream,
+            sent: Arc::new(AtomicU64::new(0)),
+            received: Arc::new(AtomicU64::new(0)),
+        })
+    }
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, m: &Message) -> Result<()> {
+        let mut line = m.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("tcp send")?;
+        self.sent.fetch_add(line.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("tcp recv")?;
+        if n == 0 {
+            anyhow::bail!("connection closed by peer");
+        }
+        self.received.fetch_add(n as u64, Ordering::Relaxed);
+        Message::decode(line.trim_end())
+    }
+
+    fn bytes(&self) -> (u64, u64) {
+        (self.sent.load(Ordering::Relaxed), self.received.load(Ordering::Relaxed))
+    }
+}
+
+pub struct TcpListenerWrap {
+    listener: TcpListener,
+    pub local_addr: String,
+}
+
+impl TcpListenerWrap {
+    /// Bind; use port 0 for an ephemeral port (tests).
+    pub fn bind(addr: &str) -> Result<TcpListenerWrap> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?.to_string();
+        Ok(TcpListenerWrap { listener, local_addr })
+    }
+}
+
+impl Listener for TcpListenerWrap {
+    fn accept(&mut self) -> Result<Box<dyn Conn>> {
+        let (stream, _) = self.listener.accept().context("tcp accept")?;
+        Ok(Box::new(TcpConn::from_stream(stream)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{TaskId, TicketId};
+    use crate::util::json::Value;
+
+    #[test]
+    fn tcp_roundtrip_on_loopback() {
+        let mut listener = TcpListenerWrap::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr.clone();
+        let h = std::thread::spawn(move || {
+            let mut server = listener.accept().unwrap();
+            loop {
+                match server.recv() {
+                    Ok(Message::Shutdown) | Err(_) => break,
+                    Ok(m) => server.send(&m).unwrap(),
+                }
+            }
+        });
+        let mut client = TcpConn::connect(&addr).unwrap();
+        let msg = Message::Ticket {
+            ticket: TicketId(1),
+            task: TaskId(2),
+            task_name: "echo".into(),
+            index: 0,
+            payload: Value::obj(vec![("x", Value::num(1.5))]),
+        };
+        client.send(&msg).unwrap();
+        assert_eq!(client.recv().unwrap(), msg);
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+        let (sent, recv) = client.bytes();
+        assert!(sent > 0 && recv > 0);
+    }
+
+    #[test]
+    fn closed_peer_is_an_error() {
+        let mut listener = TcpListenerWrap::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr.clone();
+        let h = std::thread::spawn(move || {
+            let _ = listener.accept().unwrap(); // drop immediately
+        });
+        let mut client = TcpConn::connect(&addr).unwrap();
+        h.join().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(client.recv().is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Standard base64 (RFC 4648, with padding).
+//!
+//! The paper serialises model parameters as base64 inside JSON (§3.1:
+//! "a model file wherein the parameters are encoded with base64 is
+//! formatted in JSON ... exchanged among machines without rounding
+//! errors").  `nn::model_file` uses this for f32 little-endian buffers.
+
+use anyhow::{bail, Result};
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+// Reverse lookup table: 255 = invalid, 254 = padding.
+const REVERSE: [u8; 256] = {
+    let mut t = [255u8; 256];
+    let mut i = 0;
+    while i < 64 {
+        t[ALPHABET[i] as usize] = i as u8;
+        i += 1;
+    }
+    t[b'=' as usize] = 254;
+    t
+};
+
+pub fn decode(s: &str) -> Result<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 4 != 0 {
+        bail!("base64 length {} not a multiple of 4", b.len());
+    }
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    // Fast path for all full (non-padded) quads; only the final quad may
+    // carry '='.  Table lookups, no per-chunk allocation — dataset
+    // payloads run through here at ~GB/s (EXPERIMENTS.md §Perf L3).
+    let n_quads = b.len() / 4;
+    for (qi, chunk) in b.chunks_exact(4).enumerate() {
+        let v0 = REVERSE[chunk[0] as usize];
+        let v1 = REVERSE[chunk[1] as usize];
+        let v2 = REVERSE[chunk[2] as usize];
+        let v3 = REVERSE[chunk[3] as usize];
+        if v0 < 64 && v1 < 64 && v2 < 64 && v3 < 64 {
+            let n = ((v0 as u32) << 18) | ((v1 as u32) << 12) | ((v2 as u32) << 6) | v3 as u32;
+            out.push((n >> 16) as u8);
+            out.push((n >> 8) as u8);
+            out.push(n as u8);
+            continue;
+        }
+        // Slow path: padding is legal only in the last quad, only in the
+        // last two symbols, and only as "xx==" or "xxx=".
+        if qi != n_quads - 1 || v0 >= 64 || v1 >= 64 {
+            if v0 == 255 || v1 == 255 || v2 == 255 && v2 != 254 || v3 == 255 && v3 != 254 {
+                bail!("invalid base64 character");
+            }
+            bail!("malformed base64 padding");
+        }
+        match (v2, v3) {
+            (254, 254) => {
+                let n = ((v0 as u32) << 18) | ((v1 as u32) << 12);
+                out.push((n >> 16) as u8);
+            }
+            (v2, 254) if v2 < 64 => {
+                let n = ((v0 as u32) << 18) | ((v1 as u32) << 12) | ((v2 as u32) << 6);
+                out.push((n >> 16) as u8);
+                out.push((n >> 8) as u8);
+            }
+            (255, _) | (_, 255) => bail!("invalid base64 character"),
+            _ => bail!("malformed base64 padding"),
+        }
+    }
+    Ok(out)
+}
+
+/// f32 slice -> base64 of its little-endian bytes (the model-file format).
+pub fn encode_f32(xs: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    encode(&bytes)
+}
+
+pub fn decode_f32(s: &str) -> Result<Vec<f32>> {
+    let bytes = decode(s)?;
+    if bytes.len() % 4 != 0 {
+        bail!("decoded byte length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact() {
+        // The paper's whole point: no rounding errors across machines.
+        let mut r = SplitMix64::new(9);
+        let xs: Vec<f32> = (0..257).map(|_| r.uniform_f32(-1e6, 1e6)).collect();
+        let back = decode_f32(&encode_f32(&xs)).unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn special_values_roundtrip() {
+        let xs = [0.0f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::MIN_POSITIVE, f32::NAN];
+        let back = decode_f32(&encode_f32(&xs)).unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode("abc").is_err());
+        assert!(decode("a=bc").is_err());
+        assert!(decode("ab!c").is_err());
+        assert!(decode_f32("Zg==").is_err()); // 1 byte, not multiple of 4
+    }
+
+    #[test]
+    fn random_binary_roundtrip() {
+        let mut r = SplitMix64::new(17);
+        for len in [0usize, 1, 2, 3, 63, 64, 65, 1000] {
+            let data: Vec<u8> = (0..len).map(|_| r.next_u64() as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data, "len={len}");
+        }
+    }
+}

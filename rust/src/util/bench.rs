@@ -1,0 +1,191 @@
+//! Mini-criterion: the measurement harness behind `cargo bench`.
+//!
+//! criterion is not in the offline crate set, so benches use this:
+//! warm-up, fixed sample count, mean/σ/percentiles, and Markdown table /
+//! series printers that emit the paper-shaped rows (Table 2, Table 4,
+//! Fig 3, Fig 5) next to the paper's own numbers.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        stats::mean(&self.samples_ms)
+    }
+
+    pub fn stddev_ms(&self) -> f64 {
+        stats::stddev(&self.samples_ms)
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        stats::min(&self.samples_ms)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.3} ms  σ {:>8.3} ms  min {:>10.3} ms  (n={})",
+            self.name,
+            self.mean_ms(),
+            self.stddev_ms(),
+            self.min_ms(),
+            self.samples_ms.len()
+        )
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `samples` times measured.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_ms = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        samples_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let m = Measurement { name: name.to_string(), samples_ms };
+    println!("{}", m.summary());
+    m
+}
+
+/// Time a single long-running scenario (end-to-end drivers where a
+/// sample *is* the experiment).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    let ms = t.elapsed().as_secs_f64() * 1e3;
+    println!("{name:<40} {ms:>12.1} ms");
+    (out, ms)
+}
+
+/// Markdown table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n### {}\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!();
+    }
+}
+
+/// Series printer for figure-shaped results (x, one or more y columns).
+pub struct Series {
+    title: String,
+    x_label: String,
+    y_labels: Vec<String>,
+    points: Vec<(f64, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, y_labels: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_labels: y_labels.iter().map(|s| s.to_string()).collect(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, x: f64, ys: &[f64]) {
+        assert_eq!(ys.len(), self.y_labels.len());
+        self.points.push((x, ys.to_vec()));
+    }
+
+    pub fn print(&self) {
+        println!("\n### {} (series)\n", self.title);
+        print!("{:>12}", self.x_label);
+        for y in &self.y_labels {
+            print!("{y:>18}");
+        }
+        println!();
+        for (x, ys) in &self.points {
+            print!("{x:>12.3}");
+            for y in ys {
+                print!("{y:>18.5}");
+            }
+            println!();
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let m = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples_ms.len(), 5);
+        assert!(m.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["1".into()]);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn series_points() {
+        let mut s = Series::new("fig", "clients", &["conv", "fc"]);
+        s.point(1.0, &[1.0, 1.5]);
+        s.point(2.0, &[2.0, 1.5]);
+        s.print();
+        assert_eq!(s.points.len(), 2);
+    }
+}

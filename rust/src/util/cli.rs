@@ -1,0 +1,169 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Grammar: `sashimi <subcommand> [--key value]... [--flag]...`.
+//! Typed getters with defaults; unknown-argument detection so typos fail
+//! loudly instead of silently using a default.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    positional: Vec<String>,
+    accessed: std::cell::RefCell<BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.accessed.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains(key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any provided --option was never consumed by the command.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.accessed.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(*k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown arguments: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --steps 100 --net cifar --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 100);
+        assert_eq!(a.str_or("net", "mnist"), "cifar");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --port=9000");
+        assert_eq!(a.usize_or("port", 0).unwrap(), 9000);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.f64_or("speed", 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --steps abc");
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let a = parse("x --typo 3 --steps 7");
+        let _ = a.usize_or("steps", 1);
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("typo");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --fast --real");
+        assert!(a.flag("fast") && a.flag("real"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--lr -0.5": '-0.5' does not start with '--' so it is a value.
+        let a = parse("x --lr -0.5");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+}

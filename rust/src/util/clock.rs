@@ -1,0 +1,91 @@
+//! Time utilities: a process-wide millisecond clock and the device-speed
+//! padding used to emulate heterogeneous clients on a 1-vCPU host
+//! (DESIGN.md §7).
+
+use std::time::{Duration, Instant};
+
+use std::sync::OnceLock;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Milliseconds since first call (monotonic, process-wide).
+pub fn now_ms() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Microseconds since first call.
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+pub fn sleep_ms(ms: u64) {
+    std::thread::sleep(Duration::from_millis(ms));
+}
+
+/// Pads a real computation to a modelled duration: a worker with
+/// `speed=0.14` that finished its real compute in 3 ms against a
+/// modelled cost of 20 ms sleeps the remaining `20/0.14 - 3` ms.
+///
+/// This is how one host emulates the paper's OPTIPLEX-vs-Nexus-7 and
+/// Node-vs-Firefox spread: the coordination, transport and numerics are
+/// real; only the device-speed ratio is modelled.
+pub struct PaddedTimer {
+    start: Instant,
+}
+
+impl PaddedTimer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Real elapsed time so far.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Sleep until total elapsed == `modelled_ms / speed`; returns the
+    /// padded duration actually reached (>= real elapsed).
+    pub fn pad_to(&self, modelled_ms: f64, speed: f64) -> f64 {
+        let target = modelled_ms / speed.max(1e-9);
+        let real = self.elapsed_ms();
+        if target > real {
+            std::thread::sleep(Duration::from_secs_f64((target - real) / 1e3));
+        }
+        self.elapsed_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_is_monotone() {
+        let a = now_ms();
+        sleep_ms(2);
+        let b = now_ms();
+        assert!(b >= a + 1);
+    }
+
+    #[test]
+    fn pad_reaches_target() {
+        let t = PaddedTimer::start();
+        let total = t.pad_to(20.0, 1.0);
+        assert!(total >= 19.0, "padded to {total}");
+    }
+
+    #[test]
+    fn pad_scales_with_speed() {
+        let t = PaddedTimer::start();
+        let total = t.pad_to(5.0, 0.5); // modelled 5 ms at half speed = 10 ms
+        assert!(total >= 9.0, "padded to {total}");
+    }
+
+    #[test]
+    fn pad_never_shortens() {
+        let t = PaddedTimer::start();
+        sleep_ms(10);
+        let total = t.pad_to(1.0, 1.0); // target already passed
+        assert!(total >= 10.0);
+    }
+}

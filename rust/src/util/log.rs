@@ -1,0 +1,102 @@
+//! Leveled stderr logger (env-controlled via `SASHIMI_LOG`).
+//!
+//! Levels: error < warn < info < debug < trace.  Default is `info`.
+//! The distributor and workers log through this; benches usually set
+//! `SASHIMI_LOG=warn` to keep the tables clean.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::clock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+
+fn current_level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v == u8::MAX {
+        let lvl = std::env::var("SASHIMI_LOG").map(|s| Level::from_str(&s)).unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        return lvl;
+    }
+    match v {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= current_level()
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if enabled(l) {
+        eprintln!("[{:>9.3}s {} {}] {}", clock::now_ms() as f64 / 1e3, l.tag(), target, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($t:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, $t, &format!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($t:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, $t, &format!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($t:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, $t, &format!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($t:expr, $($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, $t, &format!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::from_str("TRACE"), Level::Trace);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+}

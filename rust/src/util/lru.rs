@@ -1,0 +1,178 @@
+//! Byte-budgeted LRU cache.
+//!
+//! The paper's browser node caches task code and external datasets and
+//! garbage-collects "on the basis of the least recently used algorithm"
+//! (§2.1.2) because long runs otherwise exhaust browser memory.  The
+//! worker uses this for exactly that purpose; capacity is in bytes so a
+//! big dataset and a small task code blob compete for the same budget.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// LRU keyed by recency tick; eviction scans for the minimum tick, which
+/// is O(n) per eviction but n (distinct cached objects per worker) is
+/// small by construction — tasks and datasets, not tickets.
+pub struct LruCache<K, V> {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    tick: u64,
+    map: HashMap<K, Entry<V>>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    last_used: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            capacity_bytes,
+            used_bytes: 0,
+            tick: 0,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits += 1;
+                Some(&e.value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert `value` accounting `bytes` against the budget, evicting the
+    /// least recently used entries until it fits.  Values larger than the
+    /// whole budget are cached anyway (a browser must hold the dataset it
+    /// is actively computing on) and evicted on the next pressure.
+    pub fn put(&mut self, key: K, value: V, bytes: usize) {
+        self.tick += 1;
+        if let Some(old) = self.map.remove(&key) {
+            self.used_bytes -= old.bytes;
+        }
+        while !self.map.is_empty() && self.used_bytes + bytes > self.capacity_bytes {
+            self.evict_one();
+        }
+        self.used_bytes += bytes;
+        self.map.insert(key, Entry { value, bytes, last_used: self.tick });
+    }
+
+    fn evict_one(&mut self) {
+        if let Some(key) = self
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())
+        {
+            if let Some(e) = self.map.remove(&key) {
+                self.used_bytes -= e.bytes;
+                self.evictions += 1;
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.used_bytes = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.hits, self.misses, self.evictions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss() {
+        let mut c: LruCache<&str, u32> = LruCache::new(100);
+        c.put("a", 1, 10);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"b"), None);
+        assert_eq!(c.stats(), (1, 1, 0));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<&str, u32> = LruCache::new(30);
+        c.put("a", 1, 10);
+        c.put("b", 2, 10);
+        c.put("c", 3, 10);
+        c.get(&"a"); // a is now most recent; b is LRU
+        c.put("d", 4, 10);
+        assert!(c.contains(&"a"));
+        assert!(!c.contains(&"b"));
+        assert!(c.contains(&"c") && c.contains(&"d"));
+    }
+
+    #[test]
+    fn replace_updates_budget() {
+        let mut c: LruCache<&str, Vec<u8>> = LruCache::new(100);
+        c.put("a", vec![0; 50], 50);
+        c.put("a", vec![0; 20], 20);
+        assert_eq!(c.used_bytes(), 20);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn oversized_entry_still_cached() {
+        let mut c: LruCache<&str, u32> = LruCache::new(10);
+        c.put("huge", 1, 1000);
+        assert!(c.contains(&"huge"));
+        c.put("next", 2, 5);
+        assert!(!c.contains(&"huge")); // evicted under pressure
+    }
+
+    #[test]
+    fn budget_never_exceeded_with_multiple_entries() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        for i in 0..50 {
+            c.put(i, i, 17);
+        }
+        assert!(c.used_bytes() <= 100 + 17); // at most one oversize overshoot
+        assert!(c.len() <= 6);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c: LruCache<&str, u32> = LruCache::new(50);
+        c.put("a", 1, 10);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Substrate utilities the image's crate set does not provide.
+//!
+//! The deployment image has no crates.io access beyond the `xla` crate's
+//! own dependency closure, so the pieces a framework would normally pull
+//! in — JSON, base64, RNG, CLI parsing, an LRU cache, a bench harness, a
+//! property-test harness, a thread pool — are implemented here and unit
+//! tested like any other module (DESIGN.md §2).
+
+pub mod base64;
+pub mod bench;
+pub mod cli;
+pub mod clock;
+pub mod json;
+pub mod log;
+pub mod lru;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

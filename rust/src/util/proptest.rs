@@ -1,0 +1,82 @@
+//! Seeded property-test harness (proptest is not in the offline set).
+//!
+//! `check(name, cases, |rng| ...)` runs the property across `cases`
+//! independently-seeded RNGs; a failure reports the exact case seed so
+//! `check_seed(name, seed, f)` reproduces it deterministically.  No
+//! shrinking — generators here are small enough to debug from the seed.
+
+use super::rng::SplitMix64;
+
+/// Run `f` across `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: Fn(&mut SplitMix64) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    // Derive per-case seeds from the property name so different
+    // properties never share streams.
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = SplitMix64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Reproduce one case by seed.
+pub fn check_seed<F: Fn(&mut SplitMix64) -> Result<(), String>>(name: &str, seed: u64, f: F) {
+    let mut rng = SplitMix64::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property {name:?} failed on seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assertion helper usable inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // Count via a property with interior state is awkward across Fn;
+        // just verify no panic across many cases.
+        check("trivial", 100, |rng| {
+            let v = rng.gen_range(10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("range".into())
+            }
+        });
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeds_differ_across_cases_and_names() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

@@ -1,0 +1,155 @@
+//! SplitMix64 deterministic RNG, bit-identical to `python/compile/prand.py`.
+//!
+//! Cross-language determinism is a load-bearing property: `aot.py` records
+//! only (seed, shape, checksum) per golden artifact and the Rust tests
+//! regenerate the exact input tensors from the same stream.  The pinned
+//! known-answer vectors below are asserted by both test suites.
+
+/// SplitMix64 — tiny, fast, and trivially portable across languages.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// One SplitMix64 step.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// f32 in `[lo, hi)` from the top 24 bits — matches prand.uniform_f32.
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let z = self.next_u64();
+        // (z >> 40) * 2^-24 computed in f64 then rounded to f32, exactly
+        // as numpy does in prand.py.
+        let u = ((z >> 40) as f64 * (1.0 / 16_777_216.0)) as f32;
+        lo + u * (hi - lo)
+    }
+
+    /// A vector of uniform f32s (the golden-input generator).
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_f32(lo, hi)).collect()
+    }
+
+    /// Unbiased integer in `[0, n)` (Lemire-style rejection).
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Approximately standard-normal f32 (sum of 12 uniforms, CLT).
+    /// Good enough for weight init / synthetic data; not for statistics.
+    pub fn normal_f32(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.uniform_f32(0.0, 1.0);
+        }
+        s - 6.0
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent stream (for per-worker / per-shard RNGs).
+    pub fn fork(&mut self) -> SplitMix64 {
+        SplitMix64::new(self.next_u64())
+    }
+}
+
+/// Generate the same array `prand.uniform_f32_array(seed, shape)` yields.
+pub fn golden_input(seed: u64, n: usize) -> Vec<f32> {
+    SplitMix64::new(seed).uniform_vec(n, -1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_known_answers() {
+        // Same pinned vectors as python/tests/test_prand.py.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn uniform_is_deterministic_and_in_range() {
+        let a = golden_input(42, 1000);
+        let b = golden_input(42, 1000);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| (-1.0..1.0).contains(v)));
+        let mean: f32 = a.iter().sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.06, "mean={mean}");
+    }
+
+    #[test]
+    fn uniform_values_on_24bit_grid() {
+        // Mirrors test_uniform_f32_pinned_values_for_rust on the py side.
+        let xs = golden_input(1234, 4);
+        for v in xs {
+            let scaled = (v as f64 + 1.0) / 2.0 * 16_777_216.0;
+            assert!((scaled - scaled.round()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = SplitMix64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10) as usize;
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = SplitMix64::new(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_has_plausible_moments() {
+        let mut r = SplitMix64::new(11);
+        let xs: Vec<f32> = (0..4000).map(|_| r.normal_f32()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.08, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut r = SplitMix64::new(5);
+        let mut a = r.fork();
+        let mut b = r.fork();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

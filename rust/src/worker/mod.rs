@@ -1,0 +1,394 @@
+//! Worker: the browser node, faithfully replaying §2.1.2's basic-program
+//! loop.
+//!
+//! ```text
+//! 1. connect (Hello)                      -> WebSocket open
+//! 2. TicketRequest                        -> step 2
+//! 3. TaskRequest if task not cached       -> step 3
+//! 4. DataRequest per missing dataset      -> step 4
+//! 5. execute the task                     -> step 5
+//! 6. TicketResult                         -> step 6
+//! 7. goto 2                               -> step 7
+//! ```
+//!
+//! Extras the paper specifies and this module implements:
+//! * task code and datasets cached under an LRU byte budget (browser GC);
+//! * on execution error: ErrorReport with a stack trace, then the worker
+//!   *reloads itself* (cache cleared, reconnect) and continues;
+//! * device heterogeneity via [`DeviceProfile`]: the real compute runs,
+//!   then the ticket is padded to `elapsed / speed` (DESIGN.md §7).
+
+pub mod profile;
+
+pub use profile::DeviceProfile;
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context as _, Result};
+
+use crate::runtime::{SharedRuntime, Tensor};
+use crate::tasks::{Registry, TaskContext, TaskDef};
+use crate::transport::{Conn, Message};
+use crate::util::base64;
+use crate::util::clock::{self, PaddedTimer};
+use crate::util::lru::LruCache;
+
+/// What a worker did during `run` (asserted by tests/benches).
+#[derive(Debug, Default, Clone)]
+pub struct WorkerReport {
+    pub tickets_completed: u64,
+    pub errors_reported: u64,
+    pub reloads: u64,
+    pub reconnects: u64,
+    pub busy_ms: f64,
+    pub idle_polls: u64,
+    pub task_fetches: u64,
+    pub data_fetches: u64,
+}
+
+enum CacheEntry {
+    TaskCode,
+    Data(Arc<Tensor>),
+}
+
+/// The per-connection task context: datasets resolve through the LRU
+/// cache, falling back to DataRequest messages on the wire.
+struct WireContext<'a> {
+    conn: &'a mut dyn Conn,
+    cache: &'a mut LruCache<String, CacheEntry>,
+    runtime: Option<&'a SharedRuntime>,
+    data_fetches: &'a mut u64,
+}
+
+impl TaskContext for WireContext<'_> {
+    fn dataset(&mut self, key: &str) -> Result<Arc<Tensor>> {
+        if let Some(CacheEntry::Data(t)) = self.cache.get(&key.to_string()) {
+            return Ok(Arc::clone(t));
+        }
+        *self.data_fetches += 1;
+        self.conn.send(&Message::DataRequest { key: key.to_string() })?;
+        match self.conn.recv()? {
+            Message::Data { key: k, shape, b64 } => {
+                anyhow::ensure!(k == key, "dataset key mismatch: {k} != {key}");
+                let data = base64::decode_f32(&b64)?;
+                let t = Arc::new(Tensor::new(shape, data)?);
+                let bytes = t.size_bytes();
+                self.cache.put(key.to_string(), CacheEntry::Data(Arc::clone(&t)), bytes);
+                Ok(t)
+            }
+            m => anyhow::bail!("expected Data, got {m:?}"),
+        }
+    }
+
+    fn runtime(&self) -> Result<&SharedRuntime> {
+        self.runtime.context("worker has no XLA runtime configured")
+    }
+}
+
+pub struct Worker {
+    pub id: String,
+    pub profile: DeviceProfile,
+    registry: Registry,
+    runtime: Option<SharedRuntime>,
+    cache: LruCache<String, CacheEntry>,
+    /// Cap on tickets to execute (None = until Shutdown/stop).
+    pub max_tickets: Option<u64>,
+}
+
+impl Worker {
+    pub fn new(id: &str, profile: DeviceProfile, registry: Registry) -> Worker {
+        Worker {
+            id: id.to_string(),
+            profile,
+            registry,
+            runtime: None,
+            cache: LruCache::new(256 << 20), // 256 MiB, a browser-ish budget
+            max_tickets: None,
+        }
+    }
+
+    pub fn with_runtime(mut self, rt: SharedRuntime) -> Worker {
+        self.runtime = Some(rt);
+        self
+    }
+
+    pub fn with_cache_bytes(mut self, bytes: usize) -> Worker {
+        self.cache = LruCache::new(bytes);
+        self
+    }
+
+    /// Run the browser loop until Shutdown, `stop`, connection failure
+    /// with no reconnect budget, or `max_tickets`.
+    ///
+    /// `connect` reopens the transport (used both at start and on
+    /// reload); a worker tolerates `max_reconnects` consecutive failures.
+    pub fn run<F>(&mut self, connect: F, stop: &AtomicBool) -> WorkerReport
+    where
+        F: Fn() -> Result<Box<dyn Conn>>,
+    {
+        let mut report = WorkerReport::default();
+        let max_reconnects = 5u32;
+        let mut consecutive_failures = 0u32;
+        'outer: while !stop.load(Ordering::SeqCst) {
+            let mut conn = match connect() {
+                Ok(c) => c,
+                Err(_) => {
+                    consecutive_failures += 1;
+                    if consecutive_failures > max_reconnects {
+                        break;
+                    }
+                    clock::sleep_ms(10);
+                    continue;
+                }
+            };
+            report.reconnects += 1;
+            if conn
+                .send(&Message::Hello { client: self.id.clone(), profile: self.profile.name.clone() })
+                .is_err()
+                || !matches!(conn.recv(), Ok(Message::Ack))
+            {
+                consecutive_failures += 1;
+                if consecutive_failures > max_reconnects {
+                    break;
+                }
+                continue;
+            }
+            consecutive_failures = 0;
+
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    let _ = conn.send(&Message::Shutdown);
+                    break 'outer;
+                }
+                if let Some(max) = self.max_tickets {
+                    if report.tickets_completed >= max {
+                        let _ = conn.send(&Message::Shutdown);
+                        break 'outer;
+                    }
+                }
+                if conn.send(&Message::TicketRequest).is_err() {
+                    continue 'outer; // reconnect
+                }
+                match conn.recv() {
+                    Ok(Message::Ticket { ticket, task_name, payload, .. }) => {
+                        match self.execute_ticket(&mut *conn, &task_name, &payload, &mut report) {
+                            Ok(result) => {
+                                if conn.send(&Message::TicketResult { ticket, result }).is_err() {
+                                    continue 'outer;
+                                }
+                                let _ = conn.recv(); // Ack
+                                report.tickets_completed += 1;
+                            }
+                            Err(e) => {
+                                report.errors_reported += 1;
+                                let _ = conn.send(&Message::ErrorReport {
+                                    ticket,
+                                    message: format!("{e:#}"),
+                                    stack: stack_trace_of(&e),
+                                });
+                                let _ = conn.recv(); // Reload
+                                // The paper: "the browser reloads itself".
+                                self.cache.clear();
+                                report.reloads += 1;
+                                continue 'outer;
+                            }
+                        }
+                    }
+                    Ok(Message::NoTicket { retry_after_ms }) => {
+                        report.idle_polls += 1;
+                        clock::sleep_ms(retry_after_ms.min(200));
+                    }
+                    Ok(Message::Reload) => {
+                        self.cache.clear();
+                        report.reloads += 1;
+                        continue 'outer;
+                    }
+                    Ok(Message::Shutdown) => break 'outer,
+                    Ok(m) => {
+                        crate::log_warn!("worker", "{}: unexpected message {m:?}", self.id);
+                        continue 'outer;
+                    }
+                    Err(_) => continue 'outer,
+                }
+            }
+        }
+        report
+    }
+
+    /// Steps 3–5 for one ticket: ensure code, prefetch datasets, execute
+    /// with panic isolation, pad to the device profile.
+    fn execute_ticket(
+        &mut self,
+        conn: &mut dyn Conn,
+        task_name: &str,
+        payload: &crate::util::json::Value,
+        report: &mut WorkerReport,
+    ) -> Result<crate::util::json::Value> {
+        // Step 3: task code, if not cached.
+        let code_key = format!("task:{task_name}");
+        if self.cache.get(&code_key).is_none() {
+            report.task_fetches += 1;
+            conn.send(&Message::TaskRequest { task_name: task_name.to_string() })?;
+            match conn.recv()? {
+                Message::TaskCode { code_bytes, .. } => {
+                    self.cache.put(code_key, CacheEntry::TaskCode, code_bytes);
+                }
+                m => anyhow::bail!("expected TaskCode, got {m:?}"),
+            }
+        }
+        let def: Arc<dyn TaskDef> = self.registry.get(task_name)?;
+
+        let timer = PaddedTimer::start();
+        // Steps 4–5 under panic isolation (a panicking task produces an
+        // error report + reload, not a dead worker thread).
+        let result = {
+            let mut ctx = WireContext {
+                conn,
+                cache: &mut self.cache,
+                runtime: self.runtime.as_ref(),
+                data_fetches: &mut report.data_fetches,
+            };
+            // Step 4: explicit prefetch of declared refs (mirrors the
+            // basic program requesting files before running the task).
+            for key in def.dataset_refs(payload) {
+                ctx.dataset(&key)?;
+            }
+            std::panic::catch_unwind(AssertUnwindSafe(|| def.execute(payload, &mut ctx)))
+                .map_err(|p| anyhow::anyhow!("task panicked: {}", panic_message(&p)))?
+        }?;
+
+        // Device-speed padding (DESIGN.md §7).
+        let modelled = result.modelled_ms.unwrap_or_else(|| timer.elapsed_ms());
+        let total = timer.pad_to(modelled, self.profile.speed);
+        report.busy_ms += total;
+        Ok(result.value)
+    }
+}
+
+fn panic_message(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn stack_trace_of(e: &anyhow::Error) -> String {
+    // anyhow captures a backtrace when RUST_BACKTRACE is set; the chain
+    // of causes is the useful part either way.
+    e.chain().map(|c| c.to_string()).collect::<Vec<_>>().join("\n  caused by: ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Distributor, Framework};
+    use crate::tasks::is_prime::IsPrimeTask;
+    use crate::tasks::{TaskOutput};
+    use crate::transport::{local, LinkModel};
+    use crate::util::json::Value;
+
+    fn prime_setup(n: usize) -> (Arc<Framework>, Arc<Distributor>, local::LocalConnector) {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(
+            (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+        );
+        let dist = Distributor::new(&fw);
+        let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+        dist.serve(Box::new(listener));
+        (fw, dist, connector)
+    }
+
+    #[test]
+    fn worker_drains_all_tickets() {
+        let (fw, _dist, connector) = prime_setup(20);
+        let registry = fw.registry_snapshot();
+        let mut w = Worker::new("w0", DeviceProfile::native(), registry);
+        w.max_tickets = Some(20);
+        let stop = AtomicBool::new(false);
+        let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
+        assert_eq!(report.tickets_completed, 20);
+        assert_eq!(report.task_fetches, 1, "task code cached after first fetch");
+        assert_eq!(fw.store().progress(None).done, 20);
+    }
+
+    /// Panics on the first execution of ticket n=1, succeeds afterwards —
+    /// a *transient* browser failure.  (A deterministically-failing
+    /// ticket would loop forever in the paper's design too: the ticket
+    /// is requeued, has the oldest virtual created time, and is re-served
+    /// first.  That behaviour is exercised in rust/tests/fault_tolerance.)
+    struct PanicOnceTask {
+        fired: std::sync::atomic::AtomicBool,
+    }
+    impl TaskDef for PanicOnceTask {
+        fn name(&self) -> &str {
+            "panics_once"
+        }
+        fn execute(&self, input: &Value, _: &mut dyn TaskContext) -> Result<TaskOutput> {
+            if input.get("n")?.as_u64()? == 1 && !self.fired.swap(true, Ordering::SeqCst) {
+                panic!("injected transient panic");
+            }
+            Ok(TaskOutput::new(Value::Bool(true)))
+        }
+    }
+
+    #[test]
+    fn panicking_task_reports_and_worker_survives() {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(Arc::new(PanicOnceTask { fired: AtomicBool::new(false) }));
+        task.calculate(vec![
+            Value::obj(vec![("n", Value::num(1.0))]), // panics once...
+            Value::obj(vec![("n", Value::num(0.0))]),
+        ]);
+        let dist = Distributor::new(&fw);
+        let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+        dist.serve(Box::new(listener));
+        let mut w = Worker::new("w0", DeviceProfile::native(), fw.registry_snapshot());
+        w.max_tickets = Some(2);
+        let stop = AtomicBool::new(false);
+        let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
+        // One error report + reload, then both tickets complete.
+        assert_eq!(report.errors_reported, 1);
+        assert_eq!(report.reloads, 1);
+        assert_eq!(report.tickets_completed, 2);
+        assert_eq!(fw.store().errors().len(), 1);
+        assert_eq!(fw.store().progress(None).done, 2);
+    }
+
+    #[test]
+    fn tablet_profile_pads_time() {
+        let (fw, _dist, connector) = prime_setup(2);
+        let mut w = Worker::new(
+            "slow",
+            DeviceProfile { name: "tablet".into(), speed: 0.05 },
+            fw.registry_snapshot(),
+        );
+        w.max_tickets = Some(2);
+        let stop = AtomicBool::new(false);
+        let t0 = std::time::Instant::now();
+        let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
+        assert_eq!(report.tickets_completed, 2);
+        // Each prime check is sub-millisecond real, padded by 1/0.05 = 20x.
+        assert!(report.busy_ms >= t0.elapsed().as_secs_f64() * 1e3 * 0.2);
+    }
+
+    #[test]
+    fn stop_flag_halts_worker() {
+        let (fw, _dist, connector) = prime_setup(1);
+        let mut w = Worker::new("w", DeviceProfile::native(), fw.registry_snapshot());
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            clock::sleep_ms(50);
+            s2.store(true, Ordering::SeqCst);
+        });
+        let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
+        h.join().unwrap();
+        assert_eq!(report.tickets_completed, 1); // drained, then idled until stop
+    }
+}

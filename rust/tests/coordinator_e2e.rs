@@ -1,0 +1,234 @@
+//! End-to-end Sashimi: projects distributed across real worker loops
+//! over both transports, including the XLA-backed kNN workload.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sashimi::coordinator::{console, Distributor, Framework};
+use sashimi::data;
+use sashimi::runtime::{self, Tensor};
+use sashimi::store::StoreConfig;
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::tasks::knn::KnnChunkTask;
+use sashimi::transport::tcp::{TcpConn, TcpListenerWrap};
+use sashimi::transport::{local, Conn, LinkModel, Listener};
+use sashimi::util::json::Value;
+use sashimi::worker::{DeviceProfile, Worker};
+
+fn spawn_workers(
+    fw: &Arc<Framework>,
+    connector: &local::LocalConnector,
+    n: usize,
+    stop: &Arc<AtomicBool>,
+    rt: Option<runtime::SharedRuntime>,
+) -> Vec<std::thread::JoinHandle<sashimi::worker::WorkerReport>> {
+    (0..n)
+        .map(|i| {
+            let connector = connector.clone();
+            let registry = fw.registry_snapshot();
+            let stop = Arc::clone(stop);
+            let rt = rt.clone();
+            std::thread::spawn(move || {
+                let mut w = Worker::new(&format!("w{i}"), DeviceProfile::native(), registry);
+                if let Some(rt) = rt {
+                    w = w.with_runtime(rt);
+                }
+                w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+            })
+        })
+        .collect()
+}
+
+/// The appendix's PrimeListMakerProject, 1..=1000, three browser nodes.
+#[test]
+fn prime_project_over_local_transport() {
+    let fw = Framework::builder().build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate((1..=1000).map(|i| Value::obj(vec![("candidate", Value::num(i as f64))])).collect());
+
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers = spawn_workers(&fw, &connector, 3, &stop, None);
+
+    let results = task.block();
+    stop.store(true, Ordering::SeqCst);
+    for w in workers {
+        let _ = w.join().unwrap();
+    }
+    assert_eq!(results.len(), 1000);
+    let primes: Vec<usize> = results
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.get("is_prime").unwrap().as_bool().unwrap())
+        .map(|(i, _)| i + 1)
+        .collect();
+    assert_eq!(primes.len(), 168); // π(1000)
+    assert_eq!(primes[0], 2);
+    assert_eq!(*primes.last().unwrap(), 997);
+
+    // Console reflects the finished project.
+    let snap = console::snapshot(&dist);
+    assert_eq!(snap.progress.done, 1000);
+    assert_eq!(snap.clients.len(), 3);
+    assert!(console::render(&snap).contains("1000 total"));
+}
+
+/// Same project over real TCP sockets (multi-process shape).
+#[test]
+fn prime_project_over_tcp() {
+    let fw = Framework::builder().build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate((1..=200).map(|i| Value::obj(vec![("candidate", Value::num(i as f64))])).collect());
+    let dist = Distributor::new(&fw);
+    let mut listener = TcpListenerWrap::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr.clone();
+    // accept exactly two workers on a plain thread
+    let d2 = Arc::clone(&dist);
+    let acceptor = std::thread::spawn(move || {
+        for _ in 0..2 {
+            let conn = listener.accept().unwrap();
+            let d = Arc::clone(&d2);
+            std::thread::spawn(move || {
+                let _ = d.handle_conn(conn);
+            });
+        }
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for i in 0..2 {
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut w = Worker::new(&format!("tcp{i}"), DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(TcpConn::connect(&addr)?) as Box<dyn Conn>), &stop)
+        }));
+    }
+    let results = task.block();
+    stop.store(true, Ordering::SeqCst);
+    for j in joins {
+        let _ = j.join();
+    }
+    acceptor.join().unwrap();
+    assert_eq!(results.len(), 200);
+    let n_primes =
+        results.iter().filter(|r| r.get("is_prime").unwrap().as_bool().unwrap()).count();
+    assert_eq!(n_primes, 46); // π(200)
+}
+
+/// Table 2's workload end to end at small scale: distributed kNN with
+/// the XLA artifact, folded across chunks, checked against exact brute
+/// force on the server.
+#[test]
+fn knn_project_with_artifacts() {
+    let rt = runtime::open_shared().expect("run `make artifacts` first");
+    let n_train = 600;
+    let n_query = 20;
+    let chunk = 200;
+    let train = data::mnist_train(n_train, 1);
+    let queries = data::mnist_test(n_query, 2);
+
+    let fw = Framework::builder()
+        .store_config(StoreConfig { requeue_after_ms: 60_000, min_redistribute_ms: 60_000, requeue_on_error: true })
+        .build();
+    fw.datasets().register("q0", queries.rows_matrix(0, n_query));
+    for (c, start) in (0..n_train).step_by(chunk).enumerate() {
+        fw.datasets().register(&format!("chunk{c}"), train.rows_matrix(start, chunk));
+    }
+    let def = KnnChunkTask::small();
+    let task = fw.create_task(Arc::new(KnnChunkTask::small()));
+    let payloads: Vec<Value> = (0..n_train / chunk)
+        .map(|c| def.ticket("q0", &format!("chunk{c}"), c * chunk))
+        .collect();
+    task.calculate(payloads);
+
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers = spawn_workers(&fw, &connector, 2, &stop, Some(rt));
+
+    let results = task.block();
+    stop.store(true, Ordering::SeqCst);
+    for w in workers {
+        let _ = w.join().unwrap();
+    }
+
+    // Fold (min, argmin) across chunk results.
+    let mut acc = vec![(f32::INFINITY, 0usize); n_query];
+    for r in &results {
+        let offset = r.get("chunk_offset").unwrap().as_usize().unwrap();
+        let mins = sashimi::tasks::tensor_from_json(r.get("min_dist2").unwrap()).unwrap();
+        let argmins = sashimi::tasks::tensor_from_json(r.get("argmin").unwrap()).unwrap();
+        sashimi::runtime::tensor::fold_min_argmin(&mut acc, mins.data(), argmins.data(), offset);
+    }
+
+    // Exact brute force on the server side.
+    let mut correct_pred = 0;
+    for qi in 0..n_query {
+        let q = queries.row(qi);
+        let (mut best, mut best_i) = (f32::INFINITY, 0usize);
+        for ti in 0..n_train {
+            let d: f32 = q.iter().zip(train.row(ti)).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best {
+                best = d;
+                best_i = ti;
+            }
+        }
+        assert_eq!(acc[qi].1, best_i, "query {qi}: argmin mismatch");
+        assert!((acc[qi].0 - best).abs() < 1e-2 * best.max(1.0), "query {qi}: distance");
+        if train.labels[best_i] == queries.labels[qi] {
+            correct_pred += 1;
+        }
+    }
+    // The synthetic data is built to make kNN work: expect >80% accuracy.
+    assert!(correct_pred as f64 / n_query as f64 > 0.8, "kNN accuracy {correct_pred}/{n_query}");
+}
+
+/// Workers cache datasets: repeated tickets against the same chunks must
+/// not refetch them (the paper's browser-side cache + LRU GC).
+#[test]
+fn dataset_caching_across_tickets() {
+    let rt = runtime::open_shared().expect("artifacts");
+    let train = data::mnist_train(400, 3);
+    let queries = data::mnist_test(20, 4);
+    let fw = Framework::builder().build();
+    fw.datasets().register("q0", queries.rows_matrix(0, 20));
+    fw.datasets().register("c0", train.rows_matrix(0, 200));
+    fw.datasets().register("c1", train.rows_matrix(200, 200));
+    let def = KnnChunkTask::small();
+    let task = fw.create_task(Arc::new(KnnChunkTask::small()));
+    // 4 tickets over 2 chunks: each chunk used twice.
+    task.calculate(vec![
+        def.ticket("q0", "c0", 0),
+        def.ticket("q0", "c1", 200),
+        def.ticket("q0", "c0", 0),
+        def.ticket("q0", "c1", 200),
+    ]);
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    // Single worker so cache effects are deterministic.
+    let workers = spawn_workers(&fw, &connector, 1, &stop, Some(rt));
+    let _ = task.block();
+    stop.store(true, Ordering::SeqCst);
+    let report = workers.into_iter().next().unwrap().join().unwrap();
+    assert_eq!(report.tickets_completed, 4);
+    // 3 distinct datasets fetched once each; q0 cached across all 4.
+    assert_eq!(report.data_fetches, 3, "datasets should be cached");
+    assert_eq!(report.task_fetches, 1, "task code cached");
+    use std::sync::atomic::Ordering as O;
+    assert_eq!(dist.stats.data_requests.load(O::Relaxed), 3);
+}
+
+/// Tensor helper used by the kNN fold (module path sanity for docs).
+#[test]
+fn fold_helper_is_public() {
+    let mut acc = vec![(f32::INFINITY, 0usize)];
+    sashimi::runtime::tensor::fold_min_argmin(&mut acc, &[1.0], &[2.0], 10);
+    assert_eq!(acc[0], (1.0, 12));
+    let _ = Tensor::zeros(&[1]);
+}

@@ -1,0 +1,208 @@
+//! Fault tolerance (§2.1.2's claims): killed clients, slow clients, and
+//! error-reporting clients never lose tickets; redistribution recovers
+//! throughput.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sashimi::coordinator::{Distributor, Framework};
+use sashimi::store::StoreConfig;
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::transport::local::{self, FaultPlan};
+use sashimi::transport::{Conn, LinkModel};
+use sashimi::util::json::Value;
+use sashimi::worker::{DeviceProfile, Worker};
+
+fn prime_framework(n: usize, cfg: StoreConfig) -> (Arc<Framework>, sashimi::store::TaskId) {
+    let fw = Framework::builder().store_config(cfg).build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate((1..=n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64))])).collect());
+    let id = task.id;
+    (fw, id)
+}
+
+/// A worker whose connection dies mid-run: its in-flight ticket is
+/// redistributed (after the scaled timeout) and a healthy worker
+/// finishes the job. "If a web browser is terminated after it receives a
+/// ticket ... another client can execute the task."
+#[test]
+fn killed_client_tickets_are_redistributed() {
+    let cfg = StoreConfig { requeue_after_ms: 150, min_redistribute_ms: 50, requeue_on_error: true };
+    let (fw, task_id) = prime_framework(30, cfg);
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Flaky worker: every connection dies after 6 sends. It reconnects
+    // (up to its budget) and keeps dying — some tickets it received are
+    // stranded in flight each time.
+    let flaky = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("flaky", DeviceProfile::native(), registry);
+            w.run(
+                || {
+                    Ok(Box::new(
+                        connector.connect_with_fault(FaultPlan { die_after_sends: Some(6) })?,
+                    ) as Box<dyn Conn>)
+                },
+                &stop,
+            )
+        })
+    };
+
+    // Healthy worker finishes everything the flaky one drops.
+    let healthy = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("healthy", DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        })
+    };
+
+    let results = fw.store().wait_results_timeout(task_id, 30_000).expect("task must finish");
+    stop.store(true, Ordering::SeqCst);
+    let _ = flaky.join().unwrap();
+    let h = healthy.join().unwrap();
+    assert_eq!(results.len(), 30);
+    assert!(h.tickets_completed > 0);
+    // Every ticket produced a correct result despite the faults.
+    let primes = results.iter().filter(|r| r.get("is_prime").unwrap().as_bool().unwrap()).count();
+    assert_eq!(primes, 10); // π(30)
+}
+
+/// A deterministically-erroring ticket generates error reports but never
+/// blocks the rest of the queue (it cycles error -> requeue).
+struct AlwaysFails;
+impl sashimi::tasks::TaskDef for AlwaysFails {
+    fn name(&self) -> &str {
+        "always_fails"
+    }
+    fn execute(
+        &self,
+        input: &Value,
+        _: &mut dyn sashimi::tasks::TaskContext,
+    ) -> anyhow::Result<sashimi::tasks::TaskOutput> {
+        if input.get("bad")?.as_bool()? {
+            anyhow::bail!("synthetic failure");
+        }
+        Ok(sashimi::tasks::TaskOutput::new(Value::Bool(true)))
+    }
+}
+
+#[test]
+fn poisoned_ticket_does_not_block_good_ones() {
+    // requeue_on_error=false: the poisoned ticket waits out the timeout
+    // instead of ping-ponging, so good tickets drain first.
+    let cfg =
+        StoreConfig { requeue_after_ms: 400, min_redistribute_ms: 400, requeue_on_error: false };
+    let fw = Framework::builder().store_config(cfg).build();
+    let task = fw.create_task(Arc::new(AlwaysFails));
+    let mut payloads = vec![Value::obj(vec![("bad", Value::Bool(true))])];
+    payloads.extend((0..10).map(|_| Value::obj(vec![("bad", Value::Bool(false))])));
+    task.calculate(payloads);
+
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let registry = fw.registry_snapshot();
+    let connector2 = connector.clone();
+    let stop2 = Arc::clone(&stop);
+    let worker = std::thread::spawn(move || {
+        let mut w = Worker::new("w", DeviceProfile::native(), registry);
+        w.run(|| Ok(Box::new(connector2.connect()?) as Box<dyn Conn>), &stop2)
+    });
+
+    // The 10 good tickets complete even though the first keeps failing.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let p = task.progress();
+        if p.done == 10 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "good tickets stuck: {p:?}");
+        sashimi::util::clock::sleep_ms(20);
+    }
+    stop.store(true, Ordering::SeqCst);
+    let report = worker.join().unwrap();
+    assert!(report.errors_reported >= 1);
+    assert!(fw.store().errors().len() >= 1);
+    let p = task.progress();
+    assert_eq!(p.done, 10);
+    assert_eq!(p.total, 11);
+}
+
+/// A work unit with an explicit modelled cost, so device profiles bite
+/// even though the actual computation is trivial.
+struct FixedCostTask;
+impl sashimi::tasks::TaskDef for FixedCostTask {
+    fn name(&self) -> &str {
+        "fixed_cost"
+    }
+    fn execute(
+        &self,
+        _input: &Value,
+        _: &mut dyn sashimi::tasks::TaskContext,
+    ) -> anyhow::Result<sashimi::tasks::TaskOutput> {
+        Ok(sashimi::tasks::TaskOutput { value: Value::Bool(true), modelled_ms: Some(40.0) })
+    }
+}
+
+/// Straggler redistribution improves completion time: a very slow client
+/// holding the last tickets gets raced by a fast client via the
+/// min-redistribute fallback, and first-result-wins dedups.
+#[test]
+fn straggler_is_raced_by_redistribution() {
+    let cfg = StoreConfig { requeue_after_ms: 250, min_redistribute_ms: 30, requeue_on_error: true };
+    let fw = Framework::builder().store_config(cfg).build();
+    let task = fw.create_task(Arc::new(FixedCostTask));
+    task.calculate((0..12).map(|i| Value::num(i as f64)).collect());
+    let task_id = task.id;
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Very slow device: modelled 40 ms at 1/10 speed -> 400 ms/ticket;
+    // 12 tickets solo would take ~4.8 s.
+    let slow = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("slow", DeviceProfile::with_speed("glacial", 0.1), registry);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        })
+    };
+    // Give the slow worker a head start so it grabs early tickets.
+    sashimi::util::clock::sleep_ms(30);
+    let fast = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("fast", DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        })
+    };
+
+    let t0 = std::time::Instant::now();
+    let results = fw.store().wait_results_timeout(task_id, 30_000).expect("finishes");
+    let elapsed = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::SeqCst);
+    let _ = slow.join().unwrap();
+    let f = fast.join().unwrap();
+    assert_eq!(results.len(), 12);
+    // The fast client must have taken over redistributed tickets; without
+    // redistribution the slow client alone would need ~4.8 s.
+    assert!(f.tickets_completed >= 6, "fast did {}", f.tickets_completed);
+    assert!(elapsed < 4.0, "took {elapsed}s — redistribution failed");
+    let p = fw.store().progress(None);
+    assert!(p.redistributions > 0, "expected redistributions, got {p:?}");
+}

@@ -1,0 +1,160 @@
+//! Integration: the PJRT runtime executes real AOT artifacts and matches
+//! the Python-side golden checksums (cross-language numeric validation).
+//!
+//! Golden inputs are regenerated locally from the SplitMix64 seeds in
+//! artifacts/golden.json — bit-identical to what aot.py fed the jitted
+//! functions (see python/compile/prand.py).
+
+use std::sync::OnceLock;
+
+use sashimi::runtime::{default_artifacts_dir, Runtime, Tensor};
+use sashimi::util::json::Value;
+use sashimi::util::rng::golden_input;
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::open_default().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn smoke_matmul_exact_values() {
+    let rt = runtime();
+    let a = Tensor::filled(&[8, 16], 1.0);
+    let b = Tensor::filled(&[16, 4], 1.0);
+    let out = rt.exec("smoke_matmul", &[a, b]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[8, 4]);
+    // ones(8,16) @ ones(16,4) + 2 == 18 everywhere
+    assert!(out[0].data().iter().all(|&v| (v - 18.0).abs() < 1e-5));
+}
+
+#[test]
+fn input_shape_mismatch_is_an_error() {
+    let rt = runtime();
+    let a = Tensor::filled(&[8, 15], 1.0);
+    let b = Tensor::filled(&[16, 4], 1.0);
+    assert!(rt.exec("smoke_matmul", &[a, b]).is_err());
+}
+
+#[test]
+fn input_arity_mismatch_is_an_error() {
+    let rt = runtime();
+    let a = Tensor::filled(&[8, 16], 1.0);
+    assert!(rt.exec("smoke_matmul", &[a]).is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let rt = runtime();
+    let a = Tensor::filled(&[8, 16], 1.0);
+    let b = Tensor::filled(&[16, 4], 1.0);
+    rt.exec("smoke_matmul", &[a.clone(), b.clone()]).unwrap();
+    rt.exec("smoke_matmul", &[a, b]).unwrap();
+    let stats = rt.stats();
+    let row = stats.iter().find(|r| r.0 == "smoke_matmul").unwrap();
+    assert!(row.1 >= 2);
+}
+
+fn golden() -> Value {
+    let dir = default_artifacts_dir().unwrap();
+    let text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    Value::parse(&text).unwrap()
+}
+
+/// Execute `name` on inputs regenerated from the golden seeds; compare
+/// output checksums against the Python-recorded values.
+fn check_golden(name: &str) {
+    let rt = runtime();
+    let g = golden();
+    let entry = g.get(name).unwrap_or_else(|_| panic!("no golden for {name}"));
+    let seeds = entry.get("input_seeds").unwrap().as_arr().unwrap();
+    let sig = rt.manifest().artifact(name).unwrap().clone();
+    assert_eq!(seeds.len(), sig.inputs.len(), "{name}: seed/arity mismatch");
+    let inputs: Vec<Tensor> = seeds
+        .iter()
+        .zip(&sig.inputs)
+        .map(|(s, i)| {
+            Tensor::new(i.shape.clone(), golden_input(s.as_u64().unwrap(), i.numel())).unwrap()
+        })
+        .collect();
+    let outs = rt.exec(name, &inputs).unwrap();
+    let expected = entry.get("outputs").unwrap();
+    for (t, out_name) in outs.iter().zip(&sig.outputs) {
+        let e = expected.get(out_name).unwrap();
+        let (sum, abs) = t.checksum();
+        let esum = e.get("sum").unwrap().as_f64().unwrap();
+        let eabs = e.get("abs_sum").unwrap().as_f64().unwrap();
+        let elen = e.get("len").unwrap().as_usize().unwrap();
+        assert_eq!(t.len(), elen, "{name}/{out_name}: length");
+        let tol = 1e-3 * eabs.max(1.0);
+        assert!(
+            (sum - esum).abs() < tol,
+            "{name}/{out_name}: sum {sum} vs golden {esum} (tol {tol})"
+        );
+        assert!(
+            (abs - eabs).abs() < tol,
+            "{name}/{out_name}: abs_sum {abs} vs golden {eabs} (tol {tol})"
+        );
+        // First elements pinned tighter than the aggregate.
+        let first = e.get("first").unwrap().as_f32_vec().unwrap();
+        for (i, (got, want)) in t.data().iter().zip(&first).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                "{name}/{out_name}[{i}]: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_adagrad_update() {
+    check_golden("adagrad_update");
+}
+
+#[test]
+fn golden_knn_chunk_small() {
+    check_golden("knn_chunk_small");
+}
+
+#[test]
+fn golden_mnist_forward() {
+    check_golden("mnist_forward");
+}
+
+#[test]
+fn golden_mnist_fc_step() {
+    check_golden("mnist_fc_step");
+}
+
+#[test]
+fn golden_cifar_fc_step() {
+    check_golden("cifar_fc_step");
+}
+
+#[test]
+fn golden_mnist_conv_fwd() {
+    check_golden("mnist_conv_fwd");
+}
+
+/// The heavyweight artifacts; run with `SASHIMI_FULL_GOLDEN=1 cargo test`.
+#[test]
+fn golden_all_remaining() {
+    if std::env::var("SASHIMI_FULL_GOLDEN").is_err() {
+        return;
+    }
+    for name in [
+        "smoke_matmul",
+        "knn_chunk",
+        "mnist_train_step",
+        "mnist_grad",
+        "mnist_conv_grad",
+        "cifar_forward",
+        "cifar_train_step",
+        "cifar_train_step_jnp",
+        "cifar_grad",
+        "cifar_conv_fwd",
+        "cifar_conv_grad",
+    ] {
+        check_golden(name);
+    }
+}
