@@ -1,0 +1,20 @@
+# Build-time entry points.  The request path is pure Rust; Python only
+# runs here, to lower the L2 graphs into artifacts/ (DESIGN.md §1).
+
+ARTIFACTS := artifacts/manifest.json
+
+.PHONY: artifacts test bench fmt
+
+artifacts: $(ARTIFACTS)
+
+$(ARTIFACTS): python/compile/*.py python/compile/kernels/*.py
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt --check

@@ -410,4 +410,109 @@ mod tests {
         acceptor.join().unwrap();
         assert_eq!(dist.stats.connections.load(Ordering::Relaxed), 2);
     }
+
+    /// First result wins exactly once: a redistributed ticket answered by
+    /// two clients keeps the first value, counts the second as a
+    /// duplicate, and still Acks the slow client (it must not reload).
+    #[test]
+    fn duplicate_result_wins_once() {
+        let fw = Framework::builder()
+            .store_config(crate::store::StoreConfig {
+                requeue_after_ms: 0, // every in-flight ticket is immediately redistributable
+                min_redistribute_ms: 0,
+                requeue_on_error: true,
+            })
+            .build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(vec![Value::obj(vec![("candidate", Value::num(7.0))])]);
+        let task_id = task.id;
+        let dist = Distributor::new(&fw);
+
+        let mut clients = Vec::new();
+        let mut handlers = Vec::new();
+        for i in 0..2 {
+            let (mut c, s) = local::pair(LinkModel::FAST_LAN, false);
+            let d = Arc::clone(&dist);
+            handlers.push(std::thread::spawn(move || {
+                let _ = d.handle_conn(Box::new(s));
+            }));
+            c.send(&Message::Hello { client: format!("w{i}"), profile: "t".into() }).unwrap();
+            assert_eq!(c.recv().unwrap(), Message::Ack);
+            clients.push(c);
+        }
+        let mut tickets = Vec::new();
+        for c in clients.iter_mut() {
+            c.send(&Message::TicketRequest).unwrap();
+            match c.recv().unwrap() {
+                Message::Ticket { ticket, .. } => tickets.push(ticket),
+                m => panic!("expected ticket, got {m:?}"),
+            }
+        }
+        assert_eq!(tickets[0], tickets[1], "both clients race the same ticket");
+
+        clients[0]
+            .send(&Message::TicketResult { ticket: tickets[0], result: Value::num(1.0) })
+            .unwrap();
+        assert_eq!(clients[0].recv().unwrap(), Message::Ack);
+        clients[1]
+            .send(&Message::TicketResult { ticket: tickets[1], result: Value::num(2.0) })
+            .unwrap();
+        assert_eq!(clients[1].recv().unwrap(), Message::Ack, "duplicate still acked");
+
+        assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 1);
+        assert_eq!(dist.stats.results_duplicate.load(Ordering::Relaxed), 1);
+        let p = fw.store().progress(None);
+        assert_eq!(p.done, 1);
+        assert_eq!(p.duplicate_results, 1);
+        assert_eq!(p.redistributions, 1);
+        assert_eq!(fw.store().wait_results(task_id), vec![Value::num(1.0)]);
+        for mut c in clients {
+            c.send(&Message::Shutdown).unwrap();
+        }
+        for h in handlers {
+            h.join().unwrap();
+        }
+    }
+
+    /// Error-report accounting: the stat and store error counters move,
+    /// the ticket returns to the pending pool exactly once, and the
+    /// re-issued ticket carries the incremented distribution count.
+    #[test]
+    fn error_requeue_accounting() {
+        let (fw, _) = framework_with_tickets(1);
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || d.handle_conn(Box::new(server)).unwrap());
+        client.send(&Message::Hello { client: "w0".into(), profile: "t".into() }).unwrap();
+        client.recv().unwrap();
+        client.send(&Message::TicketRequest).unwrap();
+        let ticket = match client.recv().unwrap() {
+            Message::Ticket { ticket, .. } => ticket,
+            m => panic!("{m:?}"),
+        };
+        let before = fw.store().progress(None);
+        assert_eq!((before.pending, before.in_flight), (0, 1));
+
+        client
+            .send(&Message::ErrorReport { ticket, message: "boom".into(), stack: "s".into() })
+            .unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Reload);
+        assert_eq!(dist.stats.errors_reported.load(Ordering::Relaxed), 1);
+        let after = fw.store().progress(None);
+        assert_eq!((after.pending, after.in_flight, after.errors), (1, 0, 1));
+        assert_eq!(dist.clients()[0].errors, 1);
+
+        // The requeued ticket is served again with its history intact.
+        client.send(&Message::TicketRequest).unwrap();
+        match client.recv().unwrap() {
+            Message::Ticket { ticket: t2, .. } => assert_eq!(t2, ticket),
+            m => panic!("{m:?}"),
+        }
+        let p = fw.store().progress(None);
+        assert_eq!((p.pending, p.in_flight), (0, 1));
+        assert_eq!(p.redistributions, 1, "re-serving an errored ticket is a redistribution");
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+    }
 }

@@ -1,0 +1,265 @@
+//! A simulated training cluster: one in-process server (ticket store +
+//! distributor) and N worker threads replaying the §2.1.2 browser loop
+//! over [`transport::local`] links.
+//!
+//! The cluster owns everything the three trainers share — the dataset
+//! shards (registered as wire datasets so clients download and cache
+//! them exactly like the paper's browsers), the task registry with the
+//! §4 work units, and the worker fleet — so a trainer is just a server
+//! loop that publishes round datasets, submits tickets, and consumes
+//! completions from the store.
+//!
+//! [`transport::local`]: crate::transport::local
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::Distributor;
+use crate::data::Dataset;
+use crate::runtime::{NetSpec, SharedRuntime, Tensor};
+use crate::store::{StoreConfig, TaskId, TicketStore};
+use crate::tasks::train::{shard_x_key, shard_y_key, ConvFwdTask, ConvGradTask, GradTask};
+use crate::tasks::{DatasetStore, Registry};
+use crate::transport::local::{self, LocalConnector};
+use crate::transport::{Conn, LinkModel};
+use crate::util::clock;
+use crate::util::json::Value;
+use crate::worker::{DeviceProfile, Worker, WorkerReport};
+
+/// How to build a cluster.  All fields are public so benches can tweak
+/// one knob (Fig 5 sets `profile` and `n_shards`) without a builder.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Net name in the artifact manifest ("mnist" | "cifar").
+    pub net: String,
+    /// Number of worker (browser) nodes.
+    pub clients: usize,
+    /// Number of fixed mini-batch shards carved out of the dataset; each
+    /// shard is exactly one artifact batch (`spec.batch` samples).
+    pub n_shards: usize,
+    /// Device profile applied to every worker (server speed is a trainer
+    /// knob, [`crate::dist::hybrid::HybridConfig::server_speed`]).
+    pub profile: DeviceProfile,
+    /// Link model between workers and the server.
+    pub link: LinkModel,
+    /// Actually sleep for the modelled link cost (benches measuring wall
+    /// time) or only account bytes (tests).
+    pub sleep_on_link: bool,
+    /// Ticket-store redistribution policy for the run.
+    pub store: StoreConfig,
+}
+
+impl ClusterConfig {
+    /// Deterministic test shape: one shard per client, byte-accounted but
+    /// latency-free FAST_LAN links, and redistribution timeouts far
+    /// beyond the test horizon so every ticket is served exactly once
+    /// (making ticket/byte counts exact).
+    pub fn quick_test(net: &str, clients: usize) -> ClusterConfig {
+        ClusterConfig {
+            net: net.to_string(),
+            clients,
+            n_shards: clients.max(1),
+            profile: DeviceProfile::native(),
+            link: LinkModel::FAST_LAN,
+            sleep_on_link: false,
+            store: StoreConfig {
+                requeue_after_ms: 600_000,
+                min_redistribute_ms: 600_000,
+                requeue_on_error: true,
+            },
+        }
+    }
+}
+
+/// A running cluster: server-side state plus the worker fleet.  Create
+/// with [`Cluster::start`], drive it with one of the trainers, then
+/// [`Cluster::shutdown`] to collect the per-worker reports.
+pub struct Cluster {
+    pub rt: SharedRuntime,
+    pub spec: NetSpec,
+    pub cfg: ClusterConfig,
+    store: Arc<TicketStore>,
+    datasets: Arc<DatasetStore>,
+    distributor: Arc<Distributor>,
+    /// Kept alive so the acceptor only exits at shutdown.
+    connector: LocalConnector,
+    workers: Vec<JoinHandle<WorkerReport>>,
+    stop: Arc<AtomicBool>,
+    acceptor: JoinHandle<()>,
+    next_task: AtomicU64,
+}
+
+impl Cluster {
+    /// Spin up the server and `cfg.clients` worker threads, register the
+    /// §4 task definitions and the dataset shards, and start serving.
+    pub fn start(cfg: ClusterConfig, rt: SharedRuntime, dataset: &Dataset) -> Result<Cluster> {
+        let spec = rt.net(&cfg.net)?.clone();
+        ensure!(cfg.clients > 0, "cluster needs at least one client");
+        ensure!(cfg.n_shards > 0, "cluster needs at least one shard");
+        ensure!(
+            dataset.hw == spec.input_hw && dataset.channels == spec.input_c,
+            "dataset {}x{}x{} does not match net {} ({}x{}x{})",
+            dataset.hw,
+            dataset.hw,
+            dataset.channels,
+            spec.name,
+            spec.input_hw,
+            spec.input_hw,
+            spec.input_c
+        );
+        ensure!(
+            cfg.n_shards * spec.batch <= dataset.len(),
+            "{} shards of batch {} need {} samples, dataset has {}",
+            cfg.n_shards,
+            spec.batch,
+            cfg.n_shards * spec.batch,
+            dataset.len()
+        );
+
+        let conv_shapes: Vec<Vec<usize>> =
+            spec.conv_param_names().iter().map(|n| spec.param_shapes[n].clone()).collect();
+        let param_shapes: Vec<Vec<usize>> =
+            spec.param_names.iter().map(|n| spec.param_shapes[n].clone()).collect();
+
+        let mut registry = Registry::new();
+        registry.register(Arc::new(ConvFwdTask {
+            net: cfg.net.clone(),
+            conv_shapes: conv_shapes.clone(),
+        }));
+        registry.register(Arc::new(ConvGradTask { net: cfg.net.clone(), conv_shapes }));
+        registry.register(Arc::new(GradTask { net: cfg.net.clone(), param_shapes }));
+
+        // Fixed shards: shard s holds samples [s*batch, (s+1)*batch).
+        // Stable keys mean workers download each shard once and serve it
+        // from their LRU across all rounds (the paper's browser cache).
+        let datasets = Arc::new(DatasetStore::new());
+        for shard in 0..cfg.n_shards {
+            let idx: Vec<usize> = (shard * spec.batch..(shard + 1) * spec.batch).collect();
+            datasets.register(&shard_x_key(&cfg.net, shard), dataset.batch_images(&idx));
+            datasets.register(&shard_y_key(&cfg.net, shard), dataset.batch_onehot(&idx));
+        }
+
+        let store = Arc::new(TicketStore::new(cfg.store.clone()));
+        let distributor =
+            Distributor::from_parts(Arc::clone(&store), registry.clone(), Arc::clone(&datasets));
+        let (listener, connector) = local::endpoint(cfg.link, cfg.sleep_on_link);
+        let acceptor = distributor.serve(Box::new(listener));
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers = (0..cfg.clients)
+            .map(|i| {
+                let connector = connector.clone();
+                let registry = registry.clone();
+                let stop = Arc::clone(&stop);
+                let rt = Arc::clone(&rt);
+                let profile = cfg.profile.clone();
+                std::thread::spawn(move || {
+                    let mut w =
+                        Worker::new(&format!("client{i}"), profile, registry).with_runtime(rt);
+                    w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+                })
+            })
+            .collect();
+
+        Ok(Cluster {
+            rt,
+            spec,
+            cfg,
+            store,
+            datasets,
+            distributor,
+            connector,
+            workers,
+            stop,
+            acceptor,
+            next_task: AtomicU64::new(1),
+        })
+    }
+
+    pub fn store(&self) -> &Arc<TicketStore> {
+        &self.store
+    }
+
+    pub fn datasets(&self) -> &Arc<DatasetStore> {
+        &self.datasets
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.cfg.n_shards
+    }
+
+    /// Allocate a fresh task id (trainers stream tickets into it later).
+    pub fn alloc_task(&self) -> TaskId {
+        TaskId(self.next_task.fetch_add(1, Ordering::SeqCst))
+    }
+
+    /// Enqueue tickets under an already-allocated task id.
+    pub fn submit(&self, task: TaskId, task_name: &str, payloads: Vec<Value>) {
+        self.store.create_tickets(task, task_name, payloads, clock::now_ms());
+    }
+
+    /// Allocate-and-enqueue in one step.
+    pub fn new_task(&self, task_name: &str, payloads: Vec<Value>) -> TaskId {
+        let id = self.alloc_task();
+        self.submit(id, task_name, payloads);
+        id
+    }
+
+    /// The server-side copy of a shard's one-hot labels (the hybrid FC
+    /// step consumes these without touching the wire).
+    pub fn shard_y(&self, shard: usize) -> Result<Arc<Tensor>> {
+        self.datasets
+            .get(&shard_y_key(&self.cfg.net, shard))
+            .with_context(|| format!("shard {shard} labels not registered"))
+    }
+
+    /// Server-side wire counters so trainers can report traffic deltas:
+    /// (bytes sent to clients, bytes received from clients).
+    pub fn bytes(&self) -> (u64, u64) {
+        (
+            self.distributor.stats.bytes_sent.load(Ordering::Relaxed),
+            self.distributor.stats.bytes_received.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stop the fleet and the distributor; returns one report per worker
+    /// (in spawn order).
+    pub fn shutdown(self) -> Vec<WorkerReport> {
+        self.stop.store(true, Ordering::SeqCst);
+        let reports: Vec<WorkerReport> =
+            self.workers.into_iter().map(|h| h.join().unwrap_or_default()).collect();
+        self.distributor.stop();
+        // Dropping the last connector makes the listener's accept fail,
+        // which ends the acceptor loop.
+        drop(self.connector);
+        let _ = self.acceptor.join();
+        reports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_test_shape() {
+        let cfg = ClusterConfig::quick_test("mnist", 3);
+        assert_eq!(cfg.net, "mnist");
+        assert_eq!(cfg.clients, 3);
+        assert_eq!(cfg.n_shards, 3);
+        assert!(cfg.profile.speed.is_infinite());
+        assert!(!cfg.sleep_on_link);
+        // Redistribution must not fire within any test horizon, so
+        // ticket and byte counts are exact.
+        assert!(cfg.store.requeue_after_ms >= 600_000);
+        assert!(cfg.store.min_redistribute_ms >= 600_000);
+    }
+
+    #[test]
+    fn quick_test_never_zero_shards() {
+        assert_eq!(ClusterConfig::quick_test("cifar", 0).n_shards, 1);
+    }
+}

@@ -1,0 +1,128 @@
+//! Analytic communication model: floats moved per training round by the
+//! hybrid algorithm vs the data-parallel baselines.
+//!
+//! This is the quantitative form of the paper's §4 argument for training
+//! only the conv stack on clients: data-parallel SGD ships *every*
+//! parameter (and gradient) each round, which for the FC-dominated CNNs
+//! of 2015 (AlexNet: 58.6 M of 62.3 M parameters are FC) is hopeless on
+//! browser-grade links.  The hybrid algorithm ships conv parameters,
+//! boundary features and their cotangents instead, none of which grow
+//! with the FC block.
+//!
+//! The model's accounting matches what the live cluster actually moves
+//! (asserted by `tests/dist_training.rs::measured_bytes_match_comm_model`
+//! against the distributor's byte counters):
+//!
+//! * hybrid, per round: every worker downloads the fresh conv-parameter
+//!   blob (a round dataset), and every shard moves the boundary features
+//!   up, the boundary cotangent down, and the conv gradients up;
+//! * MLitB / he-sync, per round: every worker downloads the full
+//!   parameter blob and every shard uploads a full gradient.  The two
+//!   baselines move the same bytes — they differ in *when* (barriers),
+//!   not in *what*.
+
+use crate::runtime::NetSpec;
+
+/// Per-model float counts the communication model needs.  Constructed
+/// from a manifest [`NetSpec`] via [`CommModel::of`], or literally for
+/// hypothetical scales (the ablations build AlexNet/VGG-16 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommModel {
+    /// Parameters in the conv stack (weights + biases).
+    pub conv_params: usize,
+    /// Parameters in the FC block.
+    pub fc_params: usize,
+    /// Floats at the conv/FC boundary for one mini-batch:
+    /// `batch * fc_in` (what one ConvFwd result / dfeat payload carries).
+    pub boundary: usize,
+}
+
+impl CommModel {
+    pub fn of(spec: &NetSpec) -> CommModel {
+        let conv_params: usize = spec
+            .conv_param_names()
+            .iter()
+            .map(|n| spec.param_shapes[n].iter().product::<usize>())
+            .sum();
+        CommModel {
+            conv_params,
+            fc_params: spec.param_count() - conv_params,
+            boundary: spec.batch * spec.fc_in,
+        }
+    }
+
+    /// Floats per round moved by the hybrid algorithm with `workers`
+    /// clients and `shards` mini-batch shards (both directions).
+    pub fn hybrid_floats(&self, workers: usize, shards: usize) -> usize {
+        workers * self.conv_params + shards * (2 * self.boundary + self.conv_params)
+    }
+
+    /// Floats per round moved by MLitB-style data-parallel averaging:
+    /// full parameters down per worker, full gradients up per shard.
+    pub fn mlitb_floats(&self, workers: usize, shards: usize) -> usize {
+        (workers + shards) * (self.conv_params + self.fc_params)
+    }
+
+    /// Floats per round moved by synchronous-exchange SGD.  Identical to
+    /// MLitB's volume; the barrier changes latency, not bytes.
+    pub fn he_sync_floats(&self, workers: usize, shards: usize) -> usize {
+        self.mlitb_floats(workers, shards)
+    }
+
+    /// Does the hybrid algorithm move fewer floats per round?  True in
+    /// the FC-dominated regime the paper targets; false when the
+    /// boundary dominates (small Fig-2-scale models).
+    pub fn hybrid_wins(&self, workers: usize, shards: usize) -> bool {
+        self.hybrid_floats(workers, shards) < self.mlitb_floats(workers, shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::params::test_support::tiny_net;
+
+    /// The published AlexNet split the ablations also use.
+    fn alexnet() -> CommModel {
+        CommModel { conv_params: 3_700_000, fc_params: 58_600_000, boundary: 50 * 9216 }
+    }
+
+    #[test]
+    fn of_extracts_spec_counts() {
+        let m = CommModel::of(&tiny_net());
+        // conv1_w 25*4 + conv1_b 4 = 104; fc_w 64*3 + fc_b 3 = 195.
+        assert_eq!(m.conv_params, 104);
+        assert_eq!(m.fc_params, 195);
+        assert_eq!(m.boundary, 2 * 64);
+    }
+
+    /// The paper's claim, pinned at AlexNet scale: hybrid moves an order
+    /// of magnitude fewer floats per round than either data-parallel
+    /// baseline (and therefore than he_sync in particular).
+    #[test]
+    fn hybrid_beats_he_sync_on_fc_dominated_models() {
+        let m = alexnet();
+        let (w, s) = (4, 4);
+        assert!(m.hybrid_wins(w, s));
+        assert!(m.hybrid_floats(w, s) < m.he_sync_floats(w, s) / 10);
+        // he_sync and mlitb move the same volume by construction.
+        assert_eq!(m.he_sync_floats(w, s), m.mlitb_floats(w, s));
+    }
+
+    /// On boundary-dominated models (tiny/Fig-2 scale) the advantage
+    /// flips — the regime `tests/dist_training.rs` measures on the wire.
+    #[test]
+    fn boundary_dominated_models_favor_mlitb() {
+        let m = CommModel::of(&tiny_net());
+        assert!(!m.hybrid_wins(2, 2));
+        assert!(m.hybrid_floats(2, 2) > m.mlitb_floats(2, 2));
+    }
+
+    #[test]
+    fn float_counts_scale_with_fleet() {
+        let m = alexnet();
+        assert!(m.hybrid_floats(2, 4) < m.hybrid_floats(4, 4));
+        assert!(m.hybrid_floats(4, 2) < m.hybrid_floats(4, 4));
+        assert!(m.mlitb_floats(2, 2) < m.mlitb_floats(4, 2));
+    }
+}

@@ -1,0 +1,122 @@
+//! Shared driver for the two data-parallel baselines.
+//!
+//! [`mlitb`](crate::dist::mlitb) and [`he_sync`](crate::dist::he_sync)
+//! run the *same* workload — full parameters out as a round dataset,
+//! one `grad_all` ticket per shard, full gradients back — and differ
+//! only in *when* the update is applied ([`Apply`]).  Keeping one driver
+//! guarantees the byte volumes stay identical (the property
+//! `CommModel::he_sync_floats == mlitb_floats` encodes) and that fixes
+//! land in both.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::dist::mlitb::all_params_key;
+use crate::dist::{aggregate_gradients, Cluster, DistStats, TrainResult};
+use crate::nn::adagrad;
+use crate::nn::metrics::Curve;
+use crate::nn::params::ParamSet;
+use crate::tasks::tensor_from_json;
+use crate::tasks::train::{pack_params, shard_x_key, shard_y_key, unflatten, GradTask};
+use crate::util::rng::SplitMix64;
+
+/// When gradients hit the parameters.
+pub(crate) enum Apply {
+    /// MLitB: each shard's gradient updates the model as it arrives.
+    PerArrival,
+    /// he-sync: barrier, then one update from the sample-weighted mean.
+    Barrier,
+}
+
+pub(crate) fn train(
+    cluster: &Cluster,
+    rounds: u64,
+    seed: u64,
+    apply: Apply,
+    algorithm: &str,
+) -> Result<TrainResult> {
+    let spec = &cluster.spec;
+    let net = cluster.cfg.net.clone();
+    let shards = cluster.n_shards();
+    let shapes: Vec<Vec<usize>> =
+        spec.param_names.iter().map(|n| spec.param_shapes[n].clone()).collect();
+
+    let mut rng = SplitMix64::new(seed);
+    let mut params = ParamSet::init(spec, &mut rng);
+    let mut accums = ParamSet::zeros(spec);
+
+    let bytes0 = cluster.bytes();
+    let t0 = Instant::now();
+    let mut curve = Curve::default();
+    let (mut conv_batches, mut fc_steps) = (0u64, 0u64);
+    let mut mean_loss_last_round = f64::NAN;
+
+    for round in 0..rounds {
+        let pkey = all_params_key(&net, round);
+        cluster.datasets().register(&pkey, pack_params(&params.ordered()));
+        let task = cluster.new_task(
+            "grad_all",
+            (0..shards)
+                .map(|s| GradTask::ticket(&pkey, &shard_x_key(&net, s), &shard_y_key(&net, s), s))
+                .collect(),
+        );
+
+        let mut seen = 0usize;
+        let mut parts: Vec<(f32, ParamSet)> = Vec::with_capacity(shards);
+        let mut round_losses: Vec<f64> = Vec::new();
+        while seen < shards {
+            let Some((_, v)) = cluster.store().next_completion(task, 20) else {
+                continue;
+            };
+            let blob = tensor_from_json(v.get("grads")?)?;
+            let tensors = unflatten(&blob, &shapes)?;
+            let g = ParamSet::from_pairs(spec.param_names.iter().cloned().zip(tensors).collect());
+            match apply {
+                Apply::PerArrival => {
+                    adagrad::update_set(&mut params, &mut accums, &g, spec.lr, spec.beta)?;
+                    fc_steps += 1;
+                }
+                Apply::Barrier => parts.push((spec.batch as f32, g)),
+            }
+            round_losses.push(v.get("loss")?.as_f64()?);
+            conv_batches += 1;
+            seen += 1;
+        }
+        if let Apply::Barrier = apply {
+            let agg = aggregate_gradients(&parts)?;
+            adagrad::update_set(&mut params, &mut accums, &agg, spec.lr, spec.beta)?;
+            fc_steps += 1;
+        }
+
+        // Evict the previous round's parameter blob: its tickets are all
+        // done one full round ago, so even a redistributed straggler has
+        // fetched it by now (one-round lag keeps memory bounded without
+        // racing slow clients).
+        if round > 0 {
+            cluster.datasets().remove(&all_params_key(&net, round - 1));
+        }
+
+        let mean = round_losses.iter().sum::<f64>() / round_losses.len().max(1) as f64;
+        mean_loss_last_round = mean;
+        curve.push(round, t0.elapsed().as_secs_f64() * 1e3, mean);
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let bytes1 = cluster.bytes();
+    Ok(TrainResult {
+        conv_batches,
+        fc_steps,
+        replay_steps: 0,
+        loss_curve: curve,
+        params,
+        stats: DistStats {
+            algorithm: algorithm.to_string(),
+            clients: cluster.cfg.clients,
+            conv_batches_per_s: conv_batches as f64 / elapsed,
+            fc_steps_per_s: fc_steps as f64 / elapsed,
+            mean_loss_last_round,
+            bytes: (bytes1.0 - bytes0.0, bytes1.1 - bytes0.1),
+        },
+    })
+}

@@ -1,0 +1,27 @@
+//! Synchronous-exchange SGD baseline (the scheme Hidaka et al. refine in
+//! DistML.js): same work units and wire volume as [`crate::dist::mlitb`],
+//! but with a strict barrier — the server waits for *every* shard's
+//! full-network gradient, applies their sample-weighted mean as one
+//! update, then starts the next round.  Both baselines share the
+//! [`super::data_parallel`] driver; this one selects barrier application.
+//!
+//! The barrier is the point: bytes match MLitB exactly
+//! ([`crate::dist::CommModel::he_sync_floats`]), so any throughput gap
+//! against the hybrid algorithm is attributable to synchronisation and
+//! gradient volume, not to a different workload.
+
+use anyhow::Result;
+
+use crate::dist::data_parallel::{self, Apply};
+use crate::dist::{Cluster, TrainResult};
+
+#[derive(Debug, Clone)]
+pub struct HeSyncConfig {
+    pub rounds: u64,
+    pub seed: u64,
+}
+
+/// Run the synchronous baseline on a live cluster.
+pub fn train(cluster: &Cluster, cfg: &HeSyncConfig) -> Result<TrainResult> {
+    data_parallel::train(cluster, cfg.rounds, cfg.seed, Apply::Barrier, "he_sync")
+}

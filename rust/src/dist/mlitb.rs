@@ -1,0 +1,48 @@
+//! MLitB-style data-parallel baseline (Meeds et al., 2014).
+//!
+//! Each round the server publishes the *full* parameter set as a round
+//! dataset, hands every shard a `grad_all` ticket, and applies each
+//! client's full-network gradient as it arrives (MLitB's clients update
+//! against the freshest available model rather than waiting on a
+//! barrier; the strict-barrier variant is [`crate::dist::he_sync`], and
+//! both run through the shared [`super::data_parallel`] driver).
+//!
+//! This is the comparison target for the paper's byte argument: every
+//! round moves `(workers + shards) * |θ|` floats (see
+//! [`crate::dist::CommModel::mlitb_floats`]), which the FC block
+//! dominates at AlexNet scale.
+
+use anyhow::Result;
+
+use crate::dist::data_parallel::{self, Apply};
+use crate::dist::{Cluster, TrainResult};
+
+#[derive(Debug, Clone)]
+pub struct MlitbConfig {
+    pub rounds: u64,
+    pub seed: u64,
+}
+
+/// Round-dataset key for the full parameter blob.
+pub fn all_params_key(net: &str, round: u64) -> String {
+    format!("{net}_allp_r{round}")
+}
+
+/// Run the MLitB-style baseline on a live cluster.
+pub fn train(cluster: &Cluster, cfg: &MlitbConfig) -> Result<TrainResult> {
+    data_parallel::train(cluster, cfg.rounds, cfg.seed, Apply::PerArrival, "mlitb")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_keys_are_distinct_per_round_and_net() {
+        assert_eq!(all_params_key("mnist", 3), "mnist_allp_r3");
+        assert_ne!(all_params_key("mnist", 1), all_params_key("mnist", 2));
+        assert_ne!(all_params_key("mnist", 1), all_params_key("cifar", 1));
+        // Never collides with the hybrid's conv-only round keys.
+        assert_ne!(all_params_key("mnist", 1), crate::tasks::train::params_key("mnist", 1));
+    }
+}

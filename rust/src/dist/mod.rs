@@ -1,0 +1,154 @@
+//! The distributed deep-learning algorithms of the paper's §4, plus the
+//! two baselines they are measured against.
+//!
+//! Everything here drives the *same* coordination substrate the rest of
+//! Sashimi uses — the [`crate::store`] ticket store with virtual-created-
+//! time redistribution, the [`crate::coordinator::Distributor`] protocol,
+//! and real [`crate::worker::Worker`] browser loops over
+//! [`crate::transport::local`] links — so the fault-tolerance semantics
+//! of §2.1.2 carry over to training unchanged (a killed client's conv
+//! batch is redistributed like any other ticket).
+//!
+//! Paper → module map (see `DESIGN.md` §4 for the full discussion):
+//!
+//! | Piece                                        | Here                |
+//! |----------------------------------------------|---------------------|
+//! | simulated cluster (server + N browser nodes) | [`cluster::Cluster`]|
+//! | §4 hybrid algorithm (conv on clients, FC on the server, concurrent) | [`hybrid`] |
+//! | MLitB-style data-parallel averaging (Meeds et al., 2014)            | [`mlitb`]  |
+//! | synchronous-exchange SGD (Hidaka et al.'s DistML.js lineage)        | [`he_sync`] |
+//! | analytic bytes-per-round model               | [`comm::CommModel`] |
+//! | weighted gradient averaging                  | [`aggregate_gradients`] |
+//!
+//! The three trainers share one result shape ([`TrainResult`]) so the
+//! Fig 5 bench and the ablations compare like with like.
+
+pub mod cluster;
+pub mod comm;
+mod data_parallel;
+pub mod he_sync;
+pub mod hybrid;
+pub mod mlitb;
+
+pub use cluster::{Cluster, ClusterConfig};
+pub use comm::CommModel;
+
+use anyhow::{ensure, Result};
+
+use crate::nn::metrics::Curve;
+use crate::nn::params::ParamSet;
+
+/// Throughput / traffic summary of one distributed training run, shared
+/// by all three algorithms (printed by `sashimi hybrid|mlitb|hesync` and
+/// the Fig 5 bench).
+#[derive(Debug, Clone)]
+pub struct DistStats {
+    /// Which trainer produced this ("hybrid", "mlitb", "he_sync").
+    pub algorithm: String,
+    /// Number of worker nodes in the cluster.
+    pub clients: usize,
+    /// Conv-stack mini-batches per wall-clock second across the fleet.
+    pub conv_batches_per_s: f64,
+    /// Server-side FC update steps per wall-clock second (hybrid trains
+    /// the FC block concurrently; the baselines count their aggregated
+    /// server updates here).
+    pub fc_steps_per_s: f64,
+    /// Mean training loss observed during the final round.
+    pub mean_loss_last_round: f64,
+    /// Wire traffic during the run, server side: (sent, received) bytes.
+    pub bytes: (u64, u64),
+}
+
+/// What a trainer returns: counters, the loss curve (one point per
+/// round) and the run summary.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    /// Conv mini-batches processed by clients (hybrid) or full-gradient
+    /// batches (baselines): `rounds * n_shards`.
+    pub conv_batches: u64,
+    /// Server-side FC/aggregate update steps, *including* replay steps.
+    pub fc_steps: u64,
+    /// Hybrid only: FC steps taken on cached feature batches while
+    /// waiting for clients ("bounded replay", §4).  Zero for baselines.
+    pub replay_steps: u64,
+    /// (round, wall ms, mean loss) per round.
+    pub loss_curve: Curve,
+    /// Final model parameters after the last round (the hybrid trainer
+    /// folds the server-trained FC block back into the full set).
+    pub params: ParamSet,
+    pub stats: DistStats,
+}
+
+/// Weighted mean of gradient sets: `Σ wᵢ gᵢ / Σ wᵢ`.
+///
+/// The paper weights each client's contribution by the number of samples
+/// in its shard, so a straggler that processed a half-filled shard does
+/// not drag the average (ablation 4 quantifies the bias of the plain
+/// client mean).  All sets must share names and shapes.
+pub fn aggregate_gradients(parts: &[(f32, ParamSet)]) -> Result<ParamSet> {
+    ensure!(!parts.is_empty(), "aggregate_gradients: no gradients");
+    let total: f32 = parts.iter().map(|(w, _)| *w).sum();
+    ensure!(
+        total > 0.0 && parts.iter().all(|(w, _)| *w >= 0.0),
+        "aggregate_gradients: weights must be non-negative with positive sum (got total {total})"
+    );
+    let mut acc = parts[0].1.clone();
+    acc.scale(parts[0].0 / total);
+    for (w, g) in &parts[1..] {
+        acc.axpy(w / total, g)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::params::test_support::tiny_net;
+    use crate::runtime::Tensor;
+    use crate::util::rng::SplitMix64;
+
+    fn grad(seed: u64) -> ParamSet {
+        let net = tiny_net();
+        let mut rng = SplitMix64::new(seed);
+        let mut g = ParamSet::zeros(&net);
+        for name in ["conv1_w", "conv1_b", "fc_w", "fc_b"] {
+            let shape = g.get(name).unwrap().shape().to_vec();
+            g.set(name, Tensor::uniform(&shape, &mut rng, 1.0)).unwrap();
+        }
+        g
+    }
+
+    #[test]
+    fn weighted_mean_matches_closed_form() {
+        let (a, b) = (grad(1), grad(2));
+        let out = aggregate_gradients(&[(3.0, a.clone()), (1.0, b.clone())]).unwrap();
+        for name in ["conv1_w", "fc_b"] {
+            let oa = a.get(name).unwrap().data();
+            let ob = b.get(name).unwrap().data();
+            for (i, v) in out.get(name).unwrap().data().iter().enumerate() {
+                let want = (3.0 * oa[i] + 1.0 * ob[i]) / 4.0;
+                assert!((v - want).abs() < 1e-6, "{name}[{i}]: {v} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_bad_weights() {
+        assert!(aggregate_gradients(&[]).is_err());
+        assert!(aggregate_gradients(&[(0.0, grad(1))]).is_err());
+        assert!(aggregate_gradients(&[(-1.0, grad(1)), (2.0, grad(2))]).is_err());
+    }
+
+    #[test]
+    fn single_part_is_identity() {
+        let g = grad(7);
+        let out = aggregate_gradients(&[(5.0, g.clone())]).unwrap();
+        for name in g.names() {
+            let a = g.get(name).unwrap().data();
+            let b = out.get(name).unwrap().data();
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -137,6 +137,14 @@ impl DatasetStore {
         Ok(enc)
     }
 
+    /// Drop a dataset and its cached wire encoding.  The dist trainers
+    /// evict round-parameter blobs once their round is complete so long
+    /// runs don't accumulate one |θ| copy (plus its base64) per round.
+    pub fn remove(&self, key: &str) {
+        self.tensors.lock().unwrap().remove(key);
+        self.encoded.lock().unwrap().remove(key);
+    }
+
     pub fn keys(&self) -> Vec<String> {
         self.tensors.lock().unwrap().keys().cloned().collect()
     }
@@ -209,6 +217,18 @@ mod tests {
         // Cache hit returns the same Arc.
         assert!(Arc::ptr_eq(&enc, &ds.encoded("m").unwrap()));
         assert!(ds.get("x").is_err());
+    }
+
+    #[test]
+    fn dataset_store_remove_evicts_tensor_and_encoding() {
+        let ds = DatasetStore::new();
+        ds.register("r0", Tensor::new(vec![1], vec![3.0]).unwrap());
+        let _ = ds.encoded("r0").unwrap();
+        ds.remove("r0");
+        assert!(ds.get("r0").is_err());
+        assert!(ds.encoded("r0").is_err());
+        ds.remove("never-registered"); // idempotent
+        assert!(ds.keys().is_empty());
     }
 
     #[test]

@@ -130,4 +130,59 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(client.recv().is_err());
     }
+
+    /// Newline framing must survive arbitrary TCP segmentation: two
+    /// messages written in 3-byte chunks (chunks straddle the frame
+    /// boundary, so this also covers coalesced frames) arrive as exactly
+    /// two intact messages.
+    #[test]
+    fn framing_survives_partial_writes() {
+        use std::io::Write as _;
+
+        let mut listener = TcpListenerWrap::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr.clone();
+        let h = std::thread::spawn(move || {
+            let mut server = listener.accept().unwrap();
+            (server.recv().unwrap(), server.recv().unwrap())
+        });
+
+        let first = Message::Data { key: "k".into(), shape: vec![2, 2], b64: "QUJDRA==".into() };
+        let mut bytes = first.encode().into_bytes();
+        bytes.push(b'\n');
+        bytes.extend_from_slice(Message::TicketRequest.encode().as_bytes());
+        bytes.push(b'\n');
+
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        raw.set_nodelay(true).unwrap();
+        for chunk in bytes.chunks(3) {
+            raw.write_all(chunk).unwrap();
+            raw.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        let (a, b) = h.join().unwrap();
+        assert_eq!(a, first);
+        assert_eq!(b, Message::TicketRequest);
+    }
+
+    /// A connection dropped mid-frame yields an error, never a truncated
+    /// message; a non-protocol line is a decode error, not a hang.
+    #[test]
+    fn connection_drop_mid_frame_is_error() {
+        use std::io::Write as _;
+
+        let mut listener = TcpListenerWrap::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr.clone();
+        let h = std::thread::spawn(move || {
+            let mut server = listener.accept().unwrap();
+            (server.recv(), server.recv())
+        });
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        raw.write_all(b"not a protocol line\n").unwrap();
+        raw.write_all(br#"{"t":"ack""#).unwrap(); // no terminating newline
+        raw.flush().unwrap();
+        drop(raw);
+        let (garbage, truncated) = h.join().unwrap();
+        assert!(garbage.is_err(), "garbage line must not decode");
+        assert!(truncated.is_err(), "half frame must not be delivered");
+    }
 }

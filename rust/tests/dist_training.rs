@@ -8,15 +8,17 @@ use sashimi::nn::{metrics, NativeEngine, ParamSet, TrainEngine, XlaEngine};
 use sashimi::runtime;
 use sashimi::util::rng::SplitMix64;
 
-fn rt() -> runtime::SharedRuntime {
-    runtime::open_shared().expect("run `make artifacts` first")
+/// Every test early-returns with a skip message when the AOT artifacts /
+/// XLA bindings are unavailable; run `make artifacts` to enable them.
+fn rt() -> Option<runtime::SharedRuntime> {
+    runtime::open_shared_or_skip()
 }
 
 /// Both engines from the same init on the same batch: first-step loss
 /// and parameter movement must agree (ConvNetJS vs Sukiyaki fidelity).
 #[test]
 fn engines_agree_on_first_steps() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let spec = rt.net("mnist").unwrap().clone();
     let mut rng = SplitMix64::new(99);
     let init = ParamSet::init(&spec, &mut rng);
@@ -49,7 +51,7 @@ fn engines_agree_on_first_steps() {
 /// Both engines' forward probabilities agree on the same params.
 #[test]
 fn engine_forward_agreement() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let spec = rt.net("mnist").unwrap().clone();
     let mut rng = SplitMix64::new(3);
     let init = ParamSet::init(&spec, &mut rng);
@@ -68,8 +70,9 @@ fn engine_forward_agreement() {
 /// than conv (the concurrency the paper claims), bytes are accounted.
 #[test]
 fn hybrid_trains_and_loss_falls() {
+    let Some(rt) = rt() else { return };
     let dataset = data::mnist_train(600, 21);
-    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt(), &dataset).unwrap();
+    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt, &dataset).unwrap();
     let cfg = dist::hybrid::HybridConfig { rounds: 6, seed: 42, max_replay_per_round: 8, poll_ms: 2, ..Default::default() };
     let result = dist::hybrid::train(&cluster, &cfg).unwrap();
     let reports = cluster.shutdown();
@@ -87,8 +90,9 @@ fn hybrid_trains_and_loss_falls() {
 /// MLitB baseline trains too (correctness of the comparison target).
 #[test]
 fn mlitb_trains_and_loss_falls() {
+    let Some(rt) = rt() else { return };
     let dataset = data::mnist_train(600, 22);
-    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt(), &dataset).unwrap();
+    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt, &dataset).unwrap();
     let cfg = dist::mlitb::MlitbConfig { rounds: 8, seed: 42 };
     let result = dist::mlitb::train(&cluster, &cfg).unwrap();
     cluster.shutdown();
@@ -100,8 +104,9 @@ fn mlitb_trains_and_loss_falls() {
 /// He-sync baseline: same work, strict barriers.
 #[test]
 fn he_sync_trains_and_loss_falls() {
+    let Some(rt) = rt() else { return };
     let dataset = data::mnist_train(600, 23);
-    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt(), &dataset).unwrap();
+    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt, &dataset).unwrap();
     let cfg = dist::he_sync::HeSyncConfig { rounds: 6, seed: 42 };
     let result = dist::he_sync::train(&cluster, &cfg).unwrap();
     cluster.shutdown();
@@ -120,10 +125,11 @@ fn he_sync_trains_and_loss_falls() {
 /// is real and the model predicts the measured ratio.
 #[test]
 fn measured_bytes_match_comm_model() {
+    let Some(rt) = rt() else { return };
     let dataset = data::mnist_train(600, 24);
     let rounds = 3u64;
 
-    let c1 = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt(), &dataset).unwrap();
+    let c1 = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt.clone(), &dataset).unwrap();
     let model = dist::CommModel::of(&c1.spec);
     let h = dist::hybrid::train(
         &c1,
@@ -132,7 +138,7 @@ fn measured_bytes_match_comm_model() {
     .unwrap();
     c1.shutdown();
 
-    let c2 = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt(), &dataset).unwrap();
+    let c2 = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt, &dataset).unwrap();
     let m = dist::mlitb::train(&c2, &dist::mlitb::MlitbConfig { rounds, seed: 7 }).unwrap();
     c2.shutdown();
 
@@ -164,26 +170,22 @@ fn measured_bytes_match_comm_model() {
 /// the loop with an error-rate evaluation through the forward artifact.
 #[test]
 fn hybrid_model_classifies_above_chance() {
+    let Some(rt) = rt() else { return };
     let dataset = data::mnist_train(600, 25);
-    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt(), &dataset).unwrap();
+    let cluster = Cluster::start(ClusterConfig::quick_test("mnist", 2), rt, &dataset).unwrap();
     let cfg =
         dist::hybrid::HybridConfig { rounds: 10, seed: 5, max_replay_per_round: 4, poll_ms: 2, ..Default::default() };
-    let _ = dist::hybrid::train(&cluster, &cfg).unwrap();
+    let result = dist::hybrid::train(&cluster, &cfg).unwrap();
 
-    // Rebuild the final params: hybrid::train keeps them internal, so
-    // re-run a short training and evaluate via the standalone engine to
-    // keep this test focused on the *pipeline* learning signal.
+    // Evaluate the hybrid-trained parameters themselves through the
+    // forward artifact: the distributed pipeline (not a standalone
+    // re-train) must produce a model that beats chance.
     let rt2 = cluster.rt.clone();
     let spec = cluster.spec.clone();
     cluster.shutdown();
 
-    let mut rng = SplitMix64::new(5);
-    let mut engine = XlaEngine::new(rt2, "mnist", &mut rng).unwrap();
+    let engine = XlaEngine::from_params(rt2, "mnist", result.params).unwrap();
     let mut loader = data::loader::BatchLoader::new(&dataset, spec.batch, 9);
-    for _ in 0..10 {
-        let (x, y, _) = loader.next_batch();
-        engine.train_batch(&x, &y).unwrap();
-    }
     let (x, _, labels) = loader.next_batch();
     let probs = engine.forward(&x).unwrap();
     let err = metrics::error_rate(&probs, &labels);

@@ -236,6 +236,142 @@ fn percentile_properties() {
     });
 }
 
+/// dist::aggregate_gradients is a weighted mean: permutation-invariant,
+/// scale-invariant in the weights, and equal to the plain mean under
+/// equal weights.
+#[test]
+fn aggregate_gradients_weighted_mean_properties() {
+    use sashimi::dist::aggregate_gradients;
+    use sashimi::nn::ParamSet;
+    use sashimi::runtime::Tensor;
+
+    fn close(a: &ParamSet, b: &ParamSet, tol: f32) -> Result<(), String> {
+        for name in a.names() {
+            let (x, y) = (a.get(name).unwrap(), b.get(name).unwrap());
+            for (i, (p, q)) in x.data().iter().zip(y.data()).enumerate() {
+                if (p - q).abs() > tol {
+                    return Err(format!("{name}[{i}]: {p} vs {q}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    check("aggregate-weighted-mean", 60, |rng| {
+        let n_tensors = 1 + rng.gen_range(3) as usize;
+        let shapes: Vec<Vec<usize>> = (0..n_tensors)
+            .map(|_| vec![1 + rng.gen_range(4) as usize, 1 + rng.gen_range(4) as usize])
+            .collect();
+        let n_parts = 1 + rng.gen_range(4) as usize;
+        let mut parts: Vec<(f32, ParamSet)> = Vec::new();
+        for _ in 0..n_parts {
+            let pairs: Vec<(String, Tensor)> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (format!("p{i}"), Tensor::uniform(s, rng, 2.0)))
+                .collect();
+            parts.push((0.25 + rng.uniform_f32(0.0, 4.0), ParamSet::from_pairs(pairs)));
+        }
+        let base = aggregate_gradients(&parts).map_err(|e| e.to_string())?;
+
+        // Permutation invariance (rotation by a random offset).
+        let mut rotated = parts.clone();
+        rotated.rotate_left(rng.gen_range(n_parts as u64) as usize);
+        close(&base, &aggregate_gradients(&rotated).map_err(|e| e.to_string())?, 1e-4)?;
+
+        // Total-weight normalization: rescaling every weight is a no-op.
+        let scaled: Vec<_> = parts.iter().map(|(w, g)| (w * 7.5, g.clone())).collect();
+        close(&base, &aggregate_gradients(&scaled).map_err(|e| e.to_string())?, 1e-4)?;
+
+        // Equal weights reduce to the plain mean.
+        let equal: Vec<_> = parts.iter().map(|(_, g)| (1.0f32, g.clone())).collect();
+        let mean = aggregate_gradients(&equal).map_err(|e| e.to_string())?;
+        for i in 0..n_tensors {
+            let name = format!("p{i}");
+            let got = mean.get(&name).map_err(|e| e.to_string())?;
+            for (j, v) in got.data().iter().enumerate() {
+                let want = parts
+                    .iter()
+                    .map(|(_, g)| g.get(&name).unwrap().data()[j])
+                    .sum::<f32>()
+                    / n_parts as f32;
+                prop_assert!((v - want).abs() < 1e-4, "plain mean {name}[{j}]: {v} vs {want}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// dist::CommModel: per-round floats are monotone in the fleet size and
+/// in the model dimensions each algorithm actually ships; the hybrid
+/// count is independent of the FC block (the paper's whole point).
+#[test]
+fn comm_model_monotonicity_properties() {
+    use sashimi::dist::CommModel;
+
+    check("comm-model-monotone", 100, |rng| {
+        let m = CommModel {
+            conv_params: 1 + rng.gen_range(1_000_000) as usize,
+            fc_params: 1 + rng.gen_range(10_000_000) as usize,
+            boundary: 1 + rng.gen_range(1_000_000) as usize,
+        };
+        let w = 1 + rng.gen_range(8) as usize;
+        let s = 1 + rng.gen_range(8) as usize;
+        let hybrid = m.hybrid_floats(w, s);
+        let mlitb = m.mlitb_floats(w, s);
+        prop_assert!(m.hybrid_floats(w + 1, s) > hybrid, "hybrid not monotone in workers");
+        prop_assert!(m.hybrid_floats(w, s + 1) > hybrid, "hybrid not monotone in shards");
+        prop_assert!(m.mlitb_floats(w + 1, s) > mlitb, "mlitb not monotone in workers");
+        prop_assert!(m.mlitb_floats(w, s + 1) > mlitb, "mlitb not monotone in shards");
+        prop_assert!(
+            m.he_sync_floats(w, s) == m.mlitb_floats(w, s),
+            "he_sync volume must equal mlitb's"
+        );
+        let bigger_fc = CommModel { fc_params: m.fc_params * 2, ..m };
+        prop_assert!(
+            bigger_fc.mlitb_floats(w, s) > m.mlitb_floats(w, s),
+            "baselines must pay for FC growth"
+        );
+        prop_assert!(
+            bigger_fc.hybrid_floats(w, s) == m.hybrid_floats(w, s),
+            "hybrid bytes must not depend on the FC block"
+        );
+        let bigger_boundary = CommModel { boundary: m.boundary * 2, ..m };
+        prop_assert!(
+            bigger_boundary.hybrid_floats(w, s) > m.hybrid_floats(w, s),
+            "hybrid must pay for the boundary"
+        );
+        Ok(())
+    });
+}
+
+/// LinkModel::transfer_ms is monotone in payload bytes and in latency —
+/// the ordering the communication model's byte counts rely on to imply
+/// time.
+#[test]
+fn link_transfer_monotone_in_bytes_and_latency() {
+    use sashimi::transport::LinkModel;
+
+    check("link-monotone", 100, |rng| {
+        let link = LinkModel {
+            latency_ms: rng.uniform_f32(0.0, 100.0) as f64,
+            bytes_per_ms: 1.0 + rng.uniform_f32(0.0, 100_000.0) as f64,
+        };
+        let a = rng.gen_range(1_000_000) as usize;
+        let b = a + rng.gen_range(1_000_000) as usize;
+        prop_assert!(
+            link.transfer_ms(b) >= link.transfer_ms(a),
+            "transfer not monotone in bytes: {a} vs {b}"
+        );
+        let slower = LinkModel { latency_ms: link.latency_ms + 5.0, ..link };
+        prop_assert!(
+            slower.transfer_ms(a) > link.transfer_ms(a),
+            "transfer not monotone in latency"
+        );
+        Ok(())
+    });
+}
+
 /// Tensor wire format: LE bytes round-trip through the transport codec.
 #[test]
 fn tensor_json_wire_roundtrip() {

@@ -7,18 +7,21 @@
 
 use std::sync::OnceLock;
 
-use sashimi::runtime::{default_artifacts_dir, Runtime, Tensor};
+use sashimi::runtime::{self, default_artifacts_dir, Tensor};
 use sashimi::util::json::Value;
 use sashimi::util::rng::golden_input;
 
-fn runtime() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| Runtime::open_default().expect("run `make artifacts` first"))
+/// The shared runtime, or `None` (skip message printed once) when the
+/// AOT artifacts / XLA bindings are unavailable; every test early-returns
+/// on `None`.  Run `make artifacts` to enable the golden checks.
+fn runtime() -> Option<&'static runtime::SharedRuntime> {
+    static RT: OnceLock<Option<runtime::SharedRuntime>> = OnceLock::new();
+    RT.get_or_init(runtime::open_shared_or_skip).as_ref()
 }
 
 #[test]
 fn smoke_matmul_exact_values() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let a = Tensor::filled(&[8, 16], 1.0);
     let b = Tensor::filled(&[16, 4], 1.0);
     let out = rt.exec("smoke_matmul", &[a, b]).unwrap();
@@ -30,7 +33,7 @@ fn smoke_matmul_exact_values() {
 
 #[test]
 fn input_shape_mismatch_is_an_error() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let a = Tensor::filled(&[8, 15], 1.0);
     let b = Tensor::filled(&[16, 4], 1.0);
     assert!(rt.exec("smoke_matmul", &[a, b]).is_err());
@@ -38,14 +41,14 @@ fn input_shape_mismatch_is_an_error() {
 
 #[test]
 fn input_arity_mismatch_is_an_error() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let a = Tensor::filled(&[8, 16], 1.0);
     assert!(rt.exec("smoke_matmul", &[a]).is_err());
 }
 
 #[test]
 fn executable_cache_reuses_compilation() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let a = Tensor::filled(&[8, 16], 1.0);
     let b = Tensor::filled(&[16, 4], 1.0);
     rt.exec("smoke_matmul", &[a.clone(), b.clone()]).unwrap();
@@ -64,7 +67,7 @@ fn golden() -> Value {
 /// Execute `name` on inputs regenerated from the golden seeds; compare
 /// output checksums against the Python-recorded values.
 fn check_golden(name: &str) {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let g = golden();
     let entry = g.get(name).unwrap_or_else(|_| panic!("no golden for {name}"));
     let seeds = entry.get("input_seeds").unwrap().as_arr().unwrap();
