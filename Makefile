@@ -3,7 +3,7 @@
 
 ARTIFACTS := artifacts/manifest.json
 
-.PHONY: artifacts test bench fmt
+.PHONY: artifacts test bench bench-store fmt
 
 artifacts: $(ARTIFACTS)
 
@@ -15,6 +15,11 @@ test:
 
 bench:
 	cargo bench
+
+# Scheduling-core dispatch throughput: indexed vs naive reference
+# (EXPERIMENTS.md §Store).  STORE_BENCH_QUICK=1 for a fast smoke run.
+bench-store:
+	cargo bench --bench store_throughput
 
 fmt:
 	cargo fmt --check

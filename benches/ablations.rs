@@ -22,7 +22,7 @@ use sashimi::dist::CommModel;
 use sashimi::nn::convnetjs::NaiveNet;
 use sashimi::nn::params::ParamSet;
 use sashimi::runtime::NetSpec;
-use sashimi::store::StoreConfig;
+use sashimi::store::{Scheduler as _, StoreConfig};
 use sashimi::tasks::{TaskContext, TaskDef, TaskOutput};
 use sashimi::transport::local::{self, FaultPlan};
 use sashimi::transport::{Conn, LinkModel};

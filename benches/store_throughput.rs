@@ -1,0 +1,121 @@
+//! Dispatch throughput of the scheduling core: the indexed, sharded
+//! [`IndexedStore`] vs the O(n)-scan [`NaiveStore`] reference, at
+//! 1k/100k/1M live tickets under 1–16 concurrent clients.
+//!
+//! Protocol: each client thread runs dispatch→error-requeue cycles
+//! (`next_ticket` + `report_error`) for a fixed wall-clock window.  The
+//! requeue restores the picked ticket to the undistributed pool, so the
+//! live-ticket count stays exactly at the configured size for both
+//! backends — no done-ticket accumulation skews the naive numbers, and
+//! the measured cost is the pure §2.1.2 dispatch decision (`SELECT ...
+//! ORDER BY vct LIMIT 1` + state update).  Error buffers are drained
+//! periodically through the drain API so they never dominate memory.
+//!
+//! Acceptance floor (ISSUE 2): ≥10× `next_ticket` throughput vs the
+//! naive store at 100k live tickets.  Numbers land in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use sashimi::store::{IndexedStore, NaiveStore, Scheduler, StoreConfig, TaskId};
+use sashimi::util::bench::Table;
+use sashimi::util::clock;
+use sashimi::util::json::Value;
+
+/// Timeouts far beyond the bench horizon: only the primary VCT path runs.
+fn quiet_cfg() -> StoreConfig {
+    StoreConfig {
+        requeue_after_ms: 1_000_000_000_000, // ~31 years
+        min_redistribute_ms: 1_000_000_000_000,
+        requeue_on_error: true,
+    }
+}
+
+fn fill(store: &dyn Scheduler, n: usize) {
+    // Batched creation keeps the peak argument vector bounded.
+    let batch = 100_000;
+    let mut made = 0usize;
+    while made < n {
+        let take = batch.min(n - made);
+        let args: Vec<Value> = (0..take).map(|i| Value::num((made + i) as f64)).collect();
+        store.create_tickets(TaskId(1), "bench", args, clock::now_ms());
+        made += take;
+    }
+}
+
+/// Dispatch→requeue cycles across `clients` threads for `window_ms`;
+/// returns tickets dispatched per second.
+fn measure(store: Arc<dyn Scheduler>, clients: usize, window_ms: u64) -> f64 {
+    // Warm the caches and the allocator off the clock.
+    for _ in 0..16 {
+        if let Some(t) = store.next_ticket("warmup", clock::now_ms()) {
+            let _ = store.report_error(t.id, String::new());
+        }
+    }
+    let _ = store.drain_errors();
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|w| {
+            let store = Arc::clone(&store);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let client = format!("c{w}");
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(t) = store.next_ticket(&client, clock::now_ms()) {
+                        let _ = store.report_error(t.id, String::new());
+                        ops += 1;
+                        if ops % 4096 == 0 {
+                            let _ = store.drain_errors();
+                        }
+                    }
+                }
+                ops
+            })
+        })
+        .collect();
+    clock::sleep_ms(window_ms);
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let elapsed = t0.elapsed().as_secs_f64();
+    total as f64 / elapsed
+}
+
+fn main() {
+    let quick = std::env::var("STORE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    // Quick mode still covers 100k: that is the acceptance point.
+    let sizes: Vec<usize> =
+        if quick { vec![1_000, 100_000] } else { vec![1_000, 100_000, 1_000_000] };
+    let clients = [1usize, 4, 16];
+    let window_ms = 700u64;
+
+    let mut table = Table::new(
+        "Store dispatch throughput (tickets/sec dispatched)",
+        &["live tickets", "clients", "naive t/s", "indexed t/s", "speedup"],
+    );
+    for &n in &sizes {
+        for &c in &clients {
+            let naive: Arc<dyn Scheduler> = Arc::new(NaiveStore::new(quiet_cfg()));
+            fill(naive.as_ref(), n);
+            let naive_tps = measure(naive, c, window_ms);
+
+            let indexed: Arc<dyn Scheduler> = Arc::new(IndexedStore::new(quiet_cfg()));
+            fill(indexed.as_ref(), n);
+            let indexed_tps = measure(indexed, c, window_ms);
+
+            table.row(&[
+                n.to_string(),
+                c.to_string(),
+                format!("{naive_tps:.0}"),
+                format!("{indexed_tps:.0}"),
+                format!("{:.1}x", indexed_tps / naive_tps.max(1e-9)),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "Acceptance floor: indexed >= 10x naive at 100k live tickets; record the table in EXPERIMENTS.md.\n"
+    );
+}

@@ -1,0 +1,128 @@
+"""Structural model of benches/store_throughput.rs.
+
+Measures the same two dispatch cores as the Rust bench — the naive
+full-scan store and the indexed scheduler — as pure-Python data
+structures, under the same protocol (dispatch -> error-requeue cycles,
+so the live-ticket count stays constant).  Absolute numbers are
+Python-speed, not Rust-speed; the *ratio* between the two cores at each
+pool size is the structural quantity this model exists to measure
+(O(n) scan vs O(log n) index).  Regenerate native numbers with
+`make bench-store` on a machine with cargo.
+
+Usage: python bench_store_model.py [--quick]
+"""
+
+import heapq
+import sys
+import time
+
+REQUEUE_AFTER_MS = 10**12
+MIN_REDISTRIBUTE_MS = 10**12
+
+
+def now_ms():
+    return int(time.time() * 1000)
+
+
+class NaiveModel:
+    """One flat table; every dispatch scans all tickets, done included."""
+
+    def __init__(self, n):
+        t = now_ms()
+        # [created_ms, status(0 pending/1 inflight/2 done), last_dist or None]
+        self.tickets = [[t, 0, None] for _ in range(n)]
+
+    def next_ticket(self, now):
+        best = None
+        best_key = None
+        for tid, t in enumerate(self.tickets):  # the O(n) scan under the lock
+            if t[1] == 2:
+                continue
+            vct = t[0] if t[2] is None else t[2] + REQUEUE_AFTER_MS
+            if vct <= now:
+                key = (vct, tid)
+                if best_key is None or key < best_key:
+                    best, best_key = tid, key
+        if best is None:
+            return None
+        t = self.tickets[best]
+        t[1] = 1
+        t[2] = now
+        return best
+
+    def report_error(self, tid):
+        t = self.tickets[tid]
+        if t[1] == 1:
+            t[1] = 0
+            t[2] = None
+
+
+class IndexedModel:
+    """VCT-ordered ready index with lazy invalidation (heap standing in
+    for the Rust BTreeSet; same O(log n) shape)."""
+
+    def __init__(self, n):
+        t = now_ms()
+        self.meta = [[t, 0, None, 0] for _ in range(n)]  # created, status, last_dist, gen
+        self.ready = [(t, tid, 0) for tid in range(n)]  # (vct, id, gen)
+        heapq.heapify(self.ready)
+
+    def _push(self, tid):
+        m = self.meta[tid]
+        vct = m[0] if m[2] is None else m[2] + REQUEUE_AFTER_MS
+        heapq.heappush(self.ready, (vct, tid, m[3]))
+
+    def next_ticket(self, now):
+        while self.ready:
+            vct, tid, gen = self.ready[0]
+            m = self.meta[tid]
+            if m[1] == 2 or gen != m[3]:  # evicted or stale entry
+                heapq.heappop(self.ready)
+                continue
+            if vct > now:
+                return None
+            heapq.heappop(self.ready)
+            m[1] = 1
+            m[2] = now
+            m[3] += 1
+            # No in-flight re-push: this protocol error-requeues every
+            # dispatch immediately (report_error pushes the live entry),
+            # so a now+requeue entry would only accumulate as dead
+            # weight the lazy deletion never reaches.
+            return tid
+        return None
+
+    def report_error(self, tid):
+        m = self.meta[tid]
+        if m[1] == 1:
+            m[1] = 0
+            m[2] = None
+            m[3] += 1
+            self._push(tid)
+
+
+def measure(store, window_s=1.0):
+    t0 = time.perf_counter()
+    ops = 0
+    while time.perf_counter() - t0 < window_s:
+        now = now_ms()
+        tid = store.next_ticket(now)
+        if tid is not None:
+            store.report_error(tid)
+            ops += 1
+    return ops / (time.perf_counter() - t0)
+
+
+def main():
+    quick = "--quick" in sys.argv
+    # Quick mode still covers 100k: that is the ISSUE 2 acceptance point.
+    sizes = [1_000, 100_000] if quick else [1_000, 100_000, 1_000_000]
+    print(f"{'live tickets':>12} {'naive t/s':>12} {'indexed t/s':>12} {'speedup':>9}")
+    for n in sizes:
+        naive = measure(NaiveModel(n))
+        indexed = measure(IndexedModel(n))
+        print(f"{n:>12} {naive:>12.0f} {indexed:>12.0f} {indexed / max(naive, 1e-9):>8.1f}x")
+
+
+if __name__ == "__main__":
+    main()

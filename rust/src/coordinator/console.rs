@@ -4,7 +4,7 @@
 //! there is no browser to style for.
 
 use crate::coordinator::distributor::Distributor;
-use crate::store::Progress;
+use crate::store::{Progress, Scheduler as _};
 
 /// A renderable snapshot of a running distributor.
 #[derive(Debug, Clone)]

@@ -21,7 +21,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::coordinator::framework::Framework;
-use crate::store::TicketStore;
+use crate::store::Scheduler;
 use crate::tasks::{DatasetStore, Registry};
 use crate::transport::{Conn, Listener, Message};
 use crate::util::clock;
@@ -52,7 +52,7 @@ pub struct DistributorStats {
 }
 
 pub struct Distributor {
-    store: Arc<TicketStore>,
+    store: Arc<dyn Scheduler>,
     registry: Registry,
     datasets: Arc<DatasetStore>,
     pub stats: DistributorStats,
@@ -65,7 +65,7 @@ pub struct Distributor {
 impl Distributor {
     pub fn new(fw: &Arc<Framework>) -> Arc<Distributor> {
         Arc::new(Distributor {
-            store: fw.store().clone(),
+            store: Arc::clone(fw.store()),
             registry: fw.registry_snapshot(),
             datasets: fw.datasets().clone(),
             stats: DistributorStats::default(),
@@ -77,7 +77,7 @@ impl Distributor {
 
     /// Build from raw parts (dist drivers that bypass Framework).
     pub fn from_parts(
-        store: Arc<TicketStore>,
+        store: Arc<dyn Scheduler>,
         registry: Registry,
         datasets: Arc<DatasetStore>,
     ) -> Arc<Distributor> {
@@ -93,7 +93,6 @@ impl Distributor {
     }
 
     pub fn stop(&self) {
-        self.stop.load(Ordering::SeqCst); // touch for lint symmetry
         self.stop.store(true, Ordering::SeqCst);
     }
 
@@ -105,7 +104,7 @@ impl Distributor {
         self.clients.lock().unwrap().values().cloned().collect()
     }
 
-    pub fn store(&self) -> &Arc<TicketStore> {
+    pub fn store(&self) -> &Arc<dyn Scheduler> {
         &self.store
     }
 
@@ -346,7 +345,10 @@ mod tests {
         assert!(matches!(client.recv().unwrap(), Message::Ticket { .. }));
         client.send(&Message::Shutdown).unwrap();
         h.join().unwrap();
-        assert_eq!(fw.store().errors().len(), 1);
+        assert_eq!(fw.store().error_count(), 1);
+        let drained = fw.store().drain_errors();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(fw.store().error_count(), 1, "drain keeps the cumulative count");
     }
 
     #[test]

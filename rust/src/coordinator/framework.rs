@@ -25,7 +25,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::store::{Progress, StoreConfig, TaskId, TicketStore};
+use crate::store::{Progress, Scheduler, StoreConfig, TaskId, TicketStore};
 use crate::tasks::{DatasetStore, Registry, TaskDef};
 use crate::util::clock;
 use crate::util::json::Value;
@@ -33,11 +33,20 @@ use crate::util::json::Value;
 pub struct FrameworkBuilder {
     store_cfg: StoreConfig,
     registry: Registry,
+    scheduler: Option<Arc<dyn Scheduler>>,
 }
 
 impl FrameworkBuilder {
     pub fn store_config(mut self, cfg: StoreConfig) -> Self {
         self.store_cfg = cfg;
+        self
+    }
+
+    /// Inject a scheduling core (e.g. [`crate::store::NaiveStore`] for
+    /// differential runs); overrides [`Self::store_config`], since the
+    /// provided scheduler carries its own [`StoreConfig`].
+    pub fn scheduler(mut self, scheduler: Arc<dyn Scheduler>) -> Self {
+        self.scheduler = Some(scheduler);
         self
     }
 
@@ -47,8 +56,12 @@ impl FrameworkBuilder {
     }
 
     pub fn build(self) -> Arc<Framework> {
+        let store: Arc<dyn Scheduler> = match self.scheduler {
+            Some(s) => s,
+            None => Arc::new(TicketStore::new(self.store_cfg)),
+        };
         Arc::new(Framework {
-            store: Arc::new(TicketStore::new(self.store_cfg)),
+            store,
             registry: Arc::new(std::sync::Mutex::new(self.registry)),
             datasets: Arc::new(DatasetStore::new()),
             next_task: AtomicU64::new(1),
@@ -58,7 +71,7 @@ impl FrameworkBuilder {
 
 /// The running framework: ticket store + task registry + dataset store.
 pub struct Framework {
-    store: Arc<TicketStore>,
+    store: Arc<dyn Scheduler>,
     registry: Arc<std::sync::Mutex<Registry>>,
     datasets: Arc<DatasetStore>,
     next_task: AtomicU64,
@@ -66,7 +79,11 @@ pub struct Framework {
 
 impl Framework {
     pub fn builder() -> FrameworkBuilder {
-        FrameworkBuilder { store_cfg: StoreConfig::default(), registry: Registry::new() }
+        FrameworkBuilder {
+            store_cfg: StoreConfig::default(),
+            registry: Registry::new(),
+            scheduler: None,
+        }
     }
 
     /// `this.createTask(SomeTask)`: register (idempotent) and get a handle.
@@ -80,7 +97,7 @@ impl Framework {
         }
     }
 
-    pub fn store(&self) -> &Arc<TicketStore> {
+    pub fn store(&self) -> &Arc<dyn Scheduler> {
         &self.store
     }
 
@@ -174,5 +191,26 @@ mod tests {
         let task = fw.create_task(Arc::new(IsPrimeTask));
         task.calculate(vec![Value::num(3.0)]);
         assert!(task.block_timeout(20).is_none());
+    }
+
+    /// The builder accepts any `Scheduler`; the naive reference behind
+    /// the whole framework behaves like the default indexed store.
+    #[test]
+    fn injected_naive_scheduler_is_equivalent() {
+        let fw = Framework::builder()
+            .scheduler(Arc::new(crate::store::NaiveStore::new(StoreConfig::default())))
+            .build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate((0..3).map(|i| Value::num(i as f64)).collect());
+        let store = Arc::clone(fw.store());
+        let h = std::thread::spawn(move || {
+            for _ in 0..3 {
+                let t = store.next_ticket("w", clock::now_ms()).unwrap();
+                store.complete(t.id, Value::num(t.index as f64 * 2.0)).unwrap();
+            }
+        });
+        let results = task.block();
+        h.join().unwrap();
+        assert_eq!(results, vec![Value::num(0.0), Value::num(2.0), Value::num(4.0)]);
     }
 }

@@ -20,7 +20,7 @@ use anyhow::{ensure, Context, Result};
 use crate::coordinator::Distributor;
 use crate::data::Dataset;
 use crate::runtime::{NetSpec, SharedRuntime, Tensor};
-use crate::store::{StoreConfig, TaskId, TicketStore};
+use crate::store::{Scheduler, StoreConfig, TaskId, TicketStore};
 use crate::tasks::train::{shard_x_key, shard_y_key, ConvFwdTask, ConvGradTask, GradTask};
 use crate::tasks::{DatasetStore, Registry};
 use crate::transport::local::{self, LocalConnector};
@@ -81,7 +81,7 @@ pub struct Cluster {
     pub rt: SharedRuntime,
     pub spec: NetSpec,
     pub cfg: ClusterConfig,
-    store: Arc<TicketStore>,
+    store: Arc<dyn Scheduler>,
     datasets: Arc<DatasetStore>,
     distributor: Arc<Distributor>,
     /// Kept alive so the acceptor only exits at shutdown.
@@ -142,7 +142,7 @@ impl Cluster {
             datasets.register(&shard_y_key(&cfg.net, shard), dataset.batch_onehot(&idx));
         }
 
-        let store = Arc::new(TicketStore::new(cfg.store.clone()));
+        let store: Arc<dyn Scheduler> = Arc::new(TicketStore::new(cfg.store.clone()));
         let distributor =
             Distributor::from_parts(Arc::clone(&store), registry.clone(), Arc::clone(&datasets));
         let (listener, connector) = local::endpoint(cfg.link, cfg.sleep_on_link);
@@ -179,7 +179,7 @@ impl Cluster {
         })
     }
 
-    pub fn store(&self) -> &Arc<TicketStore> {
+    pub fn store(&self) -> &Arc<dyn Scheduler> {
         &self.store
     }
 

@@ -17,6 +17,7 @@ use crate::dist::{aggregate_gradients, Cluster, DistStats, TrainResult};
 use crate::nn::adagrad;
 use crate::nn::metrics::Curve;
 use crate::nn::params::ParamSet;
+use crate::store::Scheduler as _;
 use crate::tasks::tensor_from_json;
 use crate::tasks::train::{pack_params, shard_x_key, shard_y_key, unflatten, GradTask};
 use crate::util::rng::SplitMix64;

@@ -35,6 +35,7 @@ use crate::nn::adagrad;
 use crate::nn::metrics::Curve;
 use crate::nn::params::ParamSet;
 use crate::runtime::{SharedRuntime, Tensor};
+use crate::store::Scheduler as _;
 use crate::tasks::tensor_from_json;
 use crate::tasks::train::{
     pack_params, params_key, shard_x_key, shard_y_key, unflatten, ConvFwdTask, ConvGradTask,

@@ -17,19 +17,70 @@
 //!
 //! Both timeouts are configurable ([`StoreConfig`]); the defaults are the
 //! paper's 5 min / 10 s, and benches scale them down with the modelled
-//! clock.  The invariants (no lost tickets, first result wins, ordered
+//! clock.
+//!
+//! The scheduling policy is pinned by the [`Scheduler`] trait and has two
+//! implementations:
+//!
+//! * [`sched::IndexedStore`] (the default, aliased as [`TicketStore`]) —
+//!   the production path: a VCT-ordered ready index plus a
+//!   last-distributed fallback index make `next_ticket` O(log n), done
+//!   tickets are evicted from the scan path into per-task result
+//!   ledgers, and the ticket bodies live in N lock stripes so
+//!   distributor connection threads do not serialise on one mutex.
+//! * [`naive::NaiveStore`] — the original O(n)-scan reference
+//!   implementation, kept for differential testing: the property suite
+//!   drives random operation sequences through both and asserts
+//!   identical dispatch order and accounting
+//!   (`rust/tests/properties.rs`).
+//!
+//! The invariants (no lost tickets, first result wins, ordered
 //! collection) are property-tested in `rust/tests/properties.rs`.
 
+pub mod naive;
+pub mod sched;
 pub mod ticket;
 
+pub use naive::NaiveStore;
+pub use sched::IndexedStore;
 pub use ticket::{Ticket, TicketId, TicketStatus};
 
-use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, MutexGuard};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::util::json::Value;
+
+/// A millisecond timeout as a deadline; `None` when it overflows the
+/// platform clock — callers treat that as "wait forever".
+pub(crate) fn deadline_after(timeout_ms: u64) -> Option<Instant> {
+    Instant::now().checked_add(Duration::from_millis(timeout_ms))
+}
+
+/// One condvar wait bounded by an optional deadline: `None` when the
+/// deadline has passed (caller times out), otherwise the reacquired
+/// guard after a (possibly spurious) wakeup.  Shared by both backends'
+/// `next_completion` / `wait_results_deadline` loops.
+pub(crate) fn wait_deadline<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    deadline: Option<Instant>,
+) -> Option<MutexGuard<'a, T>> {
+    match deadline {
+        None => Some(cv.wait(guard).unwrap()),
+        Some(d) => {
+            let now = Instant::now();
+            if now >= d {
+                return None;
+            }
+            Some(cv.wait_timeout(guard, d - now).unwrap().0)
+        }
+    }
+}
+
+/// The default store implementation served to every consumer.
+pub type TicketStore = IndexedStore;
 
 /// Task identifier within a running framework.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -65,256 +116,75 @@ pub struct Progress {
     pub duplicate_results: u64,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    tickets: BTreeMap<TicketId, Ticket>,
-    next_ticket: u64,
-    errors: Vec<(TicketId, String)>,
-    redistributions: u64,
-    duplicate_results: u64,
-    /// FIFO of accepted results, consumed by streaming drivers (the
-    /// hybrid trainer reacts to each client's features as they arrive,
-    /// §4 "learned concurrently").
-    completions: std::collections::VecDeque<(TaskId, usize, Value)>,
-}
-
-/// Thread-safe ticket store shared by the distributor and the framework.
-pub struct TicketStore {
-    cfg: StoreConfig,
-    inner: Mutex<Inner>,
-    /// Signalled on completions so `block()` can wait without polling.
-    done_cv: Condvar,
-}
-
-impl TicketStore {
-    pub fn new(cfg: StoreConfig) -> Self {
-        Self { cfg, inner: Mutex::new(Inner::default()), done_cv: Condvar::new() }
-    }
-
-    pub fn config(&self) -> &StoreConfig {
-        &self.cfg
-    }
+/// The scheduling-core boundary consumed by the coordinator
+/// (`distributor`/`framework`/`console`), the §4 trainers (`dist`), and
+/// the worker tests: everything the paper's MySQL table plus its SELECT
+/// policy provided.
+///
+/// Semantics every implementation must preserve bit-for-bit (§2.1.2):
+/// VCT dispatch ordering with `(vct, id)` tie-break, the
+/// `min_redistribute` fallback when nothing is due, first result wins
+/// with duplicate accounting, and error reports requeueing in-flight
+/// tickets at their original creation time.
+pub trait Scheduler: Send + Sync {
+    fn config(&self) -> &StoreConfig;
 
     /// Create tickets for a task's divided arguments; returns their ids.
-    pub fn create_tickets(&self, task: TaskId, task_name: &str, args: Vec<Value>, now_ms: u64) -> Vec<TicketId> {
-        let mut inner = self.inner.lock().unwrap();
-        let mut ids = Vec::with_capacity(args.len());
-        for (index, payload) in args.into_iter().enumerate() {
-            let id = TicketId(inner.next_ticket);
-            inner.next_ticket += 1;
-            inner.tickets.insert(
-                id,
-                Ticket {
-                    id,
-                    task,
-                    task_name: task_name.to_string(),
-                    index,
-                    payload,
-                    created_ms: now_ms,
-                    status: TicketStatus::Pending,
-                    last_distributed_ms: None,
-                    distribution_count: 0,
-                    result: None,
-                    assigned_to: None,
-                },
-            );
-            ids.push(id);
-        }
-        ids
-    }
-
-    /// Virtual created time of a ticket (the paper's ordering key).
-    fn vct(&self, t: &Ticket) -> u64 {
-        match t.last_distributed_ms {
-            None => t.created_ms,
-            Some(d) => d + self.cfg.requeue_after_ms,
-        }
-    }
+    fn create_tickets(
+        &self,
+        task: TaskId,
+        task_name: &str,
+        args: Vec<Value>,
+        now_ms: u64,
+    ) -> Vec<TicketId>;
 
     /// The SQL `SELECT ... ORDER BY vct LIMIT 1` equivalent: pick the
     /// next ticket for `client` at `now_ms`, marking it distributed.
-    pub fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
-        let mut inner = self.inner.lock().unwrap();
-        // Primary: minimum VCT among candidates whose VCT has arrived.
-        let pick = inner
-            .tickets
-            .values()
-            .filter(|t| t.status != TicketStatus::Done)
-            .filter(|t| self.vct(t) <= now_ms)
-            .min_by_key(|t| (self.vct(t), t.id.0))
-            .map(|t| t.id);
-        // Fallback: nothing due -> redistribute the longest-in-flight
-        // ticket, provided it was not distributed in the last
-        // min_redistribute window (the paper's 10 s rule).
-        let pick = pick.or_else(|| {
-            inner
-                .tickets
-                .values()
-                .filter(|t| t.status != TicketStatus::Done)
-                .filter(|t| {
-                    t.last_distributed_ms
-                        .map(|d| now_ms.saturating_sub(d) >= self.cfg.min_redistribute_ms)
-                        .unwrap_or(true)
-                })
-                .min_by_key(|t| (t.last_distributed_ms.unwrap_or(0), t.id.0))
-                .map(|t| t.id)
-        });
-        let id = pick?;
-        let redistribution = {
-            let t = inner.tickets.get(&id).unwrap();
-            t.distribution_count > 0
-        };
-        if redistribution {
-            inner.redistributions += 1;
-        }
-        let t = inner.tickets.get_mut(&id).unwrap();
-        t.status = TicketStatus::InFlight;
-        t.last_distributed_ms = Some(now_ms);
-        t.distribution_count += 1;
-        t.assigned_to = Some(client.to_string());
-        Some(t.clone())
-    }
+    fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket>;
 
     /// Record a result.  First result wins; duplicates (a slow client
     /// returning a redistributed ticket) are counted and dropped.
-    pub fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
-        let mut inner = self.inner.lock().unwrap();
-        let t = match inner.tickets.get_mut(&id) {
-            Some(t) => t,
-            None => bail!("unknown ticket {id:?}"),
-        };
-        if t.status == TicketStatus::Done {
-            inner.duplicate_results += 1;
-            return Ok(false);
-        }
-        t.status = TicketStatus::Done;
-        t.result = Some(result.clone());
-        let (task, index) = (t.task, t.index);
-        inner.completions.push_back((task, index, result));
-        self.done_cv.notify_all();
-        Ok(true)
-    }
+    fn complete(&self, id: TicketId, result: Value) -> Result<bool>;
+
+    /// Record a worker error report; optionally requeue immediately.
+    fn report_error(&self, id: TicketId, report: String) -> Result<()>;
 
     /// Pop the next accepted result for `task` (FIFO in completion
     /// order), waiting up to `timeout_ms`.  Streaming counterpart of
-    /// [`wait_results`].
-    pub fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
-        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(timeout_ms);
-        let mut inner = self.inner.lock().unwrap();
-        loop {
-            if let Some(pos) = inner.completions.iter().position(|(t, _, _)| *t == task) {
-                let (_, index, value) = inner.completions.remove(pos).unwrap();
-                return Some((index, value));
-            }
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _) = self.done_cv.wait_timeout(inner, deadline - now).unwrap();
-            inner = guard;
-        }
-    }
+    /// [`Scheduler::wait_results`].
+    fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)>;
 
-    /// Record a worker error report; optionally requeue immediately.
-    pub fn report_error(&self, id: TicketId, report: String) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        inner.errors.push((id, report));
-        let requeue = self.cfg.requeue_on_error;
-        if let Some(t) = inner.tickets.get_mut(&id) {
-            if t.status == TicketStatus::InFlight && requeue {
-                t.status = TicketStatus::Pending;
-                t.last_distributed_ms = None; // VCT back to creation time
-            }
-        }
-        Ok(())
-    }
+    fn progress(&self, task: Option<TaskId>) -> Progress;
 
-    pub fn progress(&self, task: Option<TaskId>) -> Progress {
-        let inner = self.inner.lock().unwrap();
-        let mut p = Progress {
-            redistributions: inner.redistributions,
-            duplicate_results: inner.duplicate_results,
-            errors: inner.errors.len(),
-            ..Default::default()
-        };
-        for t in inner.tickets.values() {
-            if task.map(|id| t.task == id).unwrap_or(true) {
-                p.total += 1;
-                match t.status {
-                    TicketStatus::Pending => p.pending += 1,
-                    TicketStatus::InFlight => p.in_flight += 1,
-                    TicketStatus::Done => p.done += 1,
-                }
-            }
-        }
-        p
-    }
+    fn is_task_done(&self, task: TaskId) -> bool;
 
-    pub fn is_task_done(&self, task: TaskId) -> bool {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .tickets
-            .values()
-            .filter(|t| t.task == task)
-            .all(|t| t.status == TicketStatus::Done)
-    }
+    /// Wait until every ticket of `task` is done, then return results
+    /// ordered by ticket index.  `deadline` of `None` blocks forever;
+    /// `Some(instant)` returns `None` on timeout.  The single
+    /// deadline-parameterised implementation behind both
+    /// [`Scheduler::wait_results`] and
+    /// [`Scheduler::wait_results_timeout`].
+    fn wait_results_deadline(&self, task: TaskId, deadline: Option<Instant>)
+        -> Option<Vec<Value>>;
+
+    /// Cumulative number of error reports ever recorded (monotone; not
+    /// reduced by [`Scheduler::drain_errors`]).
+    fn error_count(&self) -> usize;
+
+    /// Take the buffered error reports, leaving the buffer empty.  The
+    /// cumulative [`Scheduler::error_count`] is unaffected.
+    fn drain_errors(&self) -> Vec<(TicketId, String)>;
 
     /// Block until every ticket of `task` is done (condvar, no polling),
     /// then return results ordered by ticket index — the framework's
     /// `task.block(callback)` from the appendix sample.
-    pub fn wait_results(&self, task: TaskId) -> Vec<Value> {
-        let mut inner = self.inner.lock().unwrap();
-        loop {
-            let all_done = inner
-                .tickets
-                .values()
-                .filter(|t| t.task == task)
-                .all(|t| t.status == TicketStatus::Done);
-            if all_done {
-                let mut rows: Vec<(usize, Value)> = inner
-                    .tickets
-                    .values()
-                    .filter(|t| t.task == task)
-                    .map(|t| (t.index, t.result.clone().unwrap()))
-                    .collect();
-                rows.sort_by_key(|(i, _)| *i);
-                return rows.into_iter().map(|(_, v)| v).collect();
-            }
-            inner = self.done_cv.wait(inner).unwrap();
-        }
+    fn wait_results(&self, task: TaskId) -> Vec<Value> {
+        self.wait_results_deadline(task, None).expect("unbounded wait cannot time out")
     }
 
     /// Non-blocking variant with timeout; None on timeout.
-    pub fn wait_results_timeout(&self, task: TaskId, timeout_ms: u64) -> Option<Vec<Value>> {
-        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(timeout_ms);
-        let mut inner = self.inner.lock().unwrap();
-        loop {
-            let all_done = inner
-                .tickets
-                .values()
-                .filter(|t| t.task == task)
-                .all(|t| t.status == TicketStatus::Done);
-            if all_done {
-                let mut rows: Vec<(usize, Value)> = inner
-                    .tickets
-                    .values()
-                    .filter(|t| t.task == task)
-                    .map(|t| (t.index, t.result.clone().unwrap()))
-                    .collect();
-                rows.sort_by_key(|(i, _)| *i);
-                return Some(rows.into_iter().map(|(_, v)| v).collect());
-            }
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _) = self.done_cv.wait_timeout(inner, deadline - now).unwrap();
-            inner = guard;
-        }
-    }
-
-    pub fn errors(&self) -> Vec<(TicketId, String)> {
-        self.inner.lock().unwrap().errors.clone()
+    fn wait_results_timeout(&self, task: TaskId, timeout_ms: u64) -> Option<Vec<Value>> {
+        self.wait_results_deadline(task, deadline_after(timeout_ms))
     }
 }
 
@@ -322,146 +192,185 @@ impl TicketStore {
 mod tests {
     use super::*;
 
-    fn store(requeue_ms: u64, min_redist: u64) -> TicketStore {
-        TicketStore::new(StoreConfig {
-            requeue_after_ms: requeue_ms,
-            min_redistribute_ms: min_redist,
-            requeue_on_error: true,
-        })
-    }
-
     fn args(n: usize) -> Vec<Value> {
         (0..n).map(|i| Value::num(i as f64)).collect()
     }
 
-    #[test]
-    fn fifo_by_creation_time() {
-        let s = store(1000, 100);
-        s.create_tickets(TaskId(1), "t", args(3), 10);
-        let a = s.next_ticket("c1", 20).unwrap();
-        let b = s.next_ticket("c1", 21).unwrap();
-        assert_eq!(a.index, 0);
-        assert_eq!(b.index, 1);
+    /// The behavioural suite every [`Scheduler`] implementation must
+    /// pass; instantiated below for both backends.
+    macro_rules! scheduler_suite {
+        ($backend:ident, $make:expr) => {
+            mod $backend {
+                use super::args;
+                // Each expansion constructs only one of the two backends.
+                #[allow(unused_imports)]
+                use crate::store::{
+                    IndexedStore, NaiveStore, Scheduler, StoreConfig, TaskId, TicketId,
+                };
+                use crate::util::json::Value;
+
+                #[allow(clippy::redundant_closure_call)]
+                fn store(requeue_ms: u64, min_redist: u64) -> Box<dyn Scheduler> {
+                    let cfg = StoreConfig {
+                        requeue_after_ms: requeue_ms,
+                        min_redistribute_ms: min_redist,
+                        requeue_on_error: true,
+                    };
+                    ($make)(cfg)
+                }
+
+                #[test]
+                fn fifo_by_creation_time() {
+                    let s = store(1000, 100);
+                    s.create_tickets(TaskId(1), "t", args(3), 10);
+                    let a = s.next_ticket("c1", 20).unwrap();
+                    let b = s.next_ticket("c1", 21).unwrap();
+                    assert_eq!(a.index, 0);
+                    assert_eq!(b.index, 1);
+                }
+
+                #[test]
+                fn inflight_ticket_not_reissued_before_timeout() {
+                    let s = store(1000, 100);
+                    s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let t = s.next_ticket("c1", 0).unwrap();
+                    // Before timeout and within min_redistribute: nothing for c2.
+                    assert!(s.next_ticket("c2", 50).is_none());
+                    // After min_redistribute (fallback path): redistribute.
+                    let again = s.next_ticket("c2", 150).unwrap();
+                    assert_eq!(again.id, t.id);
+                    assert_eq!(again.distribution_count, 2);
+                }
+
+                #[test]
+                fn timeout_reissues_via_vct() {
+                    let s = store(1000, 10_000); // min_redistribute large: only VCT path
+                    s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let t = s.next_ticket("c1", 0).unwrap();
+                    assert!(s.next_ticket("c2", 999).is_none());
+                    let again = s.next_ticket("c2", 1001).unwrap();
+                    assert_eq!(again.id, t.id);
+                }
+
+                #[test]
+                fn first_result_wins_duplicates_counted() {
+                    let s = store(100, 10);
+                    let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let _ = s.next_ticket("c1", 0).unwrap();
+                    let _ = s.next_ticket("c2", 200).unwrap(); // redistributed
+                    assert!(s.complete(ids[0], Value::num(1.0)).unwrap());
+                    assert!(!s.complete(ids[0], Value::num(2.0)).unwrap());
+                    let p = s.progress(None);
+                    assert_eq!(p.done, 1);
+                    assert_eq!(p.duplicate_results, 1);
+                    // First result is what block() sees.
+                    assert_eq!(s.wait_results(TaskId(1)), vec![Value::num(1.0)]);
+                }
+
+                #[test]
+                fn error_requeues_immediately() {
+                    let s = store(1_000_000, 1_000_000);
+                    let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let _ = s.next_ticket("c1", 0).unwrap();
+                    s.report_error(ids[0], "boom".into()).unwrap();
+                    // Eligible right away despite huge timeouts.
+                    let t = s.next_ticket("c2", 1).unwrap();
+                    assert_eq!(t.id, ids[0]);
+                    assert_eq!(s.progress(None).errors, 1);
+                }
+
+                #[test]
+                fn results_ordered_by_index() {
+                    let s = store(1000, 100);
+                    let ids = s.create_tickets(TaskId(7), "t", args(3), 0);
+                    // Complete out of order.
+                    for i in [2usize, 0, 1] {
+                        let _ = s.next_ticket("c", i as u64);
+                        s.complete(ids[i], Value::num(i as f64 * 10.0)).unwrap();
+                    }
+                    let r = s.wait_results(TaskId(7));
+                    assert_eq!(r, vec![Value::num(0.0), Value::num(10.0), Value::num(20.0)]);
+                }
+
+                #[test]
+                fn min_redistribute_rate_limits_last_ticket() {
+                    // The 10 s rule: an in-flight last ticket is not handed to
+                    // every idle client at once.
+                    let s = store(100_000, 50);
+                    s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let _ = s.next_ticket("c1", 0).unwrap();
+                    assert!(s.next_ticket("c2", 10).is_none());
+                    assert!(s.next_ticket("c3", 49).is_none());
+                    assert!(s.next_ticket("c4", 50).is_some());
+                    // Fresh redistribution resets the window.
+                    assert!(s.next_ticket("c5", 60).is_none());
+                }
+
+                #[test]
+                fn progress_by_task() {
+                    let s = store(1000, 100);
+                    s.create_tickets(TaskId(1), "a", args(2), 0);
+                    let ids = s.create_tickets(TaskId(2), "b", args(1), 0);
+                    s.next_ticket("c", 0);
+                    let _ = s.complete(ids[0], Value::Null).unwrap();
+                    let p1 = s.progress(Some(TaskId(1)));
+                    assert_eq!(p1.total, 2);
+                    let p2 = s.progress(Some(TaskId(2)));
+                    assert_eq!(p2.done, 1);
+                }
+
+                #[test]
+                fn wait_with_timeout_returns_none_if_incomplete() {
+                    let s = store(1000, 100);
+                    s.create_tickets(TaskId(1), "t", args(1), 0);
+                    assert!(s.wait_results_timeout(TaskId(1), 30).is_none());
+                }
+
+                #[test]
+                fn completions_stream_in_fifo_order() {
+                    let s = store(1000, 100);
+                    let ids = s.create_tickets(TaskId(1), "t", args(3), 0);
+                    let _ = s.next_ticket("c", 0);
+                    s.complete(ids[1], Value::num(1.0)).unwrap();
+                    s.complete(ids[0], Value::num(0.0)).unwrap();
+                    assert_eq!(s.next_completion(TaskId(1), 10), Some((1, Value::num(1.0))));
+                    assert_eq!(s.next_completion(TaskId(1), 10), Some((0, Value::num(0.0))));
+                    assert_eq!(s.next_completion(TaskId(1), 10), None); // third not done
+                    // Completions are task-scoped.
+                    let other = s.create_tickets(TaskId(2), "u", args(1), 0);
+                    s.complete(other[0], Value::Bool(true)).unwrap();
+                    s.complete(ids[2], Value::num(2.0)).unwrap();
+                    assert_eq!(s.next_completion(TaskId(2), 10), Some((0, Value::Bool(true))));
+                    assert_eq!(s.next_completion(TaskId(1), 10), Some((2, Value::num(2.0))));
+                }
+
+                #[test]
+                fn unknown_ticket_completion_is_error() {
+                    let s = store(1000, 100);
+                    assert!(s.complete(TicketId(99), Value::Null).is_err());
+                }
+
+                #[test]
+                fn drain_errors_empties_buffer_not_count() {
+                    let s = store(1000, 100);
+                    let ids = s.create_tickets(TaskId(1), "t", args(2), 0);
+                    let _ = s.next_ticket("c", 0);
+                    let _ = s.next_ticket("c", 1);
+                    s.report_error(ids[0], "a".into()).unwrap();
+                    s.report_error(ids[1], "b".into()).unwrap();
+                    assert_eq!(s.error_count(), 2);
+                    let drained = s.drain_errors();
+                    assert_eq!(drained.len(), 2);
+                    assert_eq!(drained[0].0, ids[0]);
+                    assert!(s.drain_errors().is_empty());
+                    // The console's cumulative counter is unaffected.
+                    assert_eq!(s.error_count(), 2);
+                    assert_eq!(s.progress(None).errors, 2);
+                }
+            }
+        };
     }
 
-    #[test]
-    fn inflight_ticket_not_reissued_before_timeout() {
-        let s = store(1000, 100);
-        s.create_tickets(TaskId(1), "t", args(1), 0);
-        let t = s.next_ticket("c1", 0).unwrap();
-        // Before timeout and within min_redistribute: nothing for c2.
-        assert!(s.next_ticket("c2", 50).is_none());
-        // After min_redistribute (fallback path): redistribute.
-        let again = s.next_ticket("c2", 150).unwrap();
-        assert_eq!(again.id, t.id);
-        assert_eq!(again.distribution_count, 2);
-    }
-
-    #[test]
-    fn timeout_reissues_via_vct() {
-        let s = store(1000, 10_000); // min_redistribute large: only VCT path
-        s.create_tickets(TaskId(1), "t", args(1), 0);
-        let t = s.next_ticket("c1", 0).unwrap();
-        assert!(s.next_ticket("c2", 999).is_none());
-        let again = s.next_ticket("c2", 1001).unwrap();
-        assert_eq!(again.id, t.id);
-    }
-
-    #[test]
-    fn first_result_wins_duplicates_counted() {
-        let s = store(100, 10);
-        let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
-        let _ = s.next_ticket("c1", 0).unwrap();
-        let _ = s.next_ticket("c2", 200).unwrap(); // redistributed
-        assert!(s.complete(ids[0], Value::num(1.0)).unwrap());
-        assert!(!s.complete(ids[0], Value::num(2.0)).unwrap());
-        let p = s.progress(None);
-        assert_eq!(p.done, 1);
-        assert_eq!(p.duplicate_results, 1);
-        // First result is what block() sees.
-        assert_eq!(s.wait_results(TaskId(1)), vec![Value::num(1.0)]);
-    }
-
-    #[test]
-    fn error_requeues_immediately() {
-        let s = store(1_000_000, 1_000_000);
-        let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
-        let _ = s.next_ticket("c1", 0).unwrap();
-        s.report_error(ids[0], "boom".into()).unwrap();
-        // Eligible right away despite huge timeouts.
-        let t = s.next_ticket("c2", 1).unwrap();
-        assert_eq!(t.id, ids[0]);
-        assert_eq!(s.progress(None).errors, 1);
-    }
-
-    #[test]
-    fn results_ordered_by_index() {
-        let s = store(1000, 100);
-        let ids = s.create_tickets(TaskId(7), "t", args(3), 0);
-        // Complete out of order.
-        for i in [2usize, 0, 1] {
-            let _ = s.next_ticket("c", i as u64);
-            s.complete(ids[i], Value::num(i as f64 * 10.0)).unwrap();
-        }
-        let r = s.wait_results(TaskId(7));
-        assert_eq!(r, vec![Value::num(0.0), Value::num(10.0), Value::num(20.0)]);
-    }
-
-    #[test]
-    fn min_redistribute_rate_limits_last_ticket() {
-        // The 10 s rule: an in-flight last ticket is not handed to every
-        // idle client at once.
-        let s = store(100_000, 50);
-        s.create_tickets(TaskId(1), "t", args(1), 0);
-        let _ = s.next_ticket("c1", 0).unwrap();
-        assert!(s.next_ticket("c2", 10).is_none());
-        assert!(s.next_ticket("c3", 49).is_none());
-        assert!(s.next_ticket("c4", 50).is_some());
-        // Fresh redistribution resets the window.
-        assert!(s.next_ticket("c5", 60).is_none());
-    }
-
-    #[test]
-    fn progress_by_task() {
-        let s = store(1000, 100);
-        s.create_tickets(TaskId(1), "a", args(2), 0);
-        let ids = s.create_tickets(TaskId(2), "b", args(1), 0);
-        s.next_ticket("c", 0);
-        let _ = s.complete(ids[0], Value::Null).unwrap();
-        let p1 = s.progress(Some(TaskId(1)));
-        assert_eq!(p1.total, 2);
-        let p2 = s.progress(Some(TaskId(2)));
-        assert_eq!(p2.done, 1);
-    }
-
-    #[test]
-    fn wait_with_timeout_returns_none_if_incomplete() {
-        let s = store(1000, 100);
-        s.create_tickets(TaskId(1), "t", args(1), 0);
-        assert!(s.wait_results_timeout(TaskId(1), 30).is_none());
-    }
-
-    #[test]
-    fn completions_stream_in_fifo_order() {
-        let s = store(1000, 100);
-        let ids = s.create_tickets(TaskId(1), "t", args(3), 0);
-        let _ = s.next_ticket("c", 0);
-        s.complete(ids[1], Value::num(1.0)).unwrap();
-        s.complete(ids[0], Value::num(0.0)).unwrap();
-        assert_eq!(s.next_completion(TaskId(1), 10), Some((1, Value::num(1.0))));
-        assert_eq!(s.next_completion(TaskId(1), 10), Some((0, Value::num(0.0))));
-        assert_eq!(s.next_completion(TaskId(1), 10), None); // third not done
-        // Completions are task-scoped.
-        let other = s.create_tickets(TaskId(2), "u", args(1), 0);
-        s.complete(other[0], Value::Bool(true)).unwrap();
-        s.complete(ids[2], Value::num(2.0)).unwrap();
-        assert_eq!(s.next_completion(TaskId(2), 10), Some((0, Value::Bool(true))));
-        assert_eq!(s.next_completion(TaskId(1), 10), Some((2, Value::num(2.0))));
-    }
-
-    #[test]
-    fn unknown_ticket_completion_is_error() {
-        let s = store(1000, 100);
-        assert!(s.complete(TicketId(99), Value::Null).is_err());
-    }
+    scheduler_suite!(indexed, |cfg| Box::new(IndexedStore::new(cfg)) as Box<dyn Scheduler>);
+    scheduler_suite!(naive_reference, |cfg| Box::new(NaiveStore::new(cfg)) as Box<dyn Scheduler>);
 }

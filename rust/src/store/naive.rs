@@ -1,0 +1,252 @@
+//! The original O(n)-scan ticket store, kept as the reference
+//! implementation of [`Scheduler`].
+//!
+//! One global mutex over a `BTreeMap<TicketId, Ticket>`; every
+//! `next_ticket` walks all live *and done* tickets to find the minimum
+//! virtual created time, and every `progress`/`wait_results` call walks
+//! the table again.  That is exactly what the paper's MySQL
+//! `SELECT ... ORDER BY vct LIMIT 1` costs without an index, and it is
+//! deliberately preserved: the differential property test
+//! (`rust/tests/properties.rs`) replays random operation sequences
+//! through this store and [`sched::IndexedStore`](super::IndexedStore)
+//! and asserts identical dispatch order, progress counters, and
+//! duplicate accounting.  `benches/store_throughput.rs` measures the
+//! gap.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::store::{
+    deadline_after, wait_deadline, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
+    TicketStatus,
+};
+use crate::util::json::Value;
+
+#[derive(Debug, Default)]
+struct Inner {
+    tickets: BTreeMap<TicketId, Ticket>,
+    next_ticket: u64,
+    errors: Vec<(TicketId, String)>,
+    /// Cumulative count of reports ever recorded (drain-proof).
+    errors_reported: usize,
+    redistributions: u64,
+    duplicate_results: u64,
+    /// FIFO of accepted results, consumed by streaming drivers (the
+    /// hybrid trainer reacts to each client's features as they arrive,
+    /// §4 "learned concurrently").
+    completions: std::collections::VecDeque<(TaskId, usize, Value)>,
+}
+
+/// Thread-safe ticket store with one global lock and linear scans.
+pub struct NaiveStore {
+    cfg: StoreConfig,
+    inner: Mutex<Inner>,
+    /// Signalled on completions so waits can block without polling.
+    done_cv: Condvar,
+}
+
+impl NaiveStore {
+    pub fn new(cfg: StoreConfig) -> Self {
+        Self { cfg, inner: Mutex::new(Inner::default()), done_cv: Condvar::new() }
+    }
+
+    /// Virtual created time of a ticket (the paper's ordering key).
+    fn vct(&self, t: &Ticket) -> u64 {
+        match t.last_distributed_ms {
+            None => t.created_ms,
+            Some(d) => d + self.cfg.requeue_after_ms,
+        }
+    }
+}
+
+impl Scheduler for NaiveStore {
+    fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    fn create_tickets(
+        &self,
+        task: TaskId,
+        task_name: &str,
+        args: Vec<Value>,
+        now_ms: u64,
+    ) -> Vec<TicketId> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut ids = Vec::with_capacity(args.len());
+        for (index, payload) in args.into_iter().enumerate() {
+            let id = TicketId(inner.next_ticket);
+            inner.next_ticket += 1;
+            inner.tickets.insert(
+                id,
+                Ticket {
+                    id,
+                    task,
+                    task_name: task_name.to_string(),
+                    index,
+                    payload,
+                    created_ms: now_ms,
+                    status: TicketStatus::Pending,
+                    last_distributed_ms: None,
+                    distribution_count: 0,
+                    result: None,
+                    assigned_to: None,
+                },
+            );
+            ids.push(id);
+        }
+        ids
+    }
+
+    fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
+        let mut inner = self.inner.lock().unwrap();
+        // Primary: minimum VCT among candidates whose VCT has arrived.
+        let pick = inner
+            .tickets
+            .values()
+            .filter(|t| t.status != TicketStatus::Done)
+            .filter(|t| self.vct(t) <= now_ms)
+            .min_by_key(|t| (self.vct(t), t.id.0))
+            .map(|t| t.id);
+        // Fallback: nothing due -> redistribute the longest-in-flight
+        // ticket, provided it was not distributed in the last
+        // min_redistribute window (the paper's 10 s rule).
+        let pick = pick.or_else(|| {
+            inner
+                .tickets
+                .values()
+                .filter(|t| t.status != TicketStatus::Done)
+                .filter(|t| {
+                    t.last_distributed_ms
+                        .map(|d| now_ms.saturating_sub(d) >= self.cfg.min_redistribute_ms)
+                        .unwrap_or(true)
+                })
+                .min_by_key(|t| (t.last_distributed_ms.unwrap_or(0), t.id.0))
+                .map(|t| t.id)
+        });
+        let id = pick?;
+        let redistribution = {
+            let t = inner.tickets.get(&id).unwrap();
+            t.distribution_count > 0
+        };
+        if redistribution {
+            inner.redistributions += 1;
+        }
+        let t = inner.tickets.get_mut(&id).unwrap();
+        t.status = TicketStatus::InFlight;
+        t.last_distributed_ms = Some(now_ms);
+        t.distribution_count += 1;
+        t.assigned_to = Some(client.to_string());
+        Some(t.clone())
+    }
+
+    fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        let t = match inner.tickets.get_mut(&id) {
+            Some(t) => t,
+            None => bail!("unknown ticket {id:?}"),
+        };
+        if t.status == TicketStatus::Done {
+            inner.duplicate_results += 1;
+            return Ok(false);
+        }
+        t.status = TicketStatus::Done;
+        t.result = Some(result.clone());
+        let (task, index) = (t.task, t.index);
+        inner.completions.push_back((task, index, result));
+        self.done_cv.notify_all();
+        Ok(true)
+    }
+
+    fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
+        let deadline = deadline_after(timeout_ms);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(pos) = inner.completions.iter().position(|(t, _, _)| *t == task) {
+                let (_, index, value) = inner.completions.remove(pos).unwrap();
+                return Some((index, value));
+            }
+            inner = wait_deadline(&self.done_cv, inner, deadline)?;
+        }
+    }
+
+    fn report_error(&self, id: TicketId, report: String) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.errors.push((id, report));
+        inner.errors_reported += 1;
+        let requeue = self.cfg.requeue_on_error;
+        if let Some(t) = inner.tickets.get_mut(&id) {
+            if t.status == TicketStatus::InFlight && requeue {
+                t.status = TicketStatus::Pending;
+                t.last_distributed_ms = None; // VCT back to creation time
+            }
+        }
+        Ok(())
+    }
+
+    fn progress(&self, task: Option<TaskId>) -> Progress {
+        let inner = self.inner.lock().unwrap();
+        let mut p = Progress {
+            redistributions: inner.redistributions,
+            duplicate_results: inner.duplicate_results,
+            errors: inner.errors_reported,
+            ..Default::default()
+        };
+        for t in inner.tickets.values() {
+            if task.map(|id| t.task == id).unwrap_or(true) {
+                p.total += 1;
+                match t.status {
+                    TicketStatus::Pending => p.pending += 1,
+                    TicketStatus::InFlight => p.in_flight += 1,
+                    TicketStatus::Done => p.done += 1,
+                }
+            }
+        }
+        p
+    }
+
+    fn is_task_done(&self, task: TaskId) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tickets
+            .values()
+            .filter(|t| t.task == task)
+            .all(|t| t.status == TicketStatus::Done)
+    }
+
+    fn wait_results_deadline(
+        &self,
+        task: TaskId,
+        deadline: Option<Instant>,
+    ) -> Option<Vec<Value>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let all_done = inner
+                .tickets
+                .values()
+                .filter(|t| t.task == task)
+                .all(|t| t.status == TicketStatus::Done);
+            if all_done {
+                let mut rows: Vec<(usize, Value)> = inner
+                    .tickets
+                    .values()
+                    .filter(|t| t.task == task)
+                    .map(|t| (t.index, t.result.clone().unwrap()))
+                    .collect();
+                rows.sort_by_key(|(i, _)| *i);
+                return Some(rows.into_iter().map(|(_, v)| v).collect());
+            }
+            inner = wait_deadline(&self.done_cv, inner, deadline)?;
+        }
+    }
+
+    fn error_count(&self) -> usize {
+        self.inner.lock().unwrap().errors_reported
+    }
+
+    fn drain_errors(&self) -> Vec<(TicketId, String)> {
+        std::mem::take(&mut self.inner.lock().unwrap().errors)
+    }
+}

@@ -1,0 +1,643 @@
+//! Indexed, sharded scheduling core — the production [`Scheduler`].
+//!
+//! The naive reference store answers every `TicketRequest` with a full
+//! scan over *all* tickets (done ones included) under one global mutex.
+//! This module keeps the paper's §2.1.2 policy bit-for-bit but replaces
+//! the scan with indexes, and splits the state three ways so the hot
+//! paths stop contending:
+//!
+//! * **Dispatch indexes** (one small mutex, [`SchedState`]): a
+//!   VCT-ordered ready set `BTreeSet<(vct, id)>` whose first element is
+//!   the `SELECT ... ORDER BY vct LIMIT 1` answer in O(log n), plus a
+//!   last-distributed fallback set `BTreeSet<(last_dist, id)>` for the
+//!   paper's min-redistribute rule, plus per-ticket scheduling metadata
+//!   (status/clock fields only — no payloads).  Done tickets are evicted
+//!   from both sets, so dispatch cost tracks the *live* ticket count.
+//! * **Ticket bodies** (N lock stripes keyed by `TicketId`): task name,
+//!   payload, creation time.  Payload clones for the wire happen under a
+//!   stripe read lock, never under the dispatch mutex.
+//! * **Per-task ledgers** (one mutex + condvar per task): incrementally
+//!   maintained total/pending/in-flight/done counters (`progress` and
+//!   `is_task_done` are O(1)), the accepted results, and the streaming
+//!   completion FIFO.  Completion waits block on the task's own condvar,
+//!   so finishing one task no longer wakes every waiter in the process.
+//!   Every ticket body carries an `Arc` to its task's ledger, so the
+//!   hot paths never consult the ledger registry (an `RwLock` map that
+//!   only creation and first-time stream subscription write to);
+//!   read-only polls of never-created tasks allocate nothing.
+//!
+//! Lock discipline: no two of {dispatch mutex, stripe lock, ledger
+//! mutex} are ever held at once, so there is no lock-order to violate.
+//! Consequence: per-task ledger counters may lag a dispatch decision by
+//! a few instructions; counters are kept as signed ints and clamped at
+//! the reporting edge, and every quiescent value is exact (asserted by
+//! the differential property suite against [`NaiveStore`]).
+//!
+//! [`NaiveStore`]: super::NaiveStore
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::store::{
+    deadline_after, wait_deadline, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
+    TicketStatus,
+};
+use crate::util::json::Value;
+
+/// Default number of lock stripes for the ticket-body map.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Scheduling metadata — everything `next_ticket` ordering needs,
+/// deliberately payload-free so the dispatch mutex guards only small
+/// state.
+struct Meta {
+    task: TaskId,
+    created_ms: u64,
+    status: TicketStatus,
+    last_distributed_ms: Option<u64>,
+    distribution_count: u32,
+}
+
+#[derive(Default)]
+struct SchedState {
+    meta: HashMap<u64, Meta>,
+    /// (virtual created time, id) for every non-done ticket; the first
+    /// element whose VCT has arrived is the dispatch pick.
+    ready: BTreeSet<(u64, u64)>,
+    /// (last distribution time or 0, id) for every non-done ticket; the
+    /// min-redistribute fallback ordering.
+    fallback: BTreeSet<(u64, u64)>,
+    // Global counters, maintained with the status transitions.
+    total: usize,
+    pending: usize,
+    in_flight: usize,
+    done: usize,
+    redistributions: u64,
+    duplicate_results: u64,
+}
+
+/// Immutable ticket body; mutable scheduling state lives in [`Meta`],
+/// results in the task ledger.
+struct StoredTicket {
+    task: TaskId,
+    task_name: Arc<str>,
+    index: usize,
+    payload: Value,
+    created_ms: u64,
+    /// The owning task's ledger, cached at creation so the hot paths
+    /// (dispatch/complete/requeue) never touch the ledger registry.
+    ledger: Arc<TaskLedger>,
+}
+
+
+#[derive(Default)]
+struct LedgerState {
+    // Signed: a dispatch may decrement `pending` here before the racing
+    // create's increment lands (see module doc); clamped when reported.
+    total: i64,
+    pending: i64,
+    in_flight: i64,
+    done: i64,
+    /// Accepted (index, ticket id, result) triples; sorted by
+    /// (index, id) at collection — id as tie-break so repeated indexes
+    /// (one task fed by several `create_tickets` batches) collect in
+    /// the same order the reference store's id-ordered scan yields.
+    results: Vec<(usize, u64, Value)>,
+    /// Streaming FIFO consumed by `next_completion`.
+    completions: VecDeque<(usize, Value)>,
+}
+
+#[derive(Default)]
+struct TaskLedger {
+    state: Mutex<LedgerState>,
+    cv: Condvar,
+}
+
+/// Virtual created time of a ticket (the paper's ordering key).
+fn vct_of(cfg: &StoreConfig, m: &Meta) -> u64 {
+    match m.last_distributed_ms {
+        None => m.created_ms,
+        Some(d) => d + cfg.requeue_after_ms,
+    }
+}
+
+/// The indexed, sharded ticket store (aliased as
+/// [`TicketStore`](super::TicketStore)).
+pub struct IndexedStore {
+    cfg: StoreConfig,
+    next_id: AtomicU64,
+    sched: Mutex<SchedState>,
+    shards: Vec<RwLock<HashMap<u64, StoredTicket>>>,
+    ledgers: RwLock<HashMap<TaskId, Arc<TaskLedger>>>,
+    errors: Mutex<Vec<(TicketId, String)>>,
+    /// Cumulative reports ever recorded (drain-proof, shown on console).
+    errors_reported: AtomicUsize,
+}
+
+impl IndexedStore {
+    pub fn new(cfg: StoreConfig) -> Self {
+        Self::with_shards(cfg, DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(cfg: StoreConfig, n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        Self {
+            cfg,
+            next_id: AtomicU64::new(0),
+            sched: Mutex::new(SchedState::default()),
+            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            ledgers: RwLock::new(HashMap::new()),
+            errors: Mutex::new(Vec::new()),
+            errors_reported: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &RwLock<HashMap<u64, StoredTicket>> {
+        &self.shards[id as usize % self.shards.len()]
+    }
+
+    /// Get-or-create a task's ledger (read-lock fast path).  Only the
+    /// paths that legitimately materialise a task use this: creation,
+    /// and the streaming consumer that may subscribe before the first
+    /// ticket exists.
+    fn ledger(&self, task: TaskId) -> Arc<TaskLedger> {
+        if let Some(ledger) = self.ledgers.read().unwrap().get(&task) {
+            return Arc::clone(ledger);
+        }
+        Arc::clone(self.ledgers.write().unwrap().entry(task).or_default())
+    }
+
+    /// Read-only ledger lookup: polls for never-created tasks allocate
+    /// nothing (absence means the empty, vacuously-done task).
+    fn ledger_if_exists(&self, task: TaskId) -> Option<Arc<TaskLedger>> {
+        self.ledgers.read().unwrap().get(&task).cloned()
+    }
+
+    /// The dispatch decision (under the sched mutex): same pick as the
+    /// naive scan, from the index tops instead.
+    fn pick(&self, s: &SchedState, now_ms: u64) -> Option<u64> {
+        // Primary: the global (vct, id) minimum, if its VCT has arrived.
+        if let Some(&(vct, id)) = s.ready.iter().next() {
+            if vct <= now_ms {
+                return Some(id);
+            }
+        }
+        // Fallback: ascending (last_distributed, id).  Never-distributed
+        // tickets key at 0 and are always eligible; distributed ones need
+        // the min-redistribute window elapsed.  Eligibility is monotone
+        // against the key, so the scan stops at the first keyed entry
+        // that fails the window — only same-key (0) entries after an
+        // ineligible one can still qualify.
+        for &(key, id) in s.fallback.iter() {
+            let eligible = match s.meta[&id].last_distributed_ms {
+                None => true,
+                Some(d) => now_ms.saturating_sub(d) >= self.cfg.min_redistribute_ms,
+            };
+            if eligible {
+                return Some(id);
+            }
+            if key > 0 {
+                break;
+            }
+        }
+        None
+    }
+}
+
+impl Scheduler for IndexedStore {
+    fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    fn create_tickets(
+        &self,
+        task: TaskId,
+        task_name: &str,
+        args: Vec<Value>,
+        now_ms: u64,
+    ) -> Vec<TicketId> {
+        let n = args.len();
+        let base = self.next_id.fetch_add(n as u64, Ordering::SeqCst);
+        // Ledger first: by the time a ticket is dispatchable (indexed
+        // below), its task totals are already counted.
+        let ledger = self.ledger(task);
+        {
+            let mut st = ledger.state.lock().unwrap();
+            st.total += n as i64;
+            st.pending += n as i64;
+        }
+        // Bodies next, so a dispatch pick always finds its payload.
+        // Consecutive ids round-robin across stripes, so group the batch
+        // and take each stripe lock once; the name is shared, not cloned.
+        let task_name: Arc<str> = Arc::from(task_name);
+        let n_stripes = self.shards.len();
+        let mut by_stripe: Vec<Vec<(u64, usize, Value)>> = vec![Vec::new(); n_stripes];
+        for (index, payload) in args.into_iter().enumerate() {
+            let id = base + index as u64;
+            by_stripe[id as usize % n_stripes].push((id, index, payload));
+        }
+        for (stripe, items) in by_stripe.into_iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[stripe].write().unwrap();
+            for (id, index, payload) in items {
+                shard.insert(
+                    id,
+                    StoredTicket {
+                        task,
+                        task_name: Arc::clone(&task_name),
+                        index,
+                        payload,
+                        created_ms: now_ms,
+                        ledger: Arc::clone(&ledger),
+                    },
+                );
+            }
+        }
+        // Publish to the dispatch indexes last.
+        {
+            let mut s = self.sched.lock().unwrap();
+            for id in base..base + n as u64 {
+                s.meta.insert(
+                    id,
+                    Meta {
+                        task,
+                        created_ms: now_ms,
+                        status: TicketStatus::Pending,
+                        last_distributed_ms: None,
+                        distribution_count: 0,
+                    },
+                );
+                s.ready.insert((now_ms, id));
+                s.fallback.insert((0, id));
+            }
+            s.total += n;
+            s.pending += n;
+        }
+        (base..base + n as u64).map(TicketId).collect()
+    }
+
+    fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
+        let (id, count, was_pending) = {
+            let mut s = self.sched.lock().unwrap();
+            let id = self.pick(&s, now_ms)?;
+            let m = s.meta.get_mut(&id).expect("picked ticket has meta");
+            let old_vct = vct_of(&self.cfg, m);
+            let old_fkey = m.last_distributed_ms.unwrap_or(0);
+            let redistribution = m.distribution_count > 0;
+            let was_pending = m.status == TicketStatus::Pending;
+            m.status = TicketStatus::InFlight;
+            m.last_distributed_ms = Some(now_ms);
+            m.distribution_count += 1;
+            let count = m.distribution_count;
+            s.ready.remove(&(old_vct, id));
+            s.ready.insert((now_ms + self.cfg.requeue_after_ms, id));
+            s.fallback.remove(&(old_fkey, id));
+            s.fallback.insert((now_ms, id));
+            if redistribution {
+                s.redistributions += 1;
+            }
+            if was_pending {
+                s.pending -= 1;
+                s.in_flight += 1;
+            }
+            (id, count, was_pending)
+        };
+        let (ticket, ledger) = {
+            let shard = self.shard(id).read().unwrap();
+            let body = shard.get(&id).expect("indexed ticket has a stored body");
+            (
+                Ticket {
+                    id: TicketId(id),
+                    task: body.task,
+                    task_name: body.task_name.to_string(),
+                    index: body.index,
+                    payload: body.payload.clone(),
+                    created_ms: body.created_ms,
+                    status: TicketStatus::InFlight,
+                    last_distributed_ms: Some(now_ms),
+                    distribution_count: count,
+                    result: None,
+                    assigned_to: Some(client.to_string()),
+                },
+                Arc::clone(&body.ledger),
+            )
+        };
+        if was_pending {
+            let mut st = ledger.state.lock().unwrap();
+            st.pending -= 1;
+            st.in_flight += 1;
+        }
+        Some(ticket)
+    }
+
+    fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
+        let (index, ledger) = {
+            let shard = self.shard(id.0).read().unwrap();
+            match shard.get(&id.0) {
+                Some(t) => (t.index, Arc::clone(&t.ledger)),
+                None => bail!("unknown ticket {id:?}"),
+            }
+        };
+        let was_pending = {
+            let mut s = self.sched.lock().unwrap();
+            let status = match s.meta.get(&id.0) {
+                Some(m) => m.status,
+                None => bail!("unknown ticket {id:?}"),
+            };
+            if status == TicketStatus::Done {
+                s.duplicate_results += 1;
+                return Ok(false);
+            }
+            let m = s.meta.get_mut(&id.0).expect("checked above");
+            let was_pending = m.status == TicketStatus::Pending;
+            let old_vct = vct_of(&self.cfg, m);
+            let old_fkey = m.last_distributed_ms.unwrap_or(0);
+            m.status = TicketStatus::Done;
+            // Evict from the scan path: done tickets cost dispatch nothing.
+            s.ready.remove(&(old_vct, id.0));
+            s.fallback.remove(&(old_fkey, id.0));
+            if was_pending {
+                s.pending -= 1;
+            } else {
+                s.in_flight -= 1;
+            }
+            s.done += 1;
+            was_pending
+        };
+        {
+            let mut st = ledger.state.lock().unwrap();
+            if was_pending {
+                st.pending -= 1;
+            } else {
+                st.in_flight -= 1;
+            }
+            st.done += 1;
+            st.results.push((index, id.0, result.clone()));
+            st.completions.push_back((index, result));
+        }
+        ledger.cv.notify_all();
+        Ok(true)
+    }
+
+    fn report_error(&self, id: TicketId, report: String) -> Result<()> {
+        self.errors.lock().unwrap().push((id, report));
+        self.errors_reported.fetch_add(1, Ordering::Relaxed);
+        if !self.cfg.requeue_on_error {
+            return Ok(());
+        }
+        let requeued = {
+            let mut s = self.sched.lock().unwrap();
+            let info = match s.meta.get_mut(&id.0) {
+                Some(m) if m.status == TicketStatus::InFlight => {
+                    let old_vct = vct_of(&self.cfg, m);
+                    let old_fkey = m.last_distributed_ms.unwrap_or(0);
+                    m.status = TicketStatus::Pending;
+                    m.last_distributed_ms = None; // VCT back to creation time
+                    Some((old_vct, old_fkey, m.created_ms))
+                }
+                _ => None,
+            };
+            if let Some((old_vct, old_fkey, created_ms)) = info {
+                s.ready.remove(&(old_vct, id.0));
+                s.ready.insert((created_ms, id.0));
+                s.fallback.remove(&(old_fkey, id.0));
+                s.fallback.insert((0, id.0));
+                s.in_flight -= 1;
+                s.pending += 1;
+                true
+            } else {
+                false
+            }
+        };
+        if requeued {
+            let ledger = {
+                let shard = self.shard(id.0).read().unwrap();
+                let body = shard.get(&id.0).expect("requeued ticket has a stored body");
+                Arc::clone(&body.ledger)
+            };
+            let mut st = ledger.state.lock().unwrap();
+            st.in_flight -= 1;
+            st.pending += 1;
+        }
+        Ok(())
+    }
+
+    fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
+        let deadline = deadline_after(timeout_ms);
+        let ledger = self.ledger(task);
+        let mut st = ledger.state.lock().unwrap();
+        loop {
+            if let Some(front) = st.completions.pop_front() {
+                return Some(front);
+            }
+            st = wait_deadline(&ledger.cv, st, deadline)?;
+        }
+    }
+
+    fn progress(&self, task: Option<TaskId>) -> Progress {
+        let errors = self.errors_reported.load(Ordering::Relaxed);
+        let (redistributions, duplicate_results) = {
+            let s = self.sched.lock().unwrap();
+            match task {
+                None => {
+                    return Progress {
+                        total: s.total,
+                        pending: s.pending,
+                        in_flight: s.in_flight,
+                        done: s.done,
+                        errors,
+                        redistributions: s.redistributions,
+                        duplicate_results: s.duplicate_results,
+                    }
+                }
+                // Per-task progress still reports the store-wide
+                // redistribution/duplicate counters (console parity with
+                // the reference store).
+                Some(_) => (s.redistributions, s.duplicate_results),
+            }
+        };
+        let mut p = Progress {
+            errors,
+            redistributions,
+            duplicate_results,
+            ..Default::default()
+        };
+        if let Some(ledger) = self.ledger_if_exists(task.expect("task filter present")) {
+            let st = ledger.state.lock().unwrap();
+            let clamp = |v: i64| v.max(0) as usize;
+            p.total = clamp(st.total);
+            p.pending = clamp(st.pending);
+            p.in_flight = clamp(st.in_flight);
+            p.done = clamp(st.done);
+        }
+        p
+    }
+
+    fn is_task_done(&self, task: TaskId) -> bool {
+        match self.ledger_if_exists(task) {
+            Some(ledger) => {
+                let st = ledger.state.lock().unwrap();
+                st.done == st.total
+            }
+            // Never-created task: vacuously done (reference-store parity).
+            None => true,
+        }
+    }
+
+    fn wait_results_deadline(
+        &self,
+        task: TaskId,
+        deadline: Option<Instant>,
+    ) -> Option<Vec<Value>> {
+        let ledger = match self.ledger_if_exists(task) {
+            Some(ledger) => ledger,
+            // Zero tickets: immediately complete with no results, like
+            // the reference store's vacuous all-done scan.
+            None => return Some(Vec::new()),
+        };
+        let mut st = ledger.state.lock().unwrap();
+        loop {
+            if st.done == st.total {
+                let mut rows = st.results.clone();
+                rows.sort_by_key(|&(index, id, _)| (index, id));
+                return Some(rows.into_iter().map(|(_, _, v)| v).collect());
+            }
+            st = wait_deadline(&ledger.cv, st, deadline)?;
+        }
+    }
+
+    fn error_count(&self) -> usize {
+        self.errors_reported.load(Ordering::Relaxed)
+    }
+
+    fn drain_errors(&self) -> Vec<(TicketId, String)> {
+        std::mem::take(&mut *self.errors.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> StoreConfig {
+        StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 100, requeue_on_error: true }
+    }
+
+    /// The index tops must track every transition: dispatch, timeout
+    /// redistribution, error requeue, completion eviction.
+    #[test]
+    fn indexes_follow_ticket_lifecycle() {
+        let s = IndexedStore::with_shards(cfg(), 4);
+        let ids =
+            s.create_tickets(TaskId(1), "t", (0..3).map(|i| Value::num(i as f64)).collect(), 0);
+        {
+            let st = s.sched.lock().unwrap();
+            assert_eq!(st.ready.len(), 3);
+            assert_eq!(st.fallback.len(), 3);
+            assert_eq!(st.ready.iter().next(), Some(&(0, ids[0].0)));
+        }
+        let t = s.next_ticket("c", 5).unwrap();
+        assert_eq!(t.id, ids[0]);
+        {
+            let st = s.sched.lock().unwrap();
+            // Dispatched ticket re-keyed to now + requeue window.
+            assert!(st.ready.contains(&(1005, ids[0].0)));
+            assert!(st.fallback.contains(&(5, ids[0].0)));
+        }
+        // Error requeue: VCT back to creation time, fallback key to 0.
+        s.report_error(ids[0], "boom".into()).unwrap();
+        {
+            let st = s.sched.lock().unwrap();
+            assert!(st.ready.contains(&(0, ids[0].0)));
+            assert!(st.fallback.contains(&(0, ids[0].0)));
+        }
+        // Completion evicts from both indexes.
+        let t = s.next_ticket("c", 6).unwrap();
+        assert_eq!(t.id, ids[0]);
+        s.complete(ids[0], Value::Null).unwrap();
+        {
+            let st = s.sched.lock().unwrap();
+            assert_eq!(st.ready.len(), 2);
+            assert_eq!(st.fallback.len(), 2);
+            assert!(!st.ready.iter().any(|&(_, id)| id == ids[0].0));
+        }
+    }
+
+    /// Ticket ids spread across stripes, and bodies are found regardless
+    /// of the stripe count.
+    #[test]
+    fn striping_covers_all_tickets() {
+        for shards in [1, 3, 16] {
+            let s = IndexedStore::with_shards(cfg(), shards);
+            let ids = s.create_tickets(
+                TaskId(1),
+                "t",
+                (0..20).map(|i| Value::num(i as f64)).collect(),
+                0,
+            );
+            for (i, id) in ids.iter().enumerate() {
+                let t = s.next_ticket("c", i as u64).unwrap();
+                assert_eq!(t.id, *id);
+                assert_eq!(t.index, i);
+            }
+        }
+    }
+
+    /// Concurrent clients hammering dispatch/complete across stripes
+    /// neither lose nor double-complete tickets.
+    #[test]
+    fn concurrent_dispatch_is_exact() {
+        let s = Arc::new(IndexedStore::new(StoreConfig {
+            requeue_after_ms: 600_000,
+            min_redistribute_ms: 600_000,
+            requeue_on_error: true,
+        }));
+        let n = 800usize;
+        s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    let client = format!("c{w}");
+                    let mut served = 0u64;
+                    while let Some(t) = s.next_ticket(&client, 1) {
+                        assert!(s.complete(t.id, Value::num(t.index as f64)).unwrap());
+                        served += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, n as u64);
+        let p = s.progress(None);
+        assert_eq!(p.done, n);
+        assert_eq!(p.duplicate_results, 0);
+        assert_eq!(s.wait_results(TaskId(1)).len(), n);
+    }
+
+    /// O(1) progress counters match a recount after a mixed workload.
+    #[test]
+    fn ledger_counters_match_recount() {
+        let s = IndexedStore::new(cfg());
+        let a = s.create_tickets(TaskId(1), "a", (0..4).map(|_| Value::Null).collect(), 0);
+        let _b = s.create_tickets(TaskId(2), "b", (0..2).map(|_| Value::Null).collect(), 0);
+        let _ = s.next_ticket("c", 0);
+        let _ = s.next_ticket("c", 1);
+        s.complete(a[0], Value::Null).unwrap();
+        let p1 = s.progress(Some(TaskId(1)));
+        assert_eq!((p1.total, p1.pending, p1.in_flight, p1.done), (4, 2, 1, 1));
+        let p2 = s.progress(Some(TaskId(2)));
+        assert_eq!((p2.total, p2.pending, p2.in_flight, p2.done), (2, 2, 0, 0));
+        let g = s.progress(None);
+        assert_eq!((g.total, g.pending, g.in_flight, g.done), (6, 4, 1, 1));
+        assert!(s.is_task_done(TaskId(3)), "empty task is vacuously done");
+        assert!(!s.is_task_done(TaskId(1)));
+    }
+}

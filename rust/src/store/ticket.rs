@@ -20,7 +20,7 @@ pub enum TicketStatus {
     Done,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Ticket {
     pub id: TicketId,
     pub task: TaskId,

@@ -105,7 +105,7 @@ pub mod project {
     use crate::coordinator::{Distributor, Framework};
     use crate::data::Dataset;
     use crate::runtime::SharedRuntime;
-    use crate::store::StoreConfig;
+    use crate::store::{Scheduler as _, StoreConfig};
     use crate::transport::{local, Conn, LinkModel};
     use crate::util::json::Value;
     use crate::worker::{DeviceProfile, Worker, WorkerReport};

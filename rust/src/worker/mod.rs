@@ -287,6 +287,7 @@ fn stack_trace_of(e: &anyhow::Error) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::{Distributor, Framework};
+    use crate::store::Scheduler as _;
     use crate::tasks::is_prime::IsPrimeTask;
     use crate::tasks::{TaskOutput};
     use crate::transport::{local, LinkModel};
@@ -356,7 +357,7 @@ mod tests {
         assert_eq!(report.errors_reported, 1);
         assert_eq!(report.reloads, 1);
         assert_eq!(report.tickets_completed, 2);
-        assert_eq!(fw.store().errors().len(), 1);
+        assert_eq!(fw.store().error_count(), 1);
         assert_eq!(fw.store().progress(None).done, 2);
     }
 

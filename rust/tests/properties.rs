@@ -2,7 +2,9 @@
 //! coordinator's invariants and the substrate codecs.
 
 use sashimi::prop_assert;
-use sashimi::store::{StoreConfig, TaskId, TicketStatus, TicketStore};
+use sashimi::store::{
+    IndexedStore, NaiveStore, Scheduler, StoreConfig, TaskId, TicketId, TicketStatus, TicketStore,
+};
 use sashimi::util::json::Value;
 use sashimi::util::lru::LruCache;
 use sashimi::util::proptest::check;
@@ -105,6 +107,122 @@ fn store_never_loses_or_duplicates_tickets() {
             );
         }
         let _ = ids;
+        Ok(())
+    });
+}
+
+/// Differential test: the indexed, sharded scheduler and the naive
+/// O(n)-scan reference must be observably identical — same dispatch
+/// order and ticket contents, same progress counters, same duplicate
+/// and error accounting — across random operation sequences (create /
+/// next_ticket / complete / report_error) at random clocks.
+#[test]
+fn indexed_scheduler_matches_naive_reference() {
+    check("sched-differential", 256, |rng| {
+        let cfg = StoreConfig {
+            requeue_after_ms: 20 + rng.gen_range(300),
+            min_redistribute_ms: rng.gen_range(80),
+            requeue_on_error: rng.gen_range(2) == 0,
+        };
+        let indexed = IndexedStore::with_shards(cfg.clone(), 1 + rng.gen_range(8) as usize);
+        let naive = NaiveStore::new(cfg);
+        let tasks = [TaskId(1), TaskId(2), TaskId(3)];
+        let mut now = 0u64;
+        let mut created: Vec<TicketId> = Vec::new();
+        for step in 0..160u64 {
+            match rng.gen_range(8) {
+                0 | 1 => {
+                    let task = tasks[rng.gen_range(3) as usize];
+                    let n = 1 + rng.gen_range(3);
+                    let args: Vec<Value> =
+                        (0..n).map(|i| Value::num((step * 10 + i) as f64)).collect();
+                    let a = indexed.create_tickets(task, "t", args.clone(), now);
+                    let b = naive.create_tickets(task, "t", args, now);
+                    prop_assert!(a == b, "created ids diverge: {a:?} vs {b:?}");
+                    created.extend(a);
+                }
+                2 | 3 | 4 => {
+                    let client = format!("c{}", rng.gen_range(4));
+                    let a = indexed.next_ticket(&client, now);
+                    let b = naive.next_ticket(&client, now);
+                    prop_assert!(a == b, "dispatch diverges at t={now}: {a:?} vs {b:?}");
+                }
+                5 => {
+                    // A random known ticket — or, now and then, an unknown id.
+                    let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                        created[rng.gen_range(created.len() as u64) as usize]
+                    } else {
+                        TicketId(created.len() as u64 + 1_000)
+                    };
+                    let v = Value::num(id.0 as f64);
+                    let a = indexed.complete(id, v.clone());
+                    let b = naive.complete(id, v);
+                    prop_assert!(
+                        a.is_err() == b.is_err(),
+                        "complete() error status diverges on {id:?}"
+                    );
+                    if let (Ok(x), Ok(y)) = (a, b) {
+                        prop_assert!(x == y, "first-result-wins diverges on {id:?}");
+                    }
+                }
+                6 => {
+                    let id = if created.is_empty() {
+                        TicketId(7_777)
+                    } else {
+                        created[rng.gen_range(created.len() as u64) as usize]
+                    };
+                    indexed.report_error(id, "e".into()).map_err(|e| e.to_string())?;
+                    naive.report_error(id, "e".into()).map_err(|e| e.to_string())?;
+                }
+                _ => now += rng.gen_range(150),
+            }
+            let (gp, gq) = (indexed.progress(None), naive.progress(None));
+            prop_assert!(gp == gq, "global progress diverges at step {step}: {gp:?} vs {gq:?}");
+            for task in tasks {
+                let (tp, tq) = (indexed.progress(Some(task)), naive.progress(Some(task)));
+                prop_assert!(tp == tq, "progress for {task:?} diverges: {tp:?} vs {tq:?}");
+                prop_assert!(
+                    indexed.is_task_done(task) == naive.is_task_done(task),
+                    "is_task_done diverges for {task:?}"
+                );
+            }
+        }
+        // Drain both along an identical path; collected results and the
+        // error ledgers must then agree per task.
+        for _ in 0..20_000 {
+            now += 17;
+            let a = indexed.next_ticket("drain", now);
+            let b = naive.next_ticket("drain", now);
+            prop_assert!(a == b, "drain dispatch diverges at t={now}");
+            match a {
+                Some(t) => {
+                    let x = indexed
+                        .complete(t.id, Value::num(t.index as f64))
+                        .map_err(|e| e.to_string())?;
+                    let y = naive
+                        .complete(t.id, Value::num(t.index as f64))
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(x == y, "drain completion accounting diverges on {:?}", t.id);
+                }
+                None => {
+                    if tasks.iter().all(|&t| indexed.is_task_done(t)) {
+                        break;
+                    }
+                }
+            }
+        }
+        for task in tasks {
+            prop_assert!(indexed.is_task_done(task), "drain left {task:?} unfinished");
+            let a = indexed.wait_results_timeout(task, 0);
+            let b = naive.wait_results_timeout(task, 0);
+            prop_assert!(a == b, "collected results diverge for {task:?}");
+        }
+        prop_assert!(
+            indexed.error_count() == naive.error_count(),
+            "cumulative error counts diverge"
+        );
+        let (ea, eb) = (indexed.drain_errors(), naive.drain_errors());
+        prop_assert!(ea == eb, "buffered error reports diverge");
         Ok(())
     });
 }
