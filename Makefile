@@ -3,7 +3,7 @@
 
 ARTIFACTS := artifacts/manifest.json
 
-.PHONY: artifacts test bench bench-store fmt
+.PHONY: artifacts test bench bench-store fmt doc
 
 artifacts: $(ARTIFACTS)
 
@@ -23,3 +23,7 @@ bench-store:
 
 fmt:
 	cargo fmt --check
+
+# API docs, warning-free (the advisory CI step runs the same command).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

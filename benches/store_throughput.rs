@@ -1,6 +1,9 @@
 //! Dispatch throughput of the scheduling core: the indexed, sharded
 //! [`IndexedStore`] vs the O(n)-scan [`NaiveStore`] reference, at
-//! 1k/100k/1M live tickets under 1–16 concurrent clients.
+//! 1k/100k/1M live tickets under 1–16 concurrent clients — plus the
+//! durability tax: the same protocol through [`WalStore`] under each
+//! fsync policy (WAL-off / OS-cache / group-commit / fsync-per-record),
+//! so EXPERIMENTS.md §WAL records what `--state-dir` costs.
 //!
 //! Protocol: each client thread runs dispatch→error-requeue cycles
 //! (`next_ticket` + `report_error`) for a fixed wall-clock window.  The
@@ -18,7 +21,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use sashimi::store::{IndexedStore, NaiveStore, Scheduler, StoreConfig, TaskId};
+use sashimi::store::{
+    IndexedStore, NaiveStore, Scheduler, StoreConfig, SyncPolicy, TaskId, WalConfig, WalStore,
+};
 use sashimi::util::bench::Table;
 use sashimi::util::clock;
 use sashimi::util::json::Value;
@@ -83,6 +88,21 @@ fn measure(store: Arc<dyn Scheduler>, clients: usize, window_ms: u64) -> f64 {
     total as f64 / elapsed
 }
 
+/// A WAL store in a throwaway directory under the OS temp dir.
+fn wal_store(sync: SyncPolicy, tag: &str) -> (WalStore, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!("sashimi-bench-wal-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let wal_cfg = WalConfig {
+        sync,
+        segment_max_bytes: 64 << 20,
+        // No checkpoints inside the measurement window: the table is the
+        // pure append/fsync overhead (checkpoint cost amortises over
+        // `checkpoint_every`, far beyond a 700 ms window).
+        checkpoint_every: 0,
+    };
+    (WalStore::open(&dir, quiet_cfg(), wal_cfg).expect("bench WAL store"), dir)
+}
+
 fn main() {
     let quick = std::env::var("STORE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     // Quick mode still covers 100k: that is the acceptance point.
@@ -117,5 +137,57 @@ fn main() {
     table.print();
     println!(
         "Acceptance floor: indexed >= 10x naive at 100k live tickets; record the table in EXPERIMENTS.md.\n"
+    );
+
+    // ---- Durability tax: the same dispatch protocol through the WAL ----
+    let wal_sizes: Vec<usize> = if quick { vec![1_000] } else { vec![1_000, 100_000] };
+    let wal_clients = [1usize, 4];
+    let variants: [(&str, Option<SyncPolicy>); 4] = [
+        ("wal-off", None),
+        ("os-cache", Some(SyncPolicy::OsOnly)),
+        ("group-10ms", Some(SyncPolicy::GroupCommitMs(10))),
+        ("fsync-each", Some(SyncPolicy::EveryRecord)),
+    ];
+    let mut wal_table = Table::new(
+        "WAL overhead (tickets/sec dispatched, dispatch+requeue cycles)",
+        &["live tickets", "clients", "variant", "t/s", "vs wal-off"],
+    );
+    for &n in &wal_sizes {
+        for &c in &wal_clients {
+            let mut baseline = 0.0f64;
+            for (name, sync) in variants {
+                let (tps, cleanup) = match sync {
+                    None => {
+                        let store: Arc<dyn Scheduler> = Arc::new(IndexedStore::new(quiet_cfg()));
+                        fill(store.as_ref(), n);
+                        (measure(store, c, window_ms), None)
+                    }
+                    Some(policy) => {
+                        let (store, dir) = wal_store(policy, &format!("{n}-{c}-{name}"));
+                        let store: Arc<dyn Scheduler> = Arc::new(store);
+                        fill(store.as_ref(), n);
+                        (measure(store, c, window_ms), Some(dir))
+                    }
+                };
+                if sync.is_none() {
+                    baseline = tps;
+                }
+                wal_table.row(&[
+                    n.to_string(),
+                    c.to_string(),
+                    name.to_string(),
+                    format!("{tps:.0}"),
+                    format!("{:.2}x", tps / baseline.max(1e-9)),
+                ]);
+                if let Some(dir) = cleanup {
+                    let _ = std::fs::remove_dir_all(&dir);
+                }
+            }
+        }
+    }
+    wal_table.print();
+    println!(
+        "WAL variants: os-cache survives process crashes, group-10ms bounds power-loss \
+         data loss to 10 ms, fsync-each survives power loss per record (DESIGN.md §2.2).\n"
     );
 }

@@ -70,7 +70,10 @@ fn main() -> anyhow::Result<()> {
     println!("... {} primes below 10,000 in {:.2}s across 4 browser nodes", primes.len(), elapsed);
     assert_eq!(primes.len(), 1229); // π(10000)
 
+    // Per-render console is counters-only; the client table is the
+    // one-shot end-of-run view.
     println!("\n{}", console::render(&console::snapshot(&dist)));
+    print!("{}", console::render_clients(&dist));
     for w in workers {
         let report = w.join().unwrap();
         println!(

@@ -9,12 +9,24 @@ pool size is the structural quantity this model exists to measure
 (O(n) scan vs O(log n) index).  Regenerate native numbers with
 `make bench-store` on a machine with cargo.
 
+A second table models the WAL variants of rust/src/store/wal.rs: the
+indexed core with one CRC-framed binary record appended per mutation,
+under the three durability policies the Rust bench measures (os-cache =
+write+flush only, group commit = fsync every 10 ms, fsync per record).
+The structural quantity is the *relative* throughput vs wal-off — the
+append is the same `[len][crc32][payload]` frame the Rust store writes,
+and fsync cost is the real filesystem's, identical in both stacks.
+
 Usage: python bench_store_model.py [--quick]
 """
 
 import heapq
+import os
+import struct
 import sys
+import tempfile
 import time
+import zlib
 
 REQUEUE_AFTER_MS = 10**12
 MIN_REDISTRIBUTE_MS = 10**12
@@ -101,6 +113,49 @@ class IndexedModel:
             self._push(tid)
 
 
+class WalModel:
+    """IndexedModel plus one framed, CRC'd log record per mutation —
+    the same `[len u32][crc32 u32][payload]` layout as store/wal.rs.
+
+    mode: "os"    -> write + flush per record, never fsync (OsOnly)
+          "group" -> write + flush per record, fsync every 10 ms
+          "fsync" -> write + flush + fsync per record (EveryRecord)
+    """
+
+    GROUP_COMMIT_S = 0.010
+
+    def __init__(self, n, path, mode):
+        self.inner = IndexedModel(n)
+        self.f = open(path, "wb")
+        self.mode = mode
+        self.last_sync = time.perf_counter()
+
+    def _append(self, op, tid, now):
+        payload = struct.pack("<BQQ", op, tid, now)
+        self.f.write(struct.pack("<II", len(payload), zlib.crc32(payload)) + payload)
+        self.f.flush()
+        if self.mode == "fsync":
+            os.fsync(self.f.fileno())
+        elif self.mode == "group":
+            t = time.perf_counter()
+            if t - self.last_sync >= self.GROUP_COMMIT_S:
+                os.fsync(self.f.fileno())
+                self.last_sync = t
+
+    def next_ticket(self, now):
+        tid = self.inner.next_ticket(now)
+        if tid is not None:
+            self._append(3, tid, now)  # OP_DISPATCH
+        return tid
+
+    def report_error(self, tid):
+        self.inner.report_error(tid)
+        self._append(5, tid, 0)  # OP_ERROR
+
+    def close(self):
+        self.f.close()
+
+
 def measure(store, window_s=1.0):
     t0 = time.perf_counter()
     ops = 0
@@ -122,6 +177,20 @@ def main():
         naive = measure(NaiveModel(n))
         indexed = measure(IndexedModel(n))
         print(f"{n:>12} {naive:>12.0f} {indexed:>12.0f} {indexed / max(naive, 1e-9):>8.1f}x")
+
+    # WAL overhead at the small pool (the index cost is flat; the append
+    # and fsync costs are what this table isolates).
+    n = 1_000
+    print()
+    print(f"{'variant':>12} {'t/s':>12} {'vs wal-off':>11}")
+    baseline = measure(IndexedModel(n))
+    print(f"{'wal-off':>12} {baseline:>12.0f} {'1.00x':>11}")
+    with tempfile.TemporaryDirectory(prefix="sashimi-wal-model-") as d:
+        for mode, label in [("os", "os-cache"), ("group", "group-10ms"), ("fsync", "fsync-each")]:
+            store = WalModel(n, os.path.join(d, f"{mode}.log"), mode)
+            tps = measure(store)
+            store.close()
+            print(f"{label:>12} {tps:>12.0f} {tps / max(baseline, 1e-9):>10.2f}x")
 
 
 if __name__ == "__main__":

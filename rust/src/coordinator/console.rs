@@ -1,35 +1,56 @@
 //! The control console (§2.1.2): progress, clients, errors — the view
 //! the paper's HTTPServer renders with responsive web design; here a
-//! plain-text snapshot (printed by `sashimi console` / examples) since
+//! plain-text snapshot (printed by `sashimi serve` / examples) since
 //! there is no browser to style for.
+//!
+//! The per-render snapshot is built entirely from counters — the
+//! distributor's atomics, the store's O(1) [`Progress`], the client
+//! *count*, and the drained error buffer — so rendering the console on a
+//! busy coordinator clones no per-client map (the `Distributor::clients`
+//! vec-clone pattern retired here matches the earlier
+//! `errors()`→`error_count`/`drain_errors` retirement).  The full
+//! per-client table is still available on demand via [`render_clients`].
 
 use crate::coordinator::distributor::Distributor;
-use crate::store::{Progress, Scheduler as _};
+use crate::store::{Progress, Scheduler as _, TicketId};
 
-/// A renderable snapshot of a running distributor.
+/// How many drained error reports one render prints before eliding.
+const MAX_ERRORS_SHOWN: usize = 5;
+
+/// A renderable snapshot of a running distributor, counters only.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
     pub progress: Progress,
-    pub clients: Vec<(String, String, u64, u64, u64)>, // id, profile, tickets, results, errors
+    /// Number of clients that have sent Hello.
+    pub clients: usize,
     pub tickets_served: u64,
     pub results_accepted: u64,
     pub duplicates: u64,
     pub errors: u64,
+    /// Error reports drained from the store buffer by this snapshot (the
+    /// console is the buffer's consumer, like the paper's error list);
+    /// the cumulative `progress.errors` counter is unaffected.
+    pub recent_errors: Vec<(TicketId, String)>,
 }
 
 pub fn snapshot(d: &Distributor) -> Snapshot {
     use std::sync::atomic::Ordering;
+    let recent_errors = d.store().drain_errors();
+    // The drain is destructive and `render` elides beyond a cap.  The
+    // distributor already warn-logs each report's message at arrival,
+    // so messages survive any log level; the full bodies (stack traces)
+    // additionally land in the debug log when it is enabled.
+    for (id, report) in &recent_errors {
+        crate::log_debug!("console", "error report {id:?}: {report}");
+    }
     Snapshot {
         progress: d.store().progress(None),
-        clients: d
-            .clients()
-            .into_iter()
-            .map(|c| (c.client, c.profile, c.tickets_served, c.results, c.errors))
-            .collect(),
+        clients: d.client_count(),
         tickets_served: d.stats.tickets_served.load(Ordering::Relaxed),
         results_accepted: d.stats.results_accepted.load(Ordering::Relaxed),
         duplicates: d.stats.results_duplicate.load(Ordering::Relaxed),
         errors: d.stats.errors_reported.load(Ordering::Relaxed),
+        recent_errors,
     }
 }
 
@@ -47,14 +68,34 @@ pub fn render(s: &Snapshot) -> String {
         s.progress.duplicate_results,
     ));
     out.push_str(&format!(
-        "distributor: {} served | {} accepted | {} duplicates | {} errors\n",
-        s.tickets_served, s.results_accepted, s.duplicates, s.errors
+        "distributor: {} clients | {} served | {} accepted | {} duplicates | {} errors\n",
+        s.clients, s.tickets_served, s.results_accepted, s.duplicates, s.errors
     ));
-    out.push_str("clients:\n");
-    let mut clients = s.clients.clone();
-    clients.sort();
-    for (id, profile, t, r, e) in &clients {
-        out.push_str(&format!("  {id:<12} {profile:<10} tickets={t:<6} results={r:<6} errors={e}\n"));
+    for (id, report) in s.recent_errors.iter().take(MAX_ERRORS_SHOWN) {
+        let first_line = report.lines().next().unwrap_or("");
+        out.push_str(&format!("  error {id:?}: {first_line}\n"));
+    }
+    if s.recent_errors.len() > MAX_ERRORS_SHOWN {
+        out.push_str(&format!(
+            "  (+{} more; messages were logged at arrival)\n",
+            s.recent_errors.len() - MAX_ERRORS_SHOWN
+        ));
+    }
+    out
+}
+
+/// The on-demand per-client table (the paper's client-info view).  This
+/// is the one place that clones the client map — call it from one-shot
+/// reports (examples, end-of-run summaries), not per-render loops.
+pub fn render_clients(d: &Distributor) -> String {
+    let mut clients = d.clients();
+    clients.sort_by(|a, b| a.client.cmp(&b.client));
+    let mut out = String::from("clients:\n");
+    for c in &clients {
+        out.push_str(&format!(
+            "  {:<12} {:<10} tickets={:<6} results={:<6} errors={}\n",
+            c.client, c.profile, c.tickets_served, c.results, c.errors
+        ));
     }
     out
 }
@@ -67,16 +108,35 @@ mod tests {
     fn render_contains_counts() {
         let s = Snapshot {
             progress: Progress { total: 10, pending: 3, in_flight: 2, done: 5, ..Default::default() },
-            clients: vec![("w1".into(), "tablet".into(), 4, 3, 1)],
+            clients: 3,
             tickets_served: 6,
             results_accepted: 5,
             duplicates: 1,
             errors: 1,
+            recent_errors: vec![(TicketId(4), "TypeError: x is undefined\nat task.run".into())],
         };
         let text = render(&s);
         assert!(text.contains("10 total"));
         assert!(text.contains("5 executed"));
-        assert!(text.contains("w1"));
-        assert!(text.contains("tablet"));
+        assert!(text.contains("3 clients"));
+        assert!(text.contains("TypeError: x is undefined"));
+        assert!(!text.contains("at task.run"), "only the first line of a report renders");
+    }
+
+    #[test]
+    fn long_error_lists_are_elided() {
+        let s = Snapshot {
+            progress: Progress::default(),
+            clients: 0,
+            tickets_served: 0,
+            results_accepted: 0,
+            duplicates: 0,
+            errors: 9,
+            recent_errors: (0..9).map(|i| (TicketId(i), format!("e{i}"))).collect(),
+        };
+        let text = render(&s);
+        assert!(text.contains("e4"));
+        assert!(!text.contains("e5"), "reports beyond the cap elide");
+        assert!(text.contains("(+4 more"));
     }
 }

@@ -100,8 +100,16 @@ impl Distributor {
         self.stop.load(Ordering::SeqCst)
     }
 
+    /// Clone the per-client table.  On-demand reporting only
+    /// ([`crate::coordinator::console::render_clients`]); per-render
+    /// paths use [`Self::client_count`] and the stats atomics instead.
     pub fn clients(&self) -> Vec<ClientInfo> {
         self.clients.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Number of clients that have sent Hello (O(1), no cloning).
+    pub fn client_count(&self) -> usize {
+        self.clients.lock().unwrap().len()
     }
 
     pub fn store(&self) -> &Arc<dyn Scheduler> {

@@ -60,11 +60,15 @@ impl FrameworkBuilder {
             Some(s) => s,
             None => Arc::new(TicketStore::new(self.store_cfg)),
         };
+        // A recovered durable store may already hold tasks: fresh ids
+        // start above them so a new project never merges into a
+        // recovered ledger (use [`Framework::attach_task`] for those).
+        let next_task = store.max_task_id().map(|t| t.0 + 1).unwrap_or(1);
         Arc::new(Framework {
             store,
             registry: Arc::new(std::sync::Mutex::new(self.registry)),
             datasets: Arc::new(DatasetStore::new()),
-            next_task: AtomicU64::new(1),
+            next_task: AtomicU64::new(next_task),
         })
     }
 }
@@ -95,6 +99,17 @@ impl Framework {
             name,
             fw: Arc::clone(self),
         }
+    }
+
+    /// Re-attach to a task that already exists in the (recovered) store:
+    /// registers the definition (idempotent) and returns a handle for
+    /// `id` without allocating a fresh task id.  The durable-store
+    /// restart path (`store::wal`): recover, attach, `block()` for the
+    /// surviving results.
+    pub fn attach_task(self: &Arc<Self>, id: TaskId, def: Arc<dyn TaskDef>) -> TaskHandle {
+        let name = def.name().to_string();
+        self.registry.lock().unwrap().register(def);
+        TaskHandle { id, name, fw: Arc::clone(self) }
     }
 
     pub fn store(&self) -> &Arc<dyn Scheduler> {
@@ -191,6 +206,22 @@ mod tests {
         let task = fw.create_task(Arc::new(IsPrimeTask));
         task.calculate(vec![Value::num(3.0)]);
         assert!(task.block_timeout(20).is_none());
+    }
+
+    /// A store recovered with existing tasks: fresh ids allocate above
+    /// them, and `attach_task` picks up the surviving ledger.
+    #[test]
+    fn recovered_tasks_do_not_collide_with_fresh_ones() {
+        let store = Arc::new(crate::store::IndexedStore::new(StoreConfig::default()));
+        store.create_tickets(TaskId(5), "is_prime", vec![Value::num(3.0)], 0);
+        let t = store.next_ticket("w", 0).unwrap();
+        store.complete(t.id, Value::num(1.0)).unwrap();
+        let fw = Framework::builder().scheduler(store).build();
+        let fresh = fw.create_task(Arc::new(IsPrimeTask));
+        assert_eq!(fresh.id, TaskId(6), "fresh ids start above recovered tasks");
+        let old = fw.attach_task(TaskId(5), Arc::new(IsPrimeTask));
+        assert_eq!(old.id, TaskId(5));
+        assert_eq!(old.block(), vec![Value::num(1.0)]);
     }
 
     /// The builder accepts any `Scheduler`; the naive reference behind

@@ -78,8 +78,11 @@ impl ClusterConfig {
 /// with [`Cluster::start`], drive it with one of the trainers, then
 /// [`Cluster::shutdown`] to collect the per-worker reports.
 pub struct Cluster {
+    /// The artifact runtime every trainer executes through.
     pub rt: SharedRuntime,
+    /// The net being trained (resolved from `cfg.net` at start).
     pub spec: NetSpec,
+    /// The configuration the cluster was started with.
     pub cfg: ClusterConfig,
     store: Arc<dyn Scheduler>,
     datasets: Arc<DatasetStore>,
@@ -179,14 +182,18 @@ impl Cluster {
         })
     }
 
+    /// The shared ticket store (trainers submit and collect through it,
+    /// so §2.1.2 redistribution covers training work units too).
     pub fn store(&self) -> &Arc<dyn Scheduler> {
         &self.store
     }
 
+    /// The wire dataset registry (shards + per-round parameter blobs).
     pub fn datasets(&self) -> &Arc<DatasetStore> {
         &self.datasets
     }
 
+    /// Number of fixed mini-batch shards (`cfg.n_shards`).
     pub fn n_shards(&self) -> usize {
         self.cfg.n_shards
     }

@@ -38,6 +38,7 @@ pub struct CommModel {
 }
 
 impl CommModel {
+    /// Extract the three float counts from a manifest [`NetSpec`].
     pub fn of(spec: &NetSpec) -> CommModel {
         let conv_params: usize = spec
             .conv_param_names()

@@ -118,7 +118,14 @@ fn fc_step(
     Ok((dfeat, loss))
 }
 
-/// Run the hybrid algorithm on a live cluster.
+/// Run the hybrid algorithm on a live cluster (the module docs describe
+/// one round end to end).
+///
+/// Work units ride the ticket store, so the §2.1.2 invariants apply
+/// unchanged: a shard lost to a killed client is redistributed by VCT
+/// timeout, and a straggler's late answer is dropped as a counted
+/// duplicate — the trainer consumes each shard's features exactly once
+/// via the first-result-wins completion stream.
 pub fn train(cluster: &Cluster, cfg: &HybridConfig) -> Result<TrainResult> {
     let spec = &cluster.spec;
     let net = cluster.cfg.net.clone();

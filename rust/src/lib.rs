@@ -7,10 +7,11 @@
 //!
 //! * **L3 (this crate)** — the Sashimi coordination system: a
 //!   [`coordinator`] running projects/tasks/tickets, a [`store`] with the
-//!   paper's virtual-created-time redistribution policy, a [`transport`]
-//!   layer (JSON-lines TCP and in-process), and [`worker`] nodes that
-//!   replay the browser loop of §2.1.2.  The distributed deep-learning
-//!   algorithms of §4 live in [`dist`].
+//!   paper's virtual-created-time redistribution policy (durable behind
+//!   a write-ahead log, [`store::wal`], as the paper's MySQL was), a
+//!   [`transport`] layer (JSON-lines TCP and in-process), and [`worker`]
+//!   nodes that replay the browser loop of §2.1.2.  The distributed
+//!   deep-learning algorithms of §4 live in [`dist`].
 //! * **L2/L1 (build time)** — `python/compile` lowers the Sukiyaki CNNs
 //!   (whose hot paths are Pallas kernels) to HLO text; the [`runtime`]
 //!   module loads and executes those artifacts through PJRT.  Python is

@@ -23,7 +23,7 @@ use sashimi::data::loader::BatchLoader;
 use sashimi::dist::{self, Cluster, ClusterConfig};
 use sashimi::nn::{NativeEngine, TrainEngine, XlaEngine};
 use sashimi::runtime::Runtime;
-use sashimi::store::StoreConfig;
+use sashimi::store::{Scheduler, StoreConfig, WalConfig, WalStore};
 use sashimi::tasks::{self, is_prime::IsPrimeTask};
 use sashimi::transport::tcp::{TcpConn, TcpListenerWrap};
 use sashimi::transport::{Conn, LinkModel};
@@ -65,7 +65,7 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "usage: sashimi <serve|worker|prime|train|hybrid|mlitb|hesync|info> [--flags]\n\
                  \n\
-                 serve   --port 7070 [--knn-queries 100] [--knn-train 2000]\n\
+                 serve   --port 7070 [--state-dir DIR] [--knn-queries 100] [--knn-train 2000]\n\
                  worker  --connect 127.0.0.1:7070 [--profile native|desktop|tablet] [--speed X]\n\
                  prime   [--limit 10000] [--workers 2]\n\
                  train   [--engine xla|naive|jnp] [--net cifar|mnist] [--steps 20] [--data 2000]\n\
@@ -96,13 +96,30 @@ fn serve(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 7070)?;
     let nq = args.usize_or("knn-queries", 100)?;
     let nt = args.usize_or("knn-train", 2000)?;
+    let state_dir = args.get("state-dir").map(String::from);
     args.reject_unknown()?;
 
-    let fw = Framework::builder()
+    let mut builder = Framework::builder()
         .store_config(StoreConfig::default())
         .register(Arc::new(IsPrimeTask))
-        .register(Arc::new(tasks::knn::KnnChunkTask::standard()))
-        .build();
+        .register(Arc::new(tasks::knn::KnnChunkTask::standard()));
+    // --state-dir: durable tickets.  Restart-with-recovery is this same
+    // command line again — WalStore replays checkpoint + log tail and the
+    // coordinator resumes exactly where it crashed (DESIGN.md §2.2).
+    let mut recovered_live = 0usize;
+    if let Some(dir) = &state_dir {
+        let wal = WalStore::open(dir, StoreConfig::default(), WalConfig::default())?;
+        let p = wal.progress(None);
+        recovered_live = p.pending + p.in_flight;
+        if p.total > 0 {
+            println!(
+                "recovered {} tickets from {dir}: {} waiting, {} in flight, {} executed",
+                p.total, p.pending, p.in_flight, p.done
+            );
+        }
+        builder = builder.scheduler(Arc::new(wal));
+    }
+    let fw = builder.build();
 
     // Dataset APIs: synthetic MNIST for the kNN workload.
     let train = data::mnist_train(nt.max(2000), 1);
@@ -110,10 +127,14 @@ fn serve(args: &Args) -> Result<()> {
     fw.datasets().register("knn_train_0", train.rows_matrix(0, 2000));
     fw.datasets().register("knn_queries_0", test.rows_matrix(0, 100));
 
-    // Enqueue a kNN project so joining workers have work.
-    let knn = tasks::knn::KnnChunkTask::standard();
-    let task = fw.create_task(Arc::new(tasks::knn::KnnChunkTask::standard()));
-    task.calculate(vec![knn.ticket("knn_queries_0", "knn_train_0", 0)]);
+    // Enqueue a kNN project so joining workers have work — unless the
+    // state dir carried *live* (waiting or in-flight) tickets through
+    // the restart; a fully executed recovered project gets fresh work.
+    if recovered_live == 0 {
+        let knn = tasks::knn::KnnChunkTask::standard();
+        let task = fw.create_task(Arc::new(tasks::knn::KnnChunkTask::standard()));
+        task.calculate(vec![knn.ticket("knn_queries_0", "knn_train_0", 0)]);
+    }
 
     let dist = Distributor::new(&fw);
     let listener = TcpListenerWrap::bind(&format!("0.0.0.0:{port}"))?;

@@ -34,16 +34,25 @@
 //!   identical dispatch order and accounting
 //!   (`rust/tests/properties.rs`).
 //!
+//! A third backend adds durability rather than a third policy:
+//! [`wal::WalStore`] wraps an [`IndexedStore`] behind a write-ahead log
+//! with CRC-checked frames, group-commit fsync and checkpoint
+//! truncation, so a coordinator restart recovers every ticket — the
+//! paper got this from MySQL for free (`serve --state-dir` wires it up;
+//! crash/recovery is differential-tested in `rust/tests/wal_recovery.rs`).
+//!
 //! The invariants (no lost tickets, first result wins, ordered
 //! collection) are property-tested in `rust/tests/properties.rs`.
 
 pub mod naive;
 pub mod sched;
 pub mod ticket;
+pub mod wal;
 
 pub use naive::NaiveStore;
 pub use sched::IndexedStore;
 pub use ticket::{Ticket, TicketId, TicketStatus};
+pub use wal::{SyncPolicy, WalConfig, WalStore};
 
 use std::sync::{Condvar, MutexGuard};
 use std::time::{Duration, Instant};
@@ -86,7 +95,7 @@ pub type TicketStore = IndexedStore;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct TaskId(pub u64);
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StoreConfig {
     /// Re-issue a ticket if no result within this window (paper: 5 min).
     pub requeue_after_ms: u64,
@@ -107,12 +116,22 @@ impl Default for StoreConfig {
 /// #waiting tickets, #executed tickets, #error reports, client info).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Progress {
+    /// Tickets ever created (in scope: one task, or the whole store).
     pub total: usize,
+    /// Undistributed tickets waiting for a client.
     pub pending: usize,
+    /// Distributed tickets whose result has not been accepted yet.
     pub in_flight: usize,
+    /// Tickets with an accepted result (first result wins).
     pub done: usize,
+    /// Cumulative error reports ever recorded (store-wide; not reduced
+    /// by [`Scheduler::drain_errors`]).
     pub errors: usize,
+    /// Times a ticket was handed out *again* (timeout, fallback, or
+    /// post-error re-dispatch); store-wide.
     pub redistributions: u64,
+    /// Results dropped because the ticket was already done (a slow
+    /// client answering a redistributed ticket); store-wide.
     pub duplicate_results: u64,
 }
 
@@ -121,11 +140,39 @@ pub struct Progress {
 /// the worker tests: everything the paper's MySQL table plus its SELECT
 /// policy provided.
 ///
-/// Semantics every implementation must preserve bit-for-bit (§2.1.2):
-/// VCT dispatch ordering with `(vct, id)` tie-break, the
-/// `min_redistribute` fallback when nothing is due, first result wins
-/// with duplicate accounting, and error reports requeueing in-flight
-/// tickets at their original creation time.
+/// # Invariants
+///
+/// Every implementation must preserve these bit-for-bit — the
+/// differential property suites (`rust/tests/properties.rs`,
+/// `rust/tests/wal_recovery.rs`) replay random operation sequences
+/// through two backends and assert observable equality, so "almost the
+/// same policy" fails loudly:
+///
+/// * **VCT dispatch ordering** — [`next_ticket`](Self::next_ticket)
+///   picks the minimum `(vct, id)` among non-done tickets whose virtual
+///   created time has arrived, where `vct` = creation time for
+///   undistributed tickets and last-distribution time +
+///   [`StoreConfig::requeue_after_ms`] otherwise.  The `id` tie-break
+///   makes same-clock dispatch deterministic.
+/// * **Min-redistribute fallback** — when no VCT has arrived, the
+///   longest-undistributed in-flight ticket is re-issued, but never
+///   within [`StoreConfig::min_redistribute_ms`] of its last
+///   distribution (the paper's 10 s rule: the last ticket of a task is
+///   not blasted to every idle client at once).
+/// * **First result wins, duplicates accounted** — the first
+///   [`complete`](Self::complete) for a ticket is accepted; later ones
+///   return `Ok(false)` and increment
+///   [`Progress::duplicate_results`], never overwriting the stored
+///   result.
+/// * **Error requeue at creation time** — an error report on an
+///   in-flight ticket (with `requeue_on_error`) returns it to the pool
+///   with its VCT reset to the *original* creation time, keeping its
+///   distribution history; reports are buffered until
+///   [`drain_errors`](Self::drain_errors) and counted forever in
+///   [`error_count`](Self::error_count).
+/// * **Ordered collection** — [`wait_results`](Self::wait_results)
+///   returns accepted results sorted by ticket index (id-tie-broken),
+///   regardless of completion order.
 pub trait Scheduler: Send + Sync {
     fn config(&self) -> &StoreConfig;
 
@@ -157,6 +204,12 @@ pub trait Scheduler: Send + Sync {
     fn progress(&self, task: Option<TaskId>) -> Progress;
 
     fn is_task_done(&self, task: TaskId) -> bool;
+
+    /// Highest task id that owns at least one ticket, if any — what a
+    /// coordinator seeds its task-id allocator from after recovering a
+    /// durable store, so fresh tasks never collide with recovered
+    /// ledgers ([`crate::coordinator::Framework`]).
+    fn max_task_id(&self) -> Option<TaskId>;
 
     /// Wait until every ticket of `task` is done, then return results
     /// ordered by ticket index.  `deadline` of `None` blocks forever;
@@ -351,6 +404,15 @@ mod tests {
                 }
 
                 #[test]
+                fn max_task_id_tracks_ticketed_tasks() {
+                    let s = store(1000, 100);
+                    assert_eq!(s.max_task_id(), None);
+                    s.create_tickets(TaskId(3), "t", args(1), 0);
+                    s.create_tickets(TaskId(1), "t", args(1), 0);
+                    assert_eq!(s.max_task_id(), Some(TaskId(3)));
+                }
+
+                #[test]
                 fn drain_errors_empties_buffer_not_count() {
                     let s = store(1000, 100);
                     let ids = s.create_tickets(TaskId(1), "t", args(2), 0);
@@ -373,4 +435,9 @@ mod tests {
 
     scheduler_suite!(indexed, |cfg| Box::new(IndexedStore::new(cfg)) as Box<dyn Scheduler>);
     scheduler_suite!(naive_reference, |cfg| Box::new(NaiveStore::new(cfg)) as Box<dyn Scheduler>);
+    // The durable backend must preserve the exact §2.1.2 semantics while
+    // logging every mutation (each case writes to a throwaway state dir).
+    scheduler_suite!(wal_logged, |cfg| {
+        Box::new(crate::store::wal::WalStore::open_temp_for_tests(cfg)) as Box<dyn Scheduler>
+    });
 }

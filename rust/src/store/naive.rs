@@ -216,6 +216,10 @@ impl Scheduler for NaiveStore {
             .all(|t| t.status == TicketStatus::Done)
     }
 
+    fn max_task_id(&self) -> Option<TaskId> {
+        self.inner.lock().unwrap().tickets.values().map(|t| t.task).max()
+    }
+
     fn wait_results_deadline(
         &self,
         task: TaskId,

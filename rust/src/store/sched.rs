@@ -125,6 +125,47 @@ fn vct_of(cfg: &StoreConfig, m: &Meta) -> u64 {
     }
 }
 
+/// One ticket's full durable state: scheduling metadata ([`Meta`]) plus
+/// the stored body, flattened for [`StoreSnapshot`].
+pub(crate) struct TicketSnapshot {
+    pub(crate) id: u64,
+    pub(crate) task: TaskId,
+    pub(crate) task_name: String,
+    pub(crate) index: usize,
+    pub(crate) payload: Value,
+    pub(crate) created_ms: u64,
+    pub(crate) status: TicketStatus,
+    pub(crate) last_distributed_ms: Option<u64>,
+    pub(crate) distribution_count: u32,
+}
+
+/// One task ledger's durable state.  Counters are *not* snapshotted —
+/// [`IndexedStore::restore`] recomputes them from the tickets, so a
+/// snapshot can never smuggle in a counter/ticket mismatch.
+pub(crate) struct LedgerSnapshot {
+    pub(crate) task: TaskId,
+    /// Accepted (index, ticket id, result) triples, in completion order.
+    pub(crate) results: Vec<(usize, u64, Value)>,
+    /// The unconsumed streaming FIFO, front first.
+    pub(crate) completions: Vec<(usize, Value)>,
+}
+
+/// Everything needed to rebuild an [`IndexedStore`] bit-for-bit: the WAL
+/// checkpoint payload (`store::wal`).
+pub(crate) struct StoreSnapshot {
+    pub(crate) cfg: StoreConfig,
+    pub(crate) next_id: u64,
+    pub(crate) redistributions: u64,
+    pub(crate) duplicate_results: u64,
+    pub(crate) errors_reported: u64,
+    /// Sorted by id, so snapshots of identical stores are byte-identical.
+    pub(crate) tickets: Vec<TicketSnapshot>,
+    /// Sorted by task id.
+    pub(crate) ledgers: Vec<LedgerSnapshot>,
+    /// The buffered (undrained) error reports, oldest first.
+    pub(crate) errors: Vec<(TicketId, String)>,
+}
+
 /// The indexed, sharded ticket store (aliased as
 /// [`TicketStore`](super::TicketStore)).
 pub struct IndexedStore {
@@ -139,10 +180,13 @@ pub struct IndexedStore {
 }
 
 impl IndexedStore {
+    /// Store with the default [`DEFAULT_SHARDS`] ticket-body stripes.
     pub fn new(cfg: StoreConfig) -> Self {
         Self::with_shards(cfg, DEFAULT_SHARDS)
     }
 
+    /// Store with an explicit stripe count (property tests sweep 1..8 to
+    /// prove striping never changes observable behaviour).
     pub fn with_shards(cfg: StoreConfig, n_shards: usize) -> Self {
         let n = n_shards.max(1);
         Self {
@@ -205,6 +249,145 @@ impl IndexedStore {
             }
         }
         None
+    }
+
+    /// Capture the full durable state (the WAL checkpoint payload).
+    ///
+    /// Callers must guarantee no concurrent *mutation* of tickets or
+    /// errors (`store::wal` holds its log mutex, which serialises every
+    /// mutating op); concurrent reads and completion-FIFO consumption
+    /// are harmless — consumption is not logged state (see
+    /// [`wal`](super::wal) on at-least-once completion delivery).  The
+    /// locks are taken one at a time, respecting the module's lock
+    /// discipline.
+    pub(crate) fn snapshot(&self) -> StoreSnapshot {
+        let (mut metas, redistributions, duplicate_results) = {
+            let s = self.sched.lock().unwrap();
+            let metas: Vec<(u64, TaskId, u64, TicketStatus, Option<u64>, u32)> = s
+                .meta
+                .iter()
+                .map(|(&id, m)| {
+                    (id, m.task, m.created_ms, m.status, m.last_distributed_ms, m.distribution_count)
+                })
+                .collect();
+            (metas, s.redistributions, s.duplicate_results)
+        };
+        metas.sort_by_key(|&(id, ..)| id);
+        let tickets = metas
+            .into_iter()
+            .map(|(id, task, created_ms, status, last_distributed_ms, distribution_count)| {
+                let shard = self.shard(id).read().unwrap();
+                let body = shard.get(&id).expect("every meta entry has a stored body");
+                TicketSnapshot {
+                    id,
+                    task,
+                    task_name: body.task_name.to_string(),
+                    index: body.index,
+                    payload: body.payload.clone(),
+                    created_ms,
+                    status,
+                    last_distributed_ms,
+                    distribution_count,
+                }
+            })
+            .collect();
+        let mut ledgers: Vec<LedgerSnapshot> = {
+            let map = self.ledgers.read().unwrap();
+            map.iter()
+                .map(|(&task, ledger)| {
+                    let st = ledger.state.lock().unwrap();
+                    LedgerSnapshot {
+                        task,
+                        results: st.results.clone(),
+                        completions: st.completions.iter().cloned().collect(),
+                    }
+                })
+                .collect()
+        };
+        ledgers.sort_by_key(|l| l.task);
+        StoreSnapshot {
+            cfg: self.cfg.clone(),
+            next_id: self.next_id.load(Ordering::SeqCst),
+            redistributions,
+            duplicate_results,
+            errors_reported: self.errors_reported.load(Ordering::Relaxed) as u64,
+            tickets,
+            ledgers,
+            errors: self.errors.lock().unwrap().clone(),
+        }
+    }
+
+    /// Rebuild a store from a [`snapshot`](Self::snapshot): same dispatch
+    /// indexes, ledgers, counters and error buffers, so every subsequent
+    /// operation behaves exactly as it would have on the original.
+    pub(crate) fn restore(snap: StoreSnapshot) -> IndexedStore {
+        let store = IndexedStore::new(snap.cfg);
+        store.next_id.store(snap.next_id, Ordering::SeqCst);
+        store.errors_reported.store(snap.errors_reported as usize, Ordering::Relaxed);
+        *store.errors.lock().unwrap() = snap.errors;
+        // Ledgers first (results + FIFO), so ticket bodies can cache the
+        // Arc exactly like create_tickets does.
+        for l in snap.ledgers {
+            let ledger = store.ledger(l.task);
+            let mut st = ledger.state.lock().unwrap();
+            st.results = l.results;
+            st.completions = l.completions.into_iter().collect();
+        }
+        // Bodies + ledger counters first (recomputed from the tickets),
+        // dispatch indexes last — the same publication order as
+        // `create_tickets`, one lock at a time.
+        let mut metas: Vec<(u64, Meta)> = Vec::with_capacity(snap.tickets.len());
+        for t in snap.tickets {
+            let ledger = store.ledger(t.task);
+            {
+                let mut st = ledger.state.lock().unwrap();
+                st.total += 1;
+                match t.status {
+                    TicketStatus::Pending => st.pending += 1,
+                    TicketStatus::InFlight => st.in_flight += 1,
+                    TicketStatus::Done => st.done += 1,
+                }
+            }
+            store.shard(t.id).write().unwrap().insert(
+                t.id,
+                StoredTicket {
+                    task: t.task,
+                    task_name: Arc::from(t.task_name.as_str()),
+                    index: t.index,
+                    payload: t.payload,
+                    created_ms: t.created_ms,
+                    ledger,
+                },
+            );
+            metas.push((
+                t.id,
+                Meta {
+                    task: t.task,
+                    created_ms: t.created_ms,
+                    status: t.status,
+                    last_distributed_ms: t.last_distributed_ms,
+                    distribution_count: t.distribution_count,
+                },
+            ));
+        }
+        let mut s = store.sched.lock().unwrap();
+        s.redistributions = snap.redistributions;
+        s.duplicate_results = snap.duplicate_results;
+        for (id, meta) in metas {
+            s.total += 1;
+            match meta.status {
+                TicketStatus::Pending => s.pending += 1,
+                TicketStatus::InFlight => s.in_flight += 1,
+                TicketStatus::Done => s.done += 1,
+            }
+            if meta.status != TicketStatus::Done {
+                s.ready.insert((vct_of(&store.cfg, &meta), id));
+                s.fallback.insert((meta.last_distributed_ms.unwrap_or(0), id));
+            }
+            s.meta.insert(id, meta);
+        }
+        drop(s);
+        store
     }
 }
 
@@ -479,6 +662,19 @@ impl Scheduler for IndexedStore {
         p
     }
 
+    fn max_task_id(&self) -> Option<TaskId> {
+        // Ledgers subscribed via `next_completion` but never given
+        // tickets are excluded (total == 0), matching the reference
+        // store's ticket-derived answer.
+        self.ledgers
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(_, ledger)| ledger.state.lock().unwrap().total > 0)
+            .map(|(&task, _)| task)
+            .max()
+    }
+
     fn is_task_done(&self, task: TaskId) -> bool {
         match self.ledger_if_exists(task) {
             Some(ledger) => {
@@ -639,5 +835,47 @@ mod tests {
         assert_eq!((g.total, g.pending, g.in_flight, g.done), (6, 4, 1, 1));
         assert!(s.is_task_done(TaskId(3)), "empty task is vacuously done");
         assert!(!s.is_task_done(TaskId(1)));
+    }
+
+    /// snapshot→restore rebuilds an observably identical store: same
+    /// progress, same dispatch order, same error buffers, same results.
+    #[test]
+    fn snapshot_restore_roundtrip_is_identical() {
+        let s = IndexedStore::with_shards(cfg(), 4);
+        let a = s.create_tickets(TaskId(1), "a", (0..4).map(|i| Value::num(i as f64)).collect(), 0);
+        let _b = s.create_tickets(TaskId(2), "b", (0..2).map(|_| Value::Null).collect(), 5);
+        let _ = s.next_ticket("c1", 10).unwrap();
+        let _ = s.next_ticket("c2", 11).unwrap();
+        s.complete(a[0], Value::num(42.0)).unwrap();
+        assert!(!s.complete(a[0], Value::num(43.0)).unwrap(), "duplicate counted");
+        s.report_error(a[1], "boom".into()).unwrap();
+
+        let r = IndexedStore::restore(s.snapshot());
+        assert_eq!(r.progress(None), s.progress(None));
+        for t in [TaskId(1), TaskId(2), TaskId(3)] {
+            assert_eq!(r.progress(Some(t)), s.progress(Some(t)));
+            assert_eq!(r.is_task_done(t), s.is_task_done(t));
+        }
+        assert_eq!(r.error_count(), s.error_count());
+        // Identical future dispatch decisions, clock by clock.
+        let mut now = 12;
+        loop {
+            let (x, y) = (s.next_ticket("d", now), r.next_ticket("d", now));
+            assert_eq!(x, y, "dispatch diverges at t={now}");
+            match x {
+                Some(t) => {
+                    assert_eq!(
+                        s.complete(t.id, Value::num(now as f64)).unwrap(),
+                        r.complete(t.id, Value::num(now as f64)).unwrap()
+                    );
+                }
+                None if s.is_task_done(TaskId(1)) && s.is_task_done(TaskId(2)) => break,
+                None => {}
+            }
+            now += 37;
+        }
+        assert_eq!(s.wait_results(TaskId(1)), r.wait_results(TaskId(1)));
+        assert_eq!(s.wait_results(TaskId(2)), r.wait_results(TaskId(2)));
+        assert_eq!(s.drain_errors(), r.drain_errors());
     }
 }

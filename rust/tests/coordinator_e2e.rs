@@ -71,8 +71,9 @@ fn prime_project_over_local_transport() {
     // Console reflects the finished project.
     let snap = console::snapshot(&dist);
     assert_eq!(snap.progress.done, 1000);
-    assert_eq!(snap.clients.len(), 3);
+    assert_eq!(snap.clients, 3);
     assert!(console::render(&snap).contains("1000 total"));
+    assert!(console::render_clients(&dist).contains("w1"));
 }
 
 /// Same project over real TCP sockets (multi-process shape).

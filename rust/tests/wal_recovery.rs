@@ -1,0 +1,383 @@
+//! Crash/recovery for the write-ahead-logged ticket store.
+//!
+//! The acceptance property (ISSUE 3): kill the coordinator mid-dispatch,
+//! recover from the WAL directory, and the recovered store must be
+//! *differential-test identical* to an uninterrupted run — same dispatch
+//! order, progress counters, duplicate/error accounting and collected
+//! results.  The 256-case random-op suite below mirrors the
+//! `IndexedStore`-vs-`NaiveStore` differential in
+//! `rust/tests/properties.rs`, with a crash spliced into the middle.
+//!
+//! Crashes are simulated with `std::mem::forget`: no flush-on-drop, no
+//! final fsync, no checkpoint — only what each append already pushed to
+//! the OS survives, exactly the process-kill contract of
+//! `SyncPolicy::OsOnly` (the leaked file handle closes at process exit).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use sashimi::coordinator::{Distributor, Framework};
+use sashimi::prop_assert;
+use sashimi::store::{
+    IndexedStore, Scheduler, StoreConfig, SyncPolicy, TaskId, TicketId, WalConfig, WalStore,
+};
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::transport::{local, Conn, LinkModel};
+use sashimi::util::json::Value;
+use sashimi::util::proptest::check;
+use sashimi::util::rng::SplitMix64;
+use sashimi::worker::{DeviceProfile, Worker};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "sashimi-walrec-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Drive one random operation on both stores and assert they agree.
+/// Returns an error message on divergence.
+fn random_op(
+    rng: &mut SplitMix64,
+    walled: &dyn Scheduler,
+    control: &dyn Scheduler,
+    now: &mut u64,
+    created: &mut Vec<TicketId>,
+    step: u64,
+) -> Result<(), String> {
+    let tasks = [TaskId(1), TaskId(2), TaskId(3)];
+    match rng.gen_range(8) {
+        0 | 1 => {
+            let task = tasks[rng.gen_range(3) as usize];
+            let n = 1 + rng.gen_range(3);
+            let args: Vec<Value> = (0..n).map(|i| Value::num((step * 10 + i) as f64)).collect();
+            let a = walled.create_tickets(task, "t", args.clone(), *now);
+            let b = control.create_tickets(task, "t", args, *now);
+            prop_assert!(a == b, "created ids diverge: {a:?} vs {b:?}");
+            created.extend(a);
+        }
+        2 | 3 | 4 => {
+            let client = format!("c{}", rng.gen_range(4));
+            let a = walled.next_ticket(&client, *now);
+            let b = control.next_ticket(&client, *now);
+            prop_assert!(a == b, "dispatch diverges at t={now}: {a:?} vs {b:?}");
+        }
+        5 => {
+            let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                created[rng.gen_range(created.len() as u64) as usize]
+            } else {
+                TicketId(created.len() as u64 + 1_000)
+            };
+            let v = Value::num(id.0 as f64);
+            let a = walled.complete(id, v.clone());
+            let b = control.complete(id, v);
+            prop_assert!(a.is_err() == b.is_err(), "complete() error status diverges on {id:?}");
+            if let (Ok(x), Ok(y)) = (a, b) {
+                prop_assert!(x == y, "first-result-wins diverges on {id:?}");
+            }
+        }
+        6 => {
+            if !created.is_empty() {
+                let id = created[rng.gen_range(created.len() as u64) as usize];
+                walled.report_error(id, "e".into()).map_err(|e| e.to_string())?;
+                control.report_error(id, "e".into()).map_err(|e| e.to_string())?;
+            }
+        }
+        _ => *now += rng.gen_range(150),
+    }
+    Ok(())
+}
+
+/// Assert the two stores are observably identical right now.
+fn assert_same_state(
+    walled: &dyn Scheduler,
+    control: &dyn Scheduler,
+    at: &str,
+) -> Result<(), String> {
+    let (gp, gq) = (walled.progress(None), control.progress(None));
+    prop_assert!(gp == gq, "global progress diverges {at}: {gp:?} vs {gq:?}");
+    for task in [TaskId(1), TaskId(2), TaskId(3)] {
+        let (tp, tq) = (walled.progress(Some(task)), control.progress(Some(task)));
+        prop_assert!(tp == tq, "progress for {task:?} diverges {at}: {tp:?} vs {tq:?}");
+        prop_assert!(
+            walled.is_task_done(task) == control.is_task_done(task),
+            "is_task_done diverges for {task:?} {at}"
+        );
+    }
+    prop_assert!(
+        walled.error_count() == control.error_count(),
+        "cumulative error counts diverge {at}"
+    );
+    Ok(())
+}
+
+/// The acceptance suite: 256 random-op runs, each killed at a random
+/// point (often right after a dispatch), recovered, then driven to
+/// completion in lockstep with the uninterrupted control store.
+#[test]
+fn recovered_store_is_differential_identical_to_uninterrupted_run() {
+    check("wal-crash-recovery", 256, |rng| {
+        let cfg = StoreConfig {
+            requeue_after_ms: 20 + rng.gen_range(300),
+            min_redistribute_ms: rng.gen_range(80),
+            requeue_on_error: rng.gen_range(2) == 0,
+        };
+        // Small segments and short checkpoint cadence so the suite also
+        // crashes across rotations and truncations (floors keep the
+        // fsync count per case bounded).
+        let wal_cfg = WalConfig {
+            sync: SyncPolicy::OsOnly,
+            segment_max_bytes: 2048 + rng.gen_range(8192),
+            checkpoint_every: 16 + rng.gen_range(64),
+        };
+        let dir = temp_dir("diff");
+        let walled = WalStore::open(&dir, cfg.clone(), wal_cfg).map_err(|e| e.to_string())?;
+        let control = IndexedStore::new(cfg);
+        let mut now = 0u64;
+        let mut created: Vec<TicketId> = Vec::new();
+
+        // Phase 1: random ops until the crash point.  Ending on a
+        // dispatch (ops 2..=4 dominate) is the "kill mid-dispatch" case:
+        // the dispatched ticket is in flight, unacknowledged, mid-window.
+        let crash_after = 10 + rng.gen_range(120);
+        for step in 0..crash_after {
+            random_op(rng, &walled, &control, &mut now, &mut created, step)?;
+        }
+        let _ = walled.next_ticket("killer", now); // guarantee an in-flight dispatch
+        let _ = control.next_ticket("killer", now);
+        assert_same_state(&walled, &control, "pre-crash")?;
+
+        // Crash: no drop glue runs.
+        std::mem::forget(walled);
+        let recovered = WalStore::recover(&dir).map_err(|e| e.to_string())?;
+        assert_same_state(&recovered, &control, "post-recovery")?;
+
+        // Phase 2: keep running random ops on the *recovered* store in
+        // lockstep with the never-crashed control.
+        for step in crash_after..crash_after + 40 {
+            random_op(rng, &recovered, &control, &mut now, &mut created, step)?;
+            assert_same_state(&recovered, &control, "post-recovery op")?;
+        }
+
+        // Drain both to completion along an identical path.
+        for _ in 0..20_000 {
+            now += 17;
+            let a = recovered.next_ticket("drain", now);
+            let b = control.next_ticket("drain", now);
+            prop_assert!(a == b, "drain dispatch diverges at t={now}");
+            match a {
+                Some(t) => {
+                    let x = recovered
+                        .complete(t.id, Value::num(t.index as f64))
+                        .map_err(|e| e.to_string())?;
+                    let y = control
+                        .complete(t.id, Value::num(t.index as f64))
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(x == y, "drain completion accounting diverges on {:?}", t.id);
+                }
+                None => {
+                    if [TaskId(1), TaskId(2), TaskId(3)]
+                        .iter()
+                        .all(|&t| recovered.is_task_done(t))
+                    {
+                        break;
+                    }
+                }
+            }
+        }
+        for task in [TaskId(1), TaskId(2), TaskId(3)] {
+            prop_assert!(recovered.is_task_done(task), "drain left {task:?} unfinished");
+            let a = recovered.wait_results_timeout(task, 0);
+            let b = control.wait_results_timeout(task, 0);
+            prop_assert!(a == b, "collected results diverge for {task:?}");
+        }
+        let (ea, eb) = (recovered.drain_errors(), control.drain_errors());
+        prop_assert!(ea == eb, "buffered error reports diverge");
+        drop(recovered);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// A second crash *after* recovery must recover again (log-on-log).
+#[test]
+fn recovery_survives_repeated_crashes() {
+    check("wal-double-crash", 32, |rng| {
+        let cfg = StoreConfig {
+            requeue_after_ms: 50 + rng.gen_range(200),
+            min_redistribute_ms: 1 + rng.gen_range(50),
+            requeue_on_error: true,
+        };
+        let wal_cfg = WalConfig {
+            sync: SyncPolicy::OsOnly,
+            segment_max_bytes: 2048,
+            checkpoint_every: 8 + rng.gen_range(16),
+        };
+        let dir = temp_dir("double");
+        let control = IndexedStore::new(cfg.clone());
+        let mut now = 0u64;
+        let mut created: Vec<TicketId> = Vec::new();
+        let mut step = 0u64;
+        let mut walled = WalStore::open(&dir, cfg, wal_cfg).map_err(|e| e.to_string())?;
+        for _crash in 0..3 {
+            for _ in 0..15 {
+                random_op(rng, &walled, &control, &mut now, &mut created, step)?;
+                step += 1;
+            }
+            std::mem::forget(walled);
+            walled = WalStore::recover_with(&dir, wal_cfg).map_err(|e| e.to_string())?;
+            assert_same_state(&walled, &control, "after re-crash")?;
+        }
+        drop(walled);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// fsync-per-record path: same recovery contract under the strictest
+/// durability policy (kept small — every record pays an fsync).
+#[test]
+fn every_record_fsync_recovers_exactly() {
+    let cfg = StoreConfig { requeue_after_ms: 100, min_redistribute_ms: 10, requeue_on_error: true };
+    let wal_cfg = WalConfig {
+        sync: SyncPolicy::EveryRecord,
+        segment_max_bytes: 1 << 20,
+        checkpoint_every: 0,
+    };
+    let dir = temp_dir("fsync");
+    let s = WalStore::open(&dir, cfg.clone(), wal_cfg).unwrap();
+    let control = IndexedStore::new(cfg);
+    let drive = |a: &dyn Scheduler| {
+        let ids =
+            a.create_tickets(TaskId(1), "t", (0..6).map(|i| Value::num(i as f64)).collect(), 0);
+        for i in 0..4u64 {
+            let t = a.next_ticket("c", i).unwrap();
+            a.complete(t.id, Value::num(t.index as f64)).unwrap();
+        }
+        a.report_error(ids[4], "late".into()).unwrap();
+    };
+    drive(&s);
+    drive(&control);
+    std::mem::forget(s);
+    let r = WalStore::recover(&dir).unwrap();
+    assert_same_state(&r, &control, "fsync-per-record").unwrap();
+    drop(r);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The one-liner restart story: a coordinator serving real workers over
+/// the browser protocol crashes mid-project; `WalStore::recover` plus the
+/// same serve wiring finishes the project without re-executing done
+/// tickets.
+#[test]
+fn coordinator_restart_resumes_project_mid_dispatch() {
+    let dir = temp_dir("serve");
+    let store_cfg = StoreConfig {
+        requeue_after_ms: 50, // orphaned in-flight tickets redistribute fast
+        min_redistribute_ms: 5,
+        requeue_on_error: true,
+    };
+    let wal_cfg =
+        WalConfig { sync: SyncPolicy::OsOnly, segment_max_bytes: 1 << 20, checkpoint_every: 64 };
+
+    // --- first life -------------------------------------------------------
+    let wal = Arc::new(WalStore::open(&dir, store_cfg.clone(), wal_cfg).unwrap());
+    let fw = Framework::builder().scheduler(Arc::clone(&wal) as Arc<dyn Scheduler>).build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate(
+        (1..=200).map(|i| Value::obj(vec![("candidate", Value::num(i as f64))])).collect(),
+    );
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    let acceptor = dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let connector = connector.clone();
+            let registry = fw.registry_snapshot();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut w = Worker::new(&format!("w{i}"), DeviceProfile::native(), registry);
+                w.max_tickets = Some(40); // finish a bounded slice, then exit
+                w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+            })
+        })
+        .collect();
+    for w in workers {
+        let _ = w.join().unwrap();
+    }
+    // Kill mid-dispatch: one more ticket goes out and is never answered.
+    let orphan = wal.next_ticket("doomed", sashimi::util::clock::now_ms()).unwrap();
+    let before = wal.progress(None);
+    assert_eq!(before.done, 80, "two workers × 40 tickets");
+    assert_eq!(before.in_flight, 1, "the orphaned dispatch");
+    dist.stop();
+    drop(connector);
+    let _ = acceptor.join();
+    std::mem::forget(fw);
+    std::mem::forget(task);
+    match Arc::try_unwrap(wal) {
+        Ok(w) => std::mem::forget(w), // crash: skip Drop's flush/checkpoint
+        Err(arc) => std::mem::forget(arc),
+    }
+
+    // --- second life ------------------------------------------------------
+    let recovered = Arc::new(WalStore::recover_with(&dir, wal_cfg).unwrap());
+    let after = recovered.progress(None);
+    assert_eq!(after, before, "recovery restores the mid-dispatch state exactly");
+    let fw2 = Framework::builder().scheduler(Arc::clone(&recovered) as Arc<dyn Scheduler>).build();
+    // The recovered project is re-attached by id; fresh tasks allocate
+    // above it (the builder seeds the allocator from the store).
+    let task2 = fw2.attach_task(TaskId(1), Arc::new(IsPrimeTask));
+    assert_eq!(task2.id, TaskId(1));
+    assert_eq!(
+        fw2.create_task(Arc::new(IsPrimeTask)).id,
+        TaskId(2),
+        "no collision with the recovered task"
+    );
+    let dist2 = Distributor::new(&fw2);
+    let (listener2, connector2) = local::endpoint(LinkModel::FAST_LAN, false);
+    let acceptor2 = dist2.serve(Box::new(listener2));
+    let stop2 = Arc::new(AtomicBool::new(false));
+    let finishers: Vec<_> = (0..2)
+        .map(|i| {
+            let connector = connector2.clone();
+            let registry = fw2.registry_snapshot();
+            let stop = Arc::clone(&stop2);
+            std::thread::spawn(move || {
+                let mut w = Worker::new(&format!("r{i}"), DeviceProfile::native(), registry);
+                w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+            })
+        })
+        .collect();
+    let results = task2.block();
+    stop2.store(true, Ordering::SeqCst);
+    dist2.stop();
+    drop(connector2);
+    let _ = acceptor2.join();
+    for f in finishers {
+        let _ = f.join();
+    }
+    assert_eq!(results.len(), 200);
+    let n_primes = results.iter().filter(|r| r.get("is_prime").unwrap().as_bool().unwrap()).count();
+    assert_eq!(n_primes, 46); // π(200): done-ticket results survived the crash
+    let p = recovered.progress(None);
+    assert_eq!(p.done, 200);
+    // The orphaned ticket was redistributed, not lost: either its requeue
+    // window expired (a redistribution) or the doomed client's answer
+    // never came (covered above by done == 200 either way).
+    assert!(p.done >= before.done, "no executed work was re-lost");
+    let _ = orphan;
+    drop(task2);
+    drop(fw2);
+    match Arc::try_unwrap(recovered) {
+        Ok(w) => drop(w),
+        Err(_) => {}
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
