@@ -17,6 +17,15 @@ The structural quantity is the *relative* throughput vs wal-off — the
 append is the same `[len][crc32][payload]` frame the Rust store writes,
 and fsync cost is the real filesystem's, identical in both stacks.
 
+A third table models the ISSUE 4 batched pipeline: dispatch+complete
+drains at batch size k in {1, 4, 16, 64}, with one framed
+DispatchBatch/CompleteBatch record per batch instead of one frame per
+ticket, and — per the group-commit acknowledgement fix — one fsync per
+*complete call*, so k divides the fsync count.  The fsync-bound rows
+(group-ack, fsync-each) transfer directly; the wal-off row only shows
+Python call overhead, not the Rust store's lock amortisation —
+regenerate natively with `make bench-store`.
+
 Usage: python bench_store_model.py [--quick]
 """
 
@@ -156,6 +165,64 @@ class WalModel:
         self.f.close()
 
 
+class BatchDrainModel:
+    """Dispatch+complete drain at batch size k — the ISSUE 4 pipeline.
+
+    One framed record per batch (DispatchBatch, then CompleteBatch with
+    per-entry accepted flags), matching store/wal.rs.  mode:
+      None        -> no log (wal-off)
+      "os"        -> write+flush per record, never fsync
+      "group-ack" -> write+flush per record, plus the acknowledgement
+                     fix: one fsync per complete call (k amortises it)
+      "fsync"     -> fsync per record (EveryRecord)
+    """
+
+    def __init__(self, n, path, mode):
+        self.inner = IndexedModel(n)
+        self.f = open(path, "wb") if mode else None
+        self.mode = mode
+
+    def _append(self, payload):
+        self.f.write(struct.pack("<II", len(payload), zlib.crc32(payload)) + payload)
+        self.f.flush()
+        if self.mode == "fsync":
+            os.fsync(self.f.fileno())
+
+    def drain(self, k):
+        """Dispatch+complete the whole pool in batches of k; returns
+        (tickets, seconds).  k == 1 models the singular records."""
+        t0 = time.perf_counter()
+        done = 0
+        while True:
+            now = now_ms()
+            batch = []
+            for _ in range(k):
+                tid = self.inner.next_ticket(now)
+                if tid is None:
+                    break
+                batch.append(tid)
+            if not batch:
+                break
+            if self.f:
+                # OP_DISPATCH_BATCH / OP_DISPATCH payload shape.
+                self._append(struct.pack("<BQI", 7 if k > 1 else 3, now, len(batch))
+                             + struct.pack(f"<{len(batch)}Q", *batch))
+            for tid in batch:
+                self.inner.meta[tid][1] = 2  # done; lazy heap deletion
+            if self.f:
+                self._append(struct.pack("<BI", 8 if k > 1 else 4, len(batch))
+                             + struct.pack("<" + "QB" * len(batch),
+                                           *[x for tid in batch for x in (tid, 1)]))
+                if self.mode == "group-ack":
+                    os.fsync(self.f.fileno())  # Ack durability, once per batch
+            done += len(batch)
+        return done, time.perf_counter() - t0
+
+    def close(self):
+        if self.f:
+            self.f.close()
+
+
 def measure(store, window_s=1.0):
     t0 = time.perf_counter()
     ops = 0
@@ -191,6 +258,30 @@ def main():
             tps = measure(store)
             store.close()
             print(f"{label:>12} {tps:>12.0f} {tps / max(baseline, 1e-9):>10.2f}x")
+
+    # Batched pipeline sweep (ISSUE 4): dispatch+complete drains at
+    # batch size k; one DispatchBatch/CompleteBatch frame per batch, and
+    # (group-ack) one fsync per complete call.
+    n = 20_000 if quick else 100_000
+    print()
+    print(f"{'backend':>12} {'k':>4} {'t/s':>12} {'vs k=1':>8}")
+    with tempfile.TemporaryDirectory(prefix="sashimi-batch-model-") as d:
+        for mode, label in [(None, "wal-off"), ("os", "os-cache"),
+                            ("group-ack", "group-ack"), ("fsync", "fsync-each")]:
+            # fsync-bound modes drain a smaller pool: the rate is the
+            # quantity, and k=1 at ~300 fsyncs/s would take minutes.
+            n_mode = n if mode in (None, "os") else max(2_000, n // 20)
+            baseline = None
+            for k in (1, 4, 16, 64):
+                path = os.path.join(d, f"{label}-{k}.log")
+                store = BatchDrainModel(n_mode, path, mode)
+                done, secs = store.drain(k)
+                store.close()
+                assert done == n_mode, f"drain lost tickets: {done} != {n_mode}"
+                tps = done / secs
+                if baseline is None:
+                    baseline = tps
+                print(f"{label:>12} {k:>4} {tps:>12.0f} {tps / baseline:>7.1f}x")
 
 
 if __name__ == "__main__":

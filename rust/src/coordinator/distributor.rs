@@ -8,10 +8,21 @@
 //! Handles, per §2.1.2:
 //! * `TicketRequest` → next ticket by virtual created time (or NoTicket
 //!   with a retry hint);
+//! * `TicketBatchRequest { max }` → up to `min(max, max_batch)` tickets
+//!   in one round trip via `Scheduler::next_tickets` (empty pool →
+//!   NoTicket), amortising the coordinator RTT that bounds fast-link
+//!   throughput;
 //! * `TaskRequest` → task code metadata (code bytes accounted);
 //! * `DataRequest` → dataset payloads (the HTTPServer API);
 //! * `TicketResult` → store completion (first result wins);
+//! * `TicketResults` → batched completion through
+//!   `Scheduler::complete_batch` (one Ack; per-entry first-result-wins
+//!   accounting);
 //! * `ErrorReport` → recorded, ticket requeued, client told to reload.
+//!
+//! The singular forms stay served unchanged, so a legacy client that
+//! speaks only `TicketRequest`/`TicketResult` interoperates with
+//! batching clients on the same store.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -23,7 +34,7 @@ use anyhow::Result;
 use crate::coordinator::framework::Framework;
 use crate::store::Scheduler;
 use crate::tasks::{DatasetStore, Registry};
-use crate::transport::{Conn, Listener, Message};
+use crate::transport::{Conn, Listener, Message, WireTicket};
 use crate::util::clock;
 
 /// Per-client info shown on the console.
@@ -60,7 +71,13 @@ pub struct Distributor {
     stop: AtomicBool,
     /// Retry hint handed to idle workers.
     pub idle_retry_ms: u64,
+    /// Server-side cap on one `TicketBatchRequest` (protects the store
+    /// from a single client draining the pool in one call).
+    pub max_batch: usize,
 }
+
+/// Default server-side cap on one dispatched batch.
+pub const DEFAULT_MAX_BATCH: usize = 64;
 
 impl Distributor {
     pub fn new(fw: &Arc<Framework>) -> Arc<Distributor> {
@@ -72,6 +89,7 @@ impl Distributor {
             clients: Mutex::new(HashMap::new()),
             stop: AtomicBool::new(false),
             idle_retry_ms: 20,
+            max_batch: DEFAULT_MAX_BATCH,
         })
     }
 
@@ -89,6 +107,7 @@ impl Distributor {
             clients: Mutex::new(HashMap::new()),
             stop: AtomicBool::new(false),
             idle_retry_ms: 20,
+            max_batch: DEFAULT_MAX_BATCH,
         })
     }
 
@@ -213,6 +232,33 @@ impl Distributor {
                         None => conn.send(&Message::NoTicket { retry_after_ms: self.idle_retry_ms })?,
                     }
                 }
+                Message::TicketBatchRequest { max } => {
+                    if self.stopped() {
+                        conn.send(&Message::Shutdown)?;
+                        return Ok(());
+                    }
+                    let k = max.clamp(1, self.max_batch.max(1));
+                    let batch = self.store.next_tickets(&client, clock::now_ms(), k);
+                    if batch.is_empty() {
+                        conn.send(&Message::NoTicket { retry_after_ms: self.idle_retry_ms })?;
+                    } else {
+                        self.stats.tickets_served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                        if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                            ci.tickets_served += batch.len() as u64;
+                        }
+                        let tickets: Vec<WireTicket> = batch
+                            .into_iter()
+                            .map(|t| WireTicket {
+                                ticket: t.id,
+                                task: t.task,
+                                task_name: t.task_name,
+                                index: t.index,
+                                payload: t.payload,
+                            })
+                            .collect();
+                        conn.send(&Message::Tickets { tickets })?;
+                    }
+                }
                 Message::TaskRequest { task_name } => {
                     self.stats.task_requests.fetch_add(1, Ordering::Relaxed);
                     let def = self.registry.get(&task_name)?;
@@ -238,6 +284,21 @@ impl Distributor {
                     }
                     if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
                         ci.results += 1;
+                    }
+                    conn.send(&Message::Ack)?;
+                }
+                Message::TicketResults { results } => {
+                    let n = results.len() as u64;
+                    // A mid-batch unknown ticket (a protocol-violating
+                    // client) applies the prefix, then `?` kills the
+                    // connection; the stats counters below are skipped
+                    // for that prefix.  The store's progress counters —
+                    // the source of truth — stay exact either way.
+                    let accepted = self.store.complete_batch(results)? as u64;
+                    self.stats.results_accepted.fetch_add(accepted, Ordering::Relaxed);
+                    self.stats.results_duplicate.fetch_add(n - accepted, Ordering::Relaxed);
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                        ci.results += n;
                     }
                     conn.send(&Message::Ack)?;
                 }
@@ -324,6 +385,86 @@ mod tests {
         h.join().unwrap();
         assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 1);
         assert_eq!(dist.clients()[0].results, 1);
+    }
+
+    /// The batched protocol end to end, plus the compat requirement: a
+    /// legacy client speaking only `TicketRequest`/`TicketResult`
+    /// finishes the same task against the same distributor.
+    #[test]
+    fn batch_and_legacy_clients_interoperate() {
+        let (fw, task) = framework_with_tickets(6);
+        let dist = Distributor::new(&fw);
+        let (mut batcher, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || d.handle_conn(Box::new(server)).unwrap());
+
+        batcher.send(&Message::Hello { client: "b0".into(), profile: "desktop".into() }).unwrap();
+        assert_eq!(batcher.recv().unwrap(), Message::Ack);
+        batcher.send(&Message::TicketBatchRequest { max: 4 }).unwrap();
+        let tickets = match batcher.recv().unwrap() {
+            Message::Tickets { tickets } => tickets,
+            m => panic!("expected tickets, got {m:?}"),
+        };
+        assert_eq!(tickets.len(), 4);
+        // Dispatch order == VCT order: indexes 0..4 in sequence.
+        assert_eq!(tickets.iter().map(|t| t.index).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let results: Vec<_> = tickets.iter().map(|t| (t.ticket, Value::Bool(true))).collect();
+        batcher.send(&Message::TicketResults { results }).unwrap();
+        assert_eq!(batcher.recv().unwrap(), Message::Ack);
+        batcher.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+
+        // A legacy client drains the remaining two tickets one by one.
+        let (mut legacy, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || d.handle_conn(Box::new(server)).unwrap());
+        legacy.send(&Message::Hello { client: "l0".into(), profile: "tablet".into() }).unwrap();
+        legacy.recv().unwrap();
+        for _ in 0..2 {
+            legacy.send(&Message::TicketRequest).unwrap();
+            let ticket = match legacy.recv().unwrap() {
+                Message::Ticket { ticket, .. } => ticket,
+                m => panic!("expected ticket, got {m:?}"),
+            };
+            legacy.send(&Message::TicketResult { ticket, result: Value::Bool(false) }).unwrap();
+            assert_eq!(legacy.recv().unwrap(), Message::Ack);
+        }
+        // Pool empty: a batch request is answered with NoTicket.
+        legacy.send(&Message::TicketBatchRequest { max: 8 }).unwrap();
+        assert!(matches!(legacy.recv().unwrap(), Message::NoTicket { .. }));
+        legacy.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+
+        assert_eq!(fw.store().progress(Some(task)).done, 6);
+        assert_eq!(dist.stats.tickets_served.load(Ordering::Relaxed), 6);
+        assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 6);
+        assert_eq!(dist.stats.results_duplicate.load(Ordering::Relaxed), 0);
+    }
+
+    /// The server cap bounds one batch even when the client asks for
+    /// more, and `max: 0` is clamped up to 1 rather than ignored.
+    #[test]
+    fn batch_request_clamped_to_server_cap() {
+        let (fw, _task) = framework_with_tickets(DEFAULT_MAX_BATCH + 8);
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || d.handle_conn(Box::new(server)).unwrap());
+        client.send(&Message::Hello { client: "w".into(), profile: "t".into() }).unwrap();
+        client.recv().unwrap();
+        client.send(&Message::TicketBatchRequest { max: DEFAULT_MAX_BATCH + 8 }).unwrap();
+        match client.recv().unwrap() {
+            Message::Tickets { tickets } => assert_eq!(tickets.len(), DEFAULT_MAX_BATCH),
+            m => panic!("{m:?}"),
+        }
+        client.send(&Message::TicketBatchRequest { max: 0 }).unwrap();
+        match client.recv().unwrap() {
+            Message::Tickets { tickets } => assert_eq!(tickets.len(), 1),
+            m => panic!("{m:?}"),
+        }
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+        assert_eq!(fw.store().progress(None).in_flight, DEFAULT_MAX_BATCH + 1);
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub struct ClusterConfig {
     pub sleep_on_link: bool,
     /// Ticket-store redistribution policy for the run.
     pub store: StoreConfig,
+    /// Worker prefetch ceiling ([`Worker::prefetch_cap`]): how many
+    /// tickets one poll may fetch.  Compute-bound training tickets stay
+    /// effectively unbatched (the batch only grows when a whole batch
+    /// beats one round trip); `1` pins the legacy single-ticket wire.
+    pub prefetch_cap: usize,
 }
 
 impl ClusterConfig {
@@ -70,6 +75,7 @@ impl ClusterConfig {
                 min_redistribute_ms: 600_000,
                 requeue_on_error: true,
             },
+            prefetch_cap: 4,
         }
     }
 }
@@ -159,9 +165,11 @@ impl Cluster {
                 let stop = Arc::clone(&stop);
                 let rt = Arc::clone(&rt);
                 let profile = cfg.profile.clone();
+                let prefetch_cap = cfg.prefetch_cap;
                 std::thread::spawn(move || {
-                    let mut w =
-                        Worker::new(&format!("client{i}"), profile, registry).with_runtime(rt);
+                    let mut w = Worker::new(&format!("client{i}"), profile, registry)
+                        .with_runtime(rt)
+                        .with_prefetch_cap(prefetch_cap);
                     w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
                 })
             })
@@ -263,6 +271,9 @@ mod tests {
         // ticket and byte counts are exact.
         assert!(cfg.store.requeue_after_ms >= 600_000);
         assert!(cfg.store.min_redistribute_ms >= 600_000);
+        // Batched polling on, at a modest ceiling: every fetched ticket
+        // is executed and flushed, so counts stay exact.
+        assert_eq!(cfg.prefetch_cap, 4);
     }
 
     #[test]

@@ -66,7 +66,7 @@ fn run(args: &Args) -> Result<()> {
                 "usage: sashimi <serve|worker|prime|train|hybrid|mlitb|hesync|info> [--flags]\n\
                  \n\
                  serve   --port 7070 [--state-dir DIR] [--knn-queries 100] [--knn-train 2000]\n\
-                 worker  --connect 127.0.0.1:7070 [--profile native|desktop|tablet] [--speed X]\n\
+                 worker  --connect 127.0.0.1:7070 [--profile native|desktop|tablet] [--speed X] [--prefetch N]\n\
                  prime   [--limit 10000] [--workers 2]\n\
                  train   [--engine xla|naive|jnp] [--net cifar|mnist] [--steps 20] [--data 2000]\n\
                  hybrid  [--net mnist] [--clients 2] [--rounds 3] (also mlitb, hesync)\n\
@@ -155,14 +155,18 @@ fn worker(args: &Args) -> Result<()> {
     let addr = args.str_or("connect", "127.0.0.1:7070");
     let profile = profile_from(args)?;
     let max = args.u64_or("max-tickets", 0)?;
+    // Adaptive prefetch ceiling; --prefetch 1 pins the legacy
+    // one-ticket-per-round-trip protocol.
+    let prefetch = args.usize_or("prefetch", sashimi::worker::DEFAULT_PREFETCH_CAP)?;
     args.reject_unknown()?;
 
     let mut registry = tasks::Registry::new();
     registry.register(Arc::new(IsPrimeTask));
     registry.register(Arc::new(tasks::knn::KnnChunkTask::standard()));
     let rt = sashimi::runtime::open_shared()?;
-    let mut w =
-        Worker::new(&format!("tcp-{}", std::process::id()), profile, registry).with_runtime(rt);
+    let mut w = Worker::new(&format!("tcp-{}", std::process::id()), profile, registry)
+        .with_runtime(rt)
+        .with_prefetch_cap(prefetch);
     if max > 0 {
         w.max_tickets = Some(max);
     }

@@ -164,6 +164,16 @@ pub struct Progress {
 ///   return `Ok(false)` and increment
 ///   [`Progress::duplicate_results`], never overwriting the stored
 ///   result.
+/// * **Batch = k-fold loop** — [`next_tickets`](Self::next_tickets)
+///   returns exactly the sequence that `k` successive
+///   [`next_ticket`](Self::next_ticket) calls at the same `now_ms`
+///   would, stopping early at the first `None` (so a batch is always a
+///   prefix of the k-fold dispatch sequence, VCT ordering preserved
+///   within and across batches), and
+///   [`complete_batch`](Self::complete_batch) applies its entries in
+///   order with per-entry first-result-wins accounting, stopping at the
+///   first error with the preceding prefix applied.  `k = 1` is
+///   bit-for-bit the unbatched path.
 /// * **Error requeue at creation time** — an error report on an
 ///   in-flight ticket (with `requeue_on_error`) returns it to the pool
 ///   with its VCT reset to the *original* creation time, keeping its
@@ -192,6 +202,39 @@ pub trait Scheduler: Send + Sync {
     /// Record a result.  First result wins; duplicates (a slow client
     /// returning a redistributed ticket) are counted and dropped.
     fn complete(&self, id: TicketId, result: Value) -> Result<bool>;
+
+    /// Batched dispatch: up to `k` tickets for `client` at `now_ms`, in
+    /// dispatch order — observably identical to calling
+    /// [`next_ticket`](Self::next_ticket) `k` times and stopping at the
+    /// first `None` (the same ticket may appear more than once when the
+    /// min-redistribute window is zero, exactly as the loop would
+    /// re-issue it).  This default *is* the loop; indexed backends
+    /// override it to amortise lock acquisitions across the batch.
+    fn next_tickets(&self, client: &str, now_ms: u64, k: usize) -> Vec<Ticket> {
+        let mut out = Vec::with_capacity(k.min(64));
+        for _ in 0..k {
+            match self.next_ticket(client, now_ms) {
+                Some(t) => out.push(t),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Batched completion: apply `(ticket, result)` pairs in order with
+    /// [`complete`](Self::complete) semantics per entry; returns how
+    /// many were freshly accepted (the rest were duplicates).  On an
+    /// unknown ticket the entries *before* it stay applied and the
+    /// error is returned — identical to looping `complete` by hand.
+    fn complete_batch(&self, results: Vec<(TicketId, Value)>) -> Result<usize> {
+        let mut accepted = 0usize;
+        for (id, result) in results {
+            if self.complete(id, result)? {
+                accepted += 1;
+            }
+        }
+        Ok(accepted)
+    }
 
     /// Record a worker error report; optionally requeue immediately.
     fn report_error(&self, id: TicketId, report: String) -> Result<()>;
@@ -410,6 +453,72 @@ mod tests {
                     s.create_tickets(TaskId(3), "t", args(1), 0);
                     s.create_tickets(TaskId(1), "t", args(1), 0);
                     assert_eq!(s.max_task_id(), Some(TaskId(3)));
+                }
+
+                /// Batched dispatch must equal the k-fold `next_ticket`
+                /// loop on an identical store — including re-issuing the
+                /// same ticket when the min-redistribute window is zero.
+                #[test]
+                fn batch_dispatch_is_prefix_of_loop() {
+                    let a = store(1000, 0);
+                    let b = store(1000, 0);
+                    a.create_tickets(TaskId(1), "t", args(3), 0);
+                    b.create_tickets(TaskId(1), "t", args(3), 0);
+                    let batch = a.next_tickets("c", 5, 5);
+                    let mut looped = Vec::new();
+                    for _ in 0..5 {
+                        match b.next_ticket("c", 5) {
+                            Some(t) => looped.push(t),
+                            None => break,
+                        }
+                    }
+                    assert_eq!(batch, looped);
+                    assert_eq!(batch.len(), 5, "zero window keeps re-issuing");
+                    assert_eq!(batch[3].id, batch[0].id, "fallback re-issue inside the batch");
+                    assert_eq!(a.progress(None), b.progress(None));
+                }
+
+                #[test]
+                fn complete_batch_counts_and_stops_at_unknown() {
+                    let s = store(1000, 100);
+                    let ids = s.create_tickets(TaskId(1), "t", args(3), 0);
+                    let _ = s.next_ticket("c", 0);
+                    // A duplicate inside one batch is counted, not applied.
+                    let accepted = s
+                        .complete_batch(vec![
+                            (ids[0], Value::num(1.0)),
+                            (ids[0], Value::num(2.0)),
+                            (ids[1], Value::num(3.0)),
+                        ])
+                        .unwrap();
+                    assert_eq!(accepted, 2);
+                    let p = s.progress(None);
+                    assert_eq!(p.done, 2);
+                    assert_eq!(p.duplicate_results, 1);
+                    // Unknown id mid-batch: the prefix stays applied.
+                    let err = s.complete_batch(vec![
+                        (ids[2], Value::num(4.0)),
+                        (TicketId(99), Value::Null),
+                    ]);
+                    assert!(err.is_err());
+                    assert_eq!(s.progress(None).done, 3);
+                    assert_eq!(
+                        s.wait_results(TaskId(1)),
+                        vec![Value::num(1.0), Value::num(3.0), Value::num(4.0)]
+                    );
+                }
+
+                #[test]
+                fn empty_and_oversized_batches() {
+                    let s = store(1000, 100);
+                    assert!(s.next_tickets("c", 0, 0).is_empty());
+                    assert_eq!(s.complete_batch(Vec::new()).unwrap(), 0);
+                    s.create_tickets(TaskId(1), "t", args(2), 0);
+                    // k beyond the pool stops where the loop would: the
+                    // min-redistribute window blocks a re-issue.
+                    let got = s.next_tickets("c", 5, 8);
+                    assert_eq!(got.len(), 2);
+                    assert_eq!(s.progress(None).in_flight, 2);
                 }
 
                 #[test]

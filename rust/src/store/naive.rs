@@ -12,6 +12,12 @@
 //! and asserts identical dispatch order, progress counters, and
 //! duplicate accounting.  `benches/store_throughput.rs` measures the
 //! gap.
+//!
+//! The batched entry points ([`Scheduler::next_tickets`] /
+//! [`Scheduler::complete_batch`]) are deliberately *not* overridden
+//! here: this store runs the trait's loop fallback, which is the
+//! reference semantics the indexed store's amortised batch paths are
+//! differential-tested against (`rust/tests/properties.rs`).
 
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};

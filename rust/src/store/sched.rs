@@ -40,7 +40,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, Result};
 
 use crate::store::{
     deadline_after, wait_deadline, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
@@ -249,6 +249,140 @@ impl IndexedStore {
             }
         }
         None
+    }
+
+    /// One dispatch decision + index/counter transition under the
+    /// already-held sched guard: the shared core of
+    /// [`Scheduler::next_ticket`] and the batched
+    /// [`Scheduler::next_tickets`].  Returns `(id, distribution_count,
+    /// was_pending)`.
+    fn dispatch_one(&self, s: &mut SchedState, now_ms: u64) -> Option<(u64, u32, bool)> {
+        let id = self.pick(s, now_ms)?;
+        let m = s.meta.get_mut(&id).expect("picked ticket has meta");
+        let old_vct = vct_of(&self.cfg, m);
+        let old_fkey = m.last_distributed_ms.unwrap_or(0);
+        let redistribution = m.distribution_count > 0;
+        let was_pending = m.status == TicketStatus::Pending;
+        m.status = TicketStatus::InFlight;
+        m.last_distributed_ms = Some(now_ms);
+        m.distribution_count += 1;
+        let count = m.distribution_count;
+        s.ready.remove(&(old_vct, id));
+        s.ready.insert((now_ms + self.cfg.requeue_after_ms, id));
+        s.fallback.remove(&(old_fkey, id));
+        s.fallback.insert((now_ms, id));
+        if redistribution {
+            s.redistributions += 1;
+        }
+        if was_pending {
+            s.pending -= 1;
+            s.in_flight += 1;
+        }
+        Some((id, count, was_pending))
+    }
+
+    /// Apply a batch of completions in order with per-entry
+    /// [`Scheduler::complete`] semantics under a *single* dispatch-mutex
+    /// acquisition.  Returns the accepted/duplicate flag for every
+    /// entry actually applied, plus the error (if any) that stopped the
+    /// batch — entries before it stay applied, exactly like a
+    /// hand-written `complete` loop.  Shared by the trait impl and by
+    /// [`wal`](super::wal)'s `CompleteBatch` record, which needs the
+    /// per-entry flags for its replay cross-check.
+    pub(crate) fn complete_batch_flags(
+        &self,
+        results: Vec<(TicketId, Value)>,
+    ) -> (Vec<bool>, Option<anyhow::Error>) {
+        // Phase 1: stripe lookups (never under the dispatch mutex).
+        let mut entries: Vec<(TicketId, Value, usize, TaskId, Arc<TaskLedger>)> =
+            Vec::with_capacity(results.len());
+        let mut stopped: Option<anyhow::Error> = None;
+        for (id, value) in results {
+            let found = {
+                let shard = self.shard(id.0).read().unwrap();
+                shard.get(&id.0).map(|t| (t.index, t.task, Arc::clone(&t.ledger)))
+            };
+            match found {
+                Some((index, task, ledger)) => entries.push((id, value, index, task, ledger)),
+                None => {
+                    stopped = Some(anyhow!("unknown ticket {id:?}"));
+                    break;
+                }
+            }
+        }
+        // Phase 2: status transitions for the whole prefix under one
+        // dispatch-mutex acquisition (the batch amortisation).
+        let mut flags: Vec<bool> = Vec::with_capacity(entries.len());
+        let mut pendings: Vec<bool> = Vec::with_capacity(entries.len());
+        {
+            let mut s = self.sched.lock().unwrap();
+            for (id, _, _, _, _) in &entries {
+                let status = match s.meta.get(&id.0) {
+                    Some(m) => m.status,
+                    None => {
+                        // Body present but meta not yet published (a
+                        // racing create): stop here, prefix applied.
+                        stopped = Some(anyhow!("unknown ticket {id:?}"));
+                        break;
+                    }
+                };
+                if status == TicketStatus::Done {
+                    s.duplicate_results += 1;
+                    flags.push(false);
+                    pendings.push(false);
+                    continue;
+                }
+                let m = s.meta.get_mut(&id.0).expect("checked above");
+                let was_pending = m.status == TicketStatus::Pending;
+                let old_vct = vct_of(&self.cfg, m);
+                let old_fkey = m.last_distributed_ms.unwrap_or(0);
+                m.status = TicketStatus::Done;
+                s.ready.remove(&(old_vct, id.0));
+                s.fallback.remove(&(old_fkey, id.0));
+                if was_pending {
+                    s.pending -= 1;
+                } else {
+                    s.in_flight -= 1;
+                }
+                s.done += 1;
+                flags.push(true);
+                pendings.push(was_pending);
+            }
+        }
+        entries.truncate(flags.len());
+        // Phase 3: ledger results + counters; consecutive same-task
+        // entries share one lock acquisition and one wakeup (the common
+        // whole-batch-one-task case).
+        let mut i = 0usize;
+        while i < entries.len() {
+            let task = entries[i].3;
+            let ledger = Arc::clone(&entries[i].4);
+            let mut any = false;
+            {
+                let mut st = ledger.state.lock().unwrap();
+                while i < entries.len() && entries[i].3 == task {
+                    if flags[i] {
+                        let index = entries[i].2;
+                        let id = (entries[i].0).0;
+                        let value = std::mem::replace(&mut entries[i].1, Value::Null);
+                        if pendings[i] {
+                            st.pending -= 1;
+                        } else {
+                            st.in_flight -= 1;
+                        }
+                        st.done += 1;
+                        st.results.push((index, id, value.clone()));
+                        st.completions.push_back((index, value));
+                        any = true;
+                    }
+                    i += 1;
+                }
+            }
+            if any {
+                ledger.cv.notify_all();
+            }
+        }
+        (flags, stopped)
     }
 
     /// Capture the full durable state (the WAL checkpoint payload).
@@ -468,28 +602,7 @@ impl Scheduler for IndexedStore {
     fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
         let (id, count, was_pending) = {
             let mut s = self.sched.lock().unwrap();
-            let id = self.pick(&s, now_ms)?;
-            let m = s.meta.get_mut(&id).expect("picked ticket has meta");
-            let old_vct = vct_of(&self.cfg, m);
-            let old_fkey = m.last_distributed_ms.unwrap_or(0);
-            let redistribution = m.distribution_count > 0;
-            let was_pending = m.status == TicketStatus::Pending;
-            m.status = TicketStatus::InFlight;
-            m.last_distributed_ms = Some(now_ms);
-            m.distribution_count += 1;
-            let count = m.distribution_count;
-            s.ready.remove(&(old_vct, id));
-            s.ready.insert((now_ms + self.cfg.requeue_after_ms, id));
-            s.fallback.remove(&(old_fkey, id));
-            s.fallback.insert((now_ms, id));
-            if redistribution {
-                s.redistributions += 1;
-            }
-            if was_pending {
-                s.pending -= 1;
-                s.in_flight += 1;
-            }
-            (id, count, was_pending)
+            self.dispatch_one(&mut s, now_ms)?
         };
         let (ticket, ledger) = {
             let shard = self.shard(id).read().unwrap();
@@ -519,53 +632,101 @@ impl Scheduler for IndexedStore {
         Some(ticket)
     }
 
-    fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
-        let (index, ledger) = {
-            let shard = self.shard(id.0).read().unwrap();
-            match shard.get(&id.0) {
-                Some(t) => (t.index, Arc::clone(&t.ledger)),
-                None => bail!("unknown ticket {id:?}"),
-            }
-        };
-        let was_pending = {
-            let mut s = self.sched.lock().unwrap();
-            let status = match s.meta.get(&id.0) {
-                Some(m) => m.status,
-                None => bail!("unknown ticket {id:?}"),
-            };
-            if status == TicketStatus::Done {
-                s.duplicate_results += 1;
-                return Ok(false);
-            }
-            let m = s.meta.get_mut(&id.0).expect("checked above");
-            let was_pending = m.status == TicketStatus::Pending;
-            let old_vct = vct_of(&self.cfg, m);
-            let old_fkey = m.last_distributed_ms.unwrap_or(0);
-            m.status = TicketStatus::Done;
-            // Evict from the scan path: done tickets cost dispatch nothing.
-            s.ready.remove(&(old_vct, id.0));
-            s.fallback.remove(&(old_fkey, id.0));
-            if was_pending {
-                s.pending -= 1;
-            } else {
-                s.in_flight -= 1;
-            }
-            s.done += 1;
-            was_pending
-        };
-        {
-            let mut st = ledger.state.lock().unwrap();
-            if was_pending {
-                st.pending -= 1;
-            } else {
-                st.in_flight -= 1;
-            }
-            st.done += 1;
-            st.results.push((index, id.0, result.clone()));
-            st.completions.push_back((index, result));
+    /// The batched dispatch pick: `k` [`dispatch_one`] decisions under
+    /// *one* sched-mutex acquisition, then body clones grouped so each
+    /// stripe's read lock is taken once, then ledger counter moves
+    /// grouped per task — same observable result as `k` successive
+    /// [`Scheduler::next_ticket`] calls, amortised locking.
+    ///
+    /// [`dispatch_one`]: IndexedStore::dispatch_one
+    fn next_tickets(&self, client: &str, now_ms: u64, k: usize) -> Vec<Ticket> {
+        if k == 0 {
+            return Vec::new();
         }
-        ledger.cv.notify_all();
-        Ok(true)
+        if k == 1 {
+            return self.next_ticket(client, now_ms).into_iter().collect();
+        }
+        // Phase 1: k dispatch decisions, one lock acquisition.
+        let picks: Vec<(u64, u32, bool)> = {
+            let mut s = self.sched.lock().unwrap();
+            let mut picks = Vec::with_capacity(k.min(64));
+            for _ in 0..k {
+                match self.dispatch_one(&mut s, now_ms) {
+                    Some(p) => picks.push(p),
+                    None => break,
+                }
+            }
+            picks
+        };
+        if picks.is_empty() {
+            return Vec::new();
+        }
+        // Phase 2: clone bodies, each stripe read-locked once.  The same
+        // id may appear twice (zero min-redistribute window re-issues
+        // within the batch); each occurrence gets its own clone.
+        let n_stripes = self.shards.len();
+        let mut by_stripe: Vec<Vec<usize>> = vec![Vec::new(); n_stripes];
+        for (pos, &(id, _, _)) in picks.iter().enumerate() {
+            by_stripe[id as usize % n_stripes].push(pos);
+        }
+        let mut out: Vec<Option<Ticket>> = (0..picks.len()).map(|_| None).collect();
+        // Pending→in-flight ledger moves, grouped per task (phase 3).
+        let mut moves: Vec<(TaskId, Arc<TaskLedger>, i64)> = Vec::new();
+        for (stripe, positions) in by_stripe.into_iter().enumerate() {
+            if positions.is_empty() {
+                continue;
+            }
+            let shard = self.shards[stripe].read().unwrap();
+            for pos in positions {
+                let (id, count, was_pending) = picks[pos];
+                let body = shard.get(&id).expect("indexed ticket has a stored body");
+                out[pos] = Some(Ticket {
+                    id: TicketId(id),
+                    task: body.task,
+                    task_name: body.task_name.to_string(),
+                    index: body.index,
+                    payload: body.payload.clone(),
+                    created_ms: body.created_ms,
+                    status: TicketStatus::InFlight,
+                    last_distributed_ms: Some(now_ms),
+                    distribution_count: count,
+                    result: None,
+                    assigned_to: Some(client.to_string()),
+                });
+                if was_pending {
+                    match moves.iter_mut().find(|(t, _, _)| *t == body.task) {
+                        Some((_, _, n)) => *n += 1,
+                        None => moves.push((body.task, Arc::clone(&body.ledger), 1)),
+                    }
+                }
+            }
+        }
+        // Phase 3: ledger counters, one lock acquisition per task.
+        for (_, ledger, n) in moves {
+            let mut st = ledger.state.lock().unwrap();
+            st.pending -= n;
+            st.in_flight += n;
+        }
+        out.into_iter().map(|t| t.expect("every pick got its body")).collect()
+    }
+
+    fn complete_batch(&self, results: Vec<(TicketId, Value)>) -> Result<usize> {
+        let (flags, stopped) = self.complete_batch_flags(results);
+        match stopped {
+            Some(e) => Err(e),
+            None => Ok(flags.iter().filter(|&&f| f).count()),
+        }
+    }
+
+    fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
+        // One completion state machine: the singular path is a
+        // one-entry batch, so the differential suites pin a single
+        // implementation instead of two hand-synchronised copies.
+        let (flags, stopped) = self.complete_batch_flags(vec![(id, result)]);
+        match stopped {
+            Some(e) => Err(e),
+            None => Ok(flags[0]),
+        }
     }
 
     fn report_error(&self, id: TicketId, report: String) -> Result<()> {
@@ -805,6 +966,45 @@ mod tests {
                     while let Some(t) = s.next_ticket(&client, 1) {
                         assert!(s.complete(t.id, Value::num(t.index as f64)).unwrap());
                         served += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, n as u64);
+        let p = s.progress(None);
+        assert_eq!(p.done, n);
+        assert_eq!(p.duplicate_results, 0);
+        assert_eq!(s.wait_results(TaskId(1)).len(), n);
+    }
+
+    /// Concurrent clients draining the pool in batches neither lose nor
+    /// double-complete tickets (the batched analogue of
+    /// `concurrent_dispatch_is_exact`).
+    #[test]
+    fn concurrent_batched_dispatch_is_exact() {
+        let s = Arc::new(IndexedStore::new(StoreConfig {
+            requeue_after_ms: 600_000,
+            min_redistribute_ms: 600_000,
+            requeue_on_error: true,
+        }));
+        let n = 960usize;
+        s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
+        let handles: Vec<_> = (0..6)
+            .map(|w| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    let client = format!("c{w}");
+                    let mut served = 0u64;
+                    loop {
+                        let batch = s.next_tickets(&client, 1, 16);
+                        if batch.is_empty() {
+                            break;
+                        }
+                        let results: Vec<_> =
+                            batch.iter().map(|t| (t.id, Value::num(t.index as f64))).collect();
+                        served += s.complete_batch(results).unwrap() as u64;
                     }
                     served
                 })

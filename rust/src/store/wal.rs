@@ -32,10 +32,19 @@
 //! Appends always reach the OS (one `write` per record); *fsync* is the
 //! knob.  `EveryRecord` survives power loss at fsync-per-dispatch cost;
 //! `GroupCommitMs(t)` bounds loss to the last `t` ms (a background
-//! flusher fsyncs the tail); `OsOnly` never fsyncs — it survives process
-//! crashes (the bar for coordinator restarts) but not kernel panics.
-//! `benches/store_throughput.rs` measures all three against the raw
-//! store (EXPERIMENTS.md §WAL).
+//! flusher fsyncs the tail) — with one carve-out: *completions* are
+//! fsynced before [`Scheduler::complete`] / [`Scheduler::complete_batch`]
+//! returns, so an acknowledged result is never inside the loss window
+//! (batching amortises that fsync across the whole batch); `OsOnly`
+//! never fsyncs — it survives process crashes (the bar for coordinator
+//! restarts) but not kernel panics.  `benches/store_throughput.rs`
+//! measures all three against the raw store (EXPERIMENTS.md §WAL).
+//!
+//! Batched operations ([`Scheduler::next_tickets`] /
+//! [`Scheduler::complete_batch`]) log one framed `DispatchBatch` /
+//! `CompleteBatch` record per batch instead of one frame per ticket, so
+//! frame and fsync overheads amortise with the batch size
+//! (EXPERIMENTS.md §Batch).
 //!
 //! ## Checkpoints
 //!
@@ -94,14 +103,23 @@ const OP_DISPATCH: u8 = 3;
 const OP_COMPLETE: u8 = 4;
 const OP_ERROR: u8 = 5;
 const OP_DRAIN_ERRORS: u8 = 6;
+/// One batched dispatch (`next_tickets`): the whole batch in one frame.
+const OP_DISPATCH_BATCH: u8 = 7;
+/// One batched completion (`complete_batch`): the applied prefix, with
+/// its per-entry accepted flags, in one frame.
+const OP_COMPLETE_BATCH: u8 = 8;
 
 /// When the log is fsynced (appends always reach the OS immediately).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SyncPolicy {
     /// fsync after every record: survives power loss, slowest.
     EveryRecord,
-    /// A background flusher fsyncs every `t` ms: loss window ≤ `t` ms.
-    /// A window of 0 degenerates to per-record fsync ([`EveryRecord`]).
+    /// A background flusher fsyncs every `t` ms: loss window ≤ `t` ms
+    /// for unacknowledged work.  Completions are excluded from the
+    /// window: `complete`/`complete_batch` fsync the tail before
+    /// returning, so an Acked result is always durable (batch
+    /// completion amortises that fsync across its entries).  A window
+    /// of 0 degenerates to per-record fsync ([`EveryRecord`]).
     ///
     /// [`EveryRecord`]: SyncPolicy::EveryRecord
     GroupCommitMs(u64),
@@ -843,6 +861,27 @@ impl WalStore {
         self.log.lock().unwrap().sync()
     }
 
+    /// Whether any appended record is still waiting for an fsync.  Test
+    /// hook for the group-commit acknowledgement contract
+    /// (`rust/tests/wal_recovery.rs`): after `complete`/`complete_batch`
+    /// returns under [`SyncPolicy::GroupCommitMs`], this must be false.
+    pub fn has_unsynced_appends(&self) -> bool {
+        self.log.lock().unwrap().dirty
+    }
+
+    /// The group-commit acknowledgement fix: under `GroupCommitMs` a
+    /// completion record is fsynced *before* the call returns (and the
+    /// distributor Acks), so acknowledged results are never in the loss
+    /// window.  `EveryRecord`/`GroupCommitMs(0)` already synced in
+    /// `append`; `OsOnly`'s contract is process-crash durability, which
+    /// the write+flush in `append` provides.
+    fn sync_completions(&self, log: &mut LogWriter) -> Result<()> {
+        if matches!(self.wal_cfg.sync, SyncPolicy::GroupCommitMs(t) if t > 0) {
+            log.sync().context("fsync before acknowledging completion")?;
+        }
+        Ok(())
+    }
+
     /// Append one record after its operation has been applied, keeping
     /// log order == apply order under the already-held log guard.  An
     /// append failure is fatal by design: a coordinator that cannot
@@ -965,6 +1004,45 @@ fn replay_record(store: &IndexedStore, payload: &[u8]) -> Result<u64> {
             let _ = store.drain_errors();
             Ok(1)
         }
+        OP_DISPATCH_BATCH => {
+            let now_ms = d.u64()?;
+            let client = d.str()?;
+            let n = d.u32()? as usize;
+            let mut ids = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                ids.push(d.u64()?);
+            }
+            d.done()?;
+            // A batch is a prefix of the k-fold dispatch sequence, so
+            // replaying with k = n deterministically re-picks exactly
+            // the logged tickets (whatever k was originally requested).
+            let tickets = store.next_tickets(&client, now_ms, ids.len());
+            let picked: Vec<u64> = tickets.iter().map(|t| t.id.0).collect();
+            ensure!(
+                picked == ids,
+                "replayed batch dispatch picked {picked:?}, log says {ids:?}"
+            );
+            Ok(1)
+        }
+        OP_COMPLETE_BATCH => {
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let id = TicketId(d.u64()?);
+                let accepted = d.u8()? != 0;
+                let result = d.value()?;
+                entries.push((id, accepted, result));
+            }
+            d.done()?;
+            for (id, accepted, result) in entries {
+                let fresh = store.complete(id, result)?;
+                ensure!(
+                    fresh == accepted,
+                    "replayed batch completion of {id:?} accepted={fresh}, log says {accepted}"
+                );
+            }
+            Ok(1)
+        }
         op => bail!("unknown WAL opcode {op}"),
     }
 }
@@ -1028,6 +1106,24 @@ impl Scheduler for WalStore {
         Some(t)
     }
 
+    fn next_tickets(&self, client: &str, now_ms: u64, k: usize) -> Vec<Ticket> {
+        let mut log = self.log.lock().unwrap();
+        let tickets = self.inner.next_tickets(client, now_ms, k);
+        if tickets.is_empty() {
+            // Nothing mutated, nothing to log.
+            return tickets;
+        }
+        let mut e = Enc::new(OP_DISPATCH_BATCH);
+        e.u64(now_ms);
+        e.str(client);
+        e.u32(tickets.len() as u32);
+        for t in &tickets {
+            e.u64(t.id.0);
+        }
+        self.append(&mut log, e);
+        tickets
+    }
+
     fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
         let result_json = result.to_string();
         let mut log = self.log.lock().unwrap();
@@ -1037,7 +1133,36 @@ impl Scheduler for WalStore {
         e.u8(fresh as u8);
         e.str(&result_json);
         self.append(&mut log, e);
+        self.sync_completions(&mut log)?;
         Ok(fresh)
+    }
+
+    fn complete_batch(&self, results: Vec<(TicketId, Value)>) -> Result<usize> {
+        if results.is_empty() {
+            return Ok(0);
+        }
+        // Serialise payloads before `results` moves into the inner store.
+        let jsons: Vec<(u64, String)> =
+            results.iter().map(|(id, v)| (id.0, v.to_string())).collect();
+        let mut log = self.log.lock().unwrap();
+        let (flags, stopped) = self.inner.complete_batch_flags(results);
+        // Log the applied prefix with its per-entry accepted flags; an
+        // erroring entry was not applied and is not logged.
+        if !flags.is_empty() {
+            let mut e = Enc::new(OP_COMPLETE_BATCH);
+            e.u32(flags.len() as u32);
+            for (i, accepted) in flags.iter().enumerate() {
+                e.u64(jsons[i].0);
+                e.u8(*accepted as u8);
+                e.str(&jsons[i].1);
+            }
+            self.append(&mut log, e);
+        }
+        self.sync_completions(&mut log)?;
+        match stopped {
+            Some(err) => Err(err),
+            None => Ok(flags.iter().filter(|&&f| f).count()),
+        }
     }
 
     fn report_error(&self, id: TicketId, report: String) -> Result<()> {
@@ -1298,6 +1423,50 @@ mod tests {
         std::mem::forget(s); // crash: no flush-on-drop, fd leaks until exit
         let r = WalStore::recover(&dir).unwrap();
         assert_eq!(r.progress(None), before);
+        drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Batched dispatch/completion write one frame per batch, replay
+    /// deterministically, and leave the recovered store in lockstep
+    /// with an unlogged control store.
+    #[test]
+    fn batched_ops_recover_exactly() {
+        let dir = temp_dir("batch");
+        let control = IndexedStore::new(cfg());
+        {
+            let s = WalStore::open(
+                &dir,
+                cfg(),
+                WalConfig { sync: SyncPolicy::OsOnly, ..WalConfig::default() },
+            )
+            .unwrap();
+            let drive = |a: &dyn Scheduler| {
+                a.create_tickets(
+                    TaskId(1),
+                    "t",
+                    (0..5).map(|i| Value::num(i as f64)).collect(),
+                    0,
+                );
+                let batch = a.next_tickets("c", 1, 3);
+                assert_eq!(batch.len(), 3);
+                let accepted = a
+                    .complete_batch(vec![
+                        (batch[0].id, Value::num(0.0)),
+                        (batch[1].id, Value::num(1.0)),
+                        (batch[0].id, Value::num(9.0)), // duplicate inside the batch
+                    ])
+                    .unwrap();
+                assert_eq!(accepted, 2);
+            };
+            drive(&s);
+            drive(&control);
+            std::mem::forget(s); // crash: no flush-on-drop
+        }
+        let r = WalStore::recover(&dir).unwrap();
+        assert_eq!(r.progress(None), control.progress(None));
+        // Post-recovery batched dispatch continues in lockstep.
+        assert_eq!(r.next_tickets("d", 2, 4), control.next_tickets("d", 2, 4));
         drop(r);
         fs::remove_dir_all(&dir).unwrap();
     }

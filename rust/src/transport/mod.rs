@@ -23,16 +23,59 @@ use anyhow::{bail, Context, Result};
 use crate::store::{TaskId, TicketId};
 use crate::util::json::Value;
 
+/// One ticket as it rides the wire inside a [`Message::Tickets`] batch:
+/// the same fields as the singular [`Message::Ticket`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireTicket {
+    pub ticket: TicketId,
+    pub task: TaskId,
+    pub task_name: String,
+    pub index: usize,
+    pub payload: Value,
+}
+
+impl WireTicket {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("ticket", Value::num(self.ticket.0 as f64)),
+            ("task", Value::num(self.task.0 as f64)),
+            ("task_name", Value::str(self.task_name.clone())),
+            ("index", Value::num(self.index as f64)),
+            ("payload", self.payload.clone()),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<WireTicket> {
+        Ok(WireTicket {
+            ticket: TicketId(v.get("ticket")?.as_u64()?),
+            task: TaskId(v.get("task")?.as_u64()?),
+            task_name: v.get("task_name")?.as_str()?.to_string(),
+            index: v.get("index")?.as_usize()?,
+            payload: v.get("payload")?.clone(),
+        })
+    }
+}
+
 /// Protocol messages (both directions).  Mirrors the browser loop in
-/// §2.1.2 of the paper step by step.
+/// §2.1.2 of the paper step by step.  The batched variants
+/// (`TicketBatchRequest`/`Tickets`/`TicketResults`) amortise one
+/// round-trip over many tickets; the singular forms stay served for
+/// legacy clients.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker -> server: join with a client id and device profile name.
     Hello { client: String, profile: String },
     /// Worker -> server: step 2, "a ticket request is sent".
     TicketRequest,
+    /// Worker -> server: batched step 2 — up to `max` tickets in one
+    /// round trip (the worker's adaptive prefetch size).
+    TicketBatchRequest { max: usize },
     /// Server -> worker: a ticket to execute.
     Ticket { ticket: TicketId, task: TaskId, task_name: String, index: usize, payload: Value },
+    /// Server -> worker: a batch of tickets, in dispatch order (the
+    /// reply to [`Message::TicketBatchRequest`]; an empty pool is
+    /// answered with [`Message::NoTicket`] instead).
+    Tickets { tickets: Vec<WireTicket> },
     /// Server -> worker: nothing available; retry after the hint.
     NoTicket { retry_after_ms: u64 },
     /// Worker -> server: step 3, fetch task code it has not cached.
@@ -46,6 +89,9 @@ pub enum Message {
     Data { key: String, shape: Vec<usize>, b64: String },
     /// Worker -> server: step 6, the calculated result.
     TicketResult { ticket: TicketId, result: Value },
+    /// Worker -> server: batched step 6 — a flush of several results in
+    /// one round trip, in completion order (answered with one Ack).
+    TicketResults { results: Vec<(TicketId, Value)> },
     /// Worker -> server: error report with stack trace; the worker
     /// reloads itself afterwards (paper behaviour).
     ErrorReport { ticket: TicketId, message: String, stack: String },
@@ -67,6 +113,26 @@ impl Message {
                 ("profile", Value::str(profile.clone())),
             ]),
             Message::TicketRequest => Value::obj(vec![("t", Value::str("ticket_req"))]),
+            Message::TicketBatchRequest { max } => Value::obj(vec![
+                ("t", Value::str("ticket_batch_req")),
+                ("max", Value::num(*max as f64)),
+            ]),
+            Message::Tickets { tickets } => Value::obj(vec![
+                ("t", Value::str("tickets")),
+                ("tickets", Value::arr(tickets.iter().map(|t| t.to_value()))),
+            ]),
+            Message::TicketResults { results } => Value::obj(vec![
+                ("t", Value::str("results")),
+                (
+                    "results",
+                    Value::arr(results.iter().map(|(id, r)| {
+                        Value::obj(vec![
+                            ("ticket", Value::num(id.0 as f64)),
+                            ("result", r.clone()),
+                        ])
+                    })),
+                ),
+            ]),
             Message::Ticket { ticket, task, task_name, index, payload } => Value::obj(vec![
                 ("t", Value::str("ticket")),
                 ("ticket", Value::num(ticket.0 as f64)),
@@ -126,6 +192,27 @@ impl Message {
                 profile: v.get("profile")?.as_str()?.to_string(),
             },
             "ticket_req" => Message::TicketRequest,
+            "ticket_batch_req" => {
+                Message::TicketBatchRequest { max: v.get("max")?.as_usize()? }
+            }
+            "tickets" => Message::Tickets {
+                tickets: v
+                    .get("tickets")?
+                    .as_arr()?
+                    .iter()
+                    .map(WireTicket::from_value)
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "results" => Message::TicketResults {
+                results: v
+                    .get("results")?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Ok((TicketId(e.get("ticket")?.as_u64()?), e.get("result")?.clone()))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            },
             "ticket" => Message::Ticket {
                 ticket: TicketId(v.get("ticket")?.as_u64()?),
                 task: TaskId(v.get("task")?.as_u64()?),
@@ -228,6 +315,33 @@ mod tests {
             payload: Value::obj(vec![("candidate", Value::num(97.0))]),
         });
         roundtrip(Message::NoTicket { retry_after_ms: 250 });
+        roundtrip(Message::TicketBatchRequest { max: 16 });
+        roundtrip(Message::Tickets {
+            tickets: vec![
+                WireTicket {
+                    ticket: TicketId(3),
+                    task: TaskId(1),
+                    task_name: "is_prime".into(),
+                    index: 7,
+                    payload: Value::obj(vec![("candidate", Value::num(97.0))]),
+                },
+                WireTicket {
+                    ticket: TicketId(4),
+                    task: TaskId(1),
+                    task_name: "is_prime".into(),
+                    index: 8,
+                    payload: Value::obj(vec![("candidate", Value::num(98.0))]),
+                },
+            ],
+        });
+        roundtrip(Message::Tickets { tickets: Vec::new() });
+        roundtrip(Message::TicketResults {
+            results: vec![
+                (TicketId(3), Value::Bool(true)),
+                (TicketId(4), Value::obj(vec![("x", Value::num(1.5))])),
+            ],
+        });
+        roundtrip(Message::TicketResults { results: Vec::new() });
         roundtrip(Message::TaskRequest { task_name: "knn".into() });
         roundtrip(Message::TaskCode {
             task_name: "knn".into(),

@@ -17,23 +17,55 @@
 //!   *reloads itself* (cache cleared, reconnect) and continues;
 //! * device heterogeneity via [`DeviceProfile`]: the real compute runs,
 //!   then the ticket is padded to `elapsed / speed` (DESIGN.md §7).
+//!
+//! Two departures from the one-ticket-per-round-trip basic program, both
+//! aimed at the coordinator RTT that bounds fast-link throughput
+//! (DESIGN.md §2.3):
+//! * **Prefetch queue** — step 2 sends `TicketBatchRequest { max }` and
+//!   queues the returned batch locally; results are flushed back as one
+//!   `TicketResults` per batch.  The batch size adapts: it starts at 1,
+//!   doubles toward [`Worker::prefetch_cap`] while a whole batch
+//!   executes faster than the round trip that fetched it (link-bound),
+//!   and halves on `NoTicket` or errors.  `prefetch_cap = 1` restores
+//!   the paper's exact single-ticket wire protocol.
+//! * **Idle backoff** — `NoTicket` sleeps grow exponentially with the
+//!   idle streak (jittered, capped at [`Worker::idle_backoff_cap_ms`]),
+//!   so an idle fleet does not hammer the coordinator in lockstep at
+//!   the retry hint.
+//!
+//! The prefetch queue and any unflushed results *survive* reloads and
+//! reconnects: an execution error reports the failing ticket, reloads
+//! (cache cleared), and then keeps working through the rest of the
+//! batch, so a transient error never strands prefetched work for the
+//! store's redistribution window.  Unacknowledged flushes are retried
+//! on the next connection — at-least-once, with the store's
+//! first-result-wins dedup absorbing any repeat.  Completed tickets
+//! are only counted once a flush is acknowledged, so a
+//! `max_tickets`-bounded worker's ledger is exact.  Work is only lost
+//! if the worker itself dies (a browser closing mid-ticket), which is
+//! what §2.1.2 redistribution recovers.
 
 pub mod profile;
 
 pub use profile::DeviceProfile;
 
+use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context as _, Result};
 
 use crate::runtime::{SharedRuntime, Tensor};
+use crate::store::TicketId;
 use crate::tasks::{Registry, TaskContext, TaskDef};
-use crate::transport::{Conn, Message};
+use crate::transport::{Conn, Message, WireTicket};
 use crate::util::base64;
 use crate::util::clock::{self, PaddedTimer};
+use crate::util::json::Value;
 use crate::util::lru::LruCache;
+use crate::util::rng::SplitMix64;
 
 /// What a worker did during `run` (asserted by tests/benches).
 #[derive(Debug, Default, Clone)]
@@ -46,6 +78,10 @@ pub struct WorkerReport {
     pub idle_polls: u64,
     pub task_fetches: u64,
     pub data_fetches: u64,
+    /// `Tickets` batches received (batch protocol only).
+    pub prefetch_batches: u64,
+    /// Largest batch the adaptive sizing actually received.
+    pub peak_batch: u64,
 }
 
 enum CacheEntry {
@@ -95,7 +131,18 @@ pub struct Worker {
     cache: LruCache<String, CacheEntry>,
     /// Cap on tickets to execute (None = until Shutdown/stop).
     pub max_tickets: Option<u64>,
+    /// Upper bound on the adaptive prefetch batch.  `1` disables
+    /// batching entirely and speaks the paper's exact single-ticket
+    /// protocol (`TicketRequest`/`TicketResult`).
+    pub prefetch_cap: usize,
+    /// Cap on the exponential `NoTicket` backoff sleep (ms).
+    pub idle_backoff_cap_ms: u64,
 }
+
+/// Default [`Worker::prefetch_cap`]: modest enough that compute-bound
+/// tickets stay effectively unbatched (the batch only grows while a
+/// whole batch runs faster than one round trip).
+pub const DEFAULT_PREFETCH_CAP: usize = 8;
 
 impl Worker {
     pub fn new(id: &str, profile: DeviceProfile, registry: Registry) -> Worker {
@@ -106,6 +153,8 @@ impl Worker {
             runtime: None,
             cache: LruCache::new(256 << 20), // 256 MiB, a browser-ish budget
             max_tickets: None,
+            prefetch_cap: DEFAULT_PREFETCH_CAP,
+            idle_backoff_cap_ms: 200,
         }
     }
 
@@ -116,6 +165,12 @@ impl Worker {
 
     pub fn with_cache_bytes(mut self, bytes: usize) -> Worker {
         self.cache = LruCache::new(bytes);
+        self
+    }
+
+    /// Set the prefetch ceiling (`1` = legacy single-ticket protocol).
+    pub fn with_prefetch_cap(mut self, cap: usize) -> Worker {
+        self.prefetch_cap = cap.max(1);
         self
     }
 
@@ -131,6 +186,20 @@ impl Worker {
         let mut report = WorkerReport::default();
         let max_reconnects = 5u32;
         let mut consecutive_failures = 0u32;
+        // Adaptive prefetch sizing (survives reconnects: link quality,
+        // not connection identity, is what it tracks).
+        let cap = self.prefetch_cap.max(1);
+        let mut batch_size: usize = 1;
+        let mut idle_streak: u32 = 0;
+        let mut jitter = SplitMix64::new(
+            self.id.bytes().fold(0x5EEDu64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64)),
+        );
+        // The prefetch queue and the result flush buffer survive
+        // reloads and reconnects (module docs): an error or a dropped
+        // connection must not strand a batch's remainder for the
+        // store's redistribution window while this worker is alive.
+        let mut queue: VecDeque<WireTicket> = VecDeque::new();
+        let mut pending: Vec<(TicketId, Value)> = Vec::new();
         'outer: while !stop.load(Ordering::SeqCst) {
             let mut conn = match connect() {
                 Ok(c) => c,
@@ -157,10 +226,67 @@ impl Worker {
             }
             consecutive_failures = 0;
 
+            // Compute time spent on the current batch vs the round trip
+            // that fetched it: the adaptive-growth signal (reset per
+            // connection; a carried-over queue just executes without
+            // feeding the growth rule).
+            let mut batch_exec_ms = 0.0f64;
+            let mut fetch_rtt_ms = 0.0f64;
+
             loop {
                 if stop.load(Ordering::SeqCst) {
+                    let _ = self.flush_results(&mut *conn, &mut pending, &mut report);
                     let _ = conn.send(&Message::Shutdown);
                     break 'outer;
+                }
+                // Execute from the prefetch queue first.
+                if let Some(t) = queue.pop_front() {
+                    let t0 = Instant::now();
+                    match self.execute_ticket(&mut *conn, &t.task_name, &t.payload, &mut report) {
+                        Ok(result) => {
+                            batch_exec_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            pending.push((t.ticket, result));
+                            if queue.is_empty() {
+                                // Batch done: flush its results...
+                                if self
+                                    .flush_results(&mut *conn, &mut pending, &mut report)
+                                    .is_err()
+                                {
+                                    continue 'outer;
+                                }
+                                // ...and grow while a whole batch runs
+                                // faster than the round trip it cost.
+                                if batch_exec_ms < fetch_rtt_ms && batch_size < cap {
+                                    batch_size = (batch_size * 2).min(cap);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // Salvage finished work before reporting.
+                            let _ = self.flush_results(&mut *conn, &mut pending, &mut report);
+                            report.errors_reported += 1;
+                            batch_size = (batch_size / 2).max(1);
+                            let _ = conn.send(&Message::ErrorReport {
+                                ticket: t.ticket,
+                                message: format!("{e:#}"),
+                                stack: stack_trace_of(&e),
+                            });
+                            let _ = conn.recv(); // Reload
+                            // The paper: "the browser reloads itself"
+                            // (cache cleared, fresh connection).  The
+                            // prefetched remainder is carried over and
+                            // executed after the reload — one bad
+                            // ticket must not strand the batch.
+                            self.cache.clear();
+                            report.reloads += 1;
+                            continue 'outer;
+                        }
+                    }
+                    continue;
+                }
+                // Queue empty: everything executed is flushed...
+                if self.flush_results(&mut *conn, &mut pending, &mut report).is_err() {
+                    continue 'outer;
                 }
                 if let Some(max) = self.max_tickets {
                     if report.tickets_completed >= max {
@@ -168,37 +294,41 @@ impl Worker {
                         break 'outer;
                     }
                 }
-                if conn.send(&Message::TicketRequest).is_err() {
+                // ...and the next batch is fetched, clamped so a bounded
+                // worker never prefetches work it will not complete.
+                let want = match self.max_tickets {
+                    Some(max) => batch_size.min((max - report.tickets_completed) as usize),
+                    None => batch_size,
+                };
+                let t0 = Instant::now();
+                let fetch = if cap == 1 {
+                    conn.send(&Message::TicketRequest)
+                } else {
+                    conn.send(&Message::TicketBatchRequest { max: want })
+                };
+                if fetch.is_err() {
                     continue 'outer; // reconnect
                 }
                 match conn.recv() {
-                    Ok(Message::Ticket { ticket, task_name, payload, .. }) => {
-                        match self.execute_ticket(&mut *conn, &task_name, &payload, &mut report) {
-                            Ok(result) => {
-                                if conn.send(&Message::TicketResult { ticket, result }).is_err() {
-                                    continue 'outer;
-                                }
-                                let _ = conn.recv(); // Ack
-                                report.tickets_completed += 1;
-                            }
-                            Err(e) => {
-                                report.errors_reported += 1;
-                                let _ = conn.send(&Message::ErrorReport {
-                                    ticket,
-                                    message: format!("{e:#}"),
-                                    stack: stack_trace_of(&e),
-                                });
-                                let _ = conn.recv(); // Reload
-                                // The paper: "the browser reloads itself".
-                                self.cache.clear();
-                                report.reloads += 1;
-                                continue 'outer;
-                            }
-                        }
+                    Ok(Message::Ticket { ticket, task, task_name, index, payload }) => {
+                        fetch_rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        batch_exec_ms = 0.0;
+                        idle_streak = 0;
+                        queue.push_back(WireTicket { ticket, task, task_name, index, payload });
+                    }
+                    Ok(Message::Tickets { tickets }) => {
+                        fetch_rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        batch_exec_ms = 0.0;
+                        idle_streak = 0;
+                        report.prefetch_batches += 1;
+                        report.peak_batch = report.peak_batch.max(tickets.len() as u64);
+                        queue.extend(tickets);
                     }
                     Ok(Message::NoTicket { retry_after_ms }) => {
                         report.idle_polls += 1;
-                        clock::sleep_ms(retry_after_ms.min(200));
+                        batch_size = (batch_size / 2).max(1);
+                        self.idle_backoff(&mut jitter, retry_after_ms, idle_streak);
+                        idle_streak = idle_streak.saturating_add(1);
                     }
                     Ok(Message::Reload) => {
                         self.cache.clear();
@@ -215,6 +345,68 @@ impl Worker {
             }
         }
         report
+    }
+
+    /// Flush buffered results: one `TicketResults` round trip, or the
+    /// legacy per-ticket `TicketResult` when batching is disabled.
+    /// Tickets are counted completed only once the coordinator's Ack
+    /// arrives, so a `max_tickets` ledger is exact; on a send/Ack
+    /// failure the unacknowledged results are put back in `pending`
+    /// and retried on the next connection (at-least-once — the store
+    /// counts any repeat as a duplicate, never double-applies it).
+    fn flush_results(
+        &self,
+        conn: &mut dyn Conn,
+        pending: &mut Vec<(TicketId, Value)>,
+        report: &mut WorkerReport,
+    ) -> Result<()> {
+        if self.prefetch_cap <= 1 {
+            while !pending.is_empty() {
+                let (ticket, result) = pending.remove(0);
+                let msg = Message::TicketResult { ticket, result };
+                let acked = conn.send(&msg).and_then(|_| conn.recv().map(|_| ()));
+                if let Err(e) = acked {
+                    if let Message::TicketResult { ticket, result } = msg {
+                        pending.insert(0, (ticket, result));
+                    }
+                    return Err(e);
+                }
+                report.tickets_completed += 1;
+            }
+            return Ok(());
+        }
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let n = pending.len() as u64;
+        let msg = Message::TicketResults { results: std::mem::take(pending) };
+        let acked = conn.send(&msg).and_then(|_| conn.recv().map(|_| ()));
+        match acked {
+            Ok(()) => {
+                report.tickets_completed += n;
+                Ok(())
+            }
+            Err(e) => {
+                if let Message::TicketResults { results } = msg {
+                    *pending = results;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// `NoTicket` backoff: exponential in the idle streak with
+    /// multiplicative jitter, capped at [`Self::idle_backoff_cap_ms`].
+    /// Replaces the fixed retry-hint sleep so an idle fleet spreads its
+    /// polls instead of re-asking in lockstep.
+    fn idle_backoff(&self, rng: &mut SplitMix64, retry_hint_ms: u64, streak: u32) {
+        let base = retry_hint_ms.max(1);
+        let ceiling =
+            base.saturating_mul(1u64 << streak.min(6)).min(self.idle_backoff_cap_ms.max(base));
+        // Sleep in [ceiling/2, ceiling]: two workers idling from the
+        // same instant drift apart within a few polls.
+        let jittered = ceiling / 2 + rng.gen_range(ceiling / 2 + 1);
+        clock::sleep_ms(jittered);
     }
 
     /// Steps 3–5 for one ticket: ensure code, prefetch datasets, execute
@@ -316,6 +508,54 @@ mod tests {
         assert_eq!(report.tickets_completed, 20);
         assert_eq!(report.task_fetches, 1, "task code cached after first fetch");
         assert_eq!(fw.store().progress(None).done, 20);
+    }
+
+    /// Tiny tickets over a latency-priced link: the adaptive batch
+    /// grows toward the cap, round trips amortise, and every ticket
+    /// still completes exactly once.
+    #[test]
+    fn prefetch_batches_tiny_tickets() {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(
+            (0..64).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+        );
+        let dist = Distributor::new(&fw);
+        // 5 ms one-way latency, actually slept: execution (µs) is far
+        // cheaper than a round trip, so growth must kick in.
+        let (listener, connector) =
+            local::endpoint(LinkModel { latency_ms: 5.0, bytes_per_ms: 100_000.0 }, true);
+        dist.serve(Box::new(listener));
+        let mut w = Worker::new("w0", DeviceProfile::native(), fw.registry_snapshot());
+        w.prefetch_cap = 16;
+        w.max_tickets = Some(64);
+        let stop = AtomicBool::new(false);
+        let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
+        assert_eq!(report.tickets_completed, 64);
+        assert!(report.peak_batch >= 4, "batch never grew: peak {}", report.peak_batch);
+        assert!(
+            report.prefetch_batches < 64,
+            "batching should need fewer fetches than tickets ({})",
+            report.prefetch_batches
+        );
+        let p = fw.store().progress(None);
+        assert_eq!(p.done, 64);
+        assert_eq!(p.duplicate_results, 0);
+    }
+
+    /// `prefetch_cap = 1` speaks the paper's exact single-ticket
+    /// protocol — no batch messages at all.
+    #[test]
+    fn legacy_cap_uses_single_ticket_protocol() {
+        let (fw, _dist, connector) = prime_setup(5);
+        let mut w = Worker::new("w0", DeviceProfile::native(), fw.registry_snapshot())
+            .with_prefetch_cap(1);
+        w.max_tickets = Some(5);
+        let stop = AtomicBool::new(false);
+        let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
+        assert_eq!(report.tickets_completed, 5);
+        assert_eq!(report.prefetch_batches, 0, "no batch messages on the legacy path");
+        assert_eq!(fw.store().progress(None).done, 5);
     }
 
     /// Panics on the first execution of ticket n=1, succeeds afterwards —

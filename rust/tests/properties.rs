@@ -115,7 +115,12 @@ fn store_never_loses_or_duplicates_tickets() {
 /// O(n)-scan reference must be observably identical — same dispatch
 /// order and ticket contents, same progress counters, same duplicate
 /// and error accounting — across random operation sequences (create /
-/// next_ticket / complete / report_error) at random clocks.
+/// next_ticket / next_tickets(k) / complete / complete_batch /
+/// report_error) at random clocks.  The batched ops pit the indexed
+/// store's amortised native paths against the naive store's
+/// loop-fallback reference, so "batch == k-fold loop" (including k=1)
+/// is pinned alongside dispatch order, §2.1.2 redistribution and
+/// duplicate accounting.
 #[test]
 fn indexed_scheduler_matches_naive_reference() {
     check("sched-differential", 256, |rng| {
@@ -130,7 +135,44 @@ fn indexed_scheduler_matches_naive_reference() {
         let mut now = 0u64;
         let mut created: Vec<TicketId> = Vec::new();
         for step in 0..160u64 {
-            match rng.gen_range(8) {
+            match rng.gen_range(10) {
+                8 => {
+                    // Batched dispatch, k = 1..=4 (k = 1 must be
+                    // bit-for-bit the unbatched path).
+                    let client = format!("c{}", rng.gen_range(4));
+                    let k = 1 + rng.gen_range(4) as usize;
+                    let a = indexed.next_tickets(&client, now, k);
+                    let b = naive.next_tickets(&client, now, k);
+                    prop_assert!(
+                        a == b,
+                        "batch dispatch (k={k}) diverges at t={now}: {a:?} vs {b:?}"
+                    );
+                }
+                9 => {
+                    // Batched completion over a random mix of known ids
+                    // (occasionally an unknown one mid-batch: the
+                    // applied-prefix error semantics must agree too).
+                    let n = 1 + rng.gen_range(3) as usize;
+                    let entries: Vec<(TicketId, Value)> = (0..n)
+                        .map(|_| {
+                            let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                                created[rng.gen_range(created.len() as u64) as usize]
+                            } else {
+                                TicketId(created.len() as u64 + 1_000)
+                            };
+                            (id, Value::num(id.0 as f64))
+                        })
+                        .collect();
+                    let a = indexed.complete_batch(entries.clone());
+                    let b = naive.complete_batch(entries);
+                    prop_assert!(
+                        a.is_err() == b.is_err(),
+                        "complete_batch error status diverges"
+                    );
+                    if let (Ok(x), Ok(y)) = (a, b) {
+                        prop_assert!(x == y, "complete_batch accepted counts diverge");
+                    }
+                }
                 0 | 1 => {
                     let task = tasks[rng.gen_range(3) as usize];
                     let n = 1 + rng.gen_range(3);

@@ -51,7 +51,37 @@ fn random_op(
     step: u64,
 ) -> Result<(), String> {
     let tasks = [TaskId(1), TaskId(2), TaskId(3)];
-    match rng.gen_range(8) {
+    match rng.gen_range(10) {
+        8 => {
+            // Batched dispatch: one DispatchBatch WAL record; replay
+            // must re-pick the identical prefix.
+            let client = format!("c{}", rng.gen_range(4));
+            let k = 1 + rng.gen_range(4) as usize;
+            let a = walled.next_tickets(&client, *now, k);
+            let b = control.next_tickets(&client, *now, k);
+            prop_assert!(a == b, "batch dispatch (k={k}) diverges at t={now}: {a:?} vs {b:?}");
+        }
+        9 => {
+            // Batched completion: one CompleteBatch record carrying
+            // per-entry accepted flags (duplicates included).
+            let n = 1 + rng.gen_range(3) as usize;
+            let entries: Vec<(TicketId, Value)> = (0..n)
+                .map(|_| {
+                    let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                        created[rng.gen_range(created.len() as u64) as usize]
+                    } else {
+                        TicketId(created.len() as u64 + 1_000)
+                    };
+                    (id, Value::num(id.0 as f64))
+                })
+                .collect();
+            let a = walled.complete_batch(entries.clone());
+            let b = control.complete_batch(entries);
+            prop_assert!(a.is_err() == b.is_err(), "complete_batch error status diverges");
+            if let (Ok(x), Ok(y)) = (a, b) {
+                prop_assert!(x == y, "complete_batch accepted counts diverge");
+            }
+        }
         0 | 1 => {
             let task = tasks[rng.gen_range(3) as usize];
             let n = 1 + rng.gen_range(3);
@@ -148,6 +178,10 @@ fn recovered_store_is_differential_identical_to_uninterrupted_run() {
         for step in 0..crash_after {
             random_op(rng, &walled, &control, &mut now, &mut created, step)?;
         }
+        // A batch dispatch at the crash point, so a DispatchBatch
+        // record can be the last (possibly torn-after) thing in the log.
+        let _ = walled.next_tickets("killer", now, 2);
+        let _ = control.next_tickets("killer", now, 2);
         let _ = walled.next_ticket("killer", now); // guarantee an in-flight dispatch
         let _ = control.next_ticket("killer", now);
         assert_same_state(&walled, &control, "pre-crash")?;
@@ -266,6 +300,48 @@ fn every_record_fsync_recovers_exactly() {
     std::mem::forget(s);
     let r = WalStore::recover(&dir).unwrap();
     assert_same_state(&r, &control, "fsync-per-record").unwrap();
+    drop(r);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The group-commit acknowledgement contract (ROADMAP follow-on):
+/// under `GroupCommitMs`, a completion must be fsynced before
+/// `complete`/`complete_batch` returns — so the Ack the distributor
+/// then sends is never inside the group-commit loss window.  Creates
+/// and dispatches may stay dirty until the background flusher fires;
+/// acknowledged results may not, and one fsync covers a whole batch.
+#[test]
+fn group_commit_completions_are_durable_before_ack() {
+    let dir = temp_dir("ack");
+    let cfg =
+        StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 10, requeue_on_error: true };
+    // Flush interval far beyond the test horizon: only the ack path can
+    // be fsyncing anything.
+    let wal_cfg = WalConfig {
+        sync: SyncPolicy::GroupCommitMs(600_000),
+        segment_max_bytes: 1 << 20,
+        checkpoint_every: 0,
+    };
+    let s = WalStore::open(&dir, cfg, wal_cfg).unwrap();
+    s.create_tickets(TaskId(1), "t", (0..4).map(|i| Value::num(i as f64)).collect(), 0);
+    assert!(s.has_unsynced_appends(), "creates may wait for the flusher");
+    let t = s.next_ticket("c", 1).unwrap();
+    assert!(s.has_unsynced_appends(), "dispatches may wait for the flusher");
+    s.complete(t.id, Value::num(0.0)).unwrap();
+    assert!(!s.has_unsynced_appends(), "a returned complete() must be fsynced");
+    // Batched completion: one fsync covers the whole batch.
+    let batch = s.next_tickets("c", 2, 2);
+    assert_eq!(batch.len(), 2);
+    assert!(s.has_unsynced_appends());
+    let accepted = s
+        .complete_batch(batch.iter().map(|t| (t.id, Value::num(t.index as f64))).collect())
+        .unwrap();
+    assert_eq!(accepted, 2);
+    assert!(!s.has_unsynced_appends(), "a returned complete_batch() must be fsynced");
+    // Crash now: every acknowledged result must survive recovery.
+    std::mem::forget(s);
+    let r = WalStore::recover(&dir).unwrap();
+    assert_eq!(r.progress(None).done, 3);
     drop(r);
     let _ = std::fs::remove_dir_all(&dir);
 }
