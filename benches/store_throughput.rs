@@ -24,6 +24,12 @@
 //! completion, so k divides the fsync count directly.  Acceptance
 //! floor: k=16 ≥ 3× the k=1 path on the same backend
 //! (EXPERIMENTS.md §Batch).
+//!
+//! A fourth table measures the active failure path (ISSUE 5):
+//! dispatch→release cycles through `next_tickets`/`release_batch` at
+//! k ∈ {1, 16} — the cost of handing a disconnecting client's batch
+//! back, on the raw indexed store and on the WAL (one `ReleaseBatch`
+//! frame per batch; EXPERIMENTS.md §Release).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -132,6 +138,39 @@ fn measure_drain(store: Arc<dyn Scheduler>, clients: usize, k: usize) -> f64 {
             })
         })
         .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Dispatch→release cycles across `clients` threads for `window_ms` at
+/// batch size `k`; returns tickets released per second.  Every released
+/// batch returns to the pool immediately, so the live-ticket count is
+/// invariant — the measured cost is the pure release transition (plus
+/// one WAL frame per batch on the durable backend).
+fn measure_release(store: Arc<dyn Scheduler>, clients: usize, k: usize, window_ms: u64) -> f64 {
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|w| {
+            let store = Arc::clone(&store);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let client = format!("c{w}");
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let batch = store.next_tickets(&client, clock::now_ms(), k);
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let ids: Vec<_> = batch.iter().map(|t| t.id).collect();
+                    ops += store.release_batch(&ids).into_iter().filter(|&f| f).count() as u64;
+                }
+                ops
+            })
+        })
+        .collect();
+    clock::sleep_ms(window_ms);
+    stop.store(true, Ordering::SeqCst);
     let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
     total as f64 / t0.elapsed().as_secs_f64()
 }
@@ -284,5 +323,46 @@ fn main() {
         "Acceptance floor (ISSUE 4): k=16 >= 3x the k=1 path on the same backend — \
          on wal-group50 the acknowledgement fix fsyncs per complete call, so k divides \
          the fsync count.  Record the table in EXPERIMENTS.md §Batch.\n"
+    );
+
+    // ---- Release path: the cost of handing a batch back ----
+    let release_n: usize = if quick { 20_000 } else { 100_000 };
+    let mut release_table = Table::new(
+        "Release-path throughput (tickets/sec released, 4 clients, dispatch+release cycles)",
+        &["backend", "k", "t/s", "vs k=1"],
+    );
+    for backend in ["indexed", "wal-os-cache"] {
+        let mut baseline = 0.0f64;
+        for &k in &[1usize, 16] {
+            let mut cleanup: Option<std::path::PathBuf> = None;
+            let store: Arc<dyn Scheduler> = if backend == "indexed" {
+                Arc::new(IndexedStore::new(quiet_cfg()))
+            } else {
+                let (s, dir) = wal_store(SyncPolicy::OsOnly, &format!("release-{k}"));
+                cleanup = Some(dir);
+                Arc::new(s)
+            };
+            fill(store.as_ref(), release_n);
+            let tps = measure_release(Arc::clone(&store), 4, k, window_ms);
+            if k == 1 {
+                baseline = tps;
+            }
+            release_table.row(&[
+                backend.to_string(),
+                k.to_string(),
+                format!("{tps:.0}"),
+                format!("{:.1}x", tps / baseline.max(1e-9)),
+            ]);
+            drop(store);
+            if let Some(dir) = cleanup {
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+    release_table.print();
+    println!(
+        "Release path (ISSUE 5): what a disconnecting client's batch costs to hand back — \
+         one dispatch-mutex pass plus (durable backend) one ReleaseBatch frame per batch. \
+         Record the table in EXPERIMENTS.md §Release.\n"
     );
 }

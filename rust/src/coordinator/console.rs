@@ -21,12 +21,19 @@ const MAX_ERRORS_SHOWN: usize = 5;
 #[derive(Debug, Clone)]
 pub struct Snapshot {
     pub progress: Progress,
-    /// Number of clients that have sent Hello.
+    /// Number of *currently connected* clients (ghost workers whose
+    /// connection ended are excluded; see `gone`).
     pub clients: usize,
+    /// Connections that Hello'd and have since ended — connection
+    /// churn (worker reloads included), not distinct lost clients.
+    pub gone: u64,
     pub tickets_served: u64,
     pub results_accepted: u64,
     pub duplicates: u64,
     pub errors: u64,
+    /// Tickets handed back through the active failure path (explicit
+    /// releases + disconnect releases), immediately re-dispatchable.
+    pub released: u64,
     /// Error reports drained from the store buffer by this snapshot (the
     /// console is the buffer's consumer, like the paper's error list);
     /// the cumulative `progress.errors` counter is unaffected.
@@ -46,10 +53,12 @@ pub fn snapshot(d: &Distributor) -> Snapshot {
     Snapshot {
         progress: d.store().progress(None),
         clients: d.client_count(),
+        gone: d.stats.clients_disconnected.load(Ordering::Relaxed),
         tickets_served: d.stats.tickets_served.load(Ordering::Relaxed),
         results_accepted: d.stats.results_accepted.load(Ordering::Relaxed),
         duplicates: d.stats.results_duplicate.load(Ordering::Relaxed),
         errors: d.stats.errors_reported.load(Ordering::Relaxed),
+        released: d.stats.tickets_released.load(Ordering::Relaxed),
         recent_errors,
     }
 }
@@ -68,8 +77,8 @@ pub fn render(s: &Snapshot) -> String {
         s.progress.duplicate_results,
     ));
     out.push_str(&format!(
-        "distributor: {} clients | {} served | {} accepted | {} duplicates | {} errors\n",
-        s.clients, s.tickets_served, s.results_accepted, s.duplicates, s.errors
+        "distributor: {} clients ({} conns ended) | {} served | {} accepted | {} duplicates | {} errors | {} released\n",
+        s.clients, s.gone, s.tickets_served, s.results_accepted, s.duplicates, s.errors, s.released
     ));
     for (id, report) in s.recent_errors.iter().take(MAX_ERRORS_SHOWN) {
         let first_line = report.lines().next().unwrap_or("");
@@ -93,8 +102,13 @@ pub fn render_clients(d: &Distributor) -> String {
     let mut out = String::from("clients:\n");
     for c in &clients {
         out.push_str(&format!(
-            "  {:<12} {:<10} tickets={:<6} results={:<6} errors={}\n",
-            c.client, c.profile, c.tickets_served, c.results, c.errors
+            "  {:<12} {:<10} tickets={:<6} results={:<6} errors={}{}\n",
+            c.client,
+            c.profile,
+            c.tickets_served,
+            c.results,
+            c.errors,
+            if c.disconnected { " (gone)" } else { "" }
         ));
     }
     out
@@ -109,16 +123,19 @@ mod tests {
         let s = Snapshot {
             progress: Progress { total: 10, pending: 3, in_flight: 2, done: 5, ..Default::default() },
             clients: 3,
+            gone: 1,
             tickets_served: 6,
             results_accepted: 5,
             duplicates: 1,
             errors: 1,
+            released: 2,
             recent_errors: vec![(TicketId(4), "TypeError: x is undefined\nat task.run".into())],
         };
         let text = render(&s);
         assert!(text.contains("10 total"));
         assert!(text.contains("5 executed"));
-        assert!(text.contains("3 clients"));
+        assert!(text.contains("3 clients (1 conns ended)"));
+        assert!(text.contains("2 released"));
         assert!(text.contains("TypeError: x is undefined"));
         assert!(!text.contains("at task.run"), "only the first line of a report renders");
     }
@@ -128,10 +145,12 @@ mod tests {
         let s = Snapshot {
             progress: Progress::default(),
             clients: 0,
+            gone: 0,
             tickets_served: 0,
             results_accepted: 0,
             duplicates: 0,
             errors: 9,
+            released: 0,
             recent_errors: (0..9).map(|i| (TicketId(i), format!("e{i}"))).collect(),
         };
         let text = render(&s);

@@ -18,13 +18,25 @@
 //! * `TicketResults` → batched completion through
 //!   `Scheduler::complete_batch` (one Ack; per-entry first-result-wins
 //!   accounting);
-//! * `ErrorReport` → recorded, ticket requeued, client told to reload.
+//! * `ErrorReport` → recorded, ticket requeued, client told to reload;
+//! * `ErrorReports` → a whole batch's failures recorded and requeued in
+//!   one round trip, answered by a single Reload;
+//! * `ReleaseTickets` → the client's undone tickets handed back through
+//!   `Scheduler::release_batch`, immediately re-dispatchable.
+//!
+//! The *active failure path* (DESIGN.md §2.4): every ticket dispatched
+//! over a connection is tracked until it is answered (result, error
+//! report, or explicit release), and when the handler exits — orderly
+//! shutdown, protocol violation, or a vanished socket — the leftovers
+//! are released at once instead of stranding for the store's
+//! redistribution window ([`DistributorConfig::release_on_disconnect`]
+//! turns this off to reproduce the paper's passive §2.1.2 baseline).
 //!
 //! The singular forms stay served unchanged, so a legacy client that
 //! speaks only `TicketRequest`/`TicketResult` interoperates with
 //! batching clients on the same store.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -32,7 +44,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::coordinator::framework::Framework;
-use crate::store::Scheduler;
+use crate::store::{Scheduler, TicketId};
 use crate::tasks::{DatasetStore, Registry};
 use crate::transport::{Conn, Listener, Message, WireTicket};
 use crate::util::clock;
@@ -46,6 +58,13 @@ pub struct ClientInfo {
     pub results: u64,
     pub errors: u64,
     pub connected_ms: u64,
+    /// The connection that wrote this entry has ended; kept (marked,
+    /// not erased) so end-of-run summaries still show the client.
+    pub disconnected: bool,
+    /// Which connection's Hello owns this entry — a reloading worker's
+    /// fresh connection may re-insert it before the old handler
+    /// notices EOF, and only the owning handler may mark it.
+    pub(crate) conn_seq: u64,
 }
 
 #[derive(Default)]
@@ -57,9 +76,46 @@ pub struct DistributorStats {
     pub errors_reported: AtomicU64,
     pub data_requests: AtomicU64,
     pub task_requests: AtomicU64,
+    /// Tickets handed back through the active failure path: explicit
+    /// `ReleaseTickets` messages plus disconnect releases.
+    pub tickets_released: AtomicU64,
+    /// Hello'd connections whose handler has since ended.  This is
+    /// *connection* churn, not distinct clients: a worker reload (one
+    /// per failing batch, by design) ends one connection and re-Hellos
+    /// on the next, and a reload whose fresh Hello lands before the
+    /// old handler exits is not counted at all (the entry's `conn_seq`
+    /// has moved on).
+    pub clients_disconnected: AtomicU64,
     /// Bytes moved over all finished connections (server side).
     pub bytes_sent: AtomicU64,
     pub bytes_received: AtomicU64,
+}
+
+/// Tuning knobs of a [`Distributor`] — plumbed from
+/// [`ClusterConfig`](crate::dist::ClusterConfig) by the in-process
+/// cluster, defaulted everywhere else.
+#[derive(Debug, Clone)]
+pub struct DistributorConfig {
+    /// Retry hint handed to idle workers.
+    pub idle_retry_ms: u64,
+    /// Server-side cap on one `TicketBatchRequest` (protects the store
+    /// from a single client draining the pool in one call).
+    pub max_batch: usize,
+    /// Release a connection's unanswered tickets the moment its
+    /// handler exits (the active failure path).  `false` reproduces
+    /// the paper's passive baseline: a vanished browser's tickets wait
+    /// out the §2.1.2 redistribution windows.
+    pub release_on_disconnect: bool,
+}
+
+impl Default for DistributorConfig {
+    fn default() -> Self {
+        DistributorConfig {
+            idle_retry_ms: 20,
+            max_batch: DEFAULT_MAX_BATCH,
+            release_on_disconnect: true,
+        }
+    }
 }
 
 pub struct Distributor {
@@ -69,11 +125,9 @@ pub struct Distributor {
     pub stats: DistributorStats,
     clients: Mutex<HashMap<String, ClientInfo>>,
     stop: AtomicBool,
-    /// Retry hint handed to idle workers.
-    pub idle_retry_ms: u64,
-    /// Server-side cap on one `TicketBatchRequest` (protects the store
-    /// from a single client draining the pool in one call).
-    pub max_batch: usize,
+    /// Hands out one [`ClientInfo::conn_seq`] per handled connection.
+    next_conn_seq: AtomicU64,
+    pub cfg: DistributorConfig,
 }
 
 /// Default server-side cap on one dispatched batch.
@@ -81,16 +135,17 @@ pub const DEFAULT_MAX_BATCH: usize = 64;
 
 impl Distributor {
     pub fn new(fw: &Arc<Framework>) -> Arc<Distributor> {
-        Arc::new(Distributor {
-            store: Arc::clone(fw.store()),
-            registry: fw.registry_snapshot(),
-            datasets: fw.datasets().clone(),
-            stats: DistributorStats::default(),
-            clients: Mutex::new(HashMap::new()),
-            stop: AtomicBool::new(false),
-            idle_retry_ms: 20,
-            max_batch: DEFAULT_MAX_BATCH,
-        })
+        Self::new_with(fw, DistributorConfig::default())
+    }
+
+    /// [`new`](Self::new) with explicit tuning.
+    pub fn new_with(fw: &Arc<Framework>, cfg: DistributorConfig) -> Arc<Distributor> {
+        Self::from_parts_with(
+            Arc::clone(fw.store()),
+            fw.registry_snapshot(),
+            fw.datasets().clone(),
+            cfg,
+        )
     }
 
     /// Build from raw parts (dist drivers that bypass Framework).
@@ -99,6 +154,16 @@ impl Distributor {
         registry: Registry,
         datasets: Arc<DatasetStore>,
     ) -> Arc<Distributor> {
+        Self::from_parts_with(store, registry, datasets, DistributorConfig::default())
+    }
+
+    /// [`from_parts`](Self::from_parts) with explicit tuning.
+    pub fn from_parts_with(
+        store: Arc<dyn Scheduler>,
+        registry: Registry,
+        datasets: Arc<DatasetStore>,
+        cfg: DistributorConfig,
+    ) -> Arc<Distributor> {
         Arc::new(Distributor {
             store,
             registry,
@@ -106,8 +171,8 @@ impl Distributor {
             stats: DistributorStats::default(),
             clients: Mutex::new(HashMap::new()),
             stop: AtomicBool::new(false),
-            idle_retry_ms: 20,
-            max_batch: DEFAULT_MAX_BATCH,
+            next_conn_seq: AtomicU64::new(0),
+            cfg,
         })
     }
 
@@ -119,16 +184,19 @@ impl Distributor {
         self.stop.load(Ordering::SeqCst)
     }
 
-    /// Clone the per-client table.  On-demand reporting only
+    /// Clone the per-client table (disconnected clients included,
+    /// marked).  On-demand reporting only
     /// ([`crate::coordinator::console::render_clients`]); per-render
     /// paths use [`Self::client_count`] and the stats atomics instead.
     pub fn clients(&self) -> Vec<ClientInfo> {
         self.clients.lock().unwrap().values().cloned().collect()
     }
 
-    /// Number of clients that have sent Hello (O(1), no cloning).
+    /// Number of *currently connected* clients (Hello'd, handler still
+    /// running) — disconnected entries are excluded, so console totals
+    /// never count ghost workers.
     pub fn client_count(&self) -> usize {
-        self.clients.lock().unwrap().len()
+        self.clients.lock().unwrap().values().filter(|c| !c.disconnected).count()
     }
 
     pub fn store(&self) -> &Arc<dyn Scheduler> {
@@ -173,7 +241,50 @@ impl Distributor {
     }
 
     fn handle_conn_inner(&self, conn: &mut dyn Conn) -> Result<()> {
+        let conn_seq = self.next_conn_seq.fetch_add(1, Ordering::Relaxed);
         let mut client = String::from("unknown");
+        // Tickets dispatched over this connection and not yet answered
+        // by a result, an error report, or an explicit release.
+        let mut held: HashSet<TicketId> = HashSet::new();
+        let result = self.conn_loop(conn, conn_seq, &mut client, &mut held);
+        // The active failure path: however the handler ended — orderly
+        // shutdown, protocol violation, vanished socket — the undone
+        // tickets re-enter dispatch now instead of stranding for the
+        // store's redistribution window.
+        if self.cfg.release_on_disconnect && !held.is_empty() {
+            let ids: Vec<TicketId> = held.drain().collect();
+            let released =
+                self.store.release_batch(&ids).into_iter().filter(|&f| f).count() as u64;
+            if released > 0 {
+                crate::log_debug!(
+                    "distributor",
+                    "released {released} in-flight tickets from disconnected {client}"
+                );
+            }
+            self.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
+        }
+        // Retire this connection's client-table entry (mark, don't
+        // erase: end-of-run summaries keep the history) so
+        // `client_count` never reports ghost workers.
+        {
+            let mut clients = self.clients.lock().unwrap();
+            if let Some(ci) = clients.get_mut(&client) {
+                if ci.conn_seq == conn_seq && !ci.disconnected {
+                    ci.disconnected = true;
+                    self.stats.clients_disconnected.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        result
+    }
+
+    fn conn_loop(
+        &self,
+        conn: &mut dyn Conn,
+        conn_seq: u64,
+        client: &mut String,
+        held: &mut HashSet<TicketId>,
+    ) -> Result<()> {
         let (mut acc_sent, mut acc_recv) = (0u64, 0u64);
         let mut account = |conn: &mut dyn Conn, stats: &DistributorStats| {
             let (s, r) = conn.bytes();
@@ -198,13 +309,14 @@ impl Distributor {
             account(conn, &self.stats);
             match msg {
                 Message::Hello { client: c, profile } => {
-                    client = c.clone();
+                    *client = c.clone();
                     self.clients.lock().unwrap().insert(
                         c.clone(),
                         ClientInfo {
                             client: c,
                             profile,
                             connected_ms: clock::now_ms(),
+                            conn_seq,
                             ..Default::default()
                         },
                     );
@@ -215,12 +327,14 @@ impl Distributor {
                         conn.send(&Message::Shutdown)?;
                         return Ok(());
                     }
-                    match self.store.next_ticket(&client, clock::now_ms()) {
+                    match self.store.next_ticket(client, clock::now_ms()) {
                         Some(t) => {
                             self.stats.tickets_served.fetch_add(1, Ordering::Relaxed);
-                            if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                            if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str())
+                            {
                                 ci.tickets_served += 1;
                             }
+                            held.insert(t.id);
                             conn.send(&Message::Ticket {
                                 ticket: t.id,
                                 task: t.task,
@@ -229,7 +343,8 @@ impl Distributor {
                                 payload: t.payload.clone(),
                             })?;
                         }
-                        None => conn.send(&Message::NoTicket { retry_after_ms: self.idle_retry_ms })?,
+                        None => conn
+                            .send(&Message::NoTicket { retry_after_ms: self.cfg.idle_retry_ms })?,
                     }
                 }
                 Message::TicketBatchRequest { max } => {
@@ -237,14 +352,17 @@ impl Distributor {
                         conn.send(&Message::Shutdown)?;
                         return Ok(());
                     }
-                    let k = max.clamp(1, self.max_batch.max(1));
-                    let batch = self.store.next_tickets(&client, clock::now_ms(), k);
+                    let k = max.clamp(1, self.cfg.max_batch.max(1));
+                    let batch = self.store.next_tickets(client, clock::now_ms(), k);
                     if batch.is_empty() {
-                        conn.send(&Message::NoTicket { retry_after_ms: self.idle_retry_ms })?;
+                        conn.send(&Message::NoTicket { retry_after_ms: self.cfg.idle_retry_ms })?;
                     } else {
                         self.stats.tickets_served.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                        if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                        if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
                             ci.tickets_served += batch.len() as u64;
+                        }
+                        for t in &batch {
+                            held.insert(t.id);
                         }
                         let tickets: Vec<WireTicket> = batch
                             .into_iter()
@@ -276,41 +394,84 @@ impl Distributor {
                     conn.send(&Message::Data { key, shape: enc.0.clone(), b64: enc.1.clone() })?;
                 }
                 Message::TicketResult { ticket, result } => {
+                    // `held` is trimmed only after a successful apply:
+                    // if `?` kills the connection the disconnect
+                    // release still covers the ticket (a no-op when it
+                    // was already done).
                     let fresh = self.store.complete(ticket, result)?;
+                    held.remove(&ticket);
                     if fresh {
                         self.stats.results_accepted.fetch_add(1, Ordering::Relaxed);
                     } else {
                         self.stats.results_duplicate.fetch_add(1, Ordering::Relaxed);
                     }
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
                         ci.results += 1;
                     }
                     conn.send(&Message::Ack)?;
                 }
                 Message::TicketResults { results } => {
                     let n = results.len() as u64;
+                    let ids: Vec<TicketId> = results.iter().map(|(id, _)| *id).collect();
                     // A mid-batch unknown ticket (a protocol-violating
                     // client) applies the prefix, then `?` kills the
-                    // connection; the stats counters below are skipped
-                    // for that prefix.  The store's progress counters —
-                    // the source of truth — stay exact either way.
+                    // connection with every id still in `held`: the
+                    // applied prefix releases as a no-op (done tickets
+                    // do not move) and the unapplied suffix is released
+                    // for real, so nothing strands.  The stats counters
+                    // below are skipped for that prefix; the store's
+                    // progress counters — the source of truth — stay
+                    // exact either way.
                     let accepted = self.store.complete_batch(results)? as u64;
+                    for id in &ids {
+                        held.remove(id);
+                    }
                     self.stats.results_accepted.fetch_add(accepted, Ordering::Relaxed);
                     self.stats.results_duplicate.fetch_add(n - accepted, Ordering::Relaxed);
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
                         ci.results += n;
                     }
                     conn.send(&Message::Ack)?;
                 }
                 Message::ErrorReport { ticket, message, stack } => {
                     self.stats.errors_reported.fetch_add(1, Ordering::Relaxed);
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(&client) {
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
                         ci.errors += 1;
                     }
                     crate::log_warn!("distributor", "error report from {client}: {message}");
+                    held.remove(&ticket);
                     self.store.report_error(ticket, format!("{message}\n{stack}"))?;
                     // The paper: the browser reloads itself after reporting.
                     conn.send(&Message::Reload)?;
+                }
+                Message::ErrorReports { reports } => {
+                    let n = reports.len() as u64;
+                    self.stats.errors_reported.fetch_add(n, Ordering::Relaxed);
+                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
+                        ci.errors += n;
+                    }
+                    for r in reports {
+                        crate::log_warn!(
+                            "distributor",
+                            "error report from {client}: {}",
+                            r.message
+                        );
+                        held.remove(&r.ticket);
+                        self.store.report_error(r.ticket, format!("{}\n{}", r.message, r.stack))?;
+                    }
+                    // One Reload acknowledges the whole batch: the
+                    // client reloads itself once, not once per failure.
+                    conn.send(&Message::Reload)?;
+                }
+                Message::ReleaseTickets { tickets } => {
+                    for id in &tickets {
+                        held.remove(id);
+                    }
+                    let released =
+                        self.store.release_batch(&tickets).into_iter().filter(|&f| f).count()
+                            as u64;
+                    self.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
+                    conn.send(&Message::Ack)?;
                 }
                 Message::Shutdown => {
                     return Ok(());
@@ -329,7 +490,7 @@ mod tests {
     use crate::store::TaskId;
     use crate::tasks::is_prime::IsPrimeTask;
     use crate::transport::local;
-    use crate::transport::LinkModel;
+    use crate::transport::{LinkModel, WireError};
     use crate::util::json::Value;
 
     fn framework_with_tickets(n: usize) -> (Arc<Framework>, TaskId) {
@@ -462,9 +623,17 @@ mod tests {
             Message::Tickets { tickets } => assert_eq!(tickets.len(), 1),
             m => panic!("{m:?}"),
         }
+        assert_eq!(fw.store().progress(None).in_flight, DEFAULT_MAX_BATCH + 1);
         client.send(&Message::Shutdown).unwrap();
         h.join().unwrap();
-        assert_eq!(fw.store().progress(None).in_flight, DEFAULT_MAX_BATCH + 1);
+        // Handler exit releases the never-answered batch (the active
+        // failure path), so nothing stays stranded in flight.
+        let p = fw.store().progress(None);
+        assert_eq!((p.pending, p.in_flight), (DEFAULT_MAX_BATCH + 8, 0));
+        assert_eq!(
+            dist.stats.tickets_released.load(Ordering::Relaxed),
+            DEFAULT_MAX_BATCH as u64 + 1
+        );
     }
 
     #[test]
@@ -663,6 +832,209 @@ mod tests {
         let p = fw.store().progress(None);
         assert_eq!((p.pending, p.in_flight), (0, 1));
         assert_eq!(p.redistributions, 1, "re-serving an errored ticket is a redistribution");
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    /// Redistribution windows frozen far beyond the test horizon: only
+    /// the active release path can bring a dispatched ticket back.
+    fn frozen_framework(n: usize) -> Arc<Framework> {
+        let fw = Framework::builder()
+            .store_config(crate::store::StoreConfig {
+                requeue_after_ms: 600_000,
+                min_redistribute_ms: 600_000,
+                requeue_on_error: true,
+            })
+            .build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(
+            (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+        );
+        fw
+    }
+
+    /// The acceptance case: a connection that vanishes holding a
+    /// prefetched batch has every undone ticket released immediately —
+    /// re-dispatchable within the release round trip, not after
+    /// `min_redistribute_ms`.
+    #[test]
+    fn dropped_connection_releases_prefetched_batch() {
+        let fw = frozen_framework(6);
+        let dist = Distributor::new(&fw);
+        let (mut victim, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        victim.send(&Message::Hello { client: "victim".into(), profile: "t".into() }).unwrap();
+        victim.recv().unwrap();
+        victim.send(&Message::TicketBatchRequest { max: 4 }).unwrap();
+        match victim.recv().unwrap() {
+            Message::Tickets { tickets } => assert_eq!(tickets.len(), 4),
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(fw.store().progress(None).in_flight, 4);
+        drop(victim); // the killed browser: no result, no report, no shutdown
+        h.join().unwrap();
+        assert_eq!(dist.stats.tickets_released.load(Ordering::Relaxed), 4);
+        let p = fw.store().progress(None);
+        assert_eq!((p.pending, p.in_flight), (6, 0));
+        // A healthy client gets the whole pool at once.
+        let (mut healthy, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        healthy.send(&Message::Hello { client: "healthy".into(), profile: "t".into() }).unwrap();
+        healthy.recv().unwrap();
+        healthy.send(&Message::TicketBatchRequest { max: 8 }).unwrap();
+        match healthy.recv().unwrap() {
+            Message::Tickets { tickets } => assert_eq!(tickets.len(), 6),
+            m => panic!("{m:?}"),
+        }
+        drop(healthy);
+        h.join().unwrap();
+    }
+
+    /// `release_on_disconnect: false` is the paper's passive baseline:
+    /// a vanished connection's tickets stay stranded in flight until
+    /// the redistribution windows elapse.
+    #[test]
+    fn disconnect_release_can_be_disabled() {
+        let fw = frozen_framework(2);
+        let dist = Distributor::new_with(
+            &fw,
+            DistributorConfig { release_on_disconnect: false, ..Default::default() },
+        );
+        let (mut victim, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        victim.send(&Message::Hello { client: "victim".into(), profile: "t".into() }).unwrap();
+        victim.recv().unwrap();
+        victim.send(&Message::TicketBatchRequest { max: 2 }).unwrap();
+        match victim.recv().unwrap() {
+            Message::Tickets { tickets } => assert_eq!(tickets.len(), 2),
+            m => panic!("{m:?}"),
+        }
+        drop(victim);
+        h.join().unwrap();
+        assert_eq!(dist.stats.tickets_released.load(Ordering::Relaxed), 0);
+        let p = fw.store().progress(None);
+        assert_eq!((p.pending, p.in_flight), (0, 2), "passive baseline strands the batch");
+        // Nothing is served until the (frozen) windows elapse.
+        let (mut probe, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        probe.send(&Message::Hello { client: "probe".into(), profile: "t".into() }).unwrap();
+        probe.recv().unwrap();
+        probe.send(&Message::TicketRequest).unwrap();
+        assert!(matches!(probe.recv().unwrap(), Message::NoTicket { .. }));
+        probe.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    /// Batched error reporting: a whole batch's failures in one
+    /// message, answered by a single Reload, every ticket requeued at
+    /// its creation-time VCT immediately.
+    #[test]
+    fn error_reports_batch_requeues_and_reloads_once() {
+        let fw = frozen_framework(3);
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        client.send(&Message::Hello { client: "w0".into(), profile: "t".into() }).unwrap();
+        client.recv().unwrap();
+        client.send(&Message::TicketBatchRequest { max: 3 }).unwrap();
+        let tickets = match client.recv().unwrap() {
+            Message::Tickets { tickets } => tickets,
+            m => panic!("{m:?}"),
+        };
+        client
+            .send(&Message::ErrorReports {
+                reports: tickets[..2]
+                    .iter()
+                    .map(|t| WireError {
+                        ticket: t.ticket,
+                        message: "boom".into(),
+                        stack: "stack".into(),
+                    })
+                    .collect(),
+            })
+            .unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Reload, "one Reload for the whole batch");
+        assert_eq!(dist.stats.errors_reported.load(Ordering::Relaxed), 2);
+        assert_eq!(fw.store().error_count(), 2);
+        let p = fw.store().progress(None);
+        assert_eq!((p.pending, p.in_flight, p.errors), (2, 1, 2));
+        assert_eq!(dist.clients()[0].errors, 2);
+        // The requeued tickets are immediately re-dispatchable despite
+        // the frozen windows.
+        client.send(&Message::TicketBatchRequest { max: 2 }).unwrap();
+        match client.recv().unwrap() {
+            Message::Tickets { tickets: again } => {
+                assert_eq!(again.len(), 2);
+                assert_eq!(again[0].ticket, tickets[0].ticket);
+            }
+            m => panic!("{m:?}"),
+        }
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+        // The handler exit released what the client still held.
+        assert_eq!(fw.store().progress(None).in_flight, 0);
+        assert_eq!(dist.client_count(), 0, "no ghost workers after disconnect");
+        assert_eq!(dist.stats.clients_disconnected.load(Ordering::Relaxed), 1);
+        assert!(dist.clients()[0].disconnected, "entry kept for end-of-run summaries");
+    }
+
+    /// `ReleaseTickets` re-arms the undone remainder of a batch in one
+    /// Ack'd round trip.
+    #[test]
+    fn release_tickets_message_rearms_pool() {
+        let fw = frozen_framework(4);
+        let dist = Distributor::new(&fw);
+        let (mut client, server) = local::pair(LinkModel::FAST_LAN, false);
+        let d = Arc::clone(&dist);
+        let h = std::thread::spawn(move || {
+            let _ = d.handle_conn(Box::new(server));
+        });
+        client.send(&Message::Hello { client: "w0".into(), profile: "t".into() }).unwrap();
+        client.recv().unwrap();
+        client.send(&Message::TicketBatchRequest { max: 4 }).unwrap();
+        let tickets = match client.recv().unwrap() {
+            Message::Tickets { tickets } => tickets,
+            m => panic!("{m:?}"),
+        };
+        client
+            .send(&Message::TicketResults {
+                results: vec![(tickets[0].ticket, Value::Bool(true))],
+            })
+            .unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Ack);
+        client
+            .send(&Message::ReleaseTickets {
+                tickets: tickets[1..].iter().map(|t| t.ticket).collect(),
+            })
+            .unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Ack);
+        assert_eq!(dist.stats.tickets_released.load(Ordering::Relaxed), 3);
+        let p = fw.store().progress(None);
+        assert_eq!((p.pending, p.in_flight, p.done), (3, 0, 1));
+        // Released tickets come back immediately, oldest first.
+        client.send(&Message::TicketBatchRequest { max: 8 }).unwrap();
+        match client.recv().unwrap() {
+            Message::Tickets { tickets: again } => {
+                assert_eq!(again.len(), 3);
+                assert_eq!(again[0].ticket, tickets[1].ticket);
+            }
+            m => panic!("{m:?}"),
+        }
         client.send(&Message::Shutdown).unwrap();
         h.join().unwrap();
     }

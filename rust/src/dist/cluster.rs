@@ -17,7 +17,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::coordinator::Distributor;
+use crate::coordinator::distributor::DEFAULT_MAX_BATCH;
+use crate::coordinator::{Distributor, DistributorConfig};
 use crate::data::Dataset;
 use crate::runtime::{NetSpec, SharedRuntime, Tensor};
 use crate::store::{Scheduler, StoreConfig, TaskId, TicketStore};
@@ -55,6 +56,18 @@ pub struct ClusterConfig {
     /// effectively unbatched (the batch only grows when a whole batch
     /// beats one round trip); `1` pins the legacy single-ticket wire.
     pub prefetch_cap: usize,
+    /// Retry hint handed to idle workers
+    /// ([`DistributorConfig::idle_retry_ms`]).
+    pub idle_retry_ms: u64,
+    /// Server-side cap on one dispatched batch
+    /// ([`DistributorConfig::max_batch`]).
+    pub max_batch: usize,
+    /// The active failure path
+    /// ([`DistributorConfig::release_on_disconnect`]): release a
+    /// vanished connection's in-flight tickets immediately.  `false`
+    /// reproduces the paper's passive baseline, where stranded tickets
+    /// wait out the §2.1.2 redistribution windows.
+    pub disconnect_release: bool,
 }
 
 impl ClusterConfig {
@@ -76,6 +89,9 @@ impl ClusterConfig {
                 requeue_on_error: true,
             },
             prefetch_cap: 4,
+            idle_retry_ms: 20,
+            max_batch: DEFAULT_MAX_BATCH,
+            disconnect_release: true,
         }
     }
 }
@@ -152,8 +168,16 @@ impl Cluster {
         }
 
         let store: Arc<dyn Scheduler> = Arc::new(TicketStore::new(cfg.store.clone()));
-        let distributor =
-            Distributor::from_parts(Arc::clone(&store), registry.clone(), Arc::clone(&datasets));
+        let distributor = Distributor::from_parts_with(
+            Arc::clone(&store),
+            registry.clone(),
+            Arc::clone(&datasets),
+            DistributorConfig {
+                idle_retry_ms: cfg.idle_retry_ms,
+                max_batch: cfg.max_batch,
+                release_on_disconnect: cfg.disconnect_release,
+            },
+        );
         let (listener, connector) = local::endpoint(cfg.link, cfg.sleep_on_link);
         let acceptor = distributor.serve(Box::new(listener));
 
@@ -274,6 +298,12 @@ mod tests {
         // Batched polling on, at a modest ceiling: every fetched ticket
         // is executed and flushed, so counts stay exact.
         assert_eq!(cfg.prefetch_cap, 4);
+        // Distributor knobs plumbed, not hardcoded; the active failure
+        // path is on by default (quick tests shut down orderly, so it
+        // never fires unless a worker actually strands work).
+        assert_eq!(cfg.idle_retry_ms, 20);
+        assert_eq!(cfg.max_batch, DEFAULT_MAX_BATCH);
+        assert!(cfg.disconnect_release);
     }
 
     #[test]

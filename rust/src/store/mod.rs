@@ -180,6 +180,16 @@ pub struct Progress {
 ///   distribution history; reports are buffered until
 ///   [`drain_errors`](Self::drain_errors) and counted forever in
 ///   [`error_count`](Self::error_count).
+/// * **Explicit release** — [`release`](Self::release) performs the
+///   same pool-return transition as an error requeue (VCT back to the
+///   original creation time, history kept, the next dispatch counted
+///   as a redistribution) but records no error and ignores
+///   `requeue_on_error`: it is the *active* failure path, bypassing
+///   both `requeue_after_ms` and `min_redistribute_ms`.  Pending, done
+///   and unknown ids are tolerated no-ops returning `false` (a
+///   released ticket may have been completed by a racing client, or
+///   released twice).  [`release_batch`](Self::release_batch) equals
+///   the id-by-id loop, per-entry flags and all.
 /// * **Ordered collection** — [`wait_results`](Self::wait_results)
 ///   returns accepted results sorted by ticket index (id-tie-broken),
 ///   regardless of completion order.
@@ -238,6 +248,34 @@ pub trait Scheduler: Send + Sync {
 
     /// Record a worker error report; optionally requeue immediately.
     fn report_error(&self, id: TicketId, report: String) -> Result<()>;
+
+    /// Hand a dispatched ticket back to the pool as immediately
+    /// re-dispatchable: status → `Pending`, VCT reset to the *original*
+    /// creation time, distribution history kept — the transition an
+    /// error requeue performs (§2.1.2) minus the error record, and
+    /// unconditional (not gated on [`StoreConfig::requeue_on_error`]).
+    /// Both redistribution windows are bypassed, so the very next
+    /// [`next_ticket`](Self::next_ticket) may re-issue it.  Returns
+    /// whether the ticket actually moved; pending, done and unknown
+    /// ids return `false` (releases are tolerant — the ticket may have
+    /// been completed by a racing client, or released twice).  The
+    /// caller is trusted on ownership: releasing a ticket that §2.1.2
+    /// redistribution has meanwhile handed to a *live* client yanks it
+    /// back to the pool early — bounded duplicate work that
+    /// first-result-wins absorbs, exactly as for timeout
+    /// redistribution itself (DESIGN.md §2.4).
+    fn release(&self, id: TicketId) -> bool;
+
+    /// Batched release with per-entry [`release`](Self::release)
+    /// semantics, applied in order; returns the per-entry released
+    /// flags (a repeated id releases only once, exactly like the
+    /// loop).  This default *is* the loop — the reference semantics
+    /// [`NaiveStore`] runs; indexed backends override it to amortise
+    /// lock acquisitions across the batch and durable backends log one
+    /// framed record per batch.
+    fn release_batch(&self, ids: &[TicketId]) -> Vec<bool> {
+        ids.iter().map(|&id| self.release(id)).collect()
+    }
 
     /// Pop the next accepted result for `task` (FIFO in completion
     /// order), waiting up to `timeout_ms`.  Streaming counterpart of
@@ -519,6 +557,53 @@ mod tests {
                     let got = s.next_tickets("c", 5, 8);
                     assert_eq!(got.len(), 2);
                     assert_eq!(s.progress(None).in_flight, 2);
+                }
+
+                /// Release is the active failure path: an in-flight
+                /// ticket returns to the pool at once, both
+                /// redistribution windows bypassed, history intact.
+                #[test]
+                fn release_returns_ticket_immediately() {
+                    let s = store(1_000_000, 1_000_000);
+                    let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let t = s.next_ticket("c1", 0).unwrap();
+                    assert!(s.next_ticket("c2", 1).is_none(), "windows block redistribution");
+                    assert!(s.release(t.id), "in-flight ticket releases");
+                    let p = s.progress(None);
+                    assert_eq!((p.pending, p.in_flight), (1, 0));
+                    assert_eq!(p.errors, 0, "release records no error");
+                    let again = s.next_ticket("c2", 2).unwrap();
+                    assert_eq!(again.id, ids[0]);
+                    assert_eq!(again.distribution_count, 2, "history preserved");
+                    assert_eq!(
+                        s.progress(None).redistributions,
+                        1,
+                        "re-dispatch after release is a redistribution"
+                    );
+                    s.complete(ids[0], Value::Null).unwrap();
+                    assert!(!s.release(ids[0]), "done ticket does not release");
+                    assert!(!s.release(TicketId(999)), "unknown id is a tolerated no-op");
+                }
+
+                /// A release batch equals the id-by-id loop: per-entry
+                /// flags, repeated ids releasing once, unknown and
+                /// pending ids flagged false with the rest applied.
+                #[test]
+                fn release_batch_flags_match_loop() {
+                    let s = store(1_000_000, 1_000_000);
+                    let ids = s.create_tickets(TaskId(1), "t", args(3), 0);
+                    let a = s.next_ticket("c", 0).unwrap();
+                    let b = s.next_ticket("c", 1).unwrap();
+                    // ids[2] stays pending; a repeated and an unknown id
+                    // exercise the tolerant flags.
+                    let flags = s.release_batch(&[a.id, b.id, a.id, ids[2], TicketId(99)]);
+                    assert_eq!(flags, vec![true, true, false, false, false]);
+                    let p = s.progress(None);
+                    assert_eq!((p.pending, p.in_flight), (3, 0));
+                    // Released tickets dispatch again in creation (VCT)
+                    // order, oldest id first.
+                    assert_eq!(s.next_ticket("d", 2).unwrap().id, ids[0]);
+                    assert!(s.release_batch(&[]).is_empty());
                 }
 
                 #[test]

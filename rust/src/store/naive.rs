@@ -14,10 +14,11 @@
 //! gap.
 //!
 //! The batched entry points ([`Scheduler::next_tickets`] /
-//! [`Scheduler::complete_batch`]) are deliberately *not* overridden
-//! here: this store runs the trait's loop fallback, which is the
-//! reference semantics the indexed store's amortised batch paths are
-//! differential-tested against (`rust/tests/properties.rs`).
+//! [`Scheduler::complete_batch`] / [`Scheduler::release_batch`]) are
+//! deliberately *not* overridden here: this store runs the trait's
+//! loop fallback, which is the reference semantics the indexed store's
+//! amortised batch paths are differential-tested against
+//! (`rust/tests/properties.rs`).
 
 use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
@@ -191,6 +192,23 @@ impl Scheduler for NaiveStore {
         }
         Ok(())
     }
+
+    fn release(&self, id: TicketId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.tickets.get_mut(&id) {
+            Some(t) if t.status == TicketStatus::InFlight => {
+                t.status = TicketStatus::Pending;
+                t.last_distributed_ms = None; // VCT back to creation time
+                true
+            }
+            _ => false,
+        }
+    }
+
+    // `release_batch` is deliberately not overridden: this store runs
+    // the trait's id-by-id loop, which is the reference semantics the
+    // indexed store's amortised batch release is differential-tested
+    // against (`rust/tests/properties.rs`).
 
     fn progress(&self, task: Option<TaskId>) -> Progress {
         let inner = self.inner.lock().unwrap();

@@ -281,6 +281,37 @@ impl IndexedStore {
         Some((id, count, was_pending))
     }
 
+    /// The pool-return transition shared by the error requeue and the
+    /// explicit release — DESIGN.md §2.4 declares them identical, so
+    /// they run the same code: if `id` is in flight, flip it to
+    /// pending, reset its VCT to the creation time, re-arm both
+    /// indexes and move the global counters.  Caller holds the sched
+    /// mutex; returns whether the ticket moved.
+    fn requeue_one(&self, s: &mut SchedState, id: u64) -> bool {
+        let info = match s.meta.get_mut(&id) {
+            Some(m) if m.status == TicketStatus::InFlight => {
+                let old_vct = vct_of(&self.cfg, m);
+                let old_fkey = m.last_distributed_ms.unwrap_or(0);
+                m.status = TicketStatus::Pending;
+                m.last_distributed_ms = None; // VCT back to creation time
+                Some((old_vct, old_fkey, m.created_ms))
+            }
+            _ => None,
+        };
+        match info {
+            Some((old_vct, old_fkey, created_ms)) => {
+                s.ready.remove(&(old_vct, id));
+                s.ready.insert((created_ms, id));
+                s.fallback.remove(&(old_fkey, id));
+                s.fallback.insert((0, id));
+                s.in_flight -= 1;
+                s.pending += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Apply a batch of completions in order with per-entry
     /// [`Scheduler::complete`] semantics under a *single* dispatch-mutex
     /// acquisition.  Returns the accepted/duplicate flag for every
@@ -737,27 +768,7 @@ impl Scheduler for IndexedStore {
         }
         let requeued = {
             let mut s = self.sched.lock().unwrap();
-            let info = match s.meta.get_mut(&id.0) {
-                Some(m) if m.status == TicketStatus::InFlight => {
-                    let old_vct = vct_of(&self.cfg, m);
-                    let old_fkey = m.last_distributed_ms.unwrap_or(0);
-                    m.status = TicketStatus::Pending;
-                    m.last_distributed_ms = None; // VCT back to creation time
-                    Some((old_vct, old_fkey, m.created_ms))
-                }
-                _ => None,
-            };
-            if let Some((old_vct, old_fkey, created_ms)) = info {
-                s.ready.remove(&(old_vct, id.0));
-                s.ready.insert((created_ms, id.0));
-                s.fallback.remove(&(old_fkey, id.0));
-                s.fallback.insert((0, id.0));
-                s.in_flight -= 1;
-                s.pending += 1;
-                true
-            } else {
-                false
-            }
+            self.requeue_one(&mut s, id.0)
         };
         if requeued {
             let ledger = {
@@ -770,6 +781,62 @@ impl Scheduler for IndexedStore {
             st.pending += 1;
         }
         Ok(())
+    }
+
+    fn release(&self, id: TicketId) -> bool {
+        // One release state machine: the singular path is a one-entry
+        // batch (same pattern as `complete` → `complete_batch_flags`).
+        self.release_batch(std::slice::from_ref(&id))[0]
+    }
+
+    /// The batched release: every status transition and index re-arm
+    /// for the whole batch under *one* dispatch-mutex acquisition,
+    /// then ledger counter moves grouped one lock per task — same
+    /// observable result as the trait's id-by-id loop.
+    fn release_batch(&self, ids: &[TicketId]) -> Vec<bool> {
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        // Phase 1: pool-return transitions (shared with the error
+        // requeue, [`requeue_one`](Self::requeue_one)) + index
+        // re-arming for the whole batch under one sched-mutex
+        // acquisition.
+        let flags: Vec<bool> = {
+            let mut s = self.sched.lock().unwrap();
+            ids.iter().map(|&id| self.requeue_one(&mut s, id.0)).collect()
+        };
+        // Phase 2: ledger counters for the released entries — lookups
+        // grouped so each stripe's read lock is taken once (as in the
+        // batched dispatch), moves grouped one lock per task.  A
+        // repeated id cannot be flagged twice (the second occurrence
+        // found it already pending), so the counts stay exact.
+        let n_stripes = self.shards.len();
+        let mut by_stripe: Vec<Vec<u64>> = vec![Vec::new(); n_stripes];
+        for (i, &id) in ids.iter().enumerate() {
+            if flags[i] {
+                by_stripe[id.0 as usize % n_stripes].push(id.0);
+            }
+        }
+        let mut moves: Vec<(TaskId, Arc<TaskLedger>, i64)> = Vec::new();
+        for (stripe, stripe_ids) in by_stripe.into_iter().enumerate() {
+            if stripe_ids.is_empty() {
+                continue;
+            }
+            let shard = self.shards[stripe].read().unwrap();
+            for id in stripe_ids {
+                let body = shard.get(&id).expect("released ticket has a stored body");
+                match moves.iter_mut().find(|(t, _, _)| *t == body.task) {
+                    Some((_, _, n)) => *n += 1,
+                    None => moves.push((body.task, Arc::clone(&body.ledger), 1)),
+                }
+            }
+        }
+        for (_, ledger, n) in moves {
+            let mut st = ledger.state.lock().unwrap();
+            st.in_flight -= n;
+            st.pending += n;
+        }
+        flags
     }
 
     fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
@@ -924,6 +991,32 @@ mod tests {
             assert_eq!(st.fallback.len(), 2);
             assert!(!st.ready.iter().any(|&(_, id)| id == ids[0].0));
         }
+    }
+
+    /// A batched release re-arms both dispatch indexes under one
+    /// dispatch-mutex pass and keeps the O(1) ledgers exact.
+    #[test]
+    fn release_batch_rearms_indexes() {
+        let s = IndexedStore::with_shards(cfg(), 4);
+        let ids =
+            s.create_tickets(TaskId(1), "t", (0..3).map(|i| Value::num(i as f64)).collect(), 0);
+        let a = s.next_ticket("c", 5).unwrap();
+        let b = s.next_ticket("c", 6).unwrap();
+        let flags = s.release_batch(&[a.id, b.id, a.id, TicketId(99)]);
+        assert_eq!(flags, vec![true, true, false, false]);
+        {
+            let st = s.sched.lock().unwrap();
+            assert!(st.ready.contains(&(0, a.id.0)), "VCT re-armed to creation time");
+            assert!(st.fallback.contains(&(0, a.id.0)), "fallback key re-armed to 0");
+            assert!(st.ready.contains(&(0, b.id.0)));
+        }
+        let p = s.progress(None);
+        assert_eq!((p.pending, p.in_flight), (3, 0));
+        let p1 = s.progress(Some(TaskId(1)));
+        assert_eq!((p1.pending, p1.in_flight), (3, 0));
+        // Released tickets dispatch again immediately, oldest id first.
+        assert_eq!(s.next_ticket("d", 7).unwrap().id, ids[0]);
+        assert_eq!(s.progress(None).redistributions, 1);
     }
 
     /// Ticket ids spread across stripes, and bodies are found regardless

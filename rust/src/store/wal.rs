@@ -5,7 +5,8 @@
 //! ticket on a crash.  [`WalStore`] closes that gap without giving up
 //! the indexed dispatch path: it wraps an `IndexedStore` and appends one
 //! compact binary record per *mutating* operation (ticket creation,
-//! dispatch, result, error report, error drain) to a segmented log
+//! dispatch, result, error report, explicit release, error drain) to a
+//! segmented log
 //! before returning, so the log replays to exactly the in-memory state.
 //!
 //! ## On-disk layout
@@ -108,6 +109,11 @@ const OP_DISPATCH_BATCH: u8 = 7;
 /// One batched completion (`complete_batch`): the applied prefix, with
 /// its per-entry accepted flags, in one frame.
 const OP_COMPLETE_BATCH: u8 = 8;
+/// One batched release (`release`/`release_batch`): every id with its
+/// released flag, in one frame (the active failure path: a
+/// disconnecting client's whole prefetched batch re-enters dispatch as
+/// one record).
+const OP_RELEASE_BATCH: u8 = 9;
 
 /// When the log is fsynced (appends always reach the OS immediately).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -1043,6 +1049,26 @@ fn replay_record(store: &IndexedStore, payload: &[u8]) -> Result<u64> {
             }
             Ok(1)
         }
+        OP_RELEASE_BATCH => {
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let id = TicketId(d.u64()?);
+                let released = d.u8()? != 0;
+                entries.push((id, released));
+            }
+            d.done()?;
+            let ids: Vec<TicketId> = entries.iter().map(|&(id, _)| id).collect();
+            let flags = store.release_batch(&ids);
+            for (i, &(id, logged)) in entries.iter().enumerate() {
+                ensure!(
+                    flags[i] == logged,
+                    "replayed release of {id:?} released={}, log says {logged}",
+                    flags[i]
+                );
+            }
+            Ok(1)
+        }
         op => bail!("unknown WAL opcode {op}"),
     }
 }
@@ -1173,6 +1199,29 @@ impl Scheduler for WalStore {
         self.inner.report_error(id, report)?;
         self.append(&mut log, e);
         Ok(())
+    }
+
+    fn release(&self, id: TicketId) -> bool {
+        self.release_batch(std::slice::from_ref(&id))[0]
+    }
+
+    fn release_batch(&self, ids: &[TicketId]) -> Vec<bool> {
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        let mut log = self.log.lock().unwrap();
+        let flags = self.inner.release_batch(ids);
+        // One framed record per batch, with the per-entry released
+        // flags for the replay cross-check (a no-op flag changes no
+        // state, but replay must still agree it was a no-op).
+        let mut e = Enc::new(OP_RELEASE_BATCH);
+        e.u32(ids.len() as u32);
+        for (i, id) in ids.iter().enumerate() {
+            e.u64(id.0);
+            e.u8(flags[i] as u8);
+        }
+        self.append(&mut log, e);
+        flags
     }
 
     fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
@@ -1467,6 +1516,44 @@ mod tests {
         assert_eq!(r.progress(None), control.progress(None));
         // Post-recovery batched dispatch continues in lockstep.
         assert_eq!(r.next_tickets("d", 2, 4), control.next_tickets("d", 2, 4));
+        drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Release batches write one frame, replay with their logged flags
+    /// cross-checked, and leave the recovered store in lockstep with an
+    /// unlogged control store.
+    #[test]
+    fn release_records_recover_exactly() {
+        let dir = temp_dir("release");
+        let control = IndexedStore::new(cfg());
+        {
+            let s = WalStore::open(
+                &dir,
+                cfg(),
+                WalConfig { sync: SyncPolicy::OsOnly, ..WalConfig::default() },
+            )
+            .unwrap();
+            let drive = |a: &dyn Scheduler| {
+                let ids = a.create_tickets(
+                    TaskId(1),
+                    "t",
+                    (0..3).map(|i| Value::num(i as f64)).collect(),
+                    0,
+                );
+                let t = a.next_ticket("c", 1).unwrap();
+                // One real release and one no-op (pending id) share a frame.
+                let flags = a.release_batch(&[t.id, ids[2]]);
+                assert_eq!(flags, vec![true, false]);
+            };
+            drive(&s);
+            drive(&control);
+            std::mem::forget(s); // crash: no flush-on-drop
+        }
+        let r = WalStore::recover(&dir).unwrap();
+        assert_eq!(r.progress(None), control.progress(None));
+        // The released ticket dispatches again immediately on both.
+        assert_eq!(r.next_ticket("d", 2), control.next_ticket("d", 2));
         drop(r);
         fs::remove_dir_all(&dir).unwrap();
     }

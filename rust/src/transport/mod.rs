@@ -56,11 +56,39 @@ impl WireTicket {
     }
 }
 
+/// One error report as it rides the wire inside a
+/// [`Message::ErrorReports`] batch: the same fields as the singular
+/// [`Message::ErrorReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub ticket: TicketId,
+    pub message: String,
+    pub stack: String,
+}
+
+impl WireError {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("ticket", Value::num(self.ticket.0 as f64)),
+            ("message", Value::str(self.message.clone())),
+            ("stack", Value::str(self.stack.clone())),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<WireError> {
+        Ok(WireError {
+            ticket: TicketId(v.get("ticket")?.as_u64()?),
+            message: v.get("message")?.as_str()?.to_string(),
+            stack: v.get("stack")?.as_str()?.to_string(),
+        })
+    }
+}
+
 /// Protocol messages (both directions).  Mirrors the browser loop in
 /// §2.1.2 of the paper step by step.  The batched variants
-/// (`TicketBatchRequest`/`Tickets`/`TicketResults`) amortise one
-/// round-trip over many tickets; the singular forms stay served for
-/// legacy clients.
+/// (`TicketBatchRequest`/`Tickets`/`TicketResults`, and on the failure
+/// path `ErrorReports`/`ReleaseTickets`) amortise one round-trip over
+/// many tickets; the singular forms stay served for legacy clients.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker -> server: join with a client id and device profile name.
@@ -95,6 +123,16 @@ pub enum Message {
     /// Worker -> server: error report with stack trace; the worker
     /// reloads itself afterwards (paper behaviour).
     ErrorReport { ticket: TicketId, message: String, stack: String },
+    /// Worker -> server: batched error reports — every failure of one
+    /// prefetched batch in a single round trip, answered by one
+    /// [`Message::Reload`] (the worker reloads itself once per batch,
+    /// not once per failure).
+    ErrorReports { reports: Vec<WireError> },
+    /// Worker -> server: explicitly hand undone tickets back (an
+    /// orderly shutdown, or an abandoned prefetch queue).  Released
+    /// tickets are immediately re-dispatchable — no redistribution
+    /// window — and the server answers with one [`Message::Ack`].
+    ReleaseTickets { tickets: Vec<TicketId> },
     /// Server -> worker: acknowledge (keeps the protocol strictly
     /// request/response so links can be modelled per round trip).
     Ack,
@@ -176,6 +214,14 @@ impl Message {
                 ("message", Value::str(message.clone())),
                 ("stack", Value::str(stack.clone())),
             ]),
+            Message::ErrorReports { reports } => Value::obj(vec![
+                ("t", Value::str("errors")),
+                ("reports", Value::arr(reports.iter().map(|r| r.to_value()))),
+            ]),
+            Message::ReleaseTickets { tickets } => Value::obj(vec![
+                ("t", Value::str("release")),
+                ("tickets", Value::arr(tickets.iter().map(|id| Value::num(id.0 as f64)))),
+            ]),
             Message::Ack => Value::obj(vec![("t", Value::str("ack"))]),
             Message::Reload => Value::obj(vec![("t", Value::str("reload"))]),
             Message::Shutdown => Value::obj(vec![("t", Value::str("shutdown"))]),
@@ -246,6 +292,22 @@ impl Message {
                 ticket: TicketId(v.get("ticket")?.as_u64()?),
                 message: v.get("message")?.as_str()?.to_string(),
                 stack: v.get("stack")?.as_str()?.to_string(),
+            },
+            "errors" => Message::ErrorReports {
+                reports: v
+                    .get("reports")?
+                    .as_arr()?
+                    .iter()
+                    .map(WireError::from_value)
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "release" => Message::ReleaseTickets {
+                tickets: v
+                    .get("tickets")?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| Ok(TicketId(e.as_u64()?)))
+                    .collect::<Result<Vec<_>>>()?,
             },
             "ack" => Message::Ack,
             "reload" => Message::Reload,
@@ -356,6 +418,19 @@ mod tests {
             message: "panic: index out of bounds".into(),
             stack: "worker::execute\ncoordinator::...".into(),
         });
+        roundtrip(Message::ErrorReports {
+            reports: vec![
+                WireError {
+                    ticket: TicketId(2),
+                    message: "panic: index out of bounds".into(),
+                    stack: "worker::execute".into(),
+                },
+                WireError { ticket: TicketId(5), message: "boom".into(), stack: String::new() },
+            ],
+        });
+        roundtrip(Message::ErrorReports { reports: Vec::new() });
+        roundtrip(Message::ReleaseTickets { tickets: vec![TicketId(7), TicketId(8), TicketId(7)] });
+        roundtrip(Message::ReleaseTickets { tickets: Vec::new() });
         roundtrip(Message::Ack);
         roundtrip(Message::Reload);
         roundtrip(Message::Shutdown);

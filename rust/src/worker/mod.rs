@@ -33,17 +33,25 @@
 //!   so an idle fleet does not hammer the coordinator in lockstep at
 //!   the retry hint.
 //!
-//! The prefetch queue and any unflushed results *survive* reloads and
-//! reconnects: an execution error reports the failing ticket, reloads
-//! (cache cleared), and then keeps working through the rest of the
-//! batch, so a transient error never strands prefetched work for the
-//! store's redistribution window.  Unacknowledged flushes are retried
-//! on the next connection — at-least-once, with the store's
-//! first-result-wins dedup absorbing any repeat.  Completed tickets
-//! are only counted once a flush is acknowledged, so a
-//! `max_tickets`-bounded worker's ledger is exact.  Work is only lost
-//! if the worker itself dies (a browser closing mid-ticket), which is
-//! what §2.1.2 redistribution recovers.
+//! The failure path is *active* (DESIGN.md §2.4), not the paper's
+//! passive wait-out-the-window story:
+//! * a failing ticket does not interrupt its batch — the report is
+//!   queued, the rest of the queue executes, and every failure flushes
+//!   as one `ErrorReports` round trip answered by one Reload, after
+//!   which the worker reloads itself once (cache cleared, fresh
+//!   connection);
+//! * on stop/shutdown the worker flushes finished results, flushes
+//!   queued reports, and hands the unexecuted queue back in one
+//!   `ReleaseTickets` round trip, so nothing it holds strands;
+//! * if the transport dies mid-batch the queue is dropped — the
+//!   coordinator's disconnect release (or, with it disabled, §2.1.2
+//!   redistribution) re-arms those tickets, and re-executing them
+//!   locally would only race the re-dispatch.
+//!
+//! Unacknowledged *result* flushes are retried on the next connection —
+//! at-least-once, with the store's first-result-wins dedup absorbing
+//! any repeat.  Completed tickets are only counted once a flush is
+//! acknowledged, so a `max_tickets`-bounded worker's ledger is exact.
 
 pub mod profile;
 
@@ -60,7 +68,7 @@ use anyhow::{Context as _, Result};
 use crate::runtime::{SharedRuntime, Tensor};
 use crate::store::TicketId;
 use crate::tasks::{Registry, TaskContext, TaskDef};
-use crate::transport::{Conn, Message, WireTicket};
+use crate::transport::{Conn, Message, WireError, WireTicket};
 use crate::util::base64;
 use crate::util::clock::{self, PaddedTimer};
 use crate::util::json::Value;
@@ -82,6 +90,9 @@ pub struct WorkerReport {
     pub prefetch_batches: u64,
     /// Largest batch the adaptive sizing actually received.
     pub peak_batch: u64,
+    /// Tickets handed back via `ReleaseTickets` (stop/shutdown with a
+    /// non-empty prefetch queue).
+    pub tickets_released: u64,
 }
 
 enum CacheEntry {
@@ -96,6 +107,10 @@ struct WireContext<'a> {
     cache: &'a mut LruCache<String, CacheEntry>,
     runtime: Option<&'a SharedRuntime>,
     data_fetches: &'a mut u64,
+    /// Set when a transport op failed (or desynced) inside `dataset`:
+    /// the worker then reconnects instead of misreporting a dead link
+    /// as a task error (see [`ExecError`]).
+    conn_failed: &'a mut bool,
 }
 
 impl TaskContext for WireContext<'_> {
@@ -104,23 +119,51 @@ impl TaskContext for WireContext<'_> {
             return Ok(Arc::clone(t));
         }
         *self.data_fetches += 1;
-        self.conn.send(&Message::DataRequest { key: key.to_string() })?;
-        match self.conn.recv()? {
+        if let Err(e) = self.conn.send(&Message::DataRequest { key: key.to_string() }) {
+            *self.conn_failed = true;
+            return Err(e);
+        }
+        let reply = match self.conn.recv() {
+            Ok(m) => m,
+            Err(e) => {
+                *self.conn_failed = true;
+                return Err(e);
+            }
+        };
+        match reply {
             Message::Data { key: k, shape, b64 } => {
-                anyhow::ensure!(k == key, "dataset key mismatch: {k} != {key}");
+                if k != key {
+                    // A reply for a different key is a desynced stream,
+                    // same as a non-Data reply: reconnect, don't report.
+                    *self.conn_failed = true;
+                    anyhow::bail!("dataset key mismatch: {k} != {key}");
+                }
                 let data = base64::decode_f32(&b64)?;
                 let t = Arc::new(Tensor::new(shape, data)?);
                 let bytes = t.size_bytes();
                 self.cache.put(key.to_string(), CacheEntry::Data(Arc::clone(&t)), bytes);
                 Ok(t)
             }
-            m => anyhow::bail!("expected Data, got {m:?}"),
+            m => {
+                // Desynced stream: poison the connection, don't guess.
+                *self.conn_failed = true;
+                anyhow::bail!("expected Data, got {m:?}")
+            }
         }
     }
 
     fn runtime(&self) -> Result<&SharedRuntime> {
         self.runtime.context("worker has no XLA runtime configured")
     }
+}
+
+/// Why one ticket's execution failed: a dead or desynced transport
+/// (reconnect — the coordinator's disconnect release or §2.1.2
+/// redistribution re-arms the work, there is nothing to report) versus
+/// a genuine task failure (queue an error report for the batch flush).
+enum ExecError {
+    Conn(anyhow::Error),
+    Task(anyhow::Error),
 }
 
 pub struct Worker {
@@ -194,12 +237,14 @@ impl Worker {
         let mut jitter = SplitMix64::new(
             self.id.bytes().fold(0x5EEDu64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64)),
         );
-        // The prefetch queue and the result flush buffer survive
-        // reloads and reconnects (module docs): an error or a dropped
-        // connection must not strand a batch's remainder for the
-        // store's redistribution window while this worker is alive.
+        // The result flush buffer and queued error reports survive
+        // reloads and reconnects; the prefetch queue itself is dropped
+        // when the transport dies (module docs: the coordinator's
+        // disconnect release re-arms it) and explicitly released on
+        // stop/shutdown.
         let mut queue: VecDeque<WireTicket> = VecDeque::new();
         let mut pending: Vec<(TicketId, Value)> = Vec::new();
+        let mut errors: Vec<WireError> = Vec::new();
         'outer: while !stop.load(Ordering::SeqCst) {
             let mut conn = match connect() {
                 Ok(c) => c,
@@ -222,20 +267,29 @@ impl Worker {
                 if consecutive_failures > max_reconnects {
                     break;
                 }
+                // Same backoff as a failed connect: a half-up
+                // coordinator (socket open, Hello unanswered) must not
+                // be spin-looped against.
+                clock::sleep_ms(10);
                 continue;
             }
             consecutive_failures = 0;
 
             // Compute time spent on the current batch vs the round trip
-            // that fetched it: the adaptive-growth signal (reset per
-            // connection; a carried-over queue just executes without
-            // feeding the growth rule).
+            // that fetched it: the adaptive-growth signal, reset per
+            // connection.
             let mut batch_exec_ms = 0.0f64;
             let mut fetch_rtt_ms = 0.0f64;
 
             loop {
                 if stop.load(Ordering::SeqCst) {
+                    // Orderly exit: salvage finished work, report
+                    // queued failures, and hand the unexecuted queue
+                    // back so nothing strands for the redistribution
+                    // window.
                     let _ = self.flush_results(&mut *conn, &mut pending, &mut report);
+                    let _ = self.flush_errors(&mut *conn, &mut errors);
+                    let _ = self.release_queue(&mut *conn, &mut queue, &mut report);
                     let _ = conn.send(&Message::Shutdown);
                     break 'outer;
                 }
@@ -246,46 +300,82 @@ impl Worker {
                         Ok(result) => {
                             batch_exec_ms += t0.elapsed().as_secs_f64() * 1e3;
                             pending.push((t.ticket, result));
-                            if queue.is_empty() {
-                                // Batch done: flush its results...
-                                if self
-                                    .flush_results(&mut *conn, &mut pending, &mut report)
-                                    .is_err()
-                                {
-                                    continue 'outer;
-                                }
-                                // ...and grow while a whole batch runs
-                                // faster than the round trip it cost.
-                                if batch_exec_ms < fetch_rtt_ms && batch_size < cap {
-                                    batch_size = (batch_size * 2).min(cap);
-                                }
+                            // Grow only off an error-free batch that
+                            // ran faster than the round trip it cost.
+                            if queue.is_empty()
+                                && errors.is_empty()
+                                && batch_exec_ms < fetch_rtt_ms
+                                && batch_size < cap
+                            {
+                                batch_size = (batch_size * 2).min(cap);
                             }
                         }
-                        Err(e) => {
-                            // Salvage finished work before reporting.
-                            let _ = self.flush_results(&mut *conn, &mut pending, &mut report);
+                        Err(ExecError::Conn(e)) => {
+                            // Transport died mid-ticket: reconnect.
+                            // Nothing to report, and the queue is
+                            // dropped — with disconnect release on
+                            // (the default) the coordinator re-arms
+                            // everything this connection held, so
+                            // executing it locally would only race the
+                            // re-dispatch.  Under the passive baseline
+                            // (release disabled) the dropped tickets
+                            // wait out the §2.1.2 window instead —
+                            // that *is* the paper's recovery story,
+                            // which that configuration exists to
+                            // reproduce.
+                            crate::log_debug!(
+                                "worker",
+                                "{}: transport failed mid-ticket: {e:#}",
+                                self.id
+                            );
+                            queue.clear();
+                            continue 'outer;
+                        }
+                        Err(ExecError::Task(e)) => {
+                            // Queue the report; the batch keeps
+                            // executing and every failure flushes as
+                            // one ErrorReports round trip below.
                             report.errors_reported += 1;
                             batch_size = (batch_size / 2).max(1);
-                            let _ = conn.send(&Message::ErrorReport {
+                            errors.push(WireError {
                                 ticket: t.ticket,
                                 message: format!("{e:#}"),
                                 stack: stack_trace_of(&e),
                             });
-                            let _ = conn.recv(); // Reload
-                            // The paper: "the browser reloads itself"
-                            // (cache cleared, fresh connection).  The
-                            // prefetched remainder is carried over and
-                            // executed after the reload — one bad
-                            // ticket must not strand the batch.
-                            self.cache.clear();
-                            report.reloads += 1;
-                            continue 'outer;
                         }
                     }
                     continue;
                 }
                 // Queue empty: everything executed is flushed...
                 if self.flush_results(&mut *conn, &mut pending, &mut report).is_err() {
+                    continue 'outer;
+                }
+                // ...and a batch that had failures reports all of them
+                // in one round trip, then the worker reloads itself
+                // once (§2.1.2: "the browser reloads itself"), not once
+                // per failure.  Reports survive a failed flush and are
+                // retried on the next connection.
+                if !errors.is_empty() {
+                    match self.flush_errors(&mut *conn, &mut errors) {
+                        Ok(()) => {
+                            // One reload per failing batch, counted when
+                            // the flush actually lands.
+                            self.cache.clear();
+                            report.reloads += 1;
+                        }
+                        Err(_) => {
+                            // Dead/desynced connection: reconnect and
+                            // retry the still-queued reports; the
+                            // reload is counted on the pass where the
+                            // flush succeeds, so retries never inflate
+                            // the churn accounting.
+                            crate::log_debug!(
+                                "worker",
+                                "{}: error flush failed; retrying after reconnect",
+                                self.id
+                            );
+                        }
+                    }
                     continue 'outer;
                 }
                 if let Some(max) = self.max_tickets {
@@ -395,6 +485,74 @@ impl Worker {
         }
     }
 
+    /// Flush queued error reports: one `ErrorReports` round trip for
+    /// the whole batch (or the legacy per-ticket `ErrorReport` when
+    /// batching is disabled), answered by a Reload.  The reply is
+    /// matched *explicitly*: anything other than Reload — or a recv
+    /// failure — is a desynced stream and errors out so the caller
+    /// reconnects; unacknowledged reports stay queued and retry on the
+    /// next connection (at-least-once; a repeated report only inflates
+    /// the error ledger, never double-applies a requeue).
+    fn flush_errors(&self, conn: &mut dyn Conn, errors: &mut Vec<WireError>) -> Result<()> {
+        fn expect_reload(conn: &mut dyn Conn) -> Result<()> {
+            match conn.recv() {
+                Ok(Message::Reload) => Ok(()),
+                Ok(m) => anyhow::bail!("expected Reload after error report, got {m:?}"),
+                Err(e) => Err(e),
+            }
+        }
+        if errors.is_empty() {
+            return Ok(());
+        }
+        if self.prefetch_cap <= 1 {
+            while let Some(r) = errors.first().cloned() {
+                conn.send(&Message::ErrorReport {
+                    ticket: r.ticket,
+                    message: r.message,
+                    stack: r.stack,
+                })?;
+                expect_reload(conn)?;
+                errors.remove(0);
+            }
+            return Ok(());
+        }
+        conn.send(&Message::ErrorReports { reports: errors.clone() })?;
+        expect_reload(conn)?;
+        errors.clear();
+        Ok(())
+    }
+
+    /// Hand the unexecuted prefetch queue back in one `ReleaseTickets`
+    /// round trip, so a stopping worker's tickets re-enter dispatch
+    /// immediately instead of waiting out the redistribution window.
+    /// With batching disabled (`prefetch_cap <= 1`) the legacy wire has
+    /// no release message; the queue (at most one ticket) is dropped
+    /// and §2.1.2 redistribution covers it — the paper's exact story.
+    fn release_queue(
+        &self,
+        conn: &mut dyn Conn,
+        queue: &mut VecDeque<WireTicket>,
+        report: &mut WorkerReport,
+    ) -> Result<()> {
+        if queue.is_empty() {
+            return Ok(());
+        }
+        let tickets: Vec<TicketId> = queue.drain(..).map(|t| t.ticket).collect();
+        if self.prefetch_cap <= 1 {
+            return Ok(());
+        }
+        let n = tickets.len() as u64;
+        conn.send(&Message::ReleaseTickets { tickets })?;
+        match conn.recv() {
+            Ok(Message::Ack) => {
+                report.tickets_released += n;
+                Ok(())
+            }
+            Ok(m) => anyhow::bail!("expected Ack after release, got {m:?}"),
+            Err(e) => Err(e),
+        }
+    }
+
     /// `NoTicket` backoff: exponential in the idle streak with
     /// multiplicative jitter, capped at [`Self::idle_backoff_cap_ms`].
     /// Replaces the fixed retry-hint sleep so an idle fleet spreads its
@@ -410,52 +568,77 @@ impl Worker {
     }
 
     /// Steps 3–5 for one ticket: ensure code, prefetch datasets, execute
-    /// with panic isolation, pad to the device profile.
+    /// with panic isolation, pad to the device profile.  Failures are
+    /// classified ([`ExecError`]): transport deaths reconnect, task
+    /// failures become queued error reports.
     fn execute_ticket(
         &mut self,
         conn: &mut dyn Conn,
         task_name: &str,
         payload: &crate::util::json::Value,
         report: &mut WorkerReport,
-    ) -> Result<crate::util::json::Value> {
+    ) -> std::result::Result<crate::util::json::Value, ExecError> {
         // Step 3: task code, if not cached.
         let code_key = format!("task:{task_name}");
         if self.cache.get(&code_key).is_none() {
             report.task_fetches += 1;
-            conn.send(&Message::TaskRequest { task_name: task_name.to_string() })?;
-            match conn.recv()? {
-                Message::TaskCode { code_bytes, .. } => {
+            conn.send(&Message::TaskRequest { task_name: task_name.to_string() })
+                .map_err(ExecError::Conn)?;
+            match conn.recv() {
+                Ok(Message::TaskCode { code_bytes, .. }) => {
                     self.cache.put(code_key, CacheEntry::TaskCode, code_bytes);
                 }
-                m => anyhow::bail!("expected TaskCode, got {m:?}"),
+                Ok(m) => {
+                    // Desynced stream: reconnect, don't misreport.
+                    return Err(ExecError::Conn(anyhow::anyhow!("expected TaskCode, got {m:?}")));
+                }
+                Err(e) => return Err(ExecError::Conn(e)),
             }
         }
-        let def: Arc<dyn TaskDef> = self.registry.get(task_name)?;
+        let def: Arc<dyn TaskDef> = self.registry.get(task_name).map_err(ExecError::Task)?;
 
         let timer = PaddedTimer::start();
         // Steps 4–5 under panic isolation (a panicking task produces an
         // error report + reload, not a dead worker thread).
-        let result = {
+        let mut conn_failed = false;
+        let outcome = {
             let mut ctx = WireContext {
                 conn,
                 cache: &mut self.cache,
                 runtime: self.runtime.as_ref(),
                 data_fetches: &mut report.data_fetches,
+                conn_failed: &mut conn_failed,
             };
             // Step 4: explicit prefetch of declared refs (mirrors the
             // basic program requesting files before running the task).
+            let mut prefetch_err = None;
             for key in def.dataset_refs(payload) {
-                ctx.dataset(&key)?;
+                if let Err(e) = ctx.dataset(&key) {
+                    prefetch_err = Some(e);
+                    break;
+                }
             }
-            std::panic::catch_unwind(AssertUnwindSafe(|| def.execute(payload, &mut ctx)))
-                .map_err(|p| anyhow::anyhow!("task panicked: {}", panic_message(&p)))?
-        }?;
+            match prefetch_err {
+                Some(e) => Err(e),
+                None => std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    def.execute(payload, &mut ctx)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!("task panicked: {}", panic_message(&p)))
+                }),
+            }
+        };
+        let output = match outcome {
+            Ok(output) => output,
+            Err(e) if conn_failed => return Err(ExecError::Conn(e)),
+            Err(e) => return Err(ExecError::Task(e)),
+        };
 
         // Device-speed padding (DESIGN.md §7).
-        let modelled = result.modelled_ms.unwrap_or_else(|| timer.elapsed_ms());
+        let modelled = output.modelled_ms.unwrap_or_else(|| timer.elapsed_ms());
         let total = timer.pad_to(modelled, self.profile.speed);
         report.busy_ms += total;
-        Ok(result.value)
+        Ok(output.value)
     }
 }
 

@@ -68,10 +68,15 @@ fn prime_project_over_local_transport() {
     assert_eq!(primes[0], 2);
     assert_eq!(*primes.last().unwrap(), 997);
 
-    // Console reflects the finished project.
+    // Console reflects the finished project.  `snap.clients` counts
+    // only *connected* workers and the fleet is tearing down here (the
+    // shutdown handlers race this snapshot), so the stable assertion
+    // is the retained per-client table: no entry is ever lost, even
+    // after its connection ends.
     let snap = console::snapshot(&dist);
     assert_eq!(snap.progress.done, 1000);
-    assert_eq!(snap.clients, 3);
+    assert!(snap.clients <= 3);
+    assert_eq!(dist.clients().len(), 3, "every worker appears in the table");
     assert!(console::render(&snap).contains("1000 total"));
     assert!(console::render_clients(&dist).contains("w1"));
 }

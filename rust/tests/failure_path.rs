@@ -1,0 +1,237 @@
+//! The active failure path, end to end (ISSUE 5 acceptance): a worker
+//! holding a prefetched batch is killed — and, separately, errors and
+//! reloads — and every undone ticket it held re-enters dispatch with
+//! latency bounded by the release round trip, not by the store's
+//! `min_redistribute_ms`/`requeue_after_ms` windows.  With disconnect
+//! release disabled, the paper's passive §2.1.2 baseline (strand until
+//! the window elapses) is preserved.
+//!
+//! Every test freezes both redistribution windows far beyond the test
+//! horizon, so any recovered ticket is *proof* the active path ran.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sashimi::coordinator::{Distributor, DistributorConfig, Framework};
+use sashimi::store::{Scheduler as _, StoreConfig, TaskId};
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::tasks::{TaskContext, TaskDef, TaskOutput};
+use sashimi::transport::{local, Conn, LinkModel, Message};
+use sashimi::util::json::Value;
+use sashimi::worker::{DeviceProfile, Worker};
+
+/// Redistribution windows far beyond any test horizon: if a stranded
+/// ticket comes back within seconds, only the release path explains it.
+fn frozen_cfg() -> StoreConfig {
+    StoreConfig { requeue_after_ms: 600_000, min_redistribute_ms: 600_000, requeue_on_error: true }
+}
+
+fn prime_fw(n: usize) -> (Arc<Framework>, TaskId) {
+    let fw = Framework::builder().store_config(frozen_cfg()).build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate(
+        (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+    );
+    let id = task.id;
+    (fw, id)
+}
+
+/// A worker holding a prefetched batch is killed (connection dropped,
+/// no shutdown, no reports): the whole batch is released on disconnect
+/// and a healthy worker finishes the project well inside the frozen
+/// redistribution windows.
+#[test]
+fn killed_workers_prefetched_batch_is_redispatched_immediately() {
+    let (fw, task_id) = prime_fw(8);
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+
+    // The victim takes a 4-ticket batch over the raw protocol, then its
+    // "browser" dies.
+    let mut victim = connector.connect().unwrap();
+    victim.send(&Message::Hello { client: "victim".into(), profile: "t".into() }).unwrap();
+    assert!(matches!(victim.recv().unwrap(), Message::Ack));
+    victim.send(&Message::TicketBatchRequest { max: 4 }).unwrap();
+    match victim.recv().unwrap() {
+        Message::Tickets { tickets } => assert_eq!(tickets.len(), 4),
+        m => panic!("expected tickets, got {m:?}"),
+    }
+    assert_eq!(fw.store().progress(None).in_flight, 4);
+    drop(victim);
+
+    // A healthy worker must finish all 8 tickets within the test
+    // horizon — impossible through the frozen windows, trivial through
+    // the release path.
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("healthy", DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        })
+    };
+    let results =
+        fw.store().wait_results_timeout(task_id, 20_000).expect("released tickets must finish");
+    stop.store(true, Ordering::SeqCst);
+    let report = worker.join().unwrap();
+    assert_eq!(results.len(), 8);
+    assert_eq!(report.tickets_completed, 8);
+    let p = fw.store().progress(None);
+    assert_eq!(p.done, 8);
+    assert!(p.redistributions >= 4, "released tickets re-dispatch: {p:?}");
+    assert_eq!(dist.stats.tickets_released.load(Ordering::Relaxed), 4);
+    assert_eq!(p.errors, 0, "a kill is not an error report");
+}
+
+/// Fails the first execution of every ticket (a transient browser
+/// fault), succeeds on the retry.
+struct FailsOnceEach {
+    failed: std::sync::Mutex<std::collections::HashSet<u64>>,
+}
+
+impl TaskDef for FailsOnceEach {
+    fn name(&self) -> &str {
+        "fails_once_each"
+    }
+    fn execute(&self, input: &Value, _: &mut dyn TaskContext) -> anyhow::Result<TaskOutput> {
+        let n = input.get("n")?.as_u64()?;
+        if self.failed.lock().unwrap().insert(n) {
+            anyhow::bail!("transient failure on {n}");
+        }
+        Ok(TaskOutput::new(Value::num(n as f64)))
+    }
+}
+
+/// The errors-and-reloads half of the acceptance case: every ticket
+/// fails once, the worker flushes batched reports (one Reload round
+/// trip per failing batch), every errored ticket requeues at its
+/// creation-time VCT, and the project still completes inside the
+/// frozen windows.
+#[test]
+fn erroring_worker_flushes_batched_reports_and_finishes() {
+    let fw = Framework::builder().store_config(frozen_cfg()).build();
+    let task = fw.create_task(Arc::new(FailsOnceEach { failed: Default::default() }));
+    task.calculate((0..6).map(|i| Value::obj(vec![("n", Value::num(i as f64))])).collect());
+    let task_id = task.id;
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("flaky", DeviceProfile::native(), registry);
+            w.max_tickets = Some(6);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        })
+    };
+    let results =
+        fw.store().wait_results_timeout(task_id, 20_000).expect("errored tickets requeue at once");
+    stop.store(true, Ordering::SeqCst);
+    let report = worker.join().unwrap();
+    assert_eq!(results.len(), 6);
+    assert_eq!(report.errors_reported, 6, "every ticket failed exactly once");
+    assert!(
+        report.reloads >= 1 && report.reloads <= report.errors_reported,
+        "one reload per failing batch, never per failure: {} reloads",
+        report.reloads
+    );
+    assert_eq!(fw.store().error_count(), 6);
+    assert_eq!(fw.store().progress(None).done, 6);
+}
+
+/// Disconnect release disabled: the passive paper baseline.  The killed
+/// worker's batch stays stranded in flight; nothing is served until the
+/// (frozen) redistribution windows elapse.
+#[test]
+fn disabled_disconnect_release_preserves_passive_stranding() {
+    let (fw, _) = prime_fw(2);
+    let dist = Distributor::new_with(
+        &fw,
+        DistributorConfig { release_on_disconnect: false, ..Default::default() },
+    );
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+
+    let mut victim = connector.connect().unwrap();
+    victim.send(&Message::Hello { client: "victim".into(), profile: "t".into() }).unwrap();
+    assert!(matches!(victim.recv().unwrap(), Message::Ack));
+    victim.send(&Message::TicketBatchRequest { max: 2 }).unwrap();
+    match victim.recv().unwrap() {
+        Message::Tickets { tickets } => assert_eq!(tickets.len(), 2),
+        m => panic!("expected tickets, got {m:?}"),
+    }
+    drop(victim);
+    // Wait until the handler has noticed the disconnect.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while dist.stats.clients_disconnected.load(Ordering::Relaxed) == 0 {
+        assert!(std::time::Instant::now() < deadline, "handler never exited");
+        sashimi::util::clock::sleep_ms(2);
+    }
+    assert_eq!(dist.stats.tickets_released.load(Ordering::Relaxed), 0);
+    let p = fw.store().progress(None);
+    assert_eq!((p.pending, p.in_flight), (0, 2), "passive baseline strands the batch");
+
+    let mut probe = connector.connect().unwrap();
+    probe.send(&Message::Hello { client: "probe".into(), profile: "t".into() }).unwrap();
+    assert!(matches!(probe.recv().unwrap(), Message::Ack));
+    probe.send(&Message::TicketRequest).unwrap();
+    assert!(
+        matches!(probe.recv().unwrap(), Message::NoTicket { .. }),
+        "stranded tickets must wait out the window"
+    );
+    probe.send(&Message::Shutdown).unwrap();
+}
+
+/// Ten-millisecond tickets so a stop lands mid-batch.
+struct SlowTask;
+
+impl TaskDef for SlowTask {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn execute(&self, _input: &Value, _: &mut dyn TaskContext) -> anyhow::Result<TaskOutput> {
+        sashimi::util::clock::sleep_ms(10);
+        Ok(TaskOutput::new(Value::Bool(true)))
+    }
+}
+
+/// A worker stopped mid-batch strands nothing: finished work is
+/// flushed, the unexecuted queue is explicitly released (and whatever
+/// the server still tracked is released on disconnect), so no ticket
+/// is left in flight against the frozen windows.
+#[test]
+fn stopped_worker_leaves_nothing_in_flight() {
+    let fw = Framework::builder().store_config(frozen_cfg()).build();
+    let task = fw.create_task(Arc::new(SlowTask));
+    task.calculate((0..16).map(|i| Value::num(i as f64)).collect());
+    let dist = Distributor::new(&fw);
+    // A latency-priced link (really slept) so the adaptive batch grows
+    // and the worker actually holds a multi-ticket queue when stopped.
+    let (listener, connector) =
+        local::endpoint(LinkModel { latency_ms: 20.0, bytes_per_ms: 100_000.0 }, true);
+    dist.serve(Box::new(listener));
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let connector = connector.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("w", DeviceProfile::native(), registry)
+                .with_prefetch_cap(8);
+            w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop)
+        })
+    };
+    sashimi::util::clock::sleep_ms(300);
+    stop.store(true, Ordering::SeqCst);
+    let report = worker.join().unwrap();
+    let p = fw.store().progress(None);
+    assert_eq!(p.in_flight, 0, "a stopping worker must strand nothing: {p:?}");
+    assert_eq!(p.done as u64, report.tickets_completed, "acked flushes match the store");
+    assert_eq!(p.done + p.pending, 16);
+}

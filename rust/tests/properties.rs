@@ -116,11 +116,11 @@ fn store_never_loses_or_duplicates_tickets() {
 /// order and ticket contents, same progress counters, same duplicate
 /// and error accounting — across random operation sequences (create /
 /// next_ticket / next_tickets(k) / complete / complete_batch /
-/// report_error) at random clocks.  The batched ops pit the indexed
-/// store's amortised native paths against the naive store's
-/// loop-fallback reference, so "batch == k-fold loop" (including k=1)
-/// is pinned alongside dispatch order, §2.1.2 redistribution and
-/// duplicate accounting.
+/// report_error / release / release_batch) at random clocks.  The
+/// batched ops pit the indexed store's amortised native paths against
+/// the naive store's loop-fallback reference, so "batch == k-fold
+/// loop" (including k=1) is pinned alongside dispatch order, §2.1.2
+/// redistribution, the release transition and duplicate accounting.
 #[test]
 fn indexed_scheduler_matches_naive_reference() {
     check("sched-differential", 256, |rng| {
@@ -135,7 +135,41 @@ fn indexed_scheduler_matches_naive_reference() {
         let mut now = 0u64;
         let mut created: Vec<TicketId> = Vec::new();
         for step in 0..160u64 {
-            match rng.gen_range(10) {
+            match rng.gen_range(12) {
+                10 => {
+                    // Singular release of a random known (sometimes
+                    // unknown) id: the tolerant-flag semantics and the
+                    // pool-return transition must agree.
+                    let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                        created[rng.gen_range(created.len() as u64) as usize]
+                    } else {
+                        TicketId(created.len() as u64 + 1_000)
+                    };
+                    let a = indexed.release(id);
+                    let b = naive.release(id);
+                    prop_assert!(a == b, "release diverges on {id:?}: {a} vs {b}");
+                }
+                11 => {
+                    // Batched release (repeats and unknowns included):
+                    // the indexed store's one-mutex-pass override vs
+                    // the trait's id-by-id loop on the naive store.
+                    let n = 1 + rng.gen_range(4) as usize;
+                    let ids: Vec<TicketId> = (0..n)
+                        .map(|_| {
+                            if !created.is_empty() && rng.gen_range(8) != 0 {
+                                created[rng.gen_range(created.len() as u64) as usize]
+                            } else {
+                                TicketId(created.len() as u64 + 1_000)
+                            }
+                        })
+                        .collect();
+                    let a = indexed.release_batch(&ids);
+                    let b = naive.release_batch(&ids);
+                    prop_assert!(
+                        a == b,
+                        "release_batch flags diverge on {ids:?}: {a:?} vs {b:?}"
+                    );
+                }
                 8 => {
                     // Batched dispatch, k = 1..=4 (k = 1 must be
                     // bit-for-bit the unbatched path).

@@ -51,7 +51,36 @@ fn random_op(
     step: u64,
 ) -> Result<(), String> {
     let tasks = [TaskId(1), TaskId(2), TaskId(3)];
-    match rng.gen_range(10) {
+    match rng.gen_range(12) {
+        10 => {
+            // Singular release: logged as a one-entry ReleaseBatch
+            // record; replay must agree on the released flag.
+            let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                created[rng.gen_range(created.len() as u64) as usize]
+            } else {
+                TicketId(created.len() as u64 + 1_000)
+            };
+            let a = walled.release(id);
+            let b = control.release(id);
+            prop_assert!(a == b, "release diverges on {id:?}: {a} vs {b}");
+        }
+        11 => {
+            // Batched release (repeats/unknowns included): one framed
+            // ReleaseBatch record with per-entry flags.
+            let n = 1 + rng.gen_range(4) as usize;
+            let ids: Vec<TicketId> = (0..n)
+                .map(|_| {
+                    if !created.is_empty() && rng.gen_range(8) != 0 {
+                        created[rng.gen_range(created.len() as u64) as usize]
+                    } else {
+                        TicketId(created.len() as u64 + 1_000)
+                    }
+                })
+                .collect();
+            let a = walled.release_batch(&ids);
+            let b = control.release_batch(&ids);
+            prop_assert!(a == b, "release_batch flags diverge on {ids:?}: {a:?} vs {b:?}");
+        }
         8 => {
             // Batched dispatch: one DispatchBatch WAL record; replay
             // must re-pick the identical prefix.
@@ -180,8 +209,16 @@ fn recovered_store_is_differential_identical_to_uninterrupted_run() {
         }
         // A batch dispatch at the crash point, so a DispatchBatch
         // record can be the last (possibly torn-after) thing in the log.
-        let _ = walled.next_tickets("killer", now, 2);
-        let _ = control.next_tickets("killer", now, 2);
+        let batch = walled.next_tickets("killer", now, 2);
+        let cbatch = control.next_tickets("killer", now, 2);
+        prop_assert!(batch == cbatch, "crash-point batch diverges");
+        // ...and a release right at the crash point, so a ReleaseBatch
+        // record can be the torn tail instead (crash mid-release).
+        if let Some(t) = batch.first() {
+            let a = walled.release_batch(&[t.id]);
+            let b = control.release_batch(&[t.id]);
+            prop_assert!(a == b, "crash-point release diverges");
+        }
         let _ = walled.next_ticket("killer", now); // guarantee an in-flight dispatch
         let _ = control.next_ticket("killer", now);
         assert_same_state(&walled, &control, "pre-crash")?;
