@@ -1,0 +1,71 @@
+//! Fleet-scale churn soak driver.
+//!
+//! Runs the deterministic discrete-event simulator in `sashimi::sim`:
+//! one real Distributor + WAL store coordinator, thousands of simulated
+//! browsers churning on a virtual clock.  Ten simulated minutes of a
+//! 10k-browser fleet replay in seconds of wall time, and the whole run
+//! is a pure function of the seed.
+//!
+//! ```text
+//! cargo run --release --example churn_soak -- --quick
+//! cargo run --release --example churn_soak -- --workers 10000 --seed 1 \
+//!     --duration 600000 --json soak-metrics.json
+//! cargo run --release --example churn_soak -- --quick --passive --trace
+//! ```
+
+use sashimi::sim::{run_soak, SoakConfig};
+use sashimi::util::cli::Args;
+use sashimi::Result;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let quick = args.flag("quick");
+    let base = if quick { SoakConfig::quick() } else { SoakConfig::new(10_000, 1) };
+
+    let mut cfg = SoakConfig::new(
+        args.usize_or("workers", base.workers)?,
+        args.u64_or("seed", base.seed)?,
+    );
+    cfg.duration_ms = args.u64_or("duration", base.duration_ms)?;
+    cfg.prime_tickets = args.usize_or("tickets", cfg.prime_tickets)?;
+    cfg.prefetch_cap = args.usize_or("prefetch-cap", cfg.prefetch_cap)?;
+    cfg.mean_lifetime_ms = args.u64_or("mean-lifetime", cfg.mean_lifetime_ms)?;
+    cfg.error_permille = args.u64_or("error-permille", cfg.error_permille)?;
+    if args.flag("passive") {
+        // The paper's §2.1.2 baseline: vanished browsers strand their
+        // tickets until the redistribution window expires.
+        cfg.release_on_disconnect = false;
+    }
+    let json_path = args.get("json").map(String::from);
+    let show_trace = args.flag("trace");
+    args.reject_unknown()?;
+
+    let wall = std::time::Instant::now();
+    let report = run_soak(&cfg)?;
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    if show_trace {
+        for line in &report.trace {
+            println!("{line}");
+        }
+        println!();
+    }
+    print!("{}", report.table);
+    println!(
+        "  wall time      {:.2} s  ({:.0}x faster than the {:.0} s it simulates)",
+        wall_s,
+        (report.virtual_ms as f64 / 1000.0) / wall_s.max(1e-9),
+        report.virtual_ms as f64 / 1000.0
+    );
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, format!("{}\n", report.metrics_json))?;
+        println!("  metrics        {path}");
+    } else {
+        println!("{}", report.metrics_json);
+    }
+
+    anyhow::ensure!(report.done == report.total, "soak lost tickets");
+    anyhow::ensure!(report.ghosts_after_close == 0, "soak leaked ghost clients");
+    Ok(())
+}

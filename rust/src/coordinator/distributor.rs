@@ -35,6 +35,18 @@
 //! The singular forms stay served unchanged, so a legacy client that
 //! speaks only `TicketRequest`/`TicketResult` interoperates with
 //! batching clients on the same store.
+//!
+//! The protocol itself — strictly one reply per request — lives in
+//! [`Session`], a transport-free state machine: the thread-per-conn
+//! path pumps `recv -> Session::handle -> send`, and the churn
+//! simulator ([`crate::sim`]) drives thousands of sessions directly at
+//! virtual event times, no sockets or threads involved.  Both paths
+//! run the *same* dispatch, accounting and disconnect-release code.
+//!
+//! Timestamps (Hello connect times, dispatch `now_ms` for the store's
+//! VCT windows) read the distributor's injected
+//! [`Clock`](crate::util::clock::Clock) — wall time by default,
+//! virtual time under the simulator.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -47,7 +59,7 @@ use crate::coordinator::framework::Framework;
 use crate::store::{Scheduler, TicketId};
 use crate::tasks::{DatasetStore, Registry};
 use crate::transport::{Conn, Listener, Message, WireTicket};
-use crate::util::clock;
+use crate::util::clock::{Clock, WallClock};
 
 /// Per-client info shown on the console.
 #[derive(Debug, Clone, Default)]
@@ -128,6 +140,10 @@ pub struct Distributor {
     /// Hands out one [`ClientInfo::conn_seq`] per handled connection.
     next_conn_seq: AtomicU64,
     pub cfg: DistributorConfig,
+    /// Time source for connect stamps and dispatch `now_ms` (the VCT
+    /// window decisions).  Wall clock in production; the churn
+    /// simulator injects a virtual clock.
+    clock: Arc<dyn Clock>,
 }
 
 /// Default server-side cap on one dispatched batch.
@@ -138,13 +154,16 @@ impl Distributor {
         Self::new_with(fw, DistributorConfig::default())
     }
 
-    /// [`new`](Self::new) with explicit tuning.
+    /// [`new`](Self::new) with explicit tuning.  Inherits the
+    /// framework's injected clock, so a virtual-clocked framework gets
+    /// a virtual-clocked distributor with no extra plumbing.
     pub fn new_with(fw: &Arc<Framework>, cfg: DistributorConfig) -> Arc<Distributor> {
-        Self::from_parts_with(
+        Self::from_parts_clocked(
             Arc::clone(fw.store()),
             fw.registry_snapshot(),
             fw.datasets().clone(),
             cfg,
+            Arc::clone(fw.clock()),
         )
     }
 
@@ -157,12 +176,25 @@ impl Distributor {
         Self::from_parts_with(store, registry, datasets, DistributorConfig::default())
     }
 
-    /// [`from_parts`](Self::from_parts) with explicit tuning.
+    /// [`from_parts`](Self::from_parts) with explicit tuning (wall
+    /// clock).
     pub fn from_parts_with(
         store: Arc<dyn Scheduler>,
         registry: Registry,
         datasets: Arc<DatasetStore>,
         cfg: DistributorConfig,
+    ) -> Arc<Distributor> {
+        Self::from_parts_clocked(store, registry, datasets, cfg, Arc::new(WallClock))
+    }
+
+    /// [`from_parts_with`](Self::from_parts_with) plus an explicit time
+    /// source (the churn simulator's entry point).
+    pub fn from_parts_clocked(
+        store: Arc<dyn Scheduler>,
+        registry: Registry,
+        datasets: Arc<DatasetStore>,
+        cfg: DistributorConfig,
+        clock: Arc<dyn Clock>,
     ) -> Arc<Distributor> {
         Arc::new(Distributor {
             store,
@@ -173,6 +205,7 @@ impl Distributor {
             stop: AtomicBool::new(false),
             next_conn_seq: AtomicU64::new(0),
             cfg,
+            clock,
         })
     }
 
@@ -217,7 +250,6 @@ impl Distributor {
             while !this.stopped() {
                 match listener.accept() {
                     Ok(conn) => {
-                        this.stats.connections.fetch_add(1, Ordering::Relaxed);
                         let d = Arc::clone(&this);
                         handlers.push(std::thread::spawn(move || {
                             if let Err(e) = d.handle_conn(conn) {
@@ -240,51 +272,35 @@ impl Distributor {
         self.handle_conn_inner(&mut *conn)
     }
 
+    /// Open a [`Session`]: the per-connection protocol state machine,
+    /// detached from any transport.  The thread-per-conn path pumps it
+    /// from a socket; the churn simulator drives thousands directly.
+    /// Counts as one connection in [`DistributorStats::connections`].
+    pub fn open_session(&self) -> Session<'_> {
+        self.stats.connections.fetch_add(1, Ordering::Relaxed);
+        Session {
+            dist: self,
+            conn_seq: self.next_conn_seq.fetch_add(1, Ordering::Relaxed),
+            client: String::from("unknown"),
+            held: HashSet::new(),
+            closed: false,
+        }
+    }
+
     fn handle_conn_inner(&self, conn: &mut dyn Conn) -> Result<()> {
-        let conn_seq = self.next_conn_seq.fetch_add(1, Ordering::Relaxed);
-        let mut client = String::from("unknown");
-        // Tickets dispatched over this connection and not yet answered
-        // by a result, an error report, or an explicit release.
-        let mut held: HashSet<TicketId> = HashSet::new();
-        let result = self.conn_loop(conn, conn_seq, &mut client, &mut held);
-        // The active failure path: however the handler ended — orderly
-        // shutdown, protocol violation, vanished socket — the undone
-        // tickets re-enter dispatch now instead of stranding for the
-        // store's redistribution window.
-        if self.cfg.release_on_disconnect && !held.is_empty() {
-            let ids: Vec<TicketId> = held.drain().collect();
-            let released =
-                self.store.release_batch(&ids).into_iter().filter(|&f| f).count() as u64;
-            if released > 0 {
-                crate::log_debug!(
-                    "distributor",
-                    "released {released} in-flight tickets from disconnected {client}"
-                );
-            }
-            self.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
-        }
-        // Retire this connection's client-table entry (mark, don't
-        // erase: end-of-run summaries keep the history) so
-        // `client_count` never reports ghost workers.
-        {
-            let mut clients = self.clients.lock().unwrap();
-            if let Some(ci) = clients.get_mut(&client) {
-                if ci.conn_seq == conn_seq && !ci.disconnected {
-                    ci.disconnected = true;
-                    self.stats.clients_disconnected.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-        }
+        let mut session = self.open_session();
+        let result = self.conn_loop(conn, &mut session);
+        // However the pump ended — orderly shutdown, protocol
+        // violation, vanished socket — closing the session runs the
+        // active failure path and retires the client-table entry.
+        session.close();
         result
     }
 
-    fn conn_loop(
-        &self,
-        conn: &mut dyn Conn,
-        conn_seq: u64,
-        client: &mut String,
-        held: &mut HashSet<TicketId>,
-    ) -> Result<()> {
+    /// The transport pump: recv -> [`Session::handle`] -> send, with
+    /// incremental byte accounting.  All protocol behaviour lives in
+    /// the session; this loop only moves frames and enforces shutdown.
+    fn conn_loop(&self, conn: &mut dyn Conn, session: &mut Session<'_>) -> Result<()> {
         let (mut acc_sent, mut acc_recv) = (0u64, 0u64);
         let mut account = |conn: &mut dyn Conn, stats: &DistributorStats| {
             let (s, r) = conn.bytes();
@@ -307,180 +323,263 @@ impl Distributor {
                 }
             };
             account(conn, &self.stats);
-            match msg {
-                Message::Hello { client: c, profile } => {
-                    *client = c.clone();
-                    self.clients.lock().unwrap().insert(
-                        c.clone(),
-                        ClientInfo {
-                            client: c,
-                            profile,
-                            connected_ms: clock::now_ms(),
-                            conn_seq,
-                            ..Default::default()
-                        },
-                    );
-                    conn.send(&Message::Ack)?;
-                }
-                Message::TicketRequest => {
-                    if self.stopped() {
-                        conn.send(&Message::Shutdown)?;
-                        return Ok(());
-                    }
-                    match self.store.next_ticket(client, clock::now_ms()) {
-                        Some(t) => {
-                            self.stats.tickets_served.fetch_add(1, Ordering::Relaxed);
-                            if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str())
-                            {
-                                ci.tickets_served += 1;
-                            }
-                            held.insert(t.id);
-                            conn.send(&Message::Ticket {
-                                ticket: t.id,
-                                task: t.task,
-                                task_name: t.task_name.clone(),
-                                index: t.index,
-                                payload: t.payload.clone(),
-                            })?;
-                        }
-                        None => conn
-                            .send(&Message::NoTicket { retry_after_ms: self.cfg.idle_retry_ms })?,
-                    }
-                }
-                Message::TicketBatchRequest { max } => {
-                    if self.stopped() {
-                        conn.send(&Message::Shutdown)?;
-                        return Ok(());
-                    }
-                    let k = max.clamp(1, self.cfg.max_batch.max(1));
-                    let batch = self.store.next_tickets(client, clock::now_ms(), k);
-                    if batch.is_empty() {
-                        conn.send(&Message::NoTicket { retry_after_ms: self.cfg.idle_retry_ms })?;
-                    } else {
-                        self.stats.tickets_served.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                        if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
-                            ci.tickets_served += batch.len() as u64;
-                        }
-                        for t in &batch {
-                            held.insert(t.id);
-                        }
-                        let tickets: Vec<WireTicket> = batch
-                            .into_iter()
-                            .map(|t| WireTicket {
-                                ticket: t.id,
-                                task: t.task,
-                                task_name: t.task_name,
-                                index: t.index,
-                                payload: t.payload,
-                            })
-                            .collect();
-                        conn.send(&Message::Tickets { tickets })?;
-                    }
-                }
-                Message::TaskRequest { task_name } => {
-                    self.stats.task_requests.fetch_add(1, Ordering::Relaxed);
-                    let def = self.registry.get(&task_name)?;
-                    // dataset_refs are per-ticket; the static advertisement
-                    // is empty (workers resolve refs from each payload).
-                    conn.send(&Message::TaskCode {
-                        task_name,
-                        code_bytes: def.code_bytes(),
-                        dataset_refs: Vec::new(),
-                    })?;
-                }
-                Message::DataRequest { key } => {
-                    self.stats.data_requests.fetch_add(1, Ordering::Relaxed);
-                    let enc = self.datasets.encoded(&key)?;
-                    conn.send(&Message::Data { key, shape: enc.0.clone(), b64: enc.1.clone() })?;
-                }
-                Message::TicketResult { ticket, result } => {
-                    // `held` is trimmed only after a successful apply:
-                    // if `?` kills the connection the disconnect
-                    // release still covers the ticket (a no-op when it
-                    // was already done).
-                    let fresh = self.store.complete(ticket, result)?;
-                    held.remove(&ticket);
-                    if fresh {
-                        self.stats.results_accepted.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        self.stats.results_duplicate.fetch_add(1, Ordering::Relaxed);
-                    }
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
-                        ci.results += 1;
-                    }
-                    conn.send(&Message::Ack)?;
-                }
-                Message::TicketResults { results } => {
-                    let n = results.len() as u64;
-                    let ids: Vec<TicketId> = results.iter().map(|(id, _)| *id).collect();
-                    // A mid-batch unknown ticket (a protocol-violating
-                    // client) applies the prefix, then `?` kills the
-                    // connection with every id still in `held`: the
-                    // applied prefix releases as a no-op (done tickets
-                    // do not move) and the unapplied suffix is released
-                    // for real, so nothing strands.  The stats counters
-                    // below are skipped for that prefix; the store's
-                    // progress counters — the source of truth — stay
-                    // exact either way.
-                    let accepted = self.store.complete_batch(results)? as u64;
-                    for id in &ids {
-                        held.remove(id);
-                    }
-                    self.stats.results_accepted.fetch_add(accepted, Ordering::Relaxed);
-                    self.stats.results_duplicate.fetch_add(n - accepted, Ordering::Relaxed);
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
-                        ci.results += n;
-                    }
-                    conn.send(&Message::Ack)?;
-                }
-                Message::ErrorReport { ticket, message, stack } => {
-                    self.stats.errors_reported.fetch_add(1, Ordering::Relaxed);
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
-                        ci.errors += 1;
-                    }
-                    crate::log_warn!("distributor", "error report from {client}: {message}");
-                    held.remove(&ticket);
-                    self.store.report_error(ticket, format!("{message}\n{stack}"))?;
-                    // The paper: the browser reloads itself after reporting.
-                    conn.send(&Message::Reload)?;
-                }
-                Message::ErrorReports { reports } => {
-                    let n = reports.len() as u64;
-                    self.stats.errors_reported.fetch_add(n, Ordering::Relaxed);
-                    if let Some(ci) = self.clients.lock().unwrap().get_mut(client.as_str()) {
-                        ci.errors += n;
-                    }
-                    for r in reports {
-                        crate::log_warn!(
-                            "distributor",
-                            "error report from {client}: {}",
-                            r.message
-                        );
-                        held.remove(&r.ticket);
-                        self.store.report_error(r.ticket, format!("{}\n{}", r.message, r.stack))?;
-                    }
-                    // One Reload acknowledges the whole batch: the
-                    // client reloads itself once, not once per failure.
-                    conn.send(&Message::Reload)?;
-                }
-                Message::ReleaseTickets { tickets } => {
-                    for id in &tickets {
-                        held.remove(id);
-                    }
-                    let released =
-                        self.store.release_batch(&tickets).into_iter().filter(|&f| f).count()
-                            as u64;
-                    self.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
-                    conn.send(&Message::Ack)?;
-                }
-                Message::Shutdown => {
-                    return Ok(());
-                }
-                other => {
-                    anyhow::bail!("unexpected message from {client}: {other:?}");
-                }
+            // A stop that lands while a ticket request is in flight
+            // answers with Shutdown instead of dispatching more work.
+            if self.stopped()
+                && matches!(msg, Message::TicketRequest | Message::TicketBatchRequest { .. })
+            {
+                conn.send(&Message::Shutdown)?;
+                return Ok(());
+            }
+            match session.handle(msg)? {
+                Some(reply) => conn.send(&reply)?,
+                None => return Ok(()), // orderly Shutdown
             }
         }
+    }
+}
+
+/// One connection's half of the §2.1.2 protocol, as a transport-free
+/// state machine: feed it inbound [`Message`]s, send back the replies.
+///
+/// Every request is answered by exactly one reply ([`Self::handle`]
+/// returns `Some`), except `Shutdown` which ends the session (`None`).
+/// The session tracks the tickets dispatched over it and not yet
+/// answered by a result, an error report, or an explicit release;
+/// [`Self::close`] releases those leftovers (the active failure path,
+/// when [`DistributorConfig::release_on_disconnect`] is on) and retires
+/// the client-table entry.  Dropping an unclosed session closes it, so
+/// a vanished connection can never strand its batch by accident.
+pub struct Session<'a> {
+    dist: &'a Distributor,
+    conn_seq: u64,
+    client: String,
+    /// Tickets dispatched over this session and not yet answered by a
+    /// result, an error report, or an explicit release.
+    held: HashSet<TicketId>,
+    closed: bool,
+}
+
+impl Session<'_> {
+    /// The client id announced by Hello (`"unknown"` before it).
+    pub fn client(&self) -> &str {
+        &self.client
+    }
+
+    /// Tickets currently dispatched-but-unanswered on this session,
+    /// sorted by id (deterministic for the simulator's metrics).
+    pub fn held_tickets(&self) -> Vec<TicketId> {
+        let mut ids: Vec<TicketId> = self.held.iter().copied().collect();
+        ids.sort();
+        ids
+    }
+
+    /// Handle one inbound message; returns the reply to send, or
+    /// `None` when the session is over (orderly `Shutdown`).  An `Err`
+    /// is a protocol violation: the caller should close the session
+    /// (which releases whatever it still held).
+    pub fn handle(&mut self, msg: Message) -> Result<Option<Message>> {
+        let d = self.dist;
+        match msg {
+            Message::Hello { client: c, profile } => {
+                self.client = c.clone();
+                d.clients.lock().unwrap().insert(
+                    c.clone(),
+                    ClientInfo {
+                        client: c,
+                        profile,
+                        connected_ms: d.clock.now_ms(),
+                        conn_seq: self.conn_seq,
+                        ..Default::default()
+                    },
+                );
+                Ok(Some(Message::Ack))
+            }
+            Message::TicketRequest => {
+                match d.store.next_ticket(&self.client, d.clock.now_ms()) {
+                    Some(t) => {
+                        d.stats.tickets_served.fetch_add(1, Ordering::Relaxed);
+                        if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
+                            ci.tickets_served += 1;
+                        }
+                        self.held.insert(t.id);
+                        Ok(Some(Message::Ticket {
+                            ticket: t.id,
+                            task: t.task,
+                            task_name: t.task_name.clone(),
+                            index: t.index,
+                            payload: t.payload.clone(),
+                        }))
+                    }
+                    None => Ok(Some(Message::NoTicket { retry_after_ms: d.cfg.idle_retry_ms })),
+                }
+            }
+            Message::TicketBatchRequest { max } => {
+                let k = max.clamp(1, d.cfg.max_batch.max(1));
+                let batch = d.store.next_tickets(&self.client, d.clock.now_ms(), k);
+                if batch.is_empty() {
+                    Ok(Some(Message::NoTicket { retry_after_ms: d.cfg.idle_retry_ms }))
+                } else {
+                    d.stats.tickets_served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
+                        ci.tickets_served += batch.len() as u64;
+                    }
+                    for t in &batch {
+                        self.held.insert(t.id);
+                    }
+                    let tickets: Vec<WireTicket> = batch
+                        .into_iter()
+                        .map(|t| WireTicket {
+                            ticket: t.id,
+                            task: t.task,
+                            task_name: t.task_name,
+                            index: t.index,
+                            payload: t.payload,
+                        })
+                        .collect();
+                    Ok(Some(Message::Tickets { tickets }))
+                }
+            }
+            Message::TaskRequest { task_name } => {
+                d.stats.task_requests.fetch_add(1, Ordering::Relaxed);
+                let def = d.registry.get(&task_name)?;
+                // dataset_refs are per-ticket; the static advertisement
+                // is empty (workers resolve refs from each payload).
+                Ok(Some(Message::TaskCode {
+                    task_name,
+                    code_bytes: def.code_bytes(),
+                    dataset_refs: Vec::new(),
+                }))
+            }
+            Message::DataRequest { key } => {
+                d.stats.data_requests.fetch_add(1, Ordering::Relaxed);
+                let enc = d.datasets.encoded(&key)?;
+                Ok(Some(Message::Data { key, shape: enc.0.clone(), b64: enc.1.clone() }))
+            }
+            Message::TicketResult { ticket, result } => {
+                // `held` is trimmed only after a successful apply: if
+                // `?` kills the session the close release still covers
+                // the ticket (a no-op when it was already done).
+                let fresh = d.store.complete(ticket, result)?;
+                self.held.remove(&ticket);
+                if fresh {
+                    d.stats.results_accepted.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    d.stats.results_duplicate.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
+                    ci.results += 1;
+                }
+                Ok(Some(Message::Ack))
+            }
+            Message::TicketResults { results } => {
+                let n = results.len() as u64;
+                let ids: Vec<TicketId> = results.iter().map(|(id, _)| *id).collect();
+                // A mid-batch unknown ticket (a protocol-violating
+                // client) applies the prefix, then `?` kills the
+                // session with every id still in `held`: the applied
+                // prefix releases as a no-op (done tickets do not move)
+                // and the unapplied suffix is released for real, so
+                // nothing strands.  The stats counters below are
+                // skipped for that prefix; the store's progress
+                // counters — the source of truth — stay exact either
+                // way.
+                let accepted = d.store.complete_batch(results)? as u64;
+                for id in &ids {
+                    self.held.remove(id);
+                }
+                d.stats.results_accepted.fetch_add(accepted, Ordering::Relaxed);
+                d.stats.results_duplicate.fetch_add(n - accepted, Ordering::Relaxed);
+                if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
+                    ci.results += n;
+                }
+                Ok(Some(Message::Ack))
+            }
+            Message::ErrorReport { ticket, message, stack } => {
+                d.stats.errors_reported.fetch_add(1, Ordering::Relaxed);
+                if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
+                    ci.errors += 1;
+                }
+                crate::log_warn!("distributor", "error report from {}: {message}", self.client);
+                self.held.remove(&ticket);
+                d.store.report_error(ticket, format!("{message}\n{stack}"))?;
+                // The paper: the browser reloads itself after reporting.
+                Ok(Some(Message::Reload))
+            }
+            Message::ErrorReports { reports } => {
+                let n = reports.len() as u64;
+                d.stats.errors_reported.fetch_add(n, Ordering::Relaxed);
+                if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
+                    ci.errors += n;
+                }
+                for r in reports {
+                    crate::log_warn!(
+                        "distributor",
+                        "error report from {}: {}",
+                        self.client,
+                        r.message
+                    );
+                    self.held.remove(&r.ticket);
+                    d.store.report_error(r.ticket, format!("{}\n{}", r.message, r.stack))?;
+                }
+                // One Reload acknowledges the whole batch: the client
+                // reloads itself once, not once per failure.
+                Ok(Some(Message::Reload))
+            }
+            Message::ReleaseTickets { tickets } => {
+                for id in &tickets {
+                    self.held.remove(id);
+                }
+                let released =
+                    d.store.release_batch(&tickets).into_iter().filter(|&f| f).count() as u64;
+                d.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
+                Ok(Some(Message::Ack))
+            }
+            Message::Shutdown => Ok(None),
+            other => {
+                anyhow::bail!("unexpected message from {}: {other:?}", self.client)
+            }
+        }
+    }
+
+    /// End the session: release whatever it still held (the active
+    /// failure path — however the connection ended, the undone tickets
+    /// re-enter dispatch now instead of stranding for the store's
+    /// redistribution window) and retire the client-table entry (mark,
+    /// don't erase: end-of-run summaries keep the history) so
+    /// [`Distributor::client_count`] never reports ghost workers.
+    /// Idempotent; also runs on drop.
+    pub fn close(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        let d = self.dist;
+        if d.cfg.release_on_disconnect && !self.held.is_empty() {
+            let ids: Vec<TicketId> = self.held.drain().collect();
+            let released = d.store.release_batch(&ids).into_iter().filter(|&f| f).count() as u64;
+            if released > 0 {
+                crate::log_debug!(
+                    "distributor",
+                    "released {released} in-flight tickets from disconnected {}",
+                    self.client
+                );
+            }
+            d.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
+        }
+        let mut clients = d.clients.lock().unwrap();
+        if let Some(ci) = clients.get_mut(&self.client) {
+            if ci.conn_seq == self.conn_seq && !ci.disconnected {
+                ci.disconnected = true;
+                d.stats.clients_disconnected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Drop for Session<'_> {
+    fn drop(&mut self) {
+        self.close();
     }
 }
 
@@ -836,15 +935,13 @@ mod tests {
         h.join().unwrap();
     }
 
-    /// Redistribution windows frozen far beyond the test horizon: only
-    /// the active release path can bring a dispatched ticket back.
+    /// Virtual time pinned at t = 0: the default redistribution windows
+    /// can never elapse, so only the active release path (or an error
+    /// requeue) can bring a dispatched ticket back.  Replaces the old
+    /// frozen-600-s window constants (DESIGN.md §2.5).
     fn frozen_framework(n: usize) -> Arc<Framework> {
         let fw = Framework::builder()
-            .store_config(crate::store::StoreConfig {
-                requeue_after_ms: 600_000,
-                min_redistribute_ms: 600_000,
-                requeue_on_error: true,
-            })
+            .clock(Arc::new(crate::util::clock::VirtualClock::new()))
             .build();
         let task = fw.create_task(Arc::new(IsPrimeTask));
         task.calculate(
@@ -1037,5 +1134,52 @@ mod tests {
         }
         client.send(&Message::Shutdown).unwrap();
         h.join().unwrap();
+    }
+
+    /// The §2.1.2 redistribution window under virtual time: a stranded
+    /// ticket (passive baseline, vanished holder) is re-dispatched
+    /// exactly at `VCT + requeue_after_ms` — one virtual millisecond
+    /// earlier it is still invisible.  Untestable before clock
+    /// injection: wall-time tests could only freeze the window open or
+    /// shut, never cross it deterministically.
+    #[test]
+    fn window_expiry_redispatches_exactly_at_vct_plus_window() {
+        let vc = Arc::new(crate::util::clock::VirtualClock::new());
+        let fw = Framework::builder().clock(vc.clone()).build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(vec![Value::obj(vec![("candidate", Value::num(5.0))])]);
+        let dist = Distributor::new_with(
+            &fw,
+            DistributorConfig { release_on_disconnect: false, ..Default::default() },
+        );
+
+        let mut victim = dist.open_session();
+        victim.handle(Message::Hello { client: "w0".into(), profile: "t".into() }).unwrap();
+        let ticket = match victim.handle(Message::TicketRequest).unwrap().unwrap() {
+            Message::Ticket { ticket, .. } => ticket,
+            m => panic!("{m:?}"),
+        };
+        victim.close(); // vanishes mid-batch; passive mode strands the ticket
+
+        let window = crate::store::StoreConfig::default().requeue_after_ms;
+        let mut probe = dist.open_session();
+        probe.handle(Message::Hello { client: "w1".into(), profile: "t".into() }).unwrap();
+        vc.advance_to(window - 1);
+        assert!(
+            matches!(
+                probe.handle(Message::TicketRequest).unwrap().unwrap(),
+                Message::NoTicket { .. }
+            ),
+            "one virtual ms before the window elapses the ticket is still stranded"
+        );
+        vc.advance_to(window);
+        match probe.handle(Message::TicketRequest).unwrap().unwrap() {
+            Message::Ticket { ticket: again, .. } => {
+                assert_eq!(again, ticket, "re-dispatched exactly at VCT + window");
+            }
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(fw.store().progress(None).redistributions, 1);
+        probe.close();
     }
 }

@@ -27,13 +27,14 @@ use std::sync::Arc;
 
 use crate::store::{Progress, Scheduler, StoreConfig, TaskId, TicketStore};
 use crate::tasks::{DatasetStore, Registry, TaskDef};
-use crate::util::clock;
+use crate::util::clock::{Clock, WallClock};
 use crate::util::json::Value;
 
 pub struct FrameworkBuilder {
     store_cfg: StoreConfig,
     registry: Registry,
     scheduler: Option<Arc<dyn Scheduler>>,
+    clock: Arc<dyn Clock>,
 }
 
 impl FrameworkBuilder {
@@ -47,6 +48,18 @@ impl FrameworkBuilder {
     /// provided scheduler carries its own [`StoreConfig`].
     pub fn scheduler(mut self, scheduler: Arc<dyn Scheduler>) -> Self {
         self.scheduler = Some(scheduler);
+        self
+    }
+
+    /// Inject a time source (DESIGN.md §2.5).  Every VCT timestamp the
+    /// framework mints and every redistribution-window decision made by
+    /// a [`Distributor`](crate::coordinator::Distributor) built from
+    /// this framework reads it.  Defaults to the wall clock; tests and
+    /// the churn simulator inject a
+    /// [`VirtualClock`](crate::util::clock::VirtualClock) instead of
+    /// freezing windows with unreachable constants.
+    pub fn clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -69,6 +82,7 @@ impl FrameworkBuilder {
             registry: Arc::new(std::sync::Mutex::new(self.registry)),
             datasets: Arc::new(DatasetStore::new()),
             next_task: AtomicU64::new(next_task),
+            clock: self.clock,
         })
     }
 }
@@ -79,6 +93,7 @@ pub struct Framework {
     registry: Arc<std::sync::Mutex<Registry>>,
     datasets: Arc<DatasetStore>,
     next_task: AtomicU64,
+    clock: Arc<dyn Clock>,
 }
 
 impl Framework {
@@ -87,6 +102,7 @@ impl Framework {
             store_cfg: StoreConfig::default(),
             registry: Registry::new(),
             scheduler: None,
+            clock: Arc::new(WallClock),
         }
     }
 
@@ -120,6 +136,11 @@ impl Framework {
         &self.datasets
     }
 
+    /// The injected time source ([`FrameworkBuilder::clock`]).
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
     /// Snapshot of the registry (workers resolve task code through this).
     pub fn registry_snapshot(&self) -> Registry {
         self.registry.lock().unwrap().clone()
@@ -139,8 +160,10 @@ pub struct TaskHandle {
 
 impl TaskHandle {
     /// `task.calculate(inputs)`: divide the arguments into tickets.
+    /// Creation timestamps (the VCT anchors) come from the framework's
+    /// injected clock.
     pub fn calculate(&self, inputs: Vec<Value>) {
-        self.fw.store.create_tickets(self.id, &self.name, inputs, clock::now_ms());
+        self.fw.store.create_tickets(self.id, &self.name, inputs, self.fw.clock.now_ms());
     }
 
     /// `task.block(cb)`: wait for every ticket, results in input order.
@@ -166,6 +189,7 @@ impl TaskHandle {
 mod tests {
     use super::*;
     use crate::tasks::is_prime::IsPrimeTask;
+    use crate::util::clock;
     use crate::util::json::Value;
 
     #[test]
@@ -222,6 +246,21 @@ mod tests {
         let old = fw.attach_task(TaskId(5), Arc::new(IsPrimeTask));
         assert_eq!(old.id, TaskId(5));
         assert_eq!(old.block(), vec![Value::num(1.0)]);
+    }
+
+    /// An injected [`VirtualClock`](crate::util::clock::VirtualClock)
+    /// stamps ticket creation times (the VCT anchors), so tests pin
+    /// redistribution behaviour without freezing windows at unreachable
+    /// constants.
+    #[test]
+    fn injected_virtual_clock_stamps_vct() {
+        let vc = Arc::new(crate::util::clock::VirtualClock::at(1234));
+        let fw = Framework::builder().clock(vc.clone()).build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(vec![Value::obj(vec![("candidate", Value::num(3.0))])]);
+        assert_eq!(fw.clock().now_ms(), 1234);
+        let t = fw.store().next_ticket("w", vc.now_ms()).unwrap();
+        assert_eq!(t.created_ms, 1234, "VCT anchored to the injected clock");
     }
 
     /// The builder accepts any `Scheduler`; the naive reference behind

@@ -16,5 +16,5 @@ pub mod console;
 pub mod distributor;
 pub mod framework;
 
-pub use distributor::{Distributor, DistributorConfig};
+pub use distributor::{Distributor, DistributorConfig, Session};
 pub use framework::{Framework, TaskHandle};

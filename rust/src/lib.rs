@@ -11,7 +11,9 @@
 //!   a write-ahead log, [`store::wal`], as the paper's MySQL was), a
 //!   [`transport`] layer (JSON-lines TCP and in-process), and [`worker`]
 //!   nodes that replay the browser loop of §2.1.2.  The distributed
-//!   deep-learning algorithms of §4 live in [`dist`].
+//!   deep-learning algorithms of §4 live in [`dist`]; [`sim`] soaks the
+//!   whole coordinator under deterministic fleet-scale churn on a
+//!   virtual clock.
 //! * **L2/L1 (build time)** — `python/compile` lowers the Sukiyaki CNNs
 //!   (whose hot paths are Pallas kernels) to HLO text; the [`runtime`]
 //!   module loads and executes those artifacts through PJRT.  Python is
@@ -25,6 +27,7 @@ pub mod data;
 pub mod dist;
 pub mod nn;
 pub mod runtime;
+pub mod sim;
 pub mod store;
 pub mod tasks;
 pub mod transport;

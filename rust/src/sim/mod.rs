@@ -1,0 +1,870 @@
+//! Deterministic fleet-scale churn simulator (the "soak rig").
+//!
+//! The paper's strongest claim is operational, not algorithmic: a
+//! coordinator that keeps making progress while *browsers come and go*
+//! (§2.1.2's redistribution windows, the error-report/reload loop, tab
+//! closes mid-ticket).  The unit tests exercise each failure path with
+//! two or three scripted connections; this module exercises all of them
+//! at once, at fleet scale, without wall-clock cost:
+//!
+//! * **One real coordinator** — a [`Distributor`] over a [`WalStore`],
+//!   the same code production uses.  Nothing server-side is mocked.
+//! * **O(10k) lightweight workers** — each a protocol-level state
+//!   machine driving a real [`Session`] (the transport-free handler the
+//!   distributor exposes), not a thread.  Per-worker behaviour (connect
+//!   delay, compute speed, vanish/reload hazard, link RTT) is sampled
+//!   from seeded distributions anchored to the Table 1 device profiles
+//!   in [`crate::worker::profile`].
+//! * **A discrete-event loop on a [`VirtualClock`]** — events are
+//!   ordered by `(virtual time, sequence)`, and the shared clock is
+//!   advanced to each event's timestamp, so redistribution windows,
+//!   backoff and VCT timestamps all elapse in simulated milliseconds.
+//!   Ten minutes of fleet time replays in seconds of wall time, and the
+//!   entire run — traces, metrics JSON, every dispatch decision — is a
+//!   pure function of [`SoakConfig`] (same seed, byte-identical output).
+//!
+//! The rig reports soak metrics (dispatch throughput, ticket-latency
+//! percentiles, stranding-window durations, churn counters, per-class
+//! completion shares) via [`crate::util::stats::Histogram`], as a JSON
+//! document and a console table.  `examples/churn_soak.rs` is the CLI
+//! driver; `rust/tests/churn_soak.rs` pins the invariants (zero lost
+//! tickets, zero ghost workers, bounded stranding).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Distributor, DistributorConfig, Session};
+use crate::runtime::{SharedRuntime, Tensor};
+use crate::store::{
+    Scheduler, StoreConfig, SyncPolicy, TaskId, TicketId, WalConfig, WalStore,
+};
+use crate::tasks::is_prime::IsPrimeTask;
+use crate::tasks::sweep::{self, SweepTask};
+use crate::tasks::{DatasetStore, Registry, TaskContext};
+use crate::transport::{Message, WireError, WireTicket};
+use crate::util::clock::{Clock, VirtualClock};
+use crate::util::json::Value;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Histogram;
+use crate::worker::profile::DeviceProfile;
+use crate::worker::PrefetchController;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Everything a soak run depends on.  Two runs with equal configs
+/// produce byte-identical traces and metrics JSON.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Fleet size (simulated browsers).
+    pub workers: usize,
+    /// Master seed; every worker forks its own stream from it.
+    pub seed: u64,
+    /// Churn horizon in virtual ms: vanish/reload hazards apply inside
+    /// `[0, duration_ms)`.  The run itself continues until every ticket
+    /// is done, then the clock is advanced to at least the horizon.
+    pub duration_ms: u64,
+    /// `is_prime` fan-out size (the bulk workload).
+    pub prime_tickets: usize,
+    /// Include the 8x8 hyperparameter [`sweep`] grid (64 more tickets)
+    /// so the soak runs two task types concurrently.
+    pub sweep_grid: bool,
+    /// `true` = the active failure path (release on disconnect);
+    /// `false` = the paper's passive §2.1.2 window-expiry baseline.
+    pub release_on_disconnect: bool,
+    /// Per-worker adaptive prefetch ceiling (1 = paper's protocol).
+    pub prefetch_cap: usize,
+    /// Mean worker lifetime in virtual ms; lifetimes are sampled
+    /// uniformly from `[mean/4, 2.25*mean)`.  `0` disables churn.
+    pub mean_lifetime_ms: u64,
+    /// Percent of vanishes followed by a reload (reconnect after a
+    /// 1-15 s delay); the rest leave for good.
+    pub reload_percent: u64,
+    /// Per-ticket task-fault injection rate (per thousand) — exercises
+    /// the ErrorReports/Reload/requeue loop.
+    pub error_permille: u64,
+    /// Ticket-store redistribution policy (paper defaults: 5 min
+    /// window, 10 s minimum interval).
+    pub store_cfg: StoreConfig,
+}
+
+impl SoakConfig {
+    /// A soak sized to `workers`, with the paper-default store policy
+    /// and the active failure path.
+    pub fn new(workers: usize, seed: u64) -> SoakConfig {
+        SoakConfig {
+            workers,
+            seed,
+            duration_ms: 600_000, // ten simulated minutes
+            prime_tickets: workers.saturating_mul(3).max(64),
+            sweep_grid: true,
+            release_on_disconnect: true,
+            prefetch_cap: 8,
+            mean_lifetime_ms: 30_000,
+            reload_percent: 85,
+            error_permille: 5,
+            store_cfg: StoreConfig::default(),
+        }
+    }
+
+    /// The CI per-PR preset: 1k workers, ten simulated minutes.
+    pub fn quick() -> SoakConfig {
+        SoakConfig::new(1_000, 42)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Device classes (Table 1 anchors)
+// ---------------------------------------------------------------------------
+
+/// A fleet slice: Table 1 device profile + a modelled link.
+struct DeviceClass {
+    name: &'static str,
+    /// Modelled-ms multiplier relative to the desktop (1.0).
+    mult: f64,
+    /// Link round trip: `rtt_base + U[0, rtt_jitter)` per worker.
+    rtt_base: u64,
+    rtt_jitter: u64,
+    /// Fleet share, percent; shares must sum to 100.
+    share_pct: u64,
+}
+
+/// Half the fleet is the Table 1 desktop, a third the Nexus 7 tablet
+/// (desktop/7.2, on a slow link), the rest a desktop throttled by the
+/// Table 4 Firefox/ConvNetJS engine factor.
+fn device_classes() -> [DeviceClass; 3] {
+    let desktop = DeviceProfile::desktop().speed;
+    [
+        DeviceClass { name: "desktop", mult: 1.0, rtt_base: 4, rtt_jitter: 4, share_pct: 50 },
+        DeviceClass {
+            name: "tablet",
+            mult: desktop / DeviceProfile::tablet().speed,
+            rtt_base: 60,
+            rtt_jitter: 60,
+            share_pct: 30,
+        },
+        DeviceClass {
+            name: "firefox",
+            mult: DeviceProfile::firefox_convnetjs_factor(),
+            rtt_base: 12,
+            rtt_jitter: 8,
+            share_pct: 20,
+        },
+    ]
+}
+
+/// Modelled per-ticket compute on the *desktop* (multiplied by the
+/// class factor).  Task results are computed for real; only the virtual
+/// duration is modelled, so the soak stays deterministic.
+fn modelled_cost_ms(task_name: &str) -> f64 {
+    match task_name {
+        "sweep" => 8.0,
+        "is_prime" => 150.0,
+        _ => 25.0,
+    }
+}
+
+/// The sweep grid soaked alongside the primes: log-spaced learning
+/// rates and a reg ladder that both contain the known optimum
+/// `(3e-3, 1e-2)`, so the end-to-end argmin is assertable.
+fn sweep_grid_inputs() -> Vec<Value> {
+    let lrs = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1];
+    let regs = [0.0, 0.0025, 0.005, 0.0075, 0.01, 0.025, 0.05, 0.1];
+    sweep::grid(&lrs, &regs)
+}
+
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Kind {
+    /// (Re)connect: open a session, Hello, start fetching.
+    Connect,
+    /// Poll the coordinator for up to `prefetch.size()` tickets.
+    Fetch,
+    /// A batch's compute is over: flush results/errors, fetch again.
+    Finish,
+    /// The tab closes mid-whatever.  Maybe schedules a reload.
+    Vanish,
+}
+
+/// Min-heap entry: `(virtual ms, sequence, worker, epoch, kind)`.  The
+/// sequence number makes same-instant ordering total, so runs are
+/// reproducible; the epoch invalidates events scheduled before a
+/// vanish (a dead tab's Finish must not fire).
+type Ev = (u64, u64, usize, u32, Kind);
+
+struct SimWorker {
+    class: usize,
+    mult: f64,
+    rtt: u64,
+    rng: SplitMix64,
+    epoch: u32,
+    online: bool,
+    prefetch: PrefetchController,
+    idle_streak: u32,
+    batch: Vec<WireTicket>,
+    batch_exec_ms: u64,
+}
+
+/// Task context for simulated execution: soak tasks are pure
+/// compute, so dataset/runtime access is a bug, not a feature.
+struct SimContext;
+
+impl TaskContext for SimContext {
+    fn dataset(&mut self, key: &str) -> Result<Arc<Tensor>> {
+        anyhow::bail!("churn-soak tasks are dataset-free (asked for {key:?})")
+    }
+
+    fn runtime(&self) -> Result<&SharedRuntime> {
+        anyhow::bail!("no runtime in the churn soak")
+    }
+}
+
+/// Trace lines are capped so a 10k-worker soak's report stays small;
+/// the drop count is part of the (deterministic) output.
+const TRACE_CAP: usize = 512;
+
+/// Runaway backstop: no sane soak comes near this many events.
+const EVENT_BUDGET: u64 = 50_000_000;
+
+fn push_ev(heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, at: u64, wi: usize, epoch: u32, kind: Kind) {
+    *seq += 1;
+    heap.push(Reverse((at, *seq, wi, epoch, kind)));
+}
+
+fn trace_line(trace: &mut Vec<String>, dropped: &mut u64, line: String) {
+    if trace.len() < TRACE_CAP {
+        trace.push(line);
+    } else {
+        *dropped += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// Everything a soak run measured.  `metrics_json` and `trace` are
+/// deterministic (virtual-time only — no wall timestamps, no paths).
+pub struct SoakReport {
+    /// The metrics document (one line of canonical JSON).
+    pub metrics_json: String,
+    /// Human-readable summary table.
+    pub table: String,
+    /// Deterministic event trace (connects/vanishes/milestones), capped
+    /// at [`TRACE_CAP`] lines plus a final summary line.
+    pub trace: Vec<String>,
+    /// Final virtual clock (ms); at least the churn horizon.
+    pub virtual_ms: u64,
+    pub total: usize,
+    pub done: usize,
+    pub pending: usize,
+    pub in_flight: usize,
+    /// Store-side redistribution count (window expiries re-dispatched).
+    pub redistributions: u64,
+    pub dispatched: u64,
+    pub released: u64,
+    pub duplicates: u64,
+    pub errors_reported: usize,
+    pub connections: u64,
+    pub vanishes: u64,
+    pub reloads: u64,
+    /// All-offline recoveries (the rig reconnects worker 0 so a fully
+    /// churned-out fleet cannot deadlock the run).
+    pub rescues: u64,
+    pub idle_polls: u64,
+    /// Connected-client-table entries minus actually-online workers,
+    /// sampled just before the final close: nonzero means the client
+    /// table leaked a ghost.
+    pub ghost_entries: i64,
+    /// Client-table entries still marked connected after every session
+    /// closed (must be 0).
+    pub ghosts_after_close: usize,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_max_ms: f64,
+    /// Stranding windows: vanish-with-held-tickets until re-dispatch.
+    pub strand_count: u64,
+    pub strand_p50_ms: f64,
+    pub max_strand_ms: f64,
+    pub throughput_per_s: f64,
+    /// The sweep argmin `(lr, reg)` recovered from ticket results, when
+    /// the sweep grid ran.
+    pub sweep_best: Option<(f64, f64)>,
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+fn hist_json(h: &Histogram) -> Value {
+    Value::obj(vec![
+        ("count", Value::num(h.count() as f64)),
+        ("mean", Value::num(round3(h.mean()))),
+        ("p50", Value::num(round3(h.percentile(50.0)))),
+        ("p99", Value::num(round3(h.percentile(99.0)))),
+        ("max", Value::num(round3(h.max()))),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// The run
+// ---------------------------------------------------------------------------
+
+static SOAK_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Run one soak.  The WAL lives in a per-run temp directory that is
+/// removed afterwards (kept on error for post-mortems).
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
+    let dir = std::env::temp_dir().join(format!(
+        "sashimi-soak-{}-{}-{}",
+        std::process::id(),
+        cfg.seed,
+        SOAK_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let result = run_soak_in(cfg, &dir);
+    if result.is_ok() {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    result
+}
+
+fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport> {
+    anyhow::ensure!(cfg.workers > 0, "soak needs at least one worker");
+
+    // -- Coordinator: real store, real registry, real distributor, all
+    //    on one shared virtual clock.
+    let vclock = Arc::new(VirtualClock::new());
+    let wal_cfg = WalConfig { sync: SyncPolicy::OsOnly, ..WalConfig::default() };
+    let store: Arc<WalStore> = Arc::new(WalStore::open(wal_dir, cfg.store_cfg.clone(), wal_cfg)?);
+    let store_dyn: Arc<dyn Scheduler> = Arc::clone(&store);
+
+    let mut registry = Registry::new();
+    registry.register(Arc::new(IsPrimeTask));
+    registry.register(Arc::new(SweepTask));
+
+    let dist = Distributor::from_parts_clocked(
+        Arc::clone(&store_dyn),
+        registry.clone(),
+        Arc::new(DatasetStore::new()),
+        DistributorConfig { release_on_disconnect: cfg.release_on_disconnect, ..Default::default() },
+        vclock.clone(),
+    );
+
+    // -- Workload: a prime fan-out (odd candidates around 1e6) plus the
+    //    sweep grid; both created at t=0.
+    let prime_args: Vec<Value> = (0..cfg.prime_tickets)
+        .map(|i| Value::obj(vec![("candidate", Value::num((1_000_003 + 2 * i) as f64))]))
+        .collect();
+    let prime_task = TaskId(1);
+    store_dyn.create_tickets(prime_task, "is_prime", prime_args, 0);
+    let sweep_task = TaskId(2);
+    if cfg.sweep_grid {
+        store_dyn.create_tickets(sweep_task, "sweep", sweep_grid_inputs(), 0);
+    }
+    let total = store_dyn.progress(None).total;
+
+    // -- Fleet: per-worker streams forked from the master seed in index
+    //    order, so worker behaviour is independent of event order.
+    let classes = device_classes();
+    let mut master = SplitMix64::new(cfg.seed);
+    let mut fleet: Vec<SimWorker> = (0..cfg.workers)
+        .map(|_| {
+            let mut rng = master.fork();
+            let r = rng.gen_range(100);
+            let mut acc = 0u64;
+            let mut class = classes.len() - 1;
+            for (i, c) in classes.iter().enumerate() {
+                acc += c.share_pct;
+                if r < acc {
+                    class = i;
+                    break;
+                }
+            }
+            let c = &classes[class];
+            let rtt = c.rtt_base + rng.gen_range(c.rtt_jitter.max(1));
+            SimWorker {
+                class,
+                mult: c.mult,
+                rtt,
+                rng,
+                epoch: 0,
+                online: false,
+                prefetch: PrefetchController::new(cfg.prefetch_cap),
+                idle_streak: 0,
+                batch: Vec::new(),
+                batch_exec_ms: 0,
+            }
+        })
+        .collect();
+
+    let mut sessions: Vec<Option<Session<'_>>> = (0..cfg.workers).map(|_| None).collect();
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (wi, w) in fleet.iter_mut().enumerate() {
+        let delay = w.rng.gen_range(5_000);
+        push_ev(&mut heap, &mut seq, delay, wi, 0, Kind::Connect);
+    }
+
+    // -- Bookkeeping.
+    let mut latency = Histogram::new();
+    let mut stranding = Histogram::new();
+    let mut dispatch_at: HashMap<TicketId, u64> = HashMap::new();
+    let mut strand_start: HashMap<TicketId, u64> = HashMap::new();
+    let mut completed_by_class = vec![0u64; classes.len()];
+    let mut workers_by_class = vec![0u64; classes.len()];
+    for w in &fleet {
+        workers_by_class[w.class] += 1;
+    }
+    let (mut vanishes, mut reloads, mut rescues, mut idle_polls) = (0u64, 0u64, 0u64, 0u64);
+    let mut errors_injected = 0u64;
+    let mut trace: Vec<String> = Vec::new();
+    let mut trace_dropped = 0u64;
+    let mut done_logged = false;
+    let mut events = 0u64;
+
+    loop {
+        if heap.is_empty() {
+            if store_dyn.progress(None).done >= total {
+                break;
+            }
+            // Every worker churned out with work still undone: bring
+            // worker 0 back so the run cannot deadlock.
+            let now = vclock.now_ms();
+            fleet[0].epoch += 1;
+            fleet[0].online = false;
+            rescues += 1;
+            let ep = fleet[0].epoch;
+            push_ev(&mut heap, &mut seq, now + 1_000, 0, ep, Kind::Connect);
+            trace_line(&mut trace, &mut trace_dropped, format!("t={now} rescue w0"));
+        }
+        let Reverse((at, _s, wi, epoch, kind)) = heap.pop().unwrap();
+        events += 1;
+        anyhow::ensure!(events <= EVENT_BUDGET, "soak exceeded the {EVENT_BUDGET}-event budget");
+        vclock.advance_to(at);
+        let now = at;
+        if fleet[wi].epoch != epoch {
+            continue; // scheduled before a vanish: the tab is gone
+        }
+
+        match kind {
+            Kind::Connect => {
+                let w = &mut fleet[wi];
+                w.online = true;
+                w.idle_streak = 0;
+                let mut s = dist.open_session();
+                let hello = Message::Hello {
+                    client: format!("w{wi}"),
+                    profile: classes[w.class].name.to_string(),
+                };
+                s.handle(hello)?;
+                sessions[wi] = Some(s);
+                push_ev(&mut heap, &mut seq, now + w.rtt, wi, w.epoch, Kind::Fetch);
+                if cfg.mean_lifetime_ms > 0 {
+                    let life =
+                        cfg.mean_lifetime_ms / 4 + w.rng.gen_range(cfg.mean_lifetime_ms * 2);
+                    let vanish_at = now + life;
+                    if vanish_at < cfg.duration_ms {
+                        push_ev(&mut heap, &mut seq, vanish_at, wi, w.epoch, Kind::Vanish);
+                    }
+                }
+                trace_line(&mut trace, &mut trace_dropped, format!("t={now} w{wi} connect"));
+            }
+
+            Kind::Fetch => {
+                let drained = store_dyn.progress(None).done >= total;
+                let w = &mut fleet[wi];
+                if !w.online {
+                    continue;
+                }
+                let Some(sess) = sessions[wi].as_mut() else { continue };
+                let want = w.prefetch.size();
+                let reply = sess
+                    .handle(Message::TicketBatchRequest { max: want })?
+                    .expect("batch request always gets a reply");
+                match reply {
+                    Message::Tickets { tickets } => {
+                        w.idle_streak = 0;
+                        let mut exec_total = 0u64;
+                        for t in &tickets {
+                            if let Some(s0) = strand_start.remove(&t.ticket) {
+                                stranding.record((now - s0) as f64);
+                            }
+                            dispatch_at.insert(t.ticket, now);
+                            let cost = modelled_cost_ms(&t.task_name) * w.mult;
+                            exec_total += (cost.ceil() as u64).max(1);
+                        }
+                        w.batch = tickets;
+                        w.batch_exec_ms = exec_total;
+                        push_ev(&mut heap, &mut seq, now + exec_total, wi, w.epoch, Kind::Finish);
+                    }
+                    Message::NoTicket { .. } => {
+                        w.prefetch.on_no_ticket();
+                        idle_polls += 1;
+                        if !drained {
+                            // The worker's jittered exponential idle
+                            // backoff, in virtual time.
+                            let ceiling = 20u64
+                                .saturating_mul(1u64 << w.idle_streak.min(8))
+                                .min(5_000);
+                            let nap = ceiling / 2 + w.rng.gen_range(ceiling / 2 + 1);
+                            w.idle_streak += 1;
+                            push_ev(&mut heap, &mut seq, now + nap, wi, w.epoch, Kind::Fetch);
+                        }
+                    }
+                    other => anyhow::bail!("unexpected batch reply: {other:?}"),
+                }
+            }
+
+            Kind::Finish => {
+                let w = &mut fleet[wi];
+                if !w.online {
+                    continue;
+                }
+                let Some(sess) = sessions[wi].as_mut() else { continue };
+                let batch = std::mem::take(&mut w.batch);
+                let mut results: Vec<(TicketId, Value)> = Vec::new();
+                let mut errs: Vec<WireError> = Vec::new();
+                let mut ctx = SimContext;
+                for t in batch {
+                    let fault =
+                        cfg.error_permille > 0 && w.rng.gen_range(1_000) < cfg.error_permille;
+                    if fault {
+                        errs.push(WireError {
+                            ticket: t.ticket,
+                            message: "injected churn-soak fault".into(),
+                            stack: "sim::worker".into(),
+                        });
+                        continue;
+                    }
+                    match registry.get(&t.task_name)?.execute(&t.payload, &mut ctx) {
+                        Ok(out) => results.push((t.ticket, out.value)),
+                        Err(e) => errs.push(WireError {
+                            ticket: t.ticket,
+                            message: format!("{e:#}"),
+                            stack: String::new(),
+                        }),
+                    }
+                }
+                let had_errs = !errs.is_empty();
+                if !results.is_empty() {
+                    let ids: Vec<TicketId> = results.iter().map(|r| r.0).collect();
+                    sess.handle(Message::TicketResults { results })?;
+                    for id in &ids {
+                        if let Some(d) = dispatch_at.remove(id) {
+                            latency.record((now - d + w.rtt) as f64);
+                        }
+                    }
+                    completed_by_class[w.class] += ids.len() as u64;
+                }
+                if had_errs {
+                    errors_injected += errs.len() as u64;
+                    for e in &errs {
+                        dispatch_at.remove(&e.ticket);
+                    }
+                    sess.handle(Message::ErrorReports { reports: errs })?;
+                    w.prefetch.on_error();
+                } else {
+                    w.prefetch.on_batch_done(w.batch_exec_ms as f64, w.rtt as f64);
+                }
+                push_ev(&mut heap, &mut seq, now + w.rtt, wi, w.epoch, Kind::Fetch);
+                if !done_logged && store_dyn.progress(None).done >= total {
+                    done_logged = true;
+                    trace_line(
+                        &mut trace,
+                        &mut trace_dropped,
+                        format!("t={now} all {total} tickets done"),
+                    );
+                }
+            }
+
+            Kind::Vanish => {
+                let w = &mut fleet[wi];
+                if !w.online {
+                    continue;
+                }
+                w.online = false;
+                w.epoch += 1;
+                vanishes += 1;
+                let mut held = 0usize;
+                if let Some(mut s) = sessions[wi].take() {
+                    for id in s.held_tickets() {
+                        strand_start.entry(id).or_insert(now);
+                        held += 1;
+                    }
+                    s.close();
+                }
+                w.batch.clear();
+                if w.rng.gen_range(100) < cfg.reload_percent {
+                    let delay = 1_000 + w.rng.gen_range(14_000);
+                    reloads += 1;
+                    let ep = w.epoch;
+                    push_ev(&mut heap, &mut seq, now + delay, wi, ep, Kind::Connect);
+                }
+                trace_line(
+                    &mut trace,
+                    &mut trace_dropped,
+                    format!("t={now} w{wi} vanish held={held}"),
+                );
+            }
+        }
+    }
+
+    // The fleet sat out the rest of the horizon (if the workload
+    // drained early): the run always covers `duration_ms`.
+    vclock.advance_to(cfg.duration_ms);
+    let virtual_ms = vclock.now_ms();
+
+    // -- Ghost-worker audit, then an orderly fleet shutdown.
+    let online_now = fleet.iter().filter(|w| w.online).count();
+    let ghost_entries = dist.client_count() as i64 - online_now as i64;
+    for s in sessions.iter_mut().flatten() {
+        s.close();
+    }
+    let ghosts_after_close = dist.client_count();
+
+    let p = store_dyn.progress(None);
+    let sweep_best = if cfg.sweep_grid {
+        let results = store_dyn.wait_results(sweep_task);
+        let (lr, reg, _loss) = sweep::best(&results)?;
+        Some((lr, reg))
+    } else {
+        None
+    };
+
+    let throughput = if virtual_ms > 0 {
+        p.done as f64 / (virtual_ms as f64 / 1000.0)
+    } else {
+        0.0
+    };
+    let stats = &dist.stats;
+    let dispatched = stats.tickets_served.load(Ordering::Relaxed);
+    let released = stats.tickets_released.load(Ordering::Relaxed);
+    let duplicates = stats.results_duplicate.load(Ordering::Relaxed);
+    let connections = stats.connections.load(Ordering::Relaxed);
+
+    // The summary line rides above the cap so it is always present.
+    trace.push(format!(
+        "t={virtual_ms} end done={}/{} vanishes={vanishes} reloads={reloads} trace_dropped={trace_dropped}",
+        p.done, p.total
+    ));
+
+    let class_json = Value::Obj(
+        classes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let share = if p.done > 0 {
+                    completed_by_class[i] as f64 / p.done as f64
+                } else {
+                    0.0
+                };
+                (
+                    c.name.to_string(),
+                    Value::obj(vec![
+                        ("workers", Value::num(workers_by_class[i] as f64)),
+                        ("completed", Value::num(completed_by_class[i] as f64)),
+                        ("share", Value::num(round3(share))),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
+    let metrics = Value::obj(vec![
+        (
+            "config",
+            Value::obj(vec![
+                ("workers", Value::num(cfg.workers as f64)),
+                ("seed", Value::num(cfg.seed as f64)),
+                ("duration_ms", Value::num(cfg.duration_ms as f64)),
+                ("release_on_disconnect", Value::Bool(cfg.release_on_disconnect)),
+                ("prefetch_cap", Value::num(cfg.prefetch_cap as f64)),
+                ("mean_lifetime_ms", Value::num(cfg.mean_lifetime_ms as f64)),
+            ]),
+        ),
+        ("virtual_ms", Value::num(virtual_ms as f64)),
+        ("throughput_per_s", Value::num(round3(throughput))),
+        (
+            "tickets",
+            Value::obj(vec![
+                ("total", Value::num(p.total as f64)),
+                ("done", Value::num(p.done as f64)),
+                ("pending", Value::num(p.pending as f64)),
+                ("in_flight", Value::num(p.in_flight as f64)),
+                ("dispatched", Value::num(dispatched as f64)),
+                ("released", Value::num(released as f64)),
+                ("duplicates", Value::num(duplicates as f64)),
+                ("errors", Value::num(p.errors as f64)),
+                ("redistributions", Value::num(p.redistributions as f64)),
+            ]),
+        ),
+        (
+            "churn",
+            Value::obj(vec![
+                ("connections", Value::num(connections as f64)),
+                ("vanishes", Value::num(vanishes as f64)),
+                ("reloads", Value::num(reloads as f64)),
+                ("rescues", Value::num(rescues as f64)),
+                ("idle_polls", Value::num(idle_polls as f64)),
+                ("faults_injected", Value::num(errors_injected as f64)),
+            ]),
+        ),
+        ("latency_ms", hist_json(&latency)),
+        ("stranding_ms", hist_json(&stranding)),
+        ("classes", class_json),
+    ]);
+    let metrics_json = metrics.to_string();
+
+    let mut table = String::new();
+    use std::fmt::Write as _;
+    let _ = writeln!(
+        table,
+        "churn soak — {} workers, seed {}, {} ({} path)",
+        cfg.workers,
+        cfg.seed,
+        if cfg.mean_lifetime_ms > 0 { "churning" } else { "stable" },
+        if cfg.release_on_disconnect { "active" } else { "passive" },
+    );
+    let _ = writeln!(table, "  virtual time   {:.1} s", virtual_ms as f64 / 1000.0);
+    let _ = writeln!(
+        table,
+        "  tickets        {}/{} done  ({} pending, {} in flight)",
+        p.done, p.total, p.pending, p.in_flight
+    );
+    let _ = writeln!(
+        table,
+        "  dispatch       {} served, {} released, {} redistributed, {} duplicates, {} faults",
+        dispatched, released, p.redistributions, duplicates, errors_injected
+    );
+    let _ = writeln!(table, "  throughput     {:.2} tickets/s (virtual)", throughput);
+    let _ = writeln!(
+        table,
+        "  latency ms     p50 {:.0}  p99 {:.0}  max {:.0}",
+        latency.percentile(50.0),
+        latency.percentile(99.0),
+        latency.max()
+    );
+    let _ = writeln!(
+        table,
+        "  stranding ms   n {}  p50 {:.0}  max {:.0}",
+        stranding.count(),
+        stranding.percentile(50.0),
+        stranding.max()
+    );
+    let _ = writeln!(
+        table,
+        "  churn          {} connections, {} vanishes, {} reloads, {} rescues, {} idle polls",
+        connections, vanishes, reloads, rescues, idle_polls
+    );
+    for (i, c) in classes.iter().enumerate() {
+        let share = if p.done > 0 {
+            100.0 * completed_by_class[i] as f64 / p.done as f64
+        } else {
+            0.0
+        };
+        let _ = writeln!(
+            table,
+            "  class          {:<8} {:>6} workers  {:>8} done  {:>5.1}% of results",
+            c.name, workers_by_class[i], completed_by_class[i], share
+        );
+    }
+    if let Some((lr, reg)) = sweep_best {
+        let _ = writeln!(table, "  sweep argmin   lr {lr}  reg {reg}");
+    }
+
+    Ok(SoakReport {
+        metrics_json,
+        table,
+        trace,
+        virtual_ms,
+        total: p.total,
+        done: p.done,
+        pending: p.pending,
+        in_flight: p.in_flight,
+        redistributions: p.redistributions,
+        dispatched,
+        released,
+        duplicates,
+        errors_reported: p.errors,
+        connections,
+        vanishes,
+        reloads,
+        rescues,
+        idle_polls,
+        ghost_entries,
+        ghosts_after_close,
+        latency_p50_ms: latency.percentile(50.0),
+        latency_p99_ms: latency.percentile(99.0),
+        latency_max_ms: latency.max(),
+        strand_count: stranding.count(),
+        strand_p50_ms: stranding.percentile(50.0),
+        max_strand_ms: stranding.max(),
+        throughput_per_s: throughput,
+        sweep_best,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(workers: usize, seed: u64) -> SoakConfig {
+        let mut cfg = SoakConfig::new(workers, seed);
+        cfg.duration_ms = 120_000;
+        cfg.mean_lifetime_ms = 10_000;
+        cfg
+    }
+
+    #[test]
+    fn tiny_soak_completes_with_no_losses() {
+        let r = run_soak(&tiny(24, 7)).unwrap();
+        assert_eq!(r.done, r.total, "every ticket completes");
+        assert_eq!((r.pending, r.in_flight), (0, 0), "conservation at rest");
+        assert_eq!(r.ghost_entries, 0, "client table tracks the online fleet");
+        assert_eq!(r.ghosts_after_close, 0, "no ghosts after shutdown");
+        assert!(r.virtual_ms >= 120_000, "run covers the horizon");
+        assert!(r.dispatched as usize >= r.total);
+        assert!(r.vanishes > 0, "churn actually happened");
+        assert_eq!(r.sweep_best, Some((sweep::OPT_LR, sweep::OPT_REG)));
+        assert!(r.metrics_json.contains("\"workers\":24"));
+        assert!(r.trace.last().unwrap().starts_with(&format!("t={}", r.virtual_ms)));
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical() {
+        let a = run_soak(&tiny(16, 9)).unwrap();
+        let b = run_soak(&tiny(16, 9)).unwrap();
+        assert_eq!(a.metrics_json, b.metrics_json);
+        assert_eq!(a.trace, b.trace);
+        let c = run_soak(&tiny(16, 10)).unwrap();
+        assert_ne!(a.trace, c.trace, "a different seed drives a different run");
+    }
+
+    #[test]
+    fn passive_mode_strands_into_the_redistribution_window() {
+        let mut cfg = tiny(24, 11);
+        cfg.release_on_disconnect = false;
+        cfg.mean_lifetime_ms = 2_000; // everyone dies mid-batch
+        cfg.duration_ms = 60_000;
+        let r = run_soak(&cfg).unwrap();
+        assert_eq!(r.done, r.total, "windows eventually recover everything");
+        assert!(r.strand_count > 0, "passive churn strands tickets");
+        let window = StoreConfig::default().requeue_after_ms as f64;
+        assert!(
+            r.max_strand_ms >= 100_000.0,
+            "stranded tickets wait out a large part of the 5-min window, got {}",
+            r.max_strand_ms
+        );
+        assert!(r.max_strand_ms <= window + 60_000.0);
+        assert!(r.redistributions > 0);
+        assert!(r.virtual_ms >= 300_000, "the run pushes past the window");
+    }
+}

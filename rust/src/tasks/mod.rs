@@ -13,10 +13,13 @@
 //! * [`knn::KnnChunkTask`] — Table 2's MNIST nearest-neighbour workload;
 //! * [`train::ConvFwdTask`] / [`train::ConvGradTask`] — the hybrid
 //!   algorithm's client-side work units (Fig 5);
-//! * [`train::GradTask`] — the MLitB baseline's full-gradient work unit.
+//! * [`train::GradTask`] — the MLitB baseline's full-gradient work unit;
+//! * [`sweep::SweepTask`] — a hyperparameter-sweep fan-out (deterministic
+//!   surrogate loss), the churn soak's second workload.
 
 pub mod is_prime;
 pub mod knn;
+pub mod sweep;
 pub mod train;
 
 use std::collections::{BTreeMap, HashMap};

@@ -1,0 +1,181 @@
+//! SweepTask: a hyperparameter-sweep fan-out work unit.
+//!
+//! The fourth built-in task type (after prime/kNN/train), added so the
+//! churn soak (`crate::sim`) exercises scenario diversity: many tiny
+//! independent evaluations whose *aggregation* (argmin over validation
+//! loss) happens back on the coordinator — the classic embarrassingly
+//! parallel sweep every volunteer-computing fleet runs.
+//!
+//! Each ticket evaluates one `(learning rate, regularization)` grid
+//! point.  The "validation loss" is a deterministic closed-form
+//! surrogate — a convex bowl over `(log10(lr), reg)` with a small
+//! index-derived ripple standing in for evaluation noise — so results
+//! are exactly reproducible across runs and devices (the soak's
+//! bit-identical-trace guarantee extends through task execution) and
+//! the winning grid point is known in closed form for tests.
+
+use anyhow::Result;
+
+use super::{TaskContext, TaskDef, TaskOutput};
+use crate::util::json::Value;
+
+pub struct SweepTask;
+
+/// The sweep's optimal point: the loss surface is minimized at
+/// `lr = 3e-3, reg = 1e-2` (up to the ripple term).
+pub const OPT_LR: f64 = 3e-3;
+pub const OPT_REG: f64 = 1e-2;
+
+/// The deterministic loss surrogate: a convex bowl over
+/// `(log10(lr), reg)` plus a tiny index-keyed ripple (so equal grid
+/// points at different indexes still produce distinct, reproducible
+/// values — evaluation "noise" without an RNG).
+pub fn surrogate_loss(lr: f64, reg: f64, index: u64) -> f64 {
+    let dl = (lr.max(1e-12)).log10() - OPT_LR.log10();
+    let dr = reg - OPT_REG;
+    let ripple = ((index.wrapping_mul(0x9E37_79B9)) % 1000) as f64 * 1e-6;
+    dl * dl + 5.0 * dr * dr + ripple
+}
+
+impl TaskDef for SweepTask {
+    fn name(&self) -> &str {
+        "sweep"
+    }
+
+    fn code_bytes(&self) -> usize {
+        // sweep_task.js + the evaluation harness, roughly.
+        2048
+    }
+
+    fn execute(&self, input: &Value, _ctx: &mut dyn TaskContext) -> Result<TaskOutput> {
+        let lr = input.get("lr")?.as_f64()?;
+        let reg = input.get("reg")?.as_f64()?;
+        let index = input.get("index")?.as_u64()?;
+        anyhow::ensure!(lr > 0.0, "lr must be positive, got {lr}");
+        anyhow::ensure!(reg >= 0.0, "reg must be non-negative, got {reg}");
+        let loss = surrogate_loss(lr, reg, index);
+        Ok(TaskOutput {
+            value: Value::obj(vec![
+                ("index", Value::num(index as f64)),
+                ("lr", Value::num(lr)),
+                ("reg", Value::num(reg)),
+                ("loss", Value::num(loss)),
+            ]),
+            // A modelled evaluation cost: one short validation pass.
+            modelled_ms: Some(8.0),
+        })
+    }
+}
+
+/// Fan-out: the full `lrs x regs` grid as ticket payloads, indexed in
+/// row-major order (lr-major) — `calculate(grid(..))` is the sweep's
+/// whole dispatch side.
+pub fn grid(lrs: &[f64], regs: &[f64]) -> Vec<Value> {
+    let mut inputs = Vec::with_capacity(lrs.len() * regs.len());
+    let mut index = 0u64;
+    for &lr in lrs {
+        for &reg in regs {
+            inputs.push(Value::obj(vec![
+                ("lr", Value::num(lr)),
+                ("reg", Value::num(reg)),
+                ("index", Value::num(index as f64)),
+            ]));
+            index += 1;
+        }
+    }
+    inputs
+}
+
+/// Aggregation: the winning `(lr, reg, loss)` — lowest loss, ties
+/// broken by lowest index so the answer is deterministic even with
+/// duplicated grid points.
+pub fn best(results: &[Value]) -> Result<(f64, f64, f64)> {
+    anyhow::ensure!(!results.is_empty(), "sweep produced no results");
+    let mut best: Option<(u64, f64, f64, f64)> = None; // (index, lr, reg, loss)
+    for r in results {
+        let index = r.get("index")?.as_u64()?;
+        let lr = r.get("lr")?.as_f64()?;
+        let reg = r.get("reg")?.as_f64()?;
+        let loss = r.get("loss")?.as_f64()?;
+        let better = match &best {
+            None => true,
+            Some((bi, _, _, bl)) => loss < *bl || (loss == *bl && index < *bi),
+        };
+        if better {
+            best = Some((index, lr, reg, loss));
+        }
+    }
+    let (_, lr, reg, loss) = best.unwrap();
+    Ok((lr, reg, loss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::test_support::FakeContext;
+
+    #[test]
+    fn grid_enumerates_row_major_with_sequential_indexes() {
+        let inputs = grid(&[1e-3, 3e-3], &[0.0, 1e-2, 1e-1]);
+        assert_eq!(inputs.len(), 6);
+        for (i, v) in inputs.iter().enumerate() {
+            assert_eq!(v.get("index").unwrap().as_u64().unwrap(), i as u64);
+        }
+        assert_eq!(inputs[0].get("lr").unwrap().as_f64().unwrap(), 1e-3);
+        assert_eq!(inputs[0].get("reg").unwrap().as_f64().unwrap(), 0.0);
+        // lr-major: the second lr starts after all regs of the first.
+        assert_eq!(inputs[3].get("lr").unwrap().as_f64().unwrap(), 3e-3);
+        assert_eq!(inputs[3].get("reg").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn execute_is_deterministic_and_aggregation_finds_the_optimum() {
+        let t = SweepTask;
+        let mut ctx = FakeContext::default();
+        let inputs = grid(&[1e-4, 1e-3, 3e-3, 1e-2], &[0.0, 1e-2, 1e-1]);
+        let run = |ctx: &mut FakeContext| -> Vec<Value> {
+            inputs.iter().map(|i| t.execute(i, ctx).unwrap().value).collect()
+        };
+        let a = run(&mut ctx);
+        let b = run(&mut ctx);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.get("loss").unwrap().as_f64().unwrap(),
+                y.get("loss").unwrap().as_f64().unwrap(),
+                "same ticket, same loss"
+            );
+        }
+        let (lr, reg, loss) = best(&a).unwrap();
+        assert_eq!((lr, reg), (OPT_LR, OPT_REG), "argmin lands on the bowl's bottom");
+        assert!(loss < 1e-3, "optimal loss is ripple-sized, got {loss}");
+    }
+
+    #[test]
+    fn best_breaks_ties_by_lowest_index() {
+        let mk = |index: f64, loss: f64| {
+            Value::obj(vec![
+                ("index", Value::num(index)),
+                ("lr", Value::num(index + 1.0)), // distinguishable stand-ins
+                ("reg", Value::num(0.0)),
+                ("loss", Value::num(loss)),
+            ])
+        };
+        // Same loss at indexes 2 and 0 (out of order): index 0 wins.
+        let (lr, _, _) = best(&[mk(2.0, 0.5), mk(0.0, 0.5), mk(1.0, 0.7)]).unwrap();
+        assert_eq!(lr, 1.0);
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        let t = SweepTask;
+        let mut ctx = FakeContext::default();
+        assert!(t.execute(&Value::Null, &mut ctx).is_err());
+        let neg = Value::obj(vec![
+            ("lr", Value::num(-1.0)),
+            ("reg", Value::num(0.0)),
+            ("index", Value::num(0.0)),
+        ]);
+        assert!(t.execute(&neg, &mut ctx).is_err());
+        assert!(best(&[]).is_err());
+    }
+}

@@ -1,10 +1,11 @@
-//! Time utilities: a process-wide millisecond clock and the device-speed
-//! padding used to emulate heterogeneous clients on a 1-vCPU host
-//! (DESIGN.md §7).
+//! Time utilities: a process-wide millisecond clock, an injectable
+//! [`Clock`] abstraction (wall time or simulator-advanced virtual
+//! time), and the device-speed padding used to emulate heterogeneous
+//! clients on a 1-vCPU host (DESIGN.md §7).
 
-use std::time::{Duration, Instant};
-
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
+use std::time::{Duration, Instant};
 
 static EPOCH: OnceLock<Instant> = OnceLock::new();
 
@@ -20,6 +21,96 @@ pub fn now_us() -> u64 {
 
 pub fn sleep_ms(ms: u64) {
     std::thread::sleep(Duration::from_millis(ms));
+}
+
+/// An injectable time source (DESIGN.md §2.5).
+///
+/// The coordination layer never consults wall time directly for policy
+/// decisions — redistribution windows, VCT timestamps, connect times,
+/// worker backoff all read a `Clock`, so the same code runs in real
+/// time ([`WallClock`], the default everywhere) or under a simulator
+/// that advances time event-by-event ([`VirtualClock`]).  Ten minutes
+/// of fleet churn then replay in milliseconds, deterministically.
+pub trait Clock: Send + Sync {
+    /// Milliseconds on this clock (monotone non-decreasing).
+    fn now_ms(&self) -> u64;
+    /// Park the caller for `ms` *of this clock's time* where that is
+    /// meaningful (wall clock), or briefly yield (virtual clock — see
+    /// [`VirtualClock`] on why virtual sleeps never advance time).
+    fn sleep_ms(&self, ms: u64);
+}
+
+/// The process clock: [`now_ms`]/[`sleep_ms`] behind the [`Clock`]
+/// trait.  Every production constructor defaults to this.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        now_ms()
+    }
+
+    fn sleep_ms(&self, ms: u64) {
+        sleep_ms(ms)
+    }
+}
+
+/// A clock the test/simulation harness advances explicitly.
+///
+/// Two deliberate properties, both load-bearing for determinism:
+///
+/// * `sleep_ms` does **not** advance virtual time.  Threaded workers
+///   sleeping in their idle backoff would otherwise race each other
+///   forward and nondeterministically expire redistribution windows;
+///   only the owner of the clock (the simulator's event loop, or the
+///   test body) moves time.
+/// * `sleep_ms` does **not** block until the requested virtual instant.
+///   A sleeper waiting for an advance that only happens after it wakes
+///   would deadlock; instead the call takes a ~1 ms real nap (so
+///   spinning pollers still yield the CPU) and returns.  Virtual
+///   sleepers poll; virtual time only moves via [`advance`] /
+///   [`advance_to`].
+///
+/// [`advance`]: VirtualClock::advance
+/// [`advance_to`]: VirtualClock::advance_to
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A virtual clock pinned at t = 0 ms.
+    pub fn new() -> VirtualClock {
+        Self::at(0)
+    }
+
+    /// A virtual clock starting at `ms`.
+    pub fn at(ms: u64) -> VirtualClock {
+        VirtualClock { now: AtomicU64::new(ms) }
+    }
+
+    /// Move time forward by `ms`; returns the new now.
+    pub fn advance(&self, ms: u64) -> u64 {
+        self.now.fetch_add(ms, Ordering::SeqCst) + ms
+    }
+
+    /// Move time forward to the absolute instant `ms` (no-op if the
+    /// clock is already there or past — virtual time never rewinds).
+    pub fn advance_to(&self, ms: u64) -> u64 {
+        self.now.fetch_max(ms, Ordering::SeqCst).max(ms)
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+
+    fn sleep_ms(&self, _ms: u64) {
+        // See the type docs: yield real CPU, never advance or wait on
+        // virtual time.
+        std::thread::sleep(Duration::from_millis(1));
+    }
 }
 
 /// Pads a real computation to a modelled duration: a worker with
@@ -87,5 +178,35 @@ mod tests {
         sleep_ms(10);
         let total = t.pad_to(1.0, 1.0); // target already passed
         assert!(total >= 10.0);
+    }
+
+    #[test]
+    fn wall_clock_tracks_process_clock() {
+        let c = WallClock;
+        let a = c.now_ms();
+        c.sleep_ms(2);
+        assert!(c.now_ms() >= a + 1);
+    }
+
+    #[test]
+    fn virtual_clock_only_moves_when_advanced() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.sleep_ms(10_000); // returns promptly, moves nothing
+        assert_eq!(c.now_ms(), 0);
+        assert_eq!(c.advance(500), 500);
+        assert_eq!(c.now_ms(), 500);
+        assert_eq!(c.advance_to(400), 500, "never rewinds");
+        assert_eq!(c.advance_to(900), 900);
+        assert_eq!(c.now_ms(), 900);
+    }
+
+    #[test]
+    fn virtual_clock_shares_across_threads() {
+        use std::sync::Arc;
+        let c: Arc<dyn Clock> = Arc::new(VirtualClock::at(7));
+        let c2 = Arc::clone(&c);
+        let h = std::thread::spawn(move || c2.now_ms());
+        assert_eq!(h.join().unwrap(), 7);
     }
 }

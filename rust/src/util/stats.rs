@@ -76,6 +76,211 @@ impl Welford {
     }
 }
 
+/// A latency histogram for the soak metrics (DESIGN.md §2.5).
+///
+/// Keeps every sample exactly while the count stays within
+/// `exact_cap`, so small-N percentiles are the textbook
+/// linear-interpolated values ([`percentile`]).  Past the cap it spills
+/// to power-of-two buckets (bucket 0 holds `[0,1)`, bucket `i >= 1`
+/// holds `[2^(i-1), 2^i)`) and percentiles come from the cumulative
+/// bucket walk, answered at the bucket midpoint — a bounded-memory
+/// approximation with relative error < 50%, plenty for p50/p99 gates
+/// over millisecond latencies.  `count/sum/min/max` stay exact in both
+/// modes, and [`merge`](Histogram::merge) combines two histograms
+/// (per-worker shards) without losing exactness unless it must.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    exact: Option<Vec<f64>>,
+    exact_cap: usize,
+    /// `buckets[i]` counts samples in `[2^(i-1), 2^i)` (i = 0: `[0,1)`).
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Default exact-sample budget: 4096 samples (32 KiB) before
+    /// spilling to buckets.
+    pub fn new() -> Histogram {
+        Self::with_exact_cap(4096)
+    }
+
+    pub fn with_exact_cap(exact_cap: usize) -> Histogram {
+        Histogram {
+            exact: Some(Vec::new()),
+            exact_cap,
+            buckets: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(x: f64) -> usize {
+        // Bit length of floor(x): 0 for [0,1), 1 for [1,2), 2 for
+        // [2,4), ... Negative samples (not expected for latencies)
+        // clamp into bucket 0.
+        let v = x.max(0.0) as u64;
+        (64 - v.leading_zeros()) as usize
+    }
+
+    fn bucket_mid(i: usize) -> f64 {
+        if i == 0 {
+            0.5
+        } else {
+            // Midpoint of [2^(i-1), 2^i).
+            1.5 * (1u64 << (i - 1)) as f64
+        }
+    }
+
+    fn spill(&mut self) {
+        if let Some(xs) = self.exact.take() {
+            for x in xs {
+                let b = Self::bucket_of(x);
+                if self.buckets.len() <= b {
+                    self.buckets.resize(b + 1, 0);
+                }
+                self.buckets[b] += 1;
+            }
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        match &mut self.exact {
+            Some(xs) if xs.len() < self.exact_cap => xs.push(x),
+            _ => {
+                self.spill();
+                let b = Self::bucket_of(x);
+                if self.buckets.len() <= b {
+                    self.buckets.resize(b + 1, 0);
+                }
+                self.buckets[b] += 1;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Whether percentiles are still exact (no bucket spill happened).
+    pub fn is_exact(&self) -> bool {
+        self.exact.is_some()
+    }
+
+    /// p in [0,100]; 0.0 when empty.  Exact (linear interpolation)
+    /// while un-spilled, bucket-midpoint approximation after, with the
+    /// true min/max substituted at the extremes so p0/p100 are always
+    /// exact.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if let Some(xs) = &self.exact {
+            return percentile(xs, p);
+        }
+        if p <= 0.0 {
+            return self.min();
+        }
+        if p >= 100.0 {
+            return self.max();
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+
+    /// Fold `other` into `self` (per-worker shards into a fleet
+    /// total).  Exactness survives only if both sides are exact and the
+    /// combined sample count fits the cap; otherwise both spill.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        let fits = match (&self.exact, &other.exact) {
+            (Some(a), Some(b)) => a.len() + b.len() <= self.exact_cap,
+            _ => false,
+        };
+        if fits {
+            let b = other.exact.as_ref().unwrap();
+            self.exact.as_mut().unwrap().extend_from_slice(b);
+            return;
+        }
+        self.spill();
+        // Other's samples as buckets (spilling a clone keeps `other`
+        // untouched).
+        let mut theirs = other.buckets.clone();
+        if let Some(xs) = &other.exact {
+            for &x in xs {
+                let b = Self::bucket_of(x);
+                if theirs.len() <= b {
+                    theirs.resize(b + 1, 0);
+                }
+                theirs[b] += 1;
+            }
+        }
+        if self.buckets.len() < theirs.len() {
+            self.buckets.resize(theirs.len(), 0);
+        }
+        for (i, c) in theirs.into_iter().enumerate() {
+            self.buckets[i] += c;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +317,90 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(stddev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    /// Small-N histograms answer the exact linear-interpolated
+    /// percentiles — identical to the slice [`percentile`].
+    #[test]
+    fn histogram_small_n_percentiles_are_exact() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut h = Histogram::new();
+        for x in xs {
+            h.record(x);
+        }
+        assert!(h.is_exact());
+        assert_eq!(h.count(), 5);
+        for p in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), percentile(&xs, p), "p{p}");
+        }
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 5.0);
+        assert!((h.mean() - 3.0).abs() < 1e-12);
+    }
+
+    /// Past the exact cap the histogram spills to power-of-two buckets:
+    /// count/sum/min/max stay exact, percentiles land in the right
+    /// bucket (relative error < 50%), p0/p100 stay exact.
+    #[test]
+    fn histogram_spills_to_buckets_past_cap() {
+        let mut h = Histogram::with_exact_cap(10);
+        for i in 0..100u32 {
+            h.record(i as f64); // 0..99
+        }
+        assert!(!h.is_exact());
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 99.0);
+        assert!((h.sum() - 4950.0).abs() < 1e-9);
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(100.0), 99.0);
+        let p50 = h.percentile(50.0); // true value 49.5; bucket [32,64) mid = 48
+        assert!((p50 - 49.5).abs() / 49.5 < 0.5, "p50 approx {p50}");
+        let p99 = h.percentile(99.0); // true 98.x; bucket [64,128) mid clamped to max
+        assert!((60.0..=99.0).contains(&p99), "p99 approx {p99}");
+    }
+
+    /// Merging two exact shards under the cap stays exact; merging past
+    /// the cap degrades gracefully and preserves count/sum/min/max.
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for x in [1.0, 2.0, 3.0] {
+            a.record(x);
+        }
+        for x in [4.0, 5.0] {
+            b.record(x);
+        }
+        a.merge(&b);
+        assert!(a.is_exact());
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.percentile(50.0), 3.0);
+
+        let mut big = Histogram::with_exact_cap(4);
+        for x in [1.0, 2.0, 3.0] {
+            big.record(x);
+        }
+        big.merge(&b); // 3 + 2 > cap 4: spills
+        assert!(!big.is_exact());
+        assert_eq!(big.count(), 5);
+        assert_eq!(big.min(), 1.0);
+        assert_eq!(big.max(), 5.0);
+        assert!((big.sum() - 15.0).abs() < 1e-12);
+        // Merging an empty histogram is a no-op either way.
+        let before = big.count();
+        big.merge(&Histogram::new());
+        assert_eq!(big.count(), before);
+    }
+
+    /// Empty histograms answer zeros everywhere, like the slice fns.
+    #[test]
+    fn histogram_empty_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
     }
 }

@@ -70,7 +70,7 @@ use crate::store::TicketId;
 use crate::tasks::{Registry, TaskContext, TaskDef};
 use crate::transport::{Conn, Message, WireError, WireTicket};
 use crate::util::base64;
-use crate::util::clock::{self, PaddedTimer};
+use crate::util::clock::{Clock, PaddedTimer, WallClock};
 use crate::util::json::Value;
 use crate::util::lru::LruCache;
 use crate::util::rng::SplitMix64;
@@ -180,12 +180,72 @@ pub struct Worker {
     pub prefetch_cap: usize,
     /// Cap on the exponential `NoTicket` backoff sleep (ms).
     pub idle_backoff_cap_ms: u64,
+    /// Time source for backoff/reconnect sleeps (DESIGN.md §2.5).
+    /// Wall clock by default; tests inject a virtual clock so idle
+    /// workers yield instead of really sleeping.  RTT and padding keep
+    /// reading real monotonic time — they measure this host, not
+    /// simulated time.
+    clock: Arc<dyn Clock>,
 }
 
 /// Default [`Worker::prefetch_cap`]: modest enough that compute-bound
 /// tickets stay effectively unbatched (the batch only grows while a
 /// whole batch runs faster than one round trip).
 pub const DEFAULT_PREFETCH_CAP: usize = 8;
+
+/// The adaptive prefetch state machine (DESIGN.md §2.3), extracted so
+/// its transitions are unit-testable and the churn simulator can run
+/// the *same* sizing policy as the threaded worker.
+///
+/// * starts at 1 ticket per fetch;
+/// * [`on_batch_done`]: a whole error-free batch that executed faster
+///   than the round trip that fetched it is link-bound — double the
+///   batch, clamped to the cap;
+/// * [`on_no_ticket`] / [`on_error`]: halve (never below 1) — an empty
+///   pool wants small probes, a failing batch wants less speculation;
+/// * `cap = 1` pins the size at 1: the paper's single-ticket protocol.
+///
+/// [`on_batch_done`]: PrefetchController::on_batch_done
+/// [`on_no_ticket`]: PrefetchController::on_no_ticket
+/// [`on_error`]: PrefetchController::on_error
+#[derive(Debug, Clone)]
+pub struct PrefetchController {
+    size: usize,
+    cap: usize,
+}
+
+impl PrefetchController {
+    pub fn new(cap: usize) -> PrefetchController {
+        PrefetchController { size: 1, cap: cap.max(1) }
+    }
+
+    /// Tickets to ask for in the next `TicketBatchRequest`.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// An error-free batch finished: grow iff it was link-bound (total
+    /// execution beat the fetch round trip) and the cap allows.
+    pub fn on_batch_done(&mut self, batch_exec_ms: f64, fetch_rtt_ms: f64) {
+        if batch_exec_ms < fetch_rtt_ms && self.size < self.cap {
+            self.size = (self.size * 2).min(self.cap);
+        }
+    }
+
+    /// The pool answered `NoTicket`: probe smaller next time.
+    pub fn on_no_ticket(&mut self) {
+        self.size = (self.size / 2).max(1);
+    }
+
+    /// A ticket in the batch failed: speculate less.
+    pub fn on_error(&mut self) {
+        self.size = (self.size / 2).max(1);
+    }
+}
 
 impl Worker {
     pub fn new(id: &str, profile: DeviceProfile, registry: Registry) -> Worker {
@@ -198,7 +258,14 @@ impl Worker {
             max_tickets: None,
             prefetch_cap: DEFAULT_PREFETCH_CAP,
             idle_backoff_cap_ms: 200,
+            clock: Arc::new(WallClock),
         }
+    }
+
+    /// Inject a time source for backoff sleeps (virtual under tests).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Worker {
+        self.clock = clock;
+        self
     }
 
     pub fn with_runtime(mut self, rt: SharedRuntime) -> Worker {
@@ -232,7 +299,7 @@ impl Worker {
         // Adaptive prefetch sizing (survives reconnects: link quality,
         // not connection identity, is what it tracks).
         let cap = self.prefetch_cap.max(1);
-        let mut batch_size: usize = 1;
+        let mut prefetch = PrefetchController::new(cap);
         let mut idle_streak: u32 = 0;
         let mut jitter = SplitMix64::new(
             self.id.bytes().fold(0x5EEDu64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64)),
@@ -253,7 +320,7 @@ impl Worker {
                     if consecutive_failures > max_reconnects {
                         break;
                     }
-                    clock::sleep_ms(10);
+                    self.clock.sleep_ms(10);
                     continue;
                 }
             };
@@ -270,7 +337,7 @@ impl Worker {
                 // Same backoff as a failed connect: a half-up
                 // coordinator (socket open, Hello unanswered) must not
                 // be spin-looped against.
-                clock::sleep_ms(10);
+                self.clock.sleep_ms(10);
                 continue;
             }
             consecutive_failures = 0;
@@ -302,12 +369,8 @@ impl Worker {
                             pending.push((t.ticket, result));
                             // Grow only off an error-free batch that
                             // ran faster than the round trip it cost.
-                            if queue.is_empty()
-                                && errors.is_empty()
-                                && batch_exec_ms < fetch_rtt_ms
-                                && batch_size < cap
-                            {
-                                batch_size = (batch_size * 2).min(cap);
+                            if queue.is_empty() && errors.is_empty() {
+                                prefetch.on_batch_done(batch_exec_ms, fetch_rtt_ms);
                             }
                         }
                         Err(ExecError::Conn(e)) => {
@@ -336,7 +399,7 @@ impl Worker {
                             // executing and every failure flushes as
                             // one ErrorReports round trip below.
                             report.errors_reported += 1;
-                            batch_size = (batch_size / 2).max(1);
+                            prefetch.on_error();
                             errors.push(WireError {
                                 ticket: t.ticket,
                                 message: format!("{e:#}"),
@@ -387,8 +450,8 @@ impl Worker {
                 // ...and the next batch is fetched, clamped so a bounded
                 // worker never prefetches work it will not complete.
                 let want = match self.max_tickets {
-                    Some(max) => batch_size.min((max - report.tickets_completed) as usize),
-                    None => batch_size,
+                    Some(max) => prefetch.size().min((max - report.tickets_completed) as usize),
+                    None => prefetch.size(),
                 };
                 let t0 = Instant::now();
                 let fetch = if cap == 1 {
@@ -416,7 +479,7 @@ impl Worker {
                     }
                     Ok(Message::NoTicket { retry_after_ms }) => {
                         report.idle_polls += 1;
-                        batch_size = (batch_size / 2).max(1);
+                        prefetch.on_no_ticket();
                         self.idle_backoff(&mut jitter, retry_after_ms, idle_streak);
                         idle_streak = idle_streak.saturating_add(1);
                     }
@@ -564,7 +627,7 @@ impl Worker {
         // Sleep in [ceiling/2, ceiling]: two workers idling from the
         // same instant drift apart within a few polls.
         let jittered = ceiling / 2 + rng.gen_range(ceiling / 2 + 1);
-        clock::sleep_ms(jittered);
+        self.clock.sleep_ms(jittered);
     }
 
     /// Steps 3–5 for one ticket: ensure code, prefetch datasets, execute
@@ -666,6 +729,7 @@ mod tests {
     use crate::tasks::is_prime::IsPrimeTask;
     use crate::tasks::{TaskOutput};
     use crate::transport::{local, LinkModel};
+    use crate::util::clock;
     use crate::util::json::Value;
 
     fn prime_setup(n: usize) -> (Arc<Framework>, Arc<Distributor>, local::LocalConnector) {
@@ -814,5 +878,76 @@ mod tests {
         let report = w.run(|| Ok(Box::new(connector.connect()?) as Box<dyn Conn>), &stop);
         h.join().unwrap();
         assert_eq!(report.tickets_completed, 1); // drained, then idled until stop
+    }
+
+    /// The adaptive prefetch state machine across a scripted RTT
+    /// sequence: geometric growth while every batch is link-bound
+    /// (execution beats the fetch round trip), clamped at the cap.
+    #[test]
+    fn prefetch_doubles_on_fast_batches_and_clamps_at_cap() {
+        let mut p = PrefetchController::new(8);
+        assert_eq!(p.size(), 1);
+        // Scripted (exec_ms, rtt_ms) per finished batch: always fast.
+        for (expected, (exec, rtt)) in
+            [2usize, 4, 8, 8].iter().zip([(0.5, 10.0), (1.2, 10.0), (3.0, 9.5), (6.0, 9.0)])
+        {
+            p.on_batch_done(exec, rtt);
+            assert_eq!(p.size(), *expected, "after batch exec={exec} rtt={rtt}");
+        }
+        // A non-power-of-two cap clamps mid-double: 4 -> 6, not 8.
+        let mut odd = PrefetchController::new(6);
+        for _ in 0..5 {
+            odd.on_batch_done(1.0, 10.0);
+        }
+        assert_eq!(odd.size(), 6);
+    }
+
+    /// Compute-bound batches (execution slower than the round trip)
+    /// never grow the batch — the whole point of the growth gate.
+    #[test]
+    fn prefetch_slow_batches_do_not_grow() {
+        let mut p = PrefetchController::new(8);
+        for _ in 0..4 {
+            p.on_batch_done(50.0, 3.0);
+        }
+        assert_eq!(p.size(), 1, "compute-bound stays unbatched");
+        // Equal exec and RTT is not strictly faster: no growth either.
+        p.on_batch_done(3.0, 3.0);
+        assert_eq!(p.size(), 1);
+    }
+
+    /// NoTicket and task errors halve toward 1 and never below it; the
+    /// sequence grow-halve-grow behaves like the inline logic it
+    /// replaced.
+    #[test]
+    fn prefetch_halves_on_no_ticket_and_error() {
+        let mut p = PrefetchController::new(8);
+        for _ in 0..3 {
+            p.on_batch_done(1.0, 10.0); // 1 -> 2 -> 4 -> 8
+        }
+        assert_eq!(p.size(), 8);
+        p.on_no_ticket();
+        assert_eq!(p.size(), 4);
+        p.on_error();
+        assert_eq!(p.size(), 2);
+        p.on_no_ticket();
+        p.on_no_ticket();
+        assert_eq!(p.size(), 1, "floor at 1");
+        p.on_batch_done(1.0, 10.0);
+        assert_eq!(p.size(), 2, "recovers after the pool refills");
+    }
+
+    /// `cap = 1` (and the degenerate `cap = 0`) pin the size at one
+    /// ticket forever: the paper's exact single-ticket protocol.
+    #[test]
+    fn prefetch_cap_one_never_grows() {
+        for cap in [0, 1] {
+            let mut p = PrefetchController::new(cap);
+            assert_eq!(p.cap(), 1);
+            for _ in 0..6 {
+                p.on_batch_done(0.1, 100.0);
+                assert_eq!(p.size(), 1);
+            }
+        }
     }
 }

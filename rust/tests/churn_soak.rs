@@ -1,0 +1,93 @@
+//! Tier-1 churn soak: a 1k-browser fleet churning against one real
+//! Distributor + WAL store coordinator for ten simulated minutes, on a
+//! virtual clock, in well under a minute of wall time.
+//!
+//! The soak pins the operational invariants the paper's §2.1.2 design
+//! claims under churn:
+//!
+//! * **zero lost tickets** — every ticket completes despite vanishes,
+//!   reloads, injected task faults and permanent departures;
+//! * **zero ghost workers** — the client table tracks the online fleet
+//!   exactly and empties on shutdown;
+//! * **bounded stranding** — no ticket is stranded longer than the
+//!   redistribution window (plus poll slack) even in the passive
+//!   baseline, and the active release path keeps stranding to seconds.
+
+use sashimi::sim::{run_soak, SoakConfig};
+use sashimi::store::StoreConfig;
+
+/// The CI per-PR soak: `SoakConfig::quick()` — 1000 workers, seed 42,
+/// ten simulated minutes of churn on the active failure path.
+#[test]
+fn quick_soak_1k_workers_loses_nothing() {
+    let wall = std::time::Instant::now();
+    let cfg = SoakConfig::quick();
+    assert_eq!(cfg.workers, 1_000);
+    let r = run_soak(&cfg).unwrap();
+
+    // Ten simulated minutes, far less wall time.
+    assert!(r.virtual_ms >= 600_000, "simulated only {} ms", r.virtual_ms);
+    assert!(
+        wall.elapsed().as_secs() < 60,
+        "soak took {:?} wall — the virtual clock is not doing its job",
+        wall.elapsed()
+    );
+
+    // Zero lost tickets: everything completes and the store is at rest.
+    assert_eq!(r.done, r.total, "lost tickets: {}", r.total - r.done);
+    assert_eq!((r.pending, r.in_flight), (0, 0), "store not at rest");
+    assert!(r.dispatched as usize >= r.total);
+
+    // Zero ghost workers.
+    assert_eq!(r.ghost_entries, 0, "client table out of sync with the online fleet");
+    assert_eq!(r.ghosts_after_close, 0, "ghost clients after shutdown");
+
+    // Churn actually happened, and the active path kept stranding
+    // windows to re-dispatch latency, not the 5-minute window.
+    assert!(r.vanishes > 100, "only {} vanishes — not much of a churn soak", r.vanishes);
+    assert!(r.reloads > 0);
+    assert!(r.max_strand_ms <= 60_000.0, "active path stranded {} ms", r.max_strand_ms);
+
+    // The sweep's coordinator-side argmin survived the churn.
+    assert_eq!(r.sweep_best, Some((3e-3, 1e-2)));
+
+    // All three Table 1 device classes contributed results.
+    for class in ["desktop", "tablet", "firefox"] {
+        assert!(
+            !r.metrics_json.contains(&format!("\"{class}\":{{\"completed\":0")),
+            "{class} completed nothing: {}",
+            r.metrics_json
+        );
+    }
+}
+
+/// The passive §2.1.2 baseline at smaller scale: vanished browsers
+/// strand tickets until window expiry, and stranding is bounded by the
+/// window (plus poll slack) — the soak-metrics counterpart of the
+/// scripted `failure_path.rs` tests.
+#[test]
+fn passive_soak_strands_are_window_bounded() {
+    let mut cfg = SoakConfig::new(64, 23);
+    cfg.release_on_disconnect = false;
+    cfg.mean_lifetime_ms = 2_500; // everyone dies young, mid-batch
+    cfg.duration_ms = 60_000;
+    let r = run_soak(&cfg).unwrap();
+
+    assert_eq!(r.done, r.total, "windows eventually recover every ticket");
+    assert_eq!(r.ghosts_after_close, 0);
+    assert!(r.strand_count > 0, "no stranding — churn too gentle to test the window");
+    assert!(r.redistributions > 0, "no window expiries exercised");
+
+    let window = StoreConfig::default().requeue_after_ms as f64;
+    assert!(
+        r.max_strand_ms >= 0.3 * window,
+        "passive stranding should approach the window, got {} ms",
+        r.max_strand_ms
+    );
+    assert!(
+        r.max_strand_ms <= window + 60_000.0,
+        "stranding exceeded the redistribution window: {} ms",
+        r.max_strand_ms
+    );
+    assert!(r.virtual_ms >= 300_000, "the run must outlive the window to drain");
+}

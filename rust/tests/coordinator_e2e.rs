@@ -7,7 +7,6 @@ use std::sync::Arc;
 use sashimi::coordinator::{console, Distributor, Framework};
 use sashimi::data;
 use sashimi::runtime::{self, Tensor};
-use sashimi::store::StoreConfig;
 use sashimi::tasks::is_prime::IsPrimeTask;
 use sashimi::tasks::knn::KnnChunkTask;
 use sashimi::transport::tcp::{TcpConn, TcpListenerWrap};
@@ -136,8 +135,11 @@ fn knn_project_with_artifacts() {
     let train = data::mnist_train(n_train, 1);
     let queries = data::mnist_test(n_query, 2);
 
+    // Paper-default windows on a virtual clock pinned at 0: store time
+    // never moves, so no ticket can be redistributed out from under a
+    // slow worker mid-test (the old way was oversized frozen windows).
     let fw = Framework::builder()
-        .store_config(StoreConfig { requeue_after_ms: 60_000, min_redistribute_ms: 60_000, requeue_on_error: true })
+        .clock(Arc::new(sashimi::util::clock::VirtualClock::new()))
         .build();
     fw.datasets().register("q0", queries.rows_matrix(0, n_query));
     for (c, start) in (0..n_train).step_by(chunk).enumerate() {

@@ -6,8 +6,12 @@
 //! release disabled, the paper's passive §2.1.2 baseline (strand until
 //! the window elapses) is preserved.
 //!
-//! Every test freezes both redistribution windows far beyond the test
-//! horizon, so any recovered ticket is *proof* the active path ran.
+//! Every test runs under the paper-default redistribution windows on an
+//! injected [`VirtualClock`] pinned at t=0 — store time never advances,
+//! so the §2.1.2 windows *cannot* elapse and any recovered ticket is
+//! *proof* the active path ran.  The passive test then advances the
+//! virtual clock by hand to watch the window expire at exactly
+//! VCT + `requeue_after_ms`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -17,32 +21,36 @@ use sashimi::store::{Scheduler as _, StoreConfig, TaskId};
 use sashimi::tasks::is_prime::IsPrimeTask;
 use sashimi::tasks::{TaskContext, TaskDef, TaskOutput};
 use sashimi::transport::{local, Conn, LinkModel, Message};
+use sashimi::util::clock::VirtualClock;
 use sashimi::util::json::Value;
 use sashimi::worker::{DeviceProfile, Worker};
 
-/// Redistribution windows far beyond any test horizon: if a stranded
-/// ticket comes back within seconds, only the release path explains it.
-fn frozen_cfg() -> StoreConfig {
-    StoreConfig { requeue_after_ms: 600_000, min_redistribute_ms: 600_000, requeue_on_error: true }
+/// A framework on the paper-default store windows whose clock is a
+/// virtual one pinned at 0: tickets dispatch at VCT 0, and no
+/// redistribution window can elapse unless a test advances the clock.
+fn pinned_fw() -> (Arc<Framework>, Arc<VirtualClock>) {
+    let vclock = Arc::new(VirtualClock::new());
+    let fw = Framework::builder().clock(vclock.clone()).build();
+    (fw, vclock)
 }
 
-fn prime_fw(n: usize) -> (Arc<Framework>, TaskId) {
-    let fw = Framework::builder().store_config(frozen_cfg()).build();
+fn prime_fw(n: usize) -> (Arc<Framework>, TaskId, Arc<VirtualClock>) {
+    let (fw, vclock) = pinned_fw();
     let task = fw.create_task(Arc::new(IsPrimeTask));
     task.calculate(
         (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
     );
     let id = task.id;
-    (fw, id)
+    (fw, id, vclock)
 }
 
 /// A worker holding a prefetched batch is killed (connection dropped,
 /// no shutdown, no reports): the whole batch is released on disconnect
-/// and a healthy worker finishes the project well inside the frozen
-/// redistribution windows.
+/// and a healthy worker finishes the project with store time pinned at
+/// 0 — the redistribution windows never get a chance to elapse.
 #[test]
 fn killed_workers_prefetched_batch_is_redispatched_immediately() {
-    let (fw, task_id) = prime_fw(8);
+    let (fw, task_id, _vclock) = prime_fw(8);
     let dist = Distributor::new(&fw);
     let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
     dist.serve(Box::new(listener));
@@ -61,8 +69,8 @@ fn killed_workers_prefetched_batch_is_redispatched_immediately() {
     drop(victim);
 
     // A healthy worker must finish all 8 tickets within the test
-    // horizon — impossible through the frozen windows, trivial through
-    // the release path.
+    // horizon — impossible through windows that never elapse, trivial
+    // through the release path.
     let stop = Arc::new(AtomicBool::new(false));
     let worker = {
         let connector = connector.clone();
@@ -108,11 +116,11 @@ impl TaskDef for FailsOnceEach {
 /// The errors-and-reloads half of the acceptance case: every ticket
 /// fails once, the worker flushes batched reports (one Reload round
 /// trip per failing batch), every errored ticket requeues at its
-/// creation-time VCT, and the project still completes inside the
-/// frozen windows.
+/// creation-time VCT, and the project still completes with store time
+/// pinned at 0 (error requeue does not wait on any window).
 #[test]
 fn erroring_worker_flushes_batched_reports_and_finishes() {
-    let fw = Framework::builder().store_config(frozen_cfg()).build();
+    let (fw, _vclock) = pinned_fw();
     let task = fw.create_task(Arc::new(FailsOnceEach { failed: Default::default() }));
     task.calculate((0..6).map(|i| Value::obj(vec![("n", Value::num(i as f64))])).collect());
     let task_id = task.id;
@@ -146,11 +154,13 @@ fn erroring_worker_flushes_batched_reports_and_finishes() {
 }
 
 /// Disconnect release disabled: the passive paper baseline.  The killed
-/// worker's batch stays stranded in flight; nothing is served until the
-/// (frozen) redistribution windows elapse.
+/// worker's batch stays stranded in flight, nothing is served while the
+/// virtual clock sits inside the redistribution window — and the moment
+/// it reaches VCT + `requeue_after_ms`, the stranded batch re-enters
+/// dispatch (the §2.1.2 window expiry, end to end over a connection).
 #[test]
 fn disabled_disconnect_release_preserves_passive_stranding() {
-    let (fw, _) = prime_fw(2);
+    let (fw, _, vclock) = prime_fw(2);
     let dist = Distributor::new_with(
         &fw,
         DistributorConfig { release_on_disconnect: false, ..Default::default() },
@@ -185,6 +195,27 @@ fn disabled_disconnect_release_preserves_passive_stranding() {
         matches!(probe.recv().unwrap(), Message::NoTicket { .. }),
         "stranded tickets must wait out the window"
     );
+
+    // One tick before the window: still stranded.
+    let window = StoreConfig::default().requeue_after_ms;
+    vclock.advance_to(window - 1);
+    probe.send(&Message::TicketRequest).unwrap();
+    assert!(
+        matches!(probe.recv().unwrap(), Message::NoTicket { .. }),
+        "the window must not expire a tick early"
+    );
+
+    // Exactly at VCT + requeue_after_ms the whole batch re-dispatches.
+    vclock.advance_to(window);
+    probe.send(&Message::TicketBatchRequest { max: 4 }).unwrap();
+    match probe.recv().unwrap() {
+        Message::Tickets { tickets } => {
+            assert_eq!(tickets.len(), 2, "window expiry re-dispatches the stranded batch")
+        }
+        m => panic!("expected the stranded batch back, got {m:?}"),
+    }
+    let p = fw.store().progress(None);
+    assert_eq!(p.redistributions, 2, "each stranded ticket redistributed once: {p:?}");
     probe.send(&Message::Shutdown).unwrap();
 }
 
@@ -204,10 +235,10 @@ impl TaskDef for SlowTask {
 /// A worker stopped mid-batch strands nothing: finished work is
 /// flushed, the unexecuted queue is explicitly released (and whatever
 /// the server still tracked is released on disconnect), so no ticket
-/// is left in flight against the frozen windows.
+/// is left in flight against windows that never elapse.
 #[test]
 fn stopped_worker_leaves_nothing_in_flight() {
-    let fw = Framework::builder().store_config(frozen_cfg()).build();
+    let (fw, _vclock) = pinned_fw();
     let task = fw.create_task(Arc::new(SlowTask));
     task.calculate((0..16).map(|i| Value::num(i as f64)).collect());
     let dist = Distributor::new(&fw);

@@ -566,6 +566,36 @@ fn link_transfer_monotone_in_bytes_and_latency() {
     });
 }
 
+/// The churn soak is a pure function of its config: running the same
+/// seeded soak twice yields byte-identical event traces and metrics
+/// JSON — the property `sim` stakes its reproducibility claim on
+/// (every dispatch decision, vanish, latency sample and histogram
+/// bucket replays exactly).
+#[test]
+fn churn_soak_same_seed_same_bytes() {
+    use sashimi::sim::{run_soak, SoakConfig};
+
+    check("soak-determinism", 3, |rng| {
+        let mut cfg = SoakConfig::new(32 + rng.gen_range(32) as usize, rng.next_u64());
+        cfg.duration_ms = 60_000;
+        cfg.mean_lifetime_ms = 5_000;
+        // Half the reps soak the passive window-expiry baseline.
+        cfg.release_on_disconnect = rng.gen_range(2) == 0;
+        let a = run_soak(&cfg).map_err(|e| e.to_string())?;
+        let b = run_soak(&cfg).map_err(|e| e.to_string())?;
+        prop_assert!(
+            a.metrics_json == b.metrics_json,
+            "metrics diverge for {cfg:?}:\n  {}\n  {}",
+            a.metrics_json,
+            b.metrics_json
+        );
+        prop_assert!(a.trace == b.trace, "event traces diverge for {cfg:?}");
+        prop_assert!(a.done == a.total, "soak lost tickets: {}/{}", a.done, a.total);
+        prop_assert!(a.ghosts_after_close == 0, "soak leaked ghost clients");
+        Ok(())
+    });
+}
+
 /// Tensor wire format: LE bytes round-trip through the transport codec.
 #[test]
 fn tensor_json_wire_roundtrip() {
