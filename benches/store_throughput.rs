@@ -30,6 +30,14 @@
 //! k ∈ {1, 16} — the cost of handing a disconnecting client's batch
 //! back, on the raw indexed store and on the WAL (one `ReleaseBatch`
 //! frame per batch; EXPERIMENTS.md §Release).
+//!
+//! A fifth table is the sharded-dispatch contention sweep (ISSUE 7):
+//! clients ∈ {1, 2, 4, 8, 16} × dispatch shards ∈ {1, 4, 16} at 1M live
+//! tickets, running `next_tickets(16)`/`release_batch` cycles — the
+//! many-frontend pattern the per-shard ready/fallback indexes with
+//! work-stealing exist for.  Acceptance floor: ≥ 4× throughput at
+//! 16 clients / 16 shards vs the 1-shard single-mutex configuration
+//! (EXPERIMENTS.md §Shard).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -186,6 +194,7 @@ fn wal_store(sync: SyncPolicy, tag: &str) -> (WalStore, std::path::PathBuf) {
         // pure append/fsync overhead (checkpoint cost amortises over
         // `checkpoint_every`, far beyond a 700 ms window).
         checkpoint_every: 0,
+        dispatch_shards: 1,
     };
     (WalStore::open(&dir, quiet_cfg(), wal_cfg).expect("bench WAL store"), dir)
 }
@@ -364,5 +373,54 @@ fn main() {
         "Release path (ISSUE 5): what a disconnecting client's batch costs to hand back — \
          one dispatch-mutex pass plus (durable backend) one ReleaseBatch frame per batch. \
          Record the table in EXPERIMENTS.md §Release.\n"
+    );
+
+    // ---- Shard sweep: contention scaling of the dispatch core ----
+    let shard_n: usize = if quick { 50_000 } else { 1_000_000 };
+    let shard_clients: Vec<usize> = if quick { vec![1, 4, 16] } else { vec![1, 2, 4, 8, 16] };
+    let shard_counts = [1usize, 4, 16];
+    let mut shard_table = Table::new(
+        "Sharded dispatch contention sweep (tickets/sec, next_tickets(16)+release_batch cycles)",
+        &["live tickets", "clients", "shards", "t/s", "steals", "vs 1 shard"],
+    );
+    // (1-shard, 16-shard) throughput at the largest client count.
+    let mut accept = (0.0f64, 0.0f64);
+    for &c in &shard_clients {
+        let mut baseline = 0.0f64;
+        for &s in &shard_counts {
+            let store: Arc<dyn Scheduler> =
+                Arc::new(IndexedStore::with_dispatch_shards(quiet_cfg(), s));
+            fill(store.as_ref(), shard_n);
+            let tps = measure_release(Arc::clone(&store), c, 16, window_ms);
+            let stats = store.stats();
+            if s == 1 {
+                baseline = tps;
+            }
+            if c == *shard_clients.last().unwrap() {
+                if s == 1 {
+                    accept.0 = tps;
+                }
+                if s == 16 {
+                    accept.1 = tps;
+                }
+            }
+            shard_table.row(&[
+                shard_n.to_string(),
+                c.to_string(),
+                s.to_string(),
+                format!("{tps:.0}"),
+                stats.steal_successes.to_string(),
+                format!("{:.1}x", tps / baseline.max(1e-9)),
+            ]);
+            drop(store);
+        }
+    }
+    shard_table.print();
+    println!(
+        "Acceptance floor (ISSUE 7): {:.1}x at {} clients / 16 shards vs 1 shard (floor 4x) — \
+         per-shard VCT indexes with work-stealing keep client threads off a global dispatch \
+         mutex.  Record the table in EXPERIMENTS.md §Shard.\n",
+        accept.1 / accept.0.max(1e-9),
+        shard_clients.last().unwrap()
     );
 }

@@ -26,6 +26,16 @@ ticket, and — per the group-commit acknowledgement fix — one fsync per
 Python call overhead, not the Rust store's lock amortisation —
 regenerate natively with `make bench-store`.
 
+A fourth table models the ISSUE 7 sharded dispatch core: clients x
+dispatch shards, each shard a VCT heap under its own lock with
+try-lock work-stealing, driven by real threads doing
+next_tickets(16)/release_batch cycles.  The GIL serialises the heap
+work itself, so the Python *throughput* column barely moves with the
+shard count; the structural quantity that transfers is the home-lock
+collision rate (how often a dispatching thread found its shard's
+mutex already held), which the per-shard split drives toward zero —
+natively that is the serialisation the >=4x acceptance floor removes.
+
 Usage: python bench_store_model.py [--quick]
 """
 
@@ -34,6 +44,7 @@ import os
 import struct
 import sys
 import tempfile
+import threading
 import time
 import zlib
 
@@ -223,6 +234,110 @@ class BatchDrainModel:
             self.f.close()
 
 
+class ShardedModel:
+    """S dispatch shards (S a power of two), each a VCT heap under its
+    own lock, tickets routed by ``tid & (S - 1)`` — the PR 7 sharded
+    core, with the same blocking-home / try-lock-sibling steal scan as
+    rust/src/store/sched.rs."""
+
+    def __init__(self, n, shards):
+        t = now_ms()
+        self.nshards = shards
+        self.locks = [threading.Lock() for _ in range(shards)]
+        self.meta = [[t, 0, None, 0] for _ in range(n)]  # created, status, last_dist, gen
+        self.ready = [[] for _ in range(shards)]
+        for tid in range(n):
+            self.ready[tid & (shards - 1)].append((t, tid, 0))
+        for h in self.ready:
+            heapq.heapify(h)
+        # Counter updates are read-modify-write races between threads,
+        # but the GIL makes `+=` on an int close enough for a model.
+        self.collisions = 0
+        self.steals = 0
+
+    def _pop_from(self, shard, now, k):
+        """Caller holds locks[shard].  Same lazy invalidation as
+        IndexedModel, per shard."""
+        out = []
+        heap = self.ready[shard]
+        while heap and len(out) < k:
+            vct, tid, gen = heap[0]
+            m = self.meta[tid]
+            if m[1] == 2 or gen != m[3]:
+                heapq.heappop(heap)
+                continue
+            if vct > now:
+                break
+            heapq.heappop(heap)
+            m[1] = 1
+            m[2] = now
+            m[3] += 1
+            out.append(tid)
+        return out
+
+    def next_tickets(self, client, now, k):
+        home = hash(client) & (self.nshards - 1)
+        out = []
+        for i in range(self.nshards):
+            if len(out) >= k:
+                break
+            shard = (home + i) % self.nshards
+            lock = self.locks[shard]
+            if i == 0:
+                if not lock.acquire(blocking=False):
+                    self.collisions += 1  # home mutex was held: the contention
+                    lock.acquire()  # ...the 1-shard config serialises on
+            elif not lock.acquire(blocking=False):
+                continue  # steal never blocks
+            try:
+                got = self._pop_from(shard, now, k - len(out))
+            finally:
+                lock.release()
+            if got and i > 0:
+                self.steals += 1
+            out.extend(got)
+        return out
+
+    def release_batch(self, tids):
+        by_shard = {}
+        for tid in tids:
+            by_shard.setdefault(tid & (self.nshards - 1), []).append(tid)
+        for shard, ids in sorted(by_shard.items()):
+            with self.locks[shard]:
+                for tid in ids:
+                    m = self.meta[tid]
+                    if m[1] == 1:
+                        m[1] = 0
+                        m[2] = None
+                        m[3] += 1
+                        heapq.heappush(self.ready[shard], (m[0], tid, m[3]))
+
+
+def measure_sharded(store, clients, window_s=0.7):
+    """`clients` threads each run next_tickets(16) -> release_batch
+    cycles for the window; returns tickets dispatched per second."""
+    stop = [False]
+    counts = [0] * clients
+
+    def run(w):
+        name = f"c{w}"
+        while not stop[0]:
+            batch = store.next_tickets(name, now_ms(), 16)
+            if batch:
+                store.release_batch(batch)
+                counts[w] += len(batch)
+
+    threads = [threading.Thread(target=run, args=(w,)) for w in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(window_s)
+    stop[0] = True
+    for t in threads:
+        t.join()
+    return sum(counts) / (time.perf_counter() - t0)
+
+
 def measure(store, window_s=1.0):
     t0 = time.perf_counter()
     ops = 0
@@ -282,6 +397,20 @@ def main():
                 if baseline is None:
                     baseline = tps
                 print(f"{label:>12} {k:>4} {tps:>12.0f} {tps / baseline:>7.1f}x")
+
+    # Sharded dispatch contention sweep (ISSUE 7).  Throughput is
+    # GIL-bound in Python; the collision column is the structural
+    # quantity (see module docstring).
+    n = 20_000 if quick else 100_000
+    client_counts = [1, 4, 16] if quick else [1, 2, 4, 8, 16]
+    print()
+    print(f"{'clients':>8} {'shards':>7} {'t/s':>12} {'collisions':>11} {'steals':>7}")
+    for clients in client_counts:
+        for shards in (1, 4, 16):
+            store = ShardedModel(n, shards)
+            tps = measure_sharded(store, clients)
+            print(f"{clients:>8} {shards:>7} {tps:>12.0f} "
+                  f"{store.collisions:>11} {store.steals:>7}")
 
 
 if __name__ == "__main__":

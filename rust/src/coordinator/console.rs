@@ -12,7 +12,7 @@
 //! per-client table is still available on demand via [`render_clients`].
 
 use crate::coordinator::distributor::Distributor;
-use crate::store::{Progress, Scheduler as _, TicketId};
+use crate::store::{Progress, SchedStats, Scheduler as _, TicketId};
 
 /// How many drained error reports one render prints before eliding.
 const MAX_ERRORS_SHOWN: usize = 5;
@@ -38,6 +38,10 @@ pub struct Snapshot {
     /// console is the buffer's consumer, like the paper's error list);
     /// the cumulative `progress.errors` counter is unaffected.
     pub recent_errors: Vec<(TicketId, String)>,
+    /// Dispatch-contention counters from [`Scheduler::stats`]
+    /// (`dispatch_shards == 0` means the backend is uninstrumented and
+    /// the line is omitted from the render).
+    pub sched: SchedStats,
 }
 
 pub fn snapshot(d: &Distributor) -> Snapshot {
@@ -60,6 +64,7 @@ pub fn snapshot(d: &Distributor) -> Snapshot {
         errors: d.stats.errors_reported.load(Ordering::Relaxed),
         released: d.stats.tickets_released.load(Ordering::Relaxed),
         recent_errors,
+        sched: d.store().stats(),
     }
 }
 
@@ -80,6 +85,17 @@ pub fn render(s: &Snapshot) -> String {
         "distributor: {} clients ({} conns ended) | {} served | {} accepted | {} duplicates | {} errors | {} released\n",
         s.clients, s.gone, s.tickets_served, s.results_accepted, s.duplicates, s.errors, s.released
     ));
+    if s.sched.dispatch_shards > 0 {
+        out.push_str(&format!(
+            "dispatch: {} shards | {} lock acquisitions | {} steals ({} attempts) | ready depth {} (max {})\n",
+            s.sched.dispatch_shards,
+            s.sched.dispatch_locks,
+            s.sched.steal_successes,
+            s.sched.steal_attempts,
+            s.sched.shard_depths.iter().sum::<usize>(),
+            s.sched.shard_depths.iter().max().copied().unwrap_or(0),
+        ));
+    }
     for (id, report) in s.recent_errors.iter().take(MAX_ERRORS_SHOWN) {
         let first_line = report.lines().next().unwrap_or("");
         out.push_str(&format!("  error {id:?}: {first_line}\n"));
@@ -130,12 +146,22 @@ mod tests {
             errors: 1,
             released: 2,
             recent_errors: vec![(TicketId(4), "TypeError: x is undefined\nat task.run".into())],
+            sched: SchedStats {
+                dispatch_shards: 4,
+                dispatch_locks: 17,
+                steal_attempts: 6,
+                steal_successes: 2,
+                shard_depths: vec![1, 0, 2, 0],
+            },
         };
         let text = render(&s);
         assert!(text.contains("10 total"));
         assert!(text.contains("5 executed"));
         assert!(text.contains("3 clients (1 conns ended)"));
         assert!(text.contains("2 released"));
+        assert!(text.contains("4 shards"));
+        assert!(text.contains("2 steals (6 attempts)"));
+        assert!(text.contains("ready depth 3 (max 2)"));
         assert!(text.contains("TypeError: x is undefined"));
         assert!(!text.contains("at task.run"), "only the first line of a report renders");
     }
@@ -152,10 +178,12 @@ mod tests {
             errors: 9,
             released: 0,
             recent_errors: (0..9).map(|i| (TicketId(i), format!("e{i}"))).collect(),
+            sched: SchedStats::default(),
         };
         let text = render(&s);
         assert!(text.contains("e4"));
         assert!(!text.contains("e5"), "reports beyond the cap elide");
         assert!(text.contains("(+4 more"));
+        assert!(!text.contains("dispatch:"), "uninstrumented backends render no dispatch line");
     }
 }

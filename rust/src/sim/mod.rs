@@ -91,6 +91,10 @@ pub struct SoakConfig {
     /// Ticket-store redistribution policy (paper defaults: 5 min
     /// window, 10 s minimum interval).
     pub store_cfg: StoreConfig,
+    /// Dispatch shards of the coordinator's store (each with its own
+    /// WAL stream).  `1` — the default, and what every preset uses —
+    /// keeps the soak's store byte-identical to the pre-sharding rig.
+    pub dispatch_shards: usize,
 }
 
 impl SoakConfig {
@@ -109,6 +113,7 @@ impl SoakConfig {
             reload_percent: 85,
             error_permille: 5,
             store_cfg: StoreConfig::default(),
+            dispatch_shards: 1,
         }
     }
 
@@ -342,7 +347,11 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
     // -- Coordinator: real store, real registry, real distributor, all
     //    on one shared virtual clock.
     let vclock = Arc::new(VirtualClock::new());
-    let wal_cfg = WalConfig { sync: SyncPolicy::OsOnly, ..WalConfig::default() };
+    let wal_cfg = WalConfig {
+        sync: SyncPolicy::OsOnly,
+        dispatch_shards: cfg.dispatch_shards,
+        ..WalConfig::default()
+    };
     let store: Arc<WalStore> = Arc::new(WalStore::open(wal_dir, cfg.store_cfg.clone(), wal_cfg)?);
     let store_dyn: Arc<dyn Scheduler> = Arc::clone(&store);
 
@@ -631,6 +640,7 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
     let ghosts_after_close = dist.client_count();
 
     let p = store_dyn.progress(None);
+    let sched = store_dyn.stats();
     let sweep_best = if cfg.sweep_grid {
         let results = store_dyn.wait_results(sweep_task);
         let (lr, reg, _loss) = sweep::best(&results)?;
@@ -715,6 +725,16 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
                 ("rescues", Value::num(rescues as f64)),
                 ("idle_polls", Value::num(idle_polls as f64)),
                 ("faults_injected", Value::num(errors_injected as f64)),
+            ]),
+        ),
+        (
+            "sched",
+            Value::obj(vec![
+                ("dispatch_shards", Value::num(sched.dispatch_shards as f64)),
+                ("dispatch_locks", Value::num(sched.dispatch_locks as f64)),
+                ("steal_attempts", Value::num(sched.steal_attempts as f64)),
+                ("steal_successes", Value::num(sched.steal_successes as f64)),
+                ("ready_depth", Value::num(sched.shard_depths.iter().sum::<usize>() as f64)),
             ]),
         ),
         ("latency_ms", hist_json(&latency)),

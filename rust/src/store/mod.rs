@@ -135,6 +135,26 @@ pub struct Progress {
     pub duplicate_results: u64,
 }
 
+/// Contention observability for the dispatch core
+/// ([`Scheduler::stats`]): how hard the dispatch mutex(es) are being
+/// hit and how often work-stealing fires.  Surfaced on the console
+/// snapshot and in the churn-soak metrics JSON.  Backends without a
+/// sharded dispatch core return the default (all zeros,
+/// `dispatch_shards == 0` meaning "not instrumented").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedStats {
+    /// Number of dispatch shards (0 = backend not instrumented).
+    pub dispatch_shards: usize,
+    /// Cumulative dispatch-mutex acquisitions on the dispatch paths.
+    pub dispatch_locks: u64,
+    /// Cumulative `try_lock` probes on non-home shards.
+    pub steal_attempts: u64,
+    /// Steal probes that actually yielded at least one ticket.
+    pub steal_successes: u64,
+    /// Current ready-index depth per shard (live, non-done tickets).
+    pub shard_depths: Vec<usize>,
+}
+
 /// The scheduling-core boundary consumed by the coordinator
 /// (`distributor`/`framework`/`console`), the §4 trainers (`dist`), and
 /// the worker tests: everything the paper's MySQL table plus its SELECT
@@ -193,6 +213,23 @@ pub struct Progress {
 /// * **Ordered collection** — [`wait_results`](Self::wait_results)
 ///   returns accepted results sorted by ticket index (id-tie-broken),
 ///   regardless of completion order.
+///
+/// # Sharded-dispatch relaxation
+///
+/// A backend may partition its dispatch core into S shards
+/// ([`IndexedStore::with_dispatch_shards`]).  With S = 1 (every
+/// default constructor) all of the above holds globally, bit-for-bit.
+/// With S > 1 the *ordering* invariants (VCT dispatch order, the
+/// min-redistribute fallback, batch-is-a-prefix) hold **per shard**:
+/// the global dispatch sequence is an interleaving of S sequences,
+/// each individually exact.  Every *per-ticket* invariant
+/// (at-least-once, no concurrent duplicate dispatch, first result
+/// wins, error/release requeue semantics, conservation of counts) is
+/// unchanged, because each ticket lives in exactly one shard and all
+/// its transitions happen under that shard's mutex.
+/// [`drain_errors`](Self::drain_errors) order becomes shard-major.
+/// The shard-oracle differential suite (`rust/tests/properties.rs`)
+/// pins exactly this relaxation; DESIGN.md §2.6 derives it.
 pub trait Scheduler: Send + Sync {
     fn config(&self) -> &StoreConfig;
 
@@ -308,6 +345,13 @@ pub trait Scheduler: Send + Sync {
     /// Take the buffered error reports, leaving the buffer empty.  The
     /// cumulative [`Scheduler::error_count`] is unaffected.
     fn drain_errors(&self) -> Vec<(TicketId, String)>;
+
+    /// Dispatch-contention counters ([`SchedStats`]).  The default is
+    /// the uninstrumented answer (`dispatch_shards == 0`); sharded
+    /// backends override.
+    fn stats(&self) -> SchedStats {
+        SchedStats::default()
+    }
 
     /// Block until every ticket of `task` is done (condvar, no polling),
     /// then return results ordered by ticket index — the framework's
@@ -604,6 +648,25 @@ mod tests {
                     // order, oldest id first.
                     assert_eq!(s.next_ticket("d", 2).unwrap().id, ids[0]);
                     assert!(s.release_batch(&[]).is_empty());
+                }
+
+                /// Weak cross-backend contract for [`Scheduler::stats`]:
+                /// instrumented backends report one depth per shard and
+                /// never more steal successes than attempts;
+                /// uninstrumented ones report the zero default.
+                #[test]
+                fn stats_are_internally_consistent() {
+                    let s = store(1000, 100);
+                    s.create_tickets(TaskId(1), "t", args(4), 0);
+                    let _ = s.next_tickets("c", 1, 4);
+                    let st = s.stats();
+                    assert!(st.steal_successes <= st.steal_attempts);
+                    if st.dispatch_shards > 0 {
+                        assert_eq!(st.shard_depths.len(), st.dispatch_shards);
+                        assert!(st.dispatch_locks > 0, "dispatch acquired a shard lock");
+                    } else {
+                        assert_eq!(st, Default::default());
+                    }
                 }
 
                 #[test]

@@ -6,16 +6,26 @@
 //! the scan with indexes, and splits the state three ways so the hot
 //! paths stop contending:
 //!
-//! * **Dispatch indexes** (one small mutex, [`SchedState`]): a
-//!   VCT-ordered ready set `BTreeSet<(vct, id)>` whose first element is
-//!   the `SELECT ... ORDER BY vct LIMIT 1` answer in O(log n), plus a
+//! * **Dispatch shards** (S small mutexes, [`ShardState`], S a power of
+//!   two, default 1): each shard owns a VCT-ordered ready set
+//!   `BTreeSet<(vct, id)>` whose first element is the
+//!   `SELECT ... ORDER BY vct LIMIT 1` answer in O(log n), a
 //!   last-distributed fallback set `BTreeSet<(last_dist, id)>` for the
-//!   paper's min-redistribute rule, plus per-ticket scheduling metadata
-//!   (status/clock fields only — no payloads).  Done tickets are evicted
-//!   from both sets, so dispatch cost tracks the *live* ticket count.
+//!   paper's min-redistribute rule, the per-ticket scheduling metadata
+//!   (status/clock fields only — no payloads) for the tickets hashed to
+//!   it (`id & (S-1)`), and its slice of the global counters plus the
+//!   buffered error reports.  Done tickets are evicted from both sets,
+//!   so dispatch cost tracks the *live* ticket count.  A dispatching
+//!   client locks its *home* shard (hashed from the client name) and
+//!   **work-steals** from sibling shards under `try_lock` when the home
+//!   shard drains — one shard mutex held at a time, so stealing can
+//!   never deadlock (see DESIGN.md §2.6 for the ordering relaxation
+//!   this buys and what stays exact).
 //! * **Ticket bodies** (N lock stripes keyed by `TicketId`): task name,
 //!   payload, creation time.  Payload clones for the wire happen under a
-//!   stripe read lock, never under the dispatch mutex.
+//!   stripe read lock, never under a dispatch mutex.  Stripes and
+//!   dispatch shards are independent dimensions: stripes spread *memory*
+//!   traffic, shards spread the *decision* serialisation.
 //! * **Per-task ledgers** (one mutex + condvar per task): incrementally
 //!   maintained total/pending/in-flight/done counters (`progress` and
 //!   `is_task_done` are O(1)), the accepted results, and the streaming
@@ -26,30 +36,50 @@
 //!   only creation and first-time stream subscription write to);
 //!   read-only polls of never-created tasks allocate nothing.
 //!
-//! Lock discipline: no two of {dispatch mutex, stripe lock, ledger
-//! mutex} are ever held at once, so there is no lock-order to violate.
-//! Consequence: per-task ledger counters may lag a dispatch decision by
-//! a few instructions; counters are kept as signed ints and clamped at
-//! the reporting edge, and every quiescent value is exact (asserted by
-//! the differential property suite against [`NaiveStore`]).
+//! With a single dispatch shard (the [`IndexedStore::new`] default) the
+//! behaviour is bit-for-bit the pre-sharding store: one mutex, global
+//! VCT order, and the differential suites against [`NaiveStore`] assert
+//! exact equality.  With S > 1 ([`IndexedStore::sharded`] /
+//! [`IndexedStore::with_dispatch_shards`]) the §2.1.2 policy holds
+//! *per shard* — the global dispatch sequence is an interleaving of S
+//! exact per-shard sequences (pinned by the shard-oracle differential
+//! in `rust/tests/properties.rs`), while per-ticket guarantees
+//! (at-least-once, no concurrent duplicate dispatch, redistribution
+//! windows, first-result-wins) are unchanged because every ticket lives
+//! in exactly one shard.
+//!
+//! Lock discipline: no two of {dispatch-shard mutex, stripe lock,
+//! ledger mutex} are ever held at once, and no two dispatch-shard
+//! mutexes are ever held at once (batch paths drop the current shard's
+//! guard before locking the next; stealing uses `try_lock`), so there
+//! is no lock order to violate.  Consequence: per-task ledger counters
+//! may lag a dispatch decision by a few instructions; counters are kept
+//! as signed ints and clamped at the reporting edge, and every
+//! quiescent value is exact (asserted by the differential property
+//! suite against [`NaiveStore`]).
 //!
 //! [`NaiveStore`]: super::NaiveStore
 
 use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::store::{
-    deadline_after, wait_deadline, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
-    TicketStatus,
+    deadline_after, wait_deadline, Progress, SchedStats, Scheduler, StoreConfig, TaskId, Ticket,
+    TicketId, TicketStatus,
 };
 use crate::util::json::Value;
 
 /// Default number of lock stripes for the ticket-body map.
 pub const DEFAULT_SHARDS: usize = 16;
+
+/// Ceiling for the auto-sized dispatch-shard count
+/// ([`IndexedStore::sharded`]): beyond this the per-shard ready sets
+/// get too shallow to amortise the steal scans.
+const MAX_DISPATCH_SHARDS: usize = 64;
 
 /// Scheduling metadata — everything `next_ticket` ordering needs,
 /// deliberately payload-free so the dispatch mutex guards only small
@@ -62,22 +92,30 @@ struct Meta {
     distribution_count: u32,
 }
 
+/// One dispatch shard: the §2.1.2 indexes and counters for the tickets
+/// whose `id & (S-1)` hashes here, plus the shard's error-report queue
+/// (per-shard so error reports never contend store-wide — ISSUE 7).
 #[derive(Default)]
-struct SchedState {
+struct ShardState {
     meta: HashMap<u64, Meta>,
-    /// (virtual created time, id) for every non-done ticket; the first
-    /// element whose VCT has arrived is the dispatch pick.
+    /// (virtual created time, id) for every non-done ticket of the
+    /// shard; the first element whose VCT has arrived is the dispatch
+    /// pick.
     ready: BTreeSet<(u64, u64)>,
     /// (last distribution time or 0, id) for every non-done ticket; the
     /// min-redistribute fallback ordering.
     fallback: BTreeSet<(u64, u64)>,
-    // Global counters, maintained with the status transitions.
+    // Per-shard counters, maintained with the status transitions;
+    // `progress(None)` sums them across shards.
     total: usize,
     pending: usize,
     in_flight: usize,
     done: usize,
     redistributions: u64,
     duplicate_results: u64,
+    /// Buffered error reports for this shard's tickets, oldest first;
+    /// drained shard-major by [`Scheduler::drain_errors`].
+    errors: Vec<(TicketId, String)>,
 }
 
 /// Immutable ticket body; mutable scheduling state lives in [`Meta`],
@@ -92,7 +130,6 @@ struct StoredTicket {
     /// (dispatch/complete/requeue) never touch the ledger registry.
     ledger: Arc<TaskLedger>,
 }
-
 
 #[derive(Default)]
 struct LedgerState {
@@ -158,11 +195,17 @@ pub(crate) struct StoreSnapshot {
     pub(crate) redistributions: u64,
     pub(crate) duplicate_results: u64,
     pub(crate) errors_reported: u64,
+    /// Dispatch-shard count of the snapshotted store; restore rebuilds
+    /// with the same count so the per-shard VCT sequences (and the
+    /// shard-major error-buffer order) continue exactly.
+    pub(crate) dispatch_shards: usize,
     /// Sorted by id, so snapshots of identical stores are byte-identical.
     pub(crate) tickets: Vec<TicketSnapshot>,
     /// Sorted by task id.
     pub(crate) ledgers: Vec<LedgerSnapshot>,
-    /// The buffered (undrained) error reports, oldest first.
+    /// The buffered (undrained) error reports, shard-major (shard 0's
+    /// queue first), oldest first within a shard — the exact
+    /// [`Scheduler::drain_errors`] order.
     pub(crate) errors: Vec<(TicketId, String)>,
 }
 
@@ -171,33 +214,110 @@ pub(crate) struct StoreSnapshot {
 pub struct IndexedStore {
     cfg: StoreConfig,
     next_id: AtomicU64,
-    sched: Mutex<SchedState>,
+    /// The dispatch shards; length is a power of two, ticket `id` maps
+    /// to shard `id & shard_mask`.
+    dispatch: Vec<Mutex<ShardState>>,
+    shard_mask: u64,
     shards: Vec<RwLock<HashMap<u64, StoredTicket>>>,
     ledgers: RwLock<HashMap<TaskId, Arc<TaskLedger>>>,
-    errors: Mutex<Vec<(TicketId, String)>>,
     /// Cumulative reports ever recorded (drain-proof, shown on console).
     errors_reported: AtomicUsize,
+    // Contention observability (ISSUE 7): surfaced by `stats()`.
+    dispatch_locks: AtomicU64,
+    steal_attempts: AtomicU64,
+    steal_successes: AtomicU64,
 }
 
 impl IndexedStore {
-    /// Store with the default [`DEFAULT_SHARDS`] ticket-body stripes.
+    /// Store with the default [`DEFAULT_SHARDS`] ticket-body stripes and
+    /// a **single** dispatch shard — the exact single-queue §2.1.2
+    /// semantics every existing consumer and differential suite pins.
     pub fn new(cfg: StoreConfig) -> Self {
-        Self::with_shards(cfg, DEFAULT_SHARDS)
+        Self::with_layout(cfg, DEFAULT_SHARDS, 1)
     }
 
-    /// Store with an explicit stripe count (property tests sweep 1..8 to
-    /// prove striping never changes observable behaviour).
+    /// Store with an explicit body-stripe count (property tests sweep
+    /// 1..8 to prove striping never changes observable behaviour) and a
+    /// single dispatch shard.
     pub fn with_shards(cfg: StoreConfig, n_shards: usize) -> Self {
+        Self::with_layout(cfg, n_shards, 1)
+    }
+
+    /// Sharded-dispatch store: default stripes, explicit dispatch-shard
+    /// count (rounded up to a power of two, min 1).
+    pub fn with_dispatch_shards(cfg: StoreConfig, dispatch_shards: usize) -> Self {
+        Self::with_layout(cfg, DEFAULT_SHARDS, dispatch_shards)
+    }
+
+    /// Sharded-dispatch store auto-sized to the host: dispatch-shard
+    /// count = available parallelism rounded up to a power of two,
+    /// capped at [`MAX_DISPATCH_SHARDS`].
+    pub fn sharded(cfg: StoreConfig) -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        Self::with_layout(cfg, DEFAULT_SHARDS, cores.min(MAX_DISPATCH_SHARDS))
+    }
+
+    /// The fully explicit constructor: `n_shards` body stripes (min 1)
+    /// × `dispatch_shards` dispatch shards (rounded up to a power of
+    /// two so the id→shard map is a mask, min 1).
+    pub fn with_layout(cfg: StoreConfig, n_shards: usize, dispatch_shards: usize) -> Self {
         let n = n_shards.max(1);
+        let d = dispatch_shards.max(1).next_power_of_two();
         Self {
             cfg,
             next_id: AtomicU64::new(0),
-            sched: Mutex::new(SchedState::default()),
+            dispatch: (0..d).map(|_| Mutex::new(ShardState::default())).collect(),
+            shard_mask: (d - 1) as u64,
             shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
             ledgers: RwLock::new(HashMap::new()),
-            errors: Mutex::new(Vec::new()),
             errors_reported: AtomicUsize::new(0),
+            dispatch_locks: AtomicU64::new(0),
+            steal_attempts: AtomicU64::new(0),
+            steal_successes: AtomicU64::new(0),
         }
+    }
+
+    /// Number of dispatch shards (a power of two).
+    pub fn dispatch_shard_count(&self) -> usize {
+        self.dispatch.len()
+    }
+
+    /// Dispatch shard owning ticket `id`.
+    pub(crate) fn dshard(&self, id: u64) -> usize {
+        (id & self.shard_mask) as usize
+    }
+
+    /// Reserve `n` consecutive ticket ids without creating anything.
+    /// The sharded WAL allocates first (so it knows which per-shard log
+    /// streams a create touches and can lock them before mutating),
+    /// then materialises via
+    /// [`create_tickets_exact`](Self::create_tickets_exact).
+    pub(crate) fn allocate_ids(&self, n: u64) -> u64 {
+        self.next_id.fetch_add(n, Ordering::SeqCst)
+    }
+
+    /// Count a work-steal probe of a non-home shard (the sharded WAL
+    /// runs its own steal scan over the log streams, so it reports
+    /// through these instead of the in-store scan counters).
+    pub(crate) fn note_steal_attempt(&self) {
+        self.steal_attempts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a steal probe that actually yielded work.
+    pub(crate) fn note_steal_success(&self) {
+        self.steal_successes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A client's home shard (FNV-1a over the client name): the shard
+    /// its dispatch scan starts from, so distinct clients spread their
+    /// lock pressure instead of convoying on shard 0.
+    pub(crate) fn home_shard(&self, client: &str) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in client.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h & self.shard_mask) as usize
     }
 
     fn shard(&self, id: u64) -> &RwLock<HashMap<u64, StoredTicket>> {
@@ -221,10 +341,10 @@ impl IndexedStore {
         self.ledgers.read().unwrap().get(&task).cloned()
     }
 
-    /// The dispatch decision (under the sched mutex): same pick as the
-    /// naive scan, from the index tops instead.
-    fn pick(&self, s: &SchedState, now_ms: u64) -> Option<u64> {
-        // Primary: the global (vct, id) minimum, if its VCT has arrived.
+    /// The dispatch decision (under one shard's mutex): same pick as the
+    /// naive scan, from the shard's index tops instead.
+    fn pick(&self, s: &ShardState, now_ms: u64) -> Option<u64> {
+        // Primary: the shard's (vct, id) minimum, if its VCT has arrived.
         if let Some(&(vct, id)) = s.ready.iter().next() {
             if vct <= now_ms {
                 return Some(id);
@@ -252,11 +372,11 @@ impl IndexedStore {
     }
 
     /// One dispatch decision + index/counter transition under the
-    /// already-held sched guard: the shared core of
+    /// already-held shard guard: the shared core of
     /// [`Scheduler::next_ticket`] and the batched
     /// [`Scheduler::next_tickets`].  Returns `(id, distribution_count,
     /// was_pending)`.
-    fn dispatch_one(&self, s: &mut SchedState, now_ms: u64) -> Option<(u64, u32, bool)> {
+    fn dispatch_one(&self, s: &mut ShardState, now_ms: u64) -> Option<(u64, u32, bool)> {
         let id = self.pick(s, now_ms)?;
         let m = s.meta.get_mut(&id).expect("picked ticket has meta");
         let old_vct = vct_of(&self.cfg, m);
@@ -285,9 +405,9 @@ impl IndexedStore {
     /// explicit release — DESIGN.md §2.4 declares them identical, so
     /// they run the same code: if `id` is in flight, flip it to
     /// pending, reset its VCT to the creation time, re-arm both
-    /// indexes and move the global counters.  Caller holds the sched
-    /// mutex; returns whether the ticket moved.
-    fn requeue_one(&self, s: &mut SchedState, id: u64) -> bool {
+    /// indexes and move the shard counters.  Caller holds the owning
+    /// shard's mutex; returns whether the ticket moved.
+    fn requeue_one(&self, s: &mut ShardState, id: u64) -> bool {
         let info = match s.meta.get_mut(&id) {
             Some(m) if m.status == TicketStatus::InFlight => {
                 let old_vct = vct_of(&self.cfg, m);
@@ -312,9 +432,105 @@ impl IndexedStore {
         }
     }
 
+    /// Phases 2–3 of a batched dispatch, shared by
+    /// [`Scheduler::next_tickets`] and the per-shard
+    /// [`next_tickets_from_shard`](Self::next_tickets_from_shard):
+    /// clone the picked bodies (each stripe read-locked once) and move
+    /// the pending→in-flight ledger counters (one lock per task).  The
+    /// same id may appear twice (zero min-redistribute window re-issues
+    /// within the batch); each occurrence gets its own clone.
+    fn clone_dispatched(
+        &self,
+        picks: &[(u64, u32, bool)],
+        client: &str,
+        now_ms: u64,
+    ) -> Vec<Ticket> {
+        let n_stripes = self.shards.len();
+        let mut by_stripe: Vec<Vec<usize>> = vec![Vec::new(); n_stripes];
+        for (pos, &(id, _, _)) in picks.iter().enumerate() {
+            by_stripe[id as usize % n_stripes].push(pos);
+        }
+        let mut out: Vec<Option<Ticket>> = (0..picks.len()).map(|_| None).collect();
+        // Pending→in-flight ledger moves, grouped per task.
+        let mut moves: Vec<(TaskId, Arc<TaskLedger>, i64)> = Vec::new();
+        for (stripe, positions) in by_stripe.into_iter().enumerate() {
+            if positions.is_empty() {
+                continue;
+            }
+            let shard = self.shards[stripe].read().unwrap();
+            for pos in positions {
+                let (id, count, was_pending) = picks[pos];
+                let body = shard.get(&id).expect("indexed ticket has a stored body");
+                out[pos] = Some(Ticket {
+                    id: TicketId(id),
+                    task: body.task,
+                    task_name: body.task_name.to_string(),
+                    index: body.index,
+                    payload: body.payload.clone(),
+                    created_ms: body.created_ms,
+                    status: TicketStatus::InFlight,
+                    last_distributed_ms: Some(now_ms),
+                    distribution_count: count,
+                    result: None,
+                    assigned_to: Some(client.to_string()),
+                });
+                if was_pending {
+                    match moves.iter_mut().find(|(t, _, _)| *t == body.task) {
+                        Some((_, _, n)) => *n += 1,
+                        None => moves.push((body.task, Arc::clone(&body.ledger), 1)),
+                    }
+                }
+            }
+        }
+        for (_, ledger, n) in moves {
+            let mut st = ledger.state.lock().unwrap();
+            st.pending -= n;
+            st.in_flight += n;
+        }
+        out.into_iter().map(|t| t.expect("every pick got its body")).collect()
+    }
+
+    /// Batched dispatch restricted to one shard (blocking lock, no
+    /// stealing): up to `k` [`dispatch_one`](Self::dispatch_one)
+    /// decisions under that shard's mutex, then the shared body/ledger
+    /// phases.  `store::wal`'s sharded mode dispatches through this so
+    /// each decision run is logged to exactly one per-shard stream (and
+    /// replays it with the same call, cross-checking the picks).
+    pub(crate) fn next_tickets_from_shard(
+        &self,
+        shard: usize,
+        client: &str,
+        now_ms: u64,
+        k: usize,
+    ) -> Vec<Ticket> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let picks: Vec<(u64, u32, bool)> = {
+            let mut s = self.dispatch[shard].lock().unwrap();
+            self.dispatch_locks.fetch_add(1, Ordering::Relaxed);
+            let mut picks = Vec::with_capacity(k.min(64));
+            while picks.len() < k {
+                match self.dispatch_one(&mut s, now_ms) {
+                    Some(p) => picks.push(p),
+                    None => break,
+                }
+            }
+            picks
+        };
+        if picks.is_empty() {
+            return Vec::new();
+        }
+        self.clone_dispatched(&picks, client, now_ms)
+    }
+
     /// Apply a batch of completions in order with per-entry
-    /// [`Scheduler::complete`] semantics under a *single* dispatch-mutex
-    /// acquisition.  Returns the accepted/duplicate flag for every
+    /// [`Scheduler::complete`] semantics.  Consecutive same-shard
+    /// entries share one shard-mutex acquisition — with a single
+    /// dispatch shard that is one acquisition for the whole batch (the
+    /// PR 4 amortisation, unchanged); the held guard is dropped before
+    /// the next shard's mutex is taken, so no two shard locks are ever
+    /// held at once.  Returns the accepted/duplicate flag for every
     /// entry actually applied, plus the error (if any) that stopped the
     /// batch — entries before it stay applied, exactly like a
     /// hand-written `complete` loop.  Shared by the trait impl and by
@@ -324,7 +540,7 @@ impl IndexedStore {
         &self,
         results: Vec<(TicketId, Value)>,
     ) -> (Vec<bool>, Option<anyhow::Error>) {
-        // Phase 1: stripe lookups (never under the dispatch mutex).
+        // Phase 1: stripe lookups (never under a dispatch mutex).
         let mut entries: Vec<(TicketId, Value, usize, TaskId, Arc<TaskLedger>)> =
             Vec::with_capacity(results.len());
         let mut stopped: Option<anyhow::Error> = None;
@@ -341,13 +557,22 @@ impl IndexedStore {
                 }
             }
         }
-        // Phase 2: status transitions for the whole prefix under one
-        // dispatch-mutex acquisition (the batch amortisation).
+        // Phase 2: status transitions, batched per dispatch shard run.
         let mut flags: Vec<bool> = Vec::with_capacity(entries.len());
         let mut pendings: Vec<bool> = Vec::with_capacity(entries.len());
         {
-            let mut s = self.sched.lock().unwrap();
+            let mut cur_shard = usize::MAX;
+            let mut guard: Option<MutexGuard<'_, ShardState>> = None;
             for (id, _, _, _, _) in &entries {
+                let sh = self.dshard(id.0);
+                if sh != cur_shard {
+                    // Drop the held guard *before* locking the next
+                    // shard: one shard mutex at a time, no deadlock.
+                    guard = None;
+                    guard = Some(self.dispatch[sh].lock().unwrap());
+                    cur_shard = sh;
+                }
+                let s = guard.as_mut().expect("guard set for current shard");
                 let status = match s.meta.get(&id.0) {
                     Some(m) => m.status,
                     None => {
@@ -416,27 +641,133 @@ impl IndexedStore {
         (flags, stopped)
     }
 
+    /// Create tickets with caller-chosen ids — the WAL's sharded replay
+    /// path, where `Create` records are split per shard stream and must
+    /// re-insert exactly the original ids (re-running the id allocator
+    /// in merge order could renumber).  `next_id` is bumped past the
+    /// highest id so post-recovery creates never collide.  Same
+    /// publication order as [`Scheduler::create_tickets`]: ledger,
+    /// bodies, then dispatch indexes.
+    pub(crate) fn create_tickets_exact(
+        &self,
+        task: TaskId,
+        task_name: &str,
+        items: Vec<(u64, usize, Value)>,
+        now_ms: u64,
+    ) {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let max_id = items.iter().map(|&(id, _, _)| id).max().expect("non-empty");
+        self.next_id.fetch_max(max_id + 1, Ordering::SeqCst);
+        // Ledger first: by the time a ticket is dispatchable (indexed
+        // below), its task totals are already counted.
+        let ledger = self.ledger(task);
+        {
+            let mut st = ledger.state.lock().unwrap();
+            st.total += n as i64;
+            st.pending += n as i64;
+        }
+        // Bodies next, so a dispatch pick always finds its payload;
+        // grouped so each stripe lock is taken once, the name shared.
+        let task_name: Arc<str> = Arc::from(task_name);
+        let n_stripes = self.shards.len();
+        let mut ids: Vec<u64> = Vec::with_capacity(n);
+        let mut by_stripe: Vec<Vec<(u64, usize, Value)>> = vec![Vec::new(); n_stripes];
+        for (id, index, payload) in items {
+            ids.push(id);
+            by_stripe[id as usize % n_stripes].push((id, index, payload));
+        }
+        for (stripe, stripe_items) in by_stripe.into_iter().enumerate() {
+            if stripe_items.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[stripe].write().unwrap();
+            for (id, index, payload) in stripe_items {
+                shard.insert(
+                    id,
+                    StoredTicket {
+                        task,
+                        task_name: Arc::clone(&task_name),
+                        index,
+                        payload,
+                        created_ms: now_ms,
+                        ledger: Arc::clone(&ledger),
+                    },
+                );
+            }
+        }
+        // Publish to the dispatch indexes last, one shard mutex at a
+        // time in ascending shard order.
+        let nshards = self.dispatch.len();
+        let mut by_dshard: Vec<Vec<u64>> = vec![Vec::new(); nshards];
+        for id in ids {
+            by_dshard[self.dshard(id)].push(id);
+        }
+        for (sh, shard_ids) in by_dshard.into_iter().enumerate() {
+            if shard_ids.is_empty() {
+                continue;
+            }
+            let count = shard_ids.len();
+            let mut s = self.dispatch[sh].lock().unwrap();
+            for id in shard_ids {
+                s.meta.insert(
+                    id,
+                    Meta {
+                        task,
+                        created_ms: now_ms,
+                        status: TicketStatus::Pending,
+                        last_distributed_ms: None,
+                        distribution_count: 0,
+                    },
+                );
+                s.ready.insert((now_ms, id));
+                s.fallback.insert((0, id));
+            }
+            s.total += count;
+            s.pending += count;
+        }
+    }
+
+    /// Drain one shard's error-report buffer.  `store::wal`'s sharded
+    /// mode drains shard by shard under all its stream locks (one
+    /// `DrainErrors` record covers the lot), producing exactly the
+    /// shard-major order of [`Scheduler::drain_errors`].
+    pub(crate) fn drain_errors_shard(&self, shard: usize) -> Vec<(TicketId, String)> {
+        std::mem::take(&mut self.dispatch[shard].lock().unwrap().errors)
+    }
+
     /// Capture the full durable state (the WAL checkpoint payload).
     ///
     /// Callers must guarantee no concurrent *mutation* of tickets or
-    /// errors (`store::wal` holds its log mutex, which serialises every
-    /// mutating op); concurrent reads and completion-FIFO consumption
-    /// are harmless — consumption is not logged state (see
+    /// errors (`store::wal` holds its log mutex(es), which serialise
+    /// every mutating op); concurrent reads and completion-FIFO
+    /// consumption are harmless — consumption is not logged state (see
     /// [`wal`](super::wal) on at-least-once completion delivery).  The
     /// locks are taken one at a time, respecting the module's lock
     /// discipline.
     pub(crate) fn snapshot(&self) -> StoreSnapshot {
-        let (mut metas, redistributions, duplicate_results) = {
-            let s = self.sched.lock().unwrap();
-            let metas: Vec<(u64, TaskId, u64, TicketStatus, Option<u64>, u32)> = s
-                .meta
-                .iter()
-                .map(|(&id, m)| {
-                    (id, m.task, m.created_ms, m.status, m.last_distributed_ms, m.distribution_count)
-                })
-                .collect();
-            (metas, s.redistributions, s.duplicate_results)
-        };
+        let mut metas: Vec<(u64, TaskId, u64, TicketStatus, Option<u64>, u32)> = Vec::new();
+        let mut redistributions = 0u64;
+        let mut duplicate_results = 0u64;
+        let mut errors: Vec<(TicketId, String)> = Vec::new();
+        for shard in &self.dispatch {
+            let s = shard.lock().unwrap();
+            for (&id, m) in s.meta.iter() {
+                metas.push((
+                    id,
+                    m.task,
+                    m.created_ms,
+                    m.status,
+                    m.last_distributed_ms,
+                    m.distribution_count,
+                ));
+            }
+            redistributions += s.redistributions;
+            duplicate_results += s.duplicate_results;
+            errors.extend(s.errors.iter().cloned());
+        }
         metas.sort_by_key(|&(id, ..)| id);
         let tickets = metas
             .into_iter()
@@ -476,20 +807,27 @@ impl IndexedStore {
             redistributions,
             duplicate_results,
             errors_reported: self.errors_reported.load(Ordering::Relaxed) as u64,
+            dispatch_shards: self.dispatch.len(),
             tickets,
             ledgers,
-            errors: self.errors.lock().unwrap().clone(),
+            errors,
         }
     }
 
     /// Rebuild a store from a [`snapshot`](Self::snapshot): same dispatch
-    /// indexes, ledgers, counters and error buffers, so every subsequent
-    /// operation behaves exactly as it would have on the original.
+    /// shards, indexes, ledgers, counters and error buffers, so every
+    /// subsequent operation behaves exactly as it would have on the
+    /// original.
     pub(crate) fn restore(snap: StoreSnapshot) -> IndexedStore {
-        let store = IndexedStore::new(snap.cfg);
+        let store = IndexedStore::with_layout(snap.cfg, DEFAULT_SHARDS, snap.dispatch_shards);
         store.next_id.store(snap.next_id, Ordering::SeqCst);
         store.errors_reported.store(snap.errors_reported as usize, Ordering::Relaxed);
-        *store.errors.lock().unwrap() = snap.errors;
+        // The snapshot's error order is shard-major, so pushing by shard
+        // of id reconstructs each per-shard queue in its original FIFO
+        // order (the shard count is pinned by the snapshot).
+        for (id, msg) in snap.errors {
+            store.dispatch[store.dshard(id.0)].lock().unwrap().errors.push((id, msg));
+        }
         // Ledgers first (results + FIFO), so ticket bodies can cache the
         // Arc exactly like create_tickets does.
         for l in snap.ledgers {
@@ -535,23 +873,33 @@ impl IndexedStore {
                 },
             ));
         }
-        let mut s = store.sched.lock().unwrap();
-        s.redistributions = snap.redistributions;
-        s.duplicate_results = snap.duplicate_results;
+        let nshards = store.dispatch.len();
+        let mut by_dshard: Vec<Vec<(u64, Meta)>> = (0..nshards).map(|_| Vec::new()).collect();
         for (id, meta) in metas {
-            s.total += 1;
-            match meta.status {
-                TicketStatus::Pending => s.pending += 1,
-                TicketStatus::InFlight => s.in_flight += 1,
-                TicketStatus::Done => s.done += 1,
-            }
-            if meta.status != TicketStatus::Done {
-                s.ready.insert((vct_of(&store.cfg, &meta), id));
-                s.fallback.insert((meta.last_distributed_ms.unwrap_or(0), id));
-            }
-            s.meta.insert(id, meta);
+            by_dshard[store.dshard(id)].push((id, meta));
         }
-        drop(s);
+        for (sh, shard_metas) in by_dshard.into_iter().enumerate() {
+            let mut s = store.dispatch[sh].lock().unwrap();
+            // The global counters are not per-shard attributable from a
+            // snapshot; they live on shard 0 and `progress` sums shards.
+            if sh == 0 {
+                s.redistributions = snap.redistributions;
+                s.duplicate_results = snap.duplicate_results;
+            }
+            for (id, meta) in shard_metas {
+                s.total += 1;
+                match meta.status {
+                    TicketStatus::Pending => s.pending += 1,
+                    TicketStatus::InFlight => s.in_flight += 1,
+                    TicketStatus::Done => s.done += 1,
+                }
+                if meta.status != TicketStatus::Done {
+                    s.ready.insert((vct_of(&store.cfg, &meta), id));
+                    s.fallback.insert((meta.last_distributed_ms.unwrap_or(0), id));
+                }
+                s.meta.insert(id, meta);
+            }
+        }
         store
     }
 }
@@ -569,72 +917,43 @@ impl Scheduler for IndexedStore {
         now_ms: u64,
     ) -> Vec<TicketId> {
         let n = args.len();
-        let base = self.next_id.fetch_add(n as u64, Ordering::SeqCst);
-        // Ledger first: by the time a ticket is dispatchable (indexed
-        // below), its task totals are already counted.
-        let ledger = self.ledger(task);
-        {
-            let mut st = ledger.state.lock().unwrap();
-            st.total += n as i64;
-            st.pending += n as i64;
-        }
-        // Bodies next, so a dispatch pick always finds its payload.
-        // Consecutive ids round-robin across stripes, so group the batch
-        // and take each stripe lock once; the name is shared, not cloned.
-        let task_name: Arc<str> = Arc::from(task_name);
-        let n_stripes = self.shards.len();
-        let mut by_stripe: Vec<Vec<(u64, usize, Value)>> = vec![Vec::new(); n_stripes];
-        for (index, payload) in args.into_iter().enumerate() {
-            let id = base + index as u64;
-            by_stripe[id as usize % n_stripes].push((id, index, payload));
-        }
-        for (stripe, items) in by_stripe.into_iter().enumerate() {
-            if items.is_empty() {
-                continue;
-            }
-            let mut shard = self.shards[stripe].write().unwrap();
-            for (id, index, payload) in items {
-                shard.insert(
-                    id,
-                    StoredTicket {
-                        task,
-                        task_name: Arc::clone(&task_name),
-                        index,
-                        payload,
-                        created_ms: now_ms,
-                        ledger: Arc::clone(&ledger),
-                    },
-                );
-            }
-        }
-        // Publish to the dispatch indexes last.
-        {
-            let mut s = self.sched.lock().unwrap();
-            for id in base..base + n as u64 {
-                s.meta.insert(
-                    id,
-                    Meta {
-                        task,
-                        created_ms: now_ms,
-                        status: TicketStatus::Pending,
-                        last_distributed_ms: None,
-                        distribution_count: 0,
-                    },
-                );
-                s.ready.insert((now_ms, id));
-                s.fallback.insert((0, id));
-            }
-            s.total += n;
-            s.pending += n;
-        }
+        let base = self.allocate_ids(n as u64);
+        let items: Vec<(u64, usize, Value)> = args
+            .into_iter()
+            .enumerate()
+            .map(|(index, payload)| (base + index as u64, index, payload))
+            .collect();
+        self.create_tickets_exact(task, task_name, items, now_ms);
         (base..base + n as u64).map(TicketId).collect()
     }
 
     fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
-        let (id, count, was_pending) = {
-            let mut s = self.sched.lock().unwrap();
-            self.dispatch_one(&mut s, now_ms)?
-        };
+        // Home shard first (blocking), then steal from siblings under
+        // try_lock — one shard mutex at a time, so no deadlock.
+        let nshards = self.dispatch.len();
+        let home = self.home_shard(client);
+        let mut picked: Option<(u64, u32, bool)> = None;
+        for i in 0..nshards {
+            let sh = (home + i) % nshards;
+            let mut guard = if i == 0 {
+                self.dispatch[sh].lock().unwrap()
+            } else {
+                self.steal_attempts.fetch_add(1, Ordering::Relaxed);
+                match self.dispatch[sh].try_lock() {
+                    Ok(g) => g,
+                    Err(_) => continue, // a sibling owns it: skip, never wait
+                }
+            };
+            self.dispatch_locks.fetch_add(1, Ordering::Relaxed);
+            if let Some(p) = self.dispatch_one(&mut guard, now_ms) {
+                if i > 0 {
+                    self.steal_successes.fetch_add(1, Ordering::Relaxed);
+                }
+                picked = Some(p);
+                break;
+            }
+        }
+        let (id, count, was_pending) = picked?;
         let (ticket, ledger) = {
             let shard = self.shard(id).read().unwrap();
             let body = shard.get(&id).expect("indexed ticket has a stored body");
@@ -663,11 +982,13 @@ impl Scheduler for IndexedStore {
         Some(ticket)
     }
 
-    /// The batched dispatch pick: `k` [`dispatch_one`] decisions under
-    /// *one* sched-mutex acquisition, then body clones grouped so each
-    /// stripe's read lock is taken once, then ledger counter moves
-    /// grouped per task — same observable result as `k` successive
-    /// [`Scheduler::next_ticket`] calls, amortised locking.
+    /// The batched dispatch pick: drain the home shard first (blocking
+    /// lock, up to `k` [`dispatch_one`] decisions under one
+    /// acquisition — with one dispatch shard that is exactly the PR 4
+    /// single-mutex batch), then work-steal the remainder from sibling
+    /// shards under `try_lock`.  Body clones are grouped so each
+    /// stripe's read lock is taken once, ledger counter moves grouped
+    /// per task.
     ///
     /// [`dispatch_one`]: IndexedStore::dispatch_one
     fn next_tickets(&self, client: &str, now_ms: u64, k: usize) -> Vec<Ticket> {
@@ -677,68 +998,41 @@ impl Scheduler for IndexedStore {
         if k == 1 {
             return self.next_ticket(client, now_ms).into_iter().collect();
         }
-        // Phase 1: k dispatch decisions, one lock acquisition.
-        let picks: Vec<(u64, u32, bool)> = {
-            let mut s = self.sched.lock().unwrap();
-            let mut picks = Vec::with_capacity(k.min(64));
-            for _ in 0..k {
-                match self.dispatch_one(&mut s, now_ms) {
+        // Phase 1: dispatch decisions, home shard then steal scan.
+        let nshards = self.dispatch.len();
+        let home = self.home_shard(client);
+        let mut picks: Vec<(u64, u32, bool)> = Vec::with_capacity(k.min(64));
+        for i in 0..nshards {
+            if picks.len() >= k {
+                break;
+            }
+            let sh = (home + i) % nshards;
+            let mut guard = if i == 0 {
+                self.dispatch[sh].lock().unwrap()
+            } else {
+                self.steal_attempts.fetch_add(1, Ordering::Relaxed);
+                match self.dispatch[sh].try_lock() {
+                    Ok(g) => g,
+                    Err(_) => continue, // a sibling owns it: skip, never wait
+                }
+            };
+            self.dispatch_locks.fetch_add(1, Ordering::Relaxed);
+            let before = picks.len();
+            while picks.len() < k {
+                match self.dispatch_one(&mut guard, now_ms) {
                     Some(p) => picks.push(p),
                     None => break,
                 }
             }
-            picks
-        };
+            if i > 0 && picks.len() > before {
+                self.steal_successes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         if picks.is_empty() {
             return Vec::new();
         }
-        // Phase 2: clone bodies, each stripe read-locked once.  The same
-        // id may appear twice (zero min-redistribute window re-issues
-        // within the batch); each occurrence gets its own clone.
-        let n_stripes = self.shards.len();
-        let mut by_stripe: Vec<Vec<usize>> = vec![Vec::new(); n_stripes];
-        for (pos, &(id, _, _)) in picks.iter().enumerate() {
-            by_stripe[id as usize % n_stripes].push(pos);
-        }
-        let mut out: Vec<Option<Ticket>> = (0..picks.len()).map(|_| None).collect();
-        // Pending→in-flight ledger moves, grouped per task (phase 3).
-        let mut moves: Vec<(TaskId, Arc<TaskLedger>, i64)> = Vec::new();
-        for (stripe, positions) in by_stripe.into_iter().enumerate() {
-            if positions.is_empty() {
-                continue;
-            }
-            let shard = self.shards[stripe].read().unwrap();
-            for pos in positions {
-                let (id, count, was_pending) = picks[pos];
-                let body = shard.get(&id).expect("indexed ticket has a stored body");
-                out[pos] = Some(Ticket {
-                    id: TicketId(id),
-                    task: body.task,
-                    task_name: body.task_name.to_string(),
-                    index: body.index,
-                    payload: body.payload.clone(),
-                    created_ms: body.created_ms,
-                    status: TicketStatus::InFlight,
-                    last_distributed_ms: Some(now_ms),
-                    distribution_count: count,
-                    result: None,
-                    assigned_to: Some(client.to_string()),
-                });
-                if was_pending {
-                    match moves.iter_mut().find(|(t, _, _)| *t == body.task) {
-                        Some((_, _, n)) => *n += 1,
-                        None => moves.push((body.task, Arc::clone(&body.ledger), 1)),
-                    }
-                }
-            }
-        }
-        // Phase 3: ledger counters, one lock acquisition per task.
-        for (_, ledger, n) in moves {
-            let mut st = ledger.state.lock().unwrap();
-            st.pending -= n;
-            st.in_flight += n;
-        }
-        out.into_iter().map(|t| t.expect("every pick got its body")).collect()
+        // Phases 2–3: body clones + ledger moves (shared helper).
+        self.clone_dispatched(&picks, client, now_ms)
     }
 
     fn complete_batch(&self, results: Vec<(TicketId, Value)>) -> Result<usize> {
@@ -761,14 +1055,18 @@ impl Scheduler for IndexedStore {
     }
 
     fn report_error(&self, id: TicketId, report: String) -> Result<()> {
-        self.errors.lock().unwrap().push((id, report));
         self.errors_reported.fetch_add(1, Ordering::Relaxed);
-        if !self.cfg.requeue_on_error {
-            return Ok(());
-        }
+        // The error buffer is per shard (drained shard-major), so
+        // reports on different shards never contend; push and requeue
+        // share the one shard acquisition.
         let requeued = {
-            let mut s = self.sched.lock().unwrap();
-            self.requeue_one(&mut s, id.0)
+            let mut s = self.dispatch[self.dshard(id.0)].lock().unwrap();
+            s.errors.push((id, report));
+            if self.cfg.requeue_on_error {
+                self.requeue_one(&mut s, id.0)
+            } else {
+                false
+            }
         };
         if requeued {
             let ledger = {
@@ -790,20 +1088,33 @@ impl Scheduler for IndexedStore {
     }
 
     /// The batched release: every status transition and index re-arm
-    /// for the whole batch under *one* dispatch-mutex acquisition,
-    /// then ledger counter moves grouped one lock per task — same
-    /// observable result as the trait's id-by-id loop.
+    /// applied in order, consecutive same-shard entries sharing one
+    /// shard-mutex acquisition (the whole batch, with one dispatch
+    /// shard), then ledger counter moves grouped one lock per task —
+    /// same observable result as the trait's id-by-id loop.
     fn release_batch(&self, ids: &[TicketId]) -> Vec<bool> {
         if ids.is_empty() {
             return Vec::new();
         }
         // Phase 1: pool-return transitions (shared with the error
         // requeue, [`requeue_one`](Self::requeue_one)) + index
-        // re-arming for the whole batch under one sched-mutex
-        // acquisition.
+        // re-arming, batched per shard run; the held guard drops
+        // before the next shard's lock is taken.
         let flags: Vec<bool> = {
-            let mut s = self.sched.lock().unwrap();
-            ids.iter().map(|&id| self.requeue_one(&mut s, id.0)).collect()
+            let mut cur_shard = usize::MAX;
+            let mut guard: Option<MutexGuard<'_, ShardState>> = None;
+            ids.iter()
+                .map(|&id| {
+                    let sh = self.dshard(id.0);
+                    if sh != cur_shard {
+                        guard = None;
+                        guard = Some(self.dispatch[sh].lock().unwrap());
+                        cur_shard = sh;
+                    }
+                    let s = guard.as_mut().expect("guard set for current shard");
+                    self.requeue_one(s, id.0)
+                })
+                .collect()
         };
         // Phase 2: ledger counters for the released entries — lookups
         // grouped so each stripe's read lock is taken once (as in the
@@ -853,33 +1164,32 @@ impl Scheduler for IndexedStore {
 
     fn progress(&self, task: Option<TaskId>) -> Progress {
         let errors = self.errors_reported.load(Ordering::Relaxed);
-        let (redistributions, duplicate_results) = {
-            let s = self.sched.lock().unwrap();
-            match task {
-                None => {
-                    return Progress {
-                        total: s.total,
-                        pending: s.pending,
-                        in_flight: s.in_flight,
-                        done: s.done,
-                        errors,
-                        redistributions: s.redistributions,
-                        duplicate_results: s.duplicate_results,
-                    }
-                }
-                // Per-task progress still reports the store-wide
-                // redistribution/duplicate counters (console parity with
-                // the reference store).
-                Some(_) => (s.redistributions, s.duplicate_results),
-            }
+        // Sum the per-shard slices (one lock at a time); with one
+        // dispatch shard this is the old single-mutex read.
+        let mut g = Progress { errors, ..Default::default() };
+        for shard in &self.dispatch {
+            let s = shard.lock().unwrap();
+            g.total += s.total;
+            g.pending += s.pending;
+            g.in_flight += s.in_flight;
+            g.done += s.done;
+            g.redistributions += s.redistributions;
+            g.duplicate_results += s.duplicate_results;
+        }
+        let task = match task {
+            None => return g,
+            Some(t) => t,
         };
+        // Per-task progress still reports the store-wide
+        // redistribution/duplicate counters (console parity with the
+        // reference store).
         let mut p = Progress {
             errors,
-            redistributions,
-            duplicate_results,
+            redistributions: g.redistributions,
+            duplicate_results: g.duplicate_results,
             ..Default::default()
         };
-        if let Some(ledger) = self.ledger_if_exists(task.expect("task filter present")) {
+        if let Some(ledger) = self.ledger_if_exists(task) {
             let st = ledger.state.lock().unwrap();
             let clamp = |v: i64| v.max(0) as usize;
             p.total = clamp(st.total);
@@ -941,7 +1251,27 @@ impl Scheduler for IndexedStore {
     }
 
     fn drain_errors(&self) -> Vec<(TicketId, String)> {
-        std::mem::take(&mut *self.errors.lock().unwrap())
+        // Shard-major, one pass, one lock at a time: the documented
+        // S > 1 ordering (exactly the old order with one shard).
+        let mut out = Vec::new();
+        for shard in &self.dispatch {
+            out.append(&mut shard.lock().unwrap().errors);
+        }
+        out
+    }
+
+    fn stats(&self) -> SchedStats {
+        let mut shard_depths = Vec::with_capacity(self.dispatch.len());
+        for shard in &self.dispatch {
+            shard_depths.push(shard.lock().unwrap().ready.len());
+        }
+        SchedStats {
+            dispatch_shards: self.dispatch.len(),
+            dispatch_locks: self.dispatch_locks.load(Ordering::Relaxed),
+            steal_attempts: self.steal_attempts.load(Ordering::Relaxed),
+            steal_successes: self.steal_successes.load(Ordering::Relaxed),
+            shard_depths,
+        }
     }
 }
 
@@ -961,7 +1291,7 @@ mod tests {
         let ids =
             s.create_tickets(TaskId(1), "t", (0..3).map(|i| Value::num(i as f64)).collect(), 0);
         {
-            let st = s.sched.lock().unwrap();
+            let st = s.dispatch[0].lock().unwrap();
             assert_eq!(st.ready.len(), 3);
             assert_eq!(st.fallback.len(), 3);
             assert_eq!(st.ready.iter().next(), Some(&(0, ids[0].0)));
@@ -969,7 +1299,7 @@ mod tests {
         let t = s.next_ticket("c", 5).unwrap();
         assert_eq!(t.id, ids[0]);
         {
-            let st = s.sched.lock().unwrap();
+            let st = s.dispatch[0].lock().unwrap();
             // Dispatched ticket re-keyed to now + requeue window.
             assert!(st.ready.contains(&(1005, ids[0].0)));
             assert!(st.fallback.contains(&(5, ids[0].0)));
@@ -977,7 +1307,7 @@ mod tests {
         // Error requeue: VCT back to creation time, fallback key to 0.
         s.report_error(ids[0], "boom".into()).unwrap();
         {
-            let st = s.sched.lock().unwrap();
+            let st = s.dispatch[0].lock().unwrap();
             assert!(st.ready.contains(&(0, ids[0].0)));
             assert!(st.fallback.contains(&(0, ids[0].0)));
         }
@@ -986,7 +1316,7 @@ mod tests {
         assert_eq!(t.id, ids[0]);
         s.complete(ids[0], Value::Null).unwrap();
         {
-            let st = s.sched.lock().unwrap();
+            let st = s.dispatch[0].lock().unwrap();
             assert_eq!(st.ready.len(), 2);
             assert_eq!(st.fallback.len(), 2);
             assert!(!st.ready.iter().any(|&(_, id)| id == ids[0].0));
@@ -1005,7 +1335,7 @@ mod tests {
         let flags = s.release_batch(&[a.id, b.id, a.id, TicketId(99)]);
         assert_eq!(flags, vec![true, true, false, false]);
         {
-            let st = s.sched.lock().unwrap();
+            let st = s.dispatch[0].lock().unwrap();
             assert!(st.ready.contains(&(0, a.id.0)), "VCT re-armed to creation time");
             assert!(st.fallback.contains(&(0, a.id.0)), "fallback key re-armed to 0");
             assert!(st.ready.contains(&(0, b.id.0)));
@@ -1037,6 +1367,71 @@ mod tests {
                 assert_eq!(t.index, i);
             }
         }
+    }
+
+    /// A single client drains a sharded store completely: the home
+    /// shard empties, then the steal scan covers every sibling, so no
+    /// ticket is stranded in an unvisited shard.
+    #[test]
+    fn sharded_dispatch_steals_across_all_shards() {
+        for dshards in [2usize, 4, 8] {
+            let s = IndexedStore::with_layout(cfg(), 4, dshards);
+            let n = 40usize;
+            s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
+            let mut seen = std::collections::HashSet::new();
+            while let Some(t) = s.next_ticket("c", 1) {
+                assert!(seen.insert(t.id), "no duplicate dispatch in one pass");
+                s.complete(t.id, Value::Null).unwrap();
+            }
+            assert_eq!(seen.len(), n, "steal scan reaches every shard");
+            let p = s.progress(None);
+            assert_eq!((p.done, p.pending, p.in_flight), (n, 0, 0));
+            let st = s.stats();
+            assert_eq!(st.dispatch_shards, dshards);
+            assert_eq!(st.shard_depths.len(), dshards);
+            assert!(st.steal_attempts > 0, "draining visits sibling shards");
+            assert!(st.steal_successes > 0, "siblings actually yielded work");
+            assert!(st.steal_successes <= st.steal_attempts);
+        }
+    }
+
+    /// Within one shard the §2.1.2 policy is exact: tickets of the same
+    /// shard dispatch in global VCT order even at S > 1.
+    #[test]
+    fn per_shard_vct_order_is_exact() {
+        let s = IndexedStore::with_layout(cfg(), 4, 4);
+        let ids =
+            s.create_tickets(TaskId(1), "t", (0..16).map(|i| Value::num(i as f64)).collect(), 0);
+        let mut order: Vec<u64> = Vec::new();
+        while let Some(t) = s.next_ticket("c", 5) {
+            order.push(t.id.0);
+            s.complete(t.id, Value::Null).unwrap();
+        }
+        assert_eq!(order.len(), ids.len());
+        // Restricted to any one shard, ids come out ascending (equal
+        // creation time → (vct, id) order per shard).
+        for sh in 0..4u64 {
+            let shard_seq: Vec<u64> = order.iter().copied().filter(|id| id % 4 == sh).collect();
+            let mut sorted = shard_seq.clone();
+            sorted.sort_unstable();
+            assert_eq!(shard_seq, sorted, "shard {sh} preserves VCT order");
+        }
+    }
+
+    /// Batched dispatch at S > 1 drains the home shard then steals; the
+    /// batch covers the whole pool when k is large enough.
+    #[test]
+    fn sharded_batch_dispatch_covers_pool() {
+        let s = IndexedStore::with_layout(cfg(), 4, 4);
+        let n = 32usize;
+        s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
+        let batch = s.next_tickets("c", 0, n);
+        assert_eq!(batch.len(), n, "one batch drains every shard");
+        let mut ids: Vec<u64> = batch.iter().map(|t| t.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no duplicate dispatch across shards");
+        assert_eq!(s.progress(None).in_flight, n);
     }
 
     /// Concurrent clients hammering dispatch/complete across stripes
@@ -1111,6 +1506,64 @@ mod tests {
         assert_eq!(s.wait_results(TaskId(1)).len(), n);
     }
 
+    /// The sharded analogue: many clients, many shards, batched
+    /// dispatch + complete + release under steal pressure — conservation
+    /// and no-duplicate-dispatch must hold exactly.
+    #[test]
+    fn concurrent_sharded_dispatch_is_exact() {
+        let s = Arc::new(IndexedStore::with_layout(
+            StoreConfig {
+                requeue_after_ms: 600_000,
+                min_redistribute_ms: 600_000,
+                requeue_on_error: true,
+            },
+            DEFAULT_SHARDS,
+            8,
+        ));
+        let n = 1024usize;
+        s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    let client = format!("c{w}");
+                    let mut served = 0u64;
+                    loop {
+                        let batch = s.next_tickets(&client, 1, 16);
+                        if batch.is_empty() {
+                            break;
+                        }
+                        // Release every third batch (steal-pressure on
+                        // the re-armed tickets), complete the rest.
+                        if served % 3 == 2 {
+                            let ids: Vec<_> = batch.iter().map(|t| t.id).collect();
+                            s.release_batch(&ids);
+                        } else {
+                            let results: Vec<_> = batch
+                                .iter()
+                                .map(|t| (t.id, Value::num(t.index as f64)))
+                                .collect();
+                            s.complete_batch(results).unwrap();
+                        }
+                        served += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Released tickets are pending again: a final single-threaded
+        // drain must finish the job with nothing lost or duplicated.
+        while let Some(t) = s.next_ticket("sweeper", 2) {
+            let _ = s.complete(t.id, Value::num(t.index as f64)).unwrap();
+        }
+        let p = s.progress(None);
+        assert_eq!((p.done, p.pending, p.in_flight), (n, 0, 0), "conservation under steal");
+        assert_eq!(s.wait_results(TaskId(1)).len(), n);
+    }
+
     /// O(1) progress counters match a recount after a mixed workload.
     #[test]
     fn ledger_counters_match_recount() {
@@ -1128,6 +1581,31 @@ mod tests {
         assert_eq!((g.total, g.pending, g.in_flight, g.done), (6, 4, 1, 1));
         assert!(s.is_task_done(TaskId(3)), "empty task is vacuously done");
         assert!(!s.is_task_done(TaskId(1)));
+    }
+
+    /// Per-shard error queues: reports land on the owning shard, drain
+    /// in one shard-major pass, and the cumulative count survives.
+    #[test]
+    fn per_shard_error_queues_drain_shard_major() {
+        let s = IndexedStore::with_layout(cfg(), 4, 4);
+        let ids =
+            s.create_tickets(TaskId(1), "t", (0..8).map(|i| Value::num(i as f64)).collect(), 0);
+        // Dispatch everything so the error requeues have in-flight work.
+        let _ = s.next_tickets("c", 0, 8);
+        // Report in descending-id order: the drain must come back
+        // shard-major (shard 0's queue first), not report order.
+        for id in ids.iter().rev() {
+            s.report_error(*id, format!("e{}", id.0)).unwrap();
+        }
+        assert_eq!(s.error_count(), 8);
+        let drained = s.drain_errors();
+        assert_eq!(drained.len(), 8);
+        let shards: Vec<u64> = drained.iter().map(|(id, _)| id.0 % 4).collect();
+        let mut sorted = shards.clone();
+        sorted.sort_unstable();
+        assert_eq!(shards, sorted, "drain order is shard-major");
+        assert!(s.drain_errors().is_empty());
+        assert_eq!(s.error_count(), 8, "cumulative count unaffected by drain");
     }
 
     /// snapshot→restore rebuilds an observably identical store: same
@@ -1170,5 +1648,56 @@ mod tests {
         assert_eq!(s.wait_results(TaskId(1)), r.wait_results(TaskId(1)));
         assert_eq!(s.wait_results(TaskId(2)), r.wait_results(TaskId(2)));
         assert_eq!(s.drain_errors(), r.drain_errors());
+    }
+
+    /// The sharded snapshot pins the shard count and per-shard error
+    /// queues: restore continues the same per-shard sequences.
+    #[test]
+    fn sharded_snapshot_restore_roundtrip_is_identical() {
+        let s = IndexedStore::with_layout(cfg(), 4, 4);
+        let ids =
+            s.create_tickets(TaskId(1), "t", (0..12).map(|i| Value::num(i as f64)).collect(), 0);
+        let _ = s.next_tickets("c1", 10, 5);
+        s.complete(ids[0], Value::num(1.0)).unwrap();
+        s.report_error(ids[1], "boom".into()).unwrap();
+        s.report_error(ids[2], "bam".into()).unwrap();
+
+        let r = IndexedStore::restore(s.snapshot());
+        assert_eq!(r.dispatch_shard_count(), 4, "shard count restored from the snapshot");
+        assert_eq!(r.progress(None), s.progress(None));
+        let mut now = 11;
+        for _ in 0..40 {
+            let (x, y) = (s.next_ticket("d", now), r.next_ticket("d", now));
+            assert_eq!(x, y, "sharded dispatch diverges at t={now}");
+            if let Some(t) = x {
+                assert_eq!(
+                    s.complete(t.id, Value::num(now as f64)).unwrap(),
+                    r.complete(t.id, Value::num(now as f64)).unwrap()
+                );
+            }
+            now += 37;
+        }
+        assert_eq!(s.drain_errors(), r.drain_errors());
+        assert_eq!(s.wait_results_timeout(TaskId(1), 10), r.wait_results_timeout(TaskId(1), 10));
+    }
+
+    /// `create_tickets_exact` (the sharded-WAL replay path) reproduces
+    /// a normal create bit-for-bit and advances the id allocator.
+    #[test]
+    fn create_tickets_exact_matches_create() {
+        let a = IndexedStore::with_layout(cfg(), 4, 2);
+        let b = IndexedStore::with_layout(cfg(), 4, 2);
+        let ids = a.create_tickets(TaskId(1), "t", (0..6).map(|i| Value::num(i as f64)).collect(), 3);
+        let items: Vec<(u64, usize, Value)> =
+            ids.iter().enumerate().map(|(i, id)| (id.0, i, Value::num(i as f64))).collect();
+        b.create_tickets_exact(TaskId(1), "t", items, 3);
+        assert_eq!(a.progress(None), b.progress(None));
+        for _ in 0..6 {
+            assert_eq!(a.next_ticket("c", 5), b.next_ticket("c", 5));
+        }
+        // The allocator moved past the explicit ids: a fresh create
+        // cannot collide.
+        let fresh = b.create_tickets(TaskId(2), "u", vec![Value::Null], 4);
+        assert!(fresh[0].0 > ids[5].0);
     }
 }

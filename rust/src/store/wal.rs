@@ -21,6 +21,30 @@
 //!                            segment 00000001
 //! ```
 //!
+//! With [`WalConfig::dispatch_shards`] > 1 the log is split into one
+//! *stream* per dispatch shard of the inner [`IndexedStore`], so the
+//! log append stops being the one lock every dispatch funnels through
+//! (the store's own shards already spread the decision, ISSUE 7):
+//!
+//! ```text
+//! state/
+//!   wal-s000-00000000.log    stream 0, segment 0
+//!   wal-s001-00000000.log    stream 1, segment 0
+//!   checkpoint-00000003.snap all streams rotate to segment 00000003
+//! ```
+//!
+//! Framing is unchanged.  Every record is wrapped in an `OP_SEQ` header
+//! carrying a global log sequence number (LSN, from one atomic
+//! counter), and each stream segment carries an `OP_SHARDS` header
+//! pinning the shard count.  An operation locks the streams of every
+//! shard it touches (ascending, so multi-stream ops cannot deadlock;
+//! dispatch locks one stream at a time, `try_lock`-stealing like the
+//! store itself) and allocates its LSN while holding them — so for any
+//! two records touching a common shard, LSN order equals apply order,
+//! and recovery merges all stream tails by LSN into a replay sequence
+//! equivalent to the original execution, with the same outcome
+//! cross-checks as the single-stream path.
+//!
 //! Every frame is `[len: u32 LE][crc32: u32 LE][payload]` with the CRC
 //! over the payload, so torn tails and bit rot are detected, never
 //! replayed.  Each segment starts with a `Config` record pinning the
@@ -73,11 +97,12 @@
 //!
 //! [`NaiveStore`]: super::NaiveStore
 
+use std::collections::BTreeMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -85,7 +110,8 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::store::sched::{LedgerSnapshot, StoreSnapshot, TicketSnapshot};
 use crate::store::{
-    IndexedStore, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId, TicketStatus,
+    IndexedStore, Progress, SchedStats, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
+    TicketStatus,
 };
 use crate::util::json::Value;
 
@@ -114,6 +140,23 @@ const OP_COMPLETE_BATCH: u8 = 8;
 /// disconnecting client's whole prefetched batch re-enters dispatch as
 /// one record).
 const OP_RELEASE_BATCH: u8 = 9;
+/// Stream-segment header (after the config record): `[shard_count u32]
+/// [stream_index u32]`, pinning the sharded layout a stream belongs to.
+const OP_SHARDS: u8 = 10;
+/// LSN wrapper heading every sharded-stream record: `[lsn u64]` then
+/// the inner record payload verbatim.  Recovery merges all stream
+/// tails by LSN before replaying.
+const OP_SEQ: u8 = 11;
+/// A create with explicit ticket ids: `[task][now][name][n]` then
+/// `(id, index, payload)` per ticket.  The sharded path logs creates
+/// this way because replay order across streams is LSN order, not id-
+/// allocation order — re-running the allocator could renumber.
+const OP_CREATE_EXACT: u8 = 12;
+/// One per-shard dispatch run (`IndexedStore::next_tickets_from_shard`):
+/// `[shard u32][now][client][n][ids...]`.  Replay re-runs the same
+/// per-shard pick (deterministic given the shard's state) and
+/// cross-checks the ids.
+const OP_DISPATCH_SHARD: u8 = 13;
 
 /// When the log is fsynced (appends always reach the OS immediately).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -144,6 +187,11 @@ pub struct WalConfig {
     /// Write a checkpoint (and truncate older segments) every this many
     /// records; `0` disables checkpointing (the log grows unboundedly).
     pub checkpoint_every: u64,
+    /// Dispatch shards of the inner store, each with its own log
+    /// stream (rounded up to a power of two).  `1` (the default) is
+    /// the legacy single-stream layout, bit-for-bit.  When recovering
+    /// an existing state directory the persisted shard count wins.
+    pub dispatch_shards: usize,
 }
 
 impl Default for WalConfig {
@@ -152,6 +200,7 @@ impl Default for WalConfig {
             sync: SyncPolicy::GroupCommitMs(50),
             segment_max_bytes: 8 << 20,
             checkpoint_every: 100_000,
+            dispatch_shards: 1,
         }
     }
 }
@@ -215,6 +264,12 @@ impl Enc {
         self.str(&v.to_string());
     }
 
+    /// Append pre-encoded payload bytes verbatim (the `OP_SEQ` wrapper
+    /// embeds a whole inner record).
+    fn raw(&mut self, bytes: &[u8]) {
+        self.0.extend_from_slice(bytes);
+    }
+
     /// The framed bytes: `[len][crc][payload]`.
     fn frame(self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.0.len() + 8);
@@ -269,6 +324,14 @@ impl<'a> Dec<'a> {
         ensure!(self.i == self.b.len(), "{} trailing bytes in record", self.b.len() - self.i);
         Ok(())
     }
+
+    /// Everything not yet decoded — the [`OP_SEQ`] envelope carries a
+    /// whole inner record verbatim after its LSN.
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.b[self.i..];
+        self.i = self.b.len();
+        s
+    }
 }
 
 fn encode_config(cfg: &StoreConfig) -> Enc {
@@ -306,6 +369,7 @@ fn encode_snapshot(snap: &StoreSnapshot) -> Vec<u8> {
     e.u64(snap.redistributions);
     e.u64(snap.duplicate_results);
     e.u64(snap.errors_reported);
+    e.u64(snap.dispatch_shards as u64);
     e.u64(snap.tickets.len() as u64);
     for t in &snap.tickets {
         e.u64(t.id);
@@ -353,6 +417,11 @@ fn decode_snapshot(payload: &[u8]) -> Result<StoreSnapshot> {
     let redistributions = d.u64()?;
     let duplicate_results = d.u64()?;
     let errors_reported = d.u64()?;
+    let dispatch_shards = d.u64()? as usize;
+    ensure!(
+        dispatch_shards >= 1 && dispatch_shards.is_power_of_two() && dispatch_shards <= 1 << 16,
+        "bad dispatch shard count {dispatch_shards} in checkpoint"
+    );
     let n_tickets = d.u64()?;
     let mut tickets = Vec::with_capacity(n_tickets.min(1 << 20) as usize);
     for _ in 0..n_tickets {
@@ -414,6 +483,7 @@ fn decode_snapshot(payload: &[u8]) -> Result<StoreSnapshot> {
         redistributions,
         duplicate_results,
         errors_reported,
+        dispatch_shards,
         tickets,
         ledgers,
         errors,
@@ -428,6 +498,11 @@ fn segment_path(dir: &Path, seq: u64) -> PathBuf {
     dir.join(format!("wal-{seq:08}.log"))
 }
 
+/// Per-shard stream segment (the sharded layout).
+fn stream_segment_path(dir: &Path, stream: usize, seq: u64) -> PathBuf {
+    dir.join(format!("wal-s{stream:03}-{seq:08}.log"))
+}
+
 fn checkpoint_path(dir: &Path, seq: u64) -> PathBuf {
     dir.join(format!("checkpoint-{seq:08}.snap"))
 }
@@ -435,6 +510,13 @@ fn checkpoint_path(dir: &Path, seq: u64) -> PathBuf {
 /// Parse `wal-<seq>.log` / `checkpoint-<seq>.snap` file names.
 fn parse_seq(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
     name.strip_prefix(prefix)?.strip_suffix(suffix)?.parse().ok()
+}
+
+/// Parse `wal-s<stream>-<seq>.log` file names.
+fn parse_stream_name(name: &str) -> Option<(usize, u64)> {
+    let rest = name.strip_prefix("wal-s")?.strip_suffix(".log")?;
+    let (stream, seq) = rest.split_once('-')?;
+    Some((stream.parse().ok()?, seq.parse().ok()?))
 }
 
 /// Read every intact frame of a segment after the header.  `strict`
@@ -446,11 +528,19 @@ fn read_segment(path: &Path, strict: bool) -> Result<Vec<Vec<u8>>> {
     File::open(path)
         .and_then(|mut f| f.read_to_end(&mut bytes))
         .with_context(|| format!("reading {}", path.display()))?;
-    ensure!(
-        bytes.len() >= SEGMENT_MAGIC.len() && bytes[..SEGMENT_MAGIC.len()] == SEGMENT_MAGIC,
-        "{} is not a WAL segment (bad header)",
-        path.display()
-    );
+    if bytes.len() < SEGMENT_MAGIC.len() || bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+        // A final segment can be torn *inside its header* — a crash
+        // mid-rotation leaves a short or garbage file.  Nothing was
+        // ever acknowledged from it, so lenient mode treats it as
+        // empty; anywhere else a bad header is corruption.
+        ensure!(!strict, "{} is not a WAL segment (bad header)", path.display());
+        crate::log_warn!(
+            "wal",
+            "{}: short or corrupt segment header (crash mid-rotation): treating as empty",
+            path.display()
+        );
+        return Ok(Vec::new());
+    }
     let mut frames = Vec::new();
     let mut i = SEGMENT_MAGIC.len();
     while i < bytes.len() {
@@ -495,6 +585,10 @@ fn read_segment(path: &Path, strict: bool) -> Result<Vec<Vec<u8>>> {
 
 struct LogWriter {
     dir: PathBuf,
+    /// `Some((stream_index, shard_count))` for a per-shard stream
+    /// writer (sharded layout: `wal-s<stream>-<seq>.log` files with an
+    /// `OP_SHARDS` header record); `None` is the legacy single log.
+    stream: Option<(usize, usize)>,
     file: BufWriter<File>,
     seq: u64,
     bytes_in_segment: u64,
@@ -504,9 +598,33 @@ struct LogWriter {
 }
 
 impl LogWriter {
-    /// Open a fresh segment `seq`, writing header + config record.
+    /// Open a fresh legacy segment `seq`, writing header + config record.
     fn open_segment(dir: &Path, seq: u64, cfg: &StoreConfig) -> Result<LogWriter> {
-        let path = segment_path(dir, seq);
+        Self::open_at(dir, None, seq, cfg)
+    }
+
+    /// Open a fresh segment of per-shard stream `stream` (of
+    /// `shard_count`), writing header + config + shards records.
+    fn open_stream_segment(
+        dir: &Path,
+        stream: usize,
+        shard_count: usize,
+        seq: u64,
+        cfg: &StoreConfig,
+    ) -> Result<LogWriter> {
+        Self::open_at(dir, Some((stream, shard_count)), seq, cfg)
+    }
+
+    fn open_at(
+        dir: &Path,
+        stream: Option<(usize, usize)>,
+        seq: u64,
+        cfg: &StoreConfig,
+    ) -> Result<LogWriter> {
+        let path = match stream {
+            None => segment_path(dir, seq),
+            Some((s, _)) => stream_segment_path(dir, s, seq),
+        };
         let file = OpenOptions::new()
             .create_new(true)
             .write(true)
@@ -514,6 +632,7 @@ impl LogWriter {
             .with_context(|| format!("creating {}", path.display()))?;
         let mut w = LogWriter {
             dir: dir.to_path_buf(),
+            stream,
             file: BufWriter::new(file),
             seq,
             bytes_in_segment: 0,
@@ -522,6 +641,12 @@ impl LogWriter {
         };
         w.file.write_all(&SEGMENT_MAGIC)?;
         w.write_frame(&encode_config(cfg).frame())?;
+        if let Some((s, count)) = stream {
+            let mut e = Enc::new(OP_SHARDS);
+            e.u32(count as u32);
+            e.u32(s as u32);
+            w.write_frame(&e.frame())?;
+        }
         w.sync()?;
         Ok(w)
     }
@@ -572,7 +697,7 @@ impl LogWriter {
     fn rotate(&mut self, cfg: &StoreConfig) -> Result<()> {
         self.sync()?;
         let records = self.records_since_checkpoint;
-        *self = LogWriter::open_segment(&self.dir, self.seq + 1, cfg)?;
+        *self = LogWriter::open_at(&self.dir, self.stream, self.seq + 1, cfg)?;
         self.records_since_checkpoint = records;
         self.sync_dir()?;
         Ok(())
@@ -595,10 +720,7 @@ impl LogWriter {
         // Truncate: state before `new_seq` now lives in the checkpoint.
         for (kind, seq) in list_state_files(&self.dir)? {
             if seq < new_seq {
-                let _ = fs::remove_file(match kind {
-                    StateFile::Segment => segment_path(&self.dir, seq),
-                    StateFile::Checkpoint => checkpoint_path(&self.dir, seq),
-                });
+                let _ = fs::remove_file(state_file_path(&self.dir, kind, seq));
             }
         }
         Ok(())
@@ -609,6 +731,17 @@ impl LogWriter {
 enum StateFile {
     Segment,
     Checkpoint,
+    /// A per-shard stream segment (sharded layout); the payload is the
+    /// stream index.
+    Stream(usize),
+}
+
+fn state_file_path(dir: &Path, kind: StateFile, seq: u64) -> PathBuf {
+    match kind {
+        StateFile::Segment => segment_path(dir, seq),
+        StateFile::Checkpoint => checkpoint_path(dir, seq),
+        StateFile::Stream(s) => stream_segment_path(dir, s, seq),
+    }
 }
 
 /// Enumerate `(kind, seq)` for every recognised file in a state dir;
@@ -620,6 +753,8 @@ fn list_state_files(dir: &Path) -> Result<Vec<(StateFile, u64)>> {
         let name = name.to_string_lossy();
         if let Some(seq) = parse_seq(&name, "wal-", ".log") {
             out.push((StateFile::Segment, seq));
+        } else if let Some((stream, seq)) = parse_stream_name(&name) {
+            out.push((StateFile::Stream(stream), seq));
         } else if let Some(seq) = parse_seq(&name, "checkpoint-", ".snap") {
             out.push((StateFile::Checkpoint, seq));
         }
@@ -644,7 +779,27 @@ fn list_state_files(dir: &Path) -> Result<Vec<(StateFile, u64)>> {
 /// entirely and keep the inner store's lock granularity.
 pub struct WalStore {
     inner: IndexedStore,
-    log: Arc<Mutex<LogWriter>>,
+    /// One log stream per dispatch shard; `logs.len() == 1` is the
+    /// legacy single-log layout, byte-for-byte.  Stream `i` serialises
+    /// every mutation touching dispatch shard `i`; an op spanning
+    /// several shards locks every touched stream in ascending index
+    /// order (the global ordering that makes multi-stream ops
+    /// deadlock-free) and appends one record to the lowest one.
+    logs: Vec<Arc<Mutex<LogWriter>>>,
+    /// Global log-sequence-number allocator (sharded layout only).
+    /// Every sharded record carries its LSN in an [`OP_SEQ`] envelope;
+    /// recovery merges the stream tails in LSN order, which equals the
+    /// original apply order because any two records touching a common
+    /// shard allocated their LSNs under that shard's held stream lock
+    /// (and records with no common shard commute).
+    lsn: AtomicU64,
+    /// Records appended since the last sharded checkpoint.  Sharded
+    /// checkpoints are deferred: an append holds one stream lock, a
+    /// checkpoint needs all of them, so the due-check runs only after
+    /// an op has dropped its guards.
+    sharded_records: AtomicU64,
+    /// Single-flight guard so concurrent ops don't stack checkpoints.
+    ckpt_in_progress: AtomicBool,
     wal_cfg: WalConfig,
     dir: PathBuf,
     stop_flusher: Arc<AtomicBool>,
@@ -679,13 +834,36 @@ impl WalStore {
                     store_cfg
                 );
             }
+            let want = wal_cfg.dispatch_shards.max(1).next_power_of_two();
+            if recovered.logs.len() != want {
+                crate::log_warn!(
+                    "wal",
+                    "{}: recovered persisted layout with {} dispatch shard(s) (requested {} \
+                     ignored)",
+                    dir.display(),
+                    recovered.logs.len(),
+                    want
+                );
+            }
             return Ok(recovered);
+        }
+        if wal_cfg.dispatch_shards > 1 {
+            let inner = IndexedStore::with_dispatch_shards(store_cfg, wal_cfg.dispatch_shards);
+            let count = inner.dispatch_shard_count();
+            let mut writers = Vec::with_capacity(count);
+            for s in 0..count {
+                writers.push(LogWriter::open_stream_segment(dir, s, count, 0, inner.config())?);
+            }
+            // The first generation's directory entries must be durable
+            // too, or a power loss could lose the whole log at once.
+            writers[0].sync_dir()?;
+            return Ok(Self::assemble(inner, writers, wal_cfg, dir, 0));
         }
         let writer = LogWriter::open_segment(dir, 0, &store_cfg)?;
         // The first segment's directory entry must be durable too, or a
         // power loss could lose the whole (record-fsynced) log at once.
         writer.sync_dir()?;
-        Ok(Self::assemble(IndexedStore::new(store_cfg), writer, wal_cfg, dir))
+        Ok(Self::assemble(IndexedStore::new(store_cfg), vec![writer], wal_cfg, dir, 0))
     }
 
     /// Recover a coordinator's store from its state directory with the
@@ -705,6 +883,12 @@ impl WalStore {
             "{}: no WAL segments or checkpoints to recover",
             dir.display()
         );
+        // Per-shard stream segments mean the directory was written by a
+        // sharded-layout store; the persisted layout wins, whatever
+        // `wal_cfg.dispatch_shards` asks for.
+        if files.iter().any(|(k, _)| matches!(k, StateFile::Stream(_))) {
+            return Self::recover_sharded(dir, wal_cfg, &files);
+        }
 
         // Newest checkpoint that decodes intact wins.  Falling back to an
         // older one is only sound while the intermediate segments still
@@ -800,21 +984,209 @@ impl WalStore {
         let mut writer = LogWriter::open_segment(dir, last_seq + 1, store.config())?;
         writer.sync_dir()?;
         writer.records_since_checkpoint = replayed;
-        Ok(Self::assemble(store, writer, wal_cfg, dir))
+        Ok(Self::assemble(store, vec![writer], wal_cfg, dir, replayed))
+    }
+
+    /// Recover a sharded-layout state directory: the newest intact
+    /// checkpoint (if any) plus every stream's replay tail, merged in
+    /// LSN order so the single-threaded replay re-applies mutations in
+    /// exactly their original apply order (see the `lsn` field docs for
+    /// why LSN order == apply order).
+    fn recover_sharded(
+        dir: &Path,
+        wal_cfg: WalConfig,
+        files: &[(StateFile, u64)],
+    ) -> Result<WalStore> {
+        // Newest checkpoint that decodes intact wins — same fallback
+        // rationale as the legacy path.
+        let mut checkpoints: Vec<u64> = files
+            .iter()
+            .filter(|(k, _)| *k == StateFile::Checkpoint)
+            .map(|&(_, seq)| seq)
+            .collect();
+        checkpoints.sort_unstable();
+        let mut base: Option<(u64, StoreSnapshot)> = None;
+        for &seq in checkpoints.iter().rev() {
+            match read_checkpoint(&checkpoint_path(dir, seq)) {
+                Ok(snap) => {
+                    base = Some((seq, snap));
+                    break;
+                }
+                Err(e) => {
+                    crate::log_warn!("wal", "checkpoint {seq} unreadable ({e:#}); falling back")
+                }
+            }
+        }
+
+        let mut streams: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        for &(kind, seq) in files {
+            if let StateFile::Stream(s) = kind {
+                streams.entry(s).or_default().push(seq);
+            }
+        }
+        let shard_count = streams.keys().next_back().map(|&m| m + 1).unwrap_or(0);
+        ensure!(
+            streams.len() == shard_count,
+            "sharded WAL stream set has holes: found streams {:?}",
+            streams.keys().collect::<Vec<_>>()
+        );
+        for seqs in streams.values_mut() {
+            seqs.sort_unstable();
+        }
+
+        let (base_seq, store) = match base {
+            Some((seq, snap)) => {
+                ensure!(
+                    snap.dispatch_shards == shard_count,
+                    "checkpoint says {} dispatch shards, directory has {shard_count} streams",
+                    snap.dispatch_shards
+                );
+                (seq, IndexedStore::restore(snap))
+            }
+            None => {
+                ensure!(
+                    checkpoints.is_empty(),
+                    "{}: all checkpoints corrupt; segments alone cannot reconstruct the store",
+                    dir.display()
+                );
+                // No checkpoint ever existed: every stream starts at
+                // generation 0, and stream 0's header records say how
+                // to build the empty store.
+                let first = *streams[&0].first().expect("listed stream has a segment");
+                let frames = read_segment(&stream_segment_path(dir, 0, first), false)?;
+                ensure!(
+                    frames.len() >= 2,
+                    "first stream segment lacks its config + shards header"
+                );
+                let mut d = Dec::new(&frames[0]);
+                ensure!(d.u8()? == OP_CONFIG, "first WAL record must be a config record");
+                let cfg = decode_config(&mut d)?;
+                let mut d = Dec::new(&frames[1]);
+                ensure!(
+                    d.u8()? == OP_SHARDS,
+                    "second record of a stream segment must be a shards record"
+                );
+                let logged = d.u32()? as usize;
+                ensure!(
+                    logged == shard_count,
+                    "shards record says {logged} streams, directory has {shard_count}"
+                );
+                (first, IndexedStore::with_dispatch_shards(cfg, shard_count))
+            }
+        };
+        ensure!(
+            store.dispatch_shard_count() == shard_count,
+            "recovered store has {} dispatch shards, directory has {shard_count} streams",
+            store.dispatch_shard_count()
+        );
+
+        // Per-stream continuity (segment seqs advance independently per
+        // stream; an empty tail is a stream the crash caught before its
+        // rotation inside a partially-applied checkpoint), then harvest
+        // each stream's `(lsn, inner record)` pairs.
+        let mut pending: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut next_seqs = vec![base_seq; shard_count];
+        for (&stream, seqs) in &streams {
+            let tail: Vec<u64> = seqs.iter().copied().filter(|&s| s >= base_seq).collect();
+            if let Some(&first_tail) = tail.first() {
+                ensure!(
+                    first_tail == base_seq,
+                    "stream {stream}: replay tail starts at segment {first_tail}, not at \
+                     checkpoint {base_seq}: intermediate history was truncated"
+                );
+                for pair in tail.windows(2) {
+                    ensure!(
+                        pair[1] == pair[0] + 1,
+                        "stream {stream}: segment gap between {} and {}: log history incomplete",
+                        pair[0],
+                        pair[1]
+                    );
+                }
+            }
+            let stream_last = tail.last().copied().unwrap_or(base_seq);
+            next_seqs[stream] = if tail.is_empty() { base_seq } else { stream_last + 1 };
+            for &seq in &tail {
+                let strict = seq != stream_last;
+                for frame in read_segment(&stream_segment_path(dir, stream, seq), strict)? {
+                    let mut d = Dec::new(&frame);
+                    match d.u8()? {
+                        OP_SEQ => {
+                            let lsn = d.u64()?;
+                            pending.push((lsn, d.rest().to_vec()));
+                        }
+                        _ => {
+                            // Per-segment header records (config +
+                            // shards): cross-checked right here; they
+                            // apply no mutation, so order is moot.
+                            let applied = replay_record(&store, &frame).with_context(|| {
+                                format!("stream {stream} segment {seq} header record")
+                            })?;
+                            ensure!(
+                                applied == 0,
+                                "stream {stream} segment {seq}: mutating record outside an \
+                                 OP_SEQ envelope"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        pending.sort_by_key(|&(lsn, _)| lsn);
+        for pair in pending.windows(2) {
+            ensure!(pair[0].0 != pair[1].0, "duplicate WAL LSN {}", pair[0].0);
+        }
+        // The next generation's LSNs must sort after everything replayed
+        // here, or a later recovery would merge the two out of order.
+        let next_lsn = pending.last().map(|&(lsn, _)| lsn + 1).unwrap_or(0);
+        let mut replayed = 0u64;
+        for (lsn, payload) in &pending {
+            replayed += replay_record(&store, payload)
+                .with_context(|| format!("replaying sharded record lsn {lsn}"))?;
+        }
+        crate::log_info!(
+            "wal",
+            "{}: recovered {} tickets ({} replayed records across {} streams on top of \
+             checkpoint {})",
+            dir.display(),
+            store.progress(None).total,
+            replayed,
+            shard_count,
+            base_seq
+        );
+
+        // Never append to a possibly-torn file: every stream continues
+        // on a fresh segment.
+        let mut writers = Vec::with_capacity(shard_count);
+        for s in 0..shard_count {
+            writers.push(LogWriter::open_stream_segment(
+                dir,
+                s,
+                shard_count,
+                next_seqs[s],
+                store.config(),
+            )?);
+        }
+        writers[0].sync_dir()?;
+        let ws = Self::assemble(store, writers, wal_cfg, dir, replayed);
+        ws.lsn.store(next_lsn, Ordering::SeqCst);
+        Ok(ws)
     }
 
     fn assemble(
         inner: IndexedStore,
-        writer: LogWriter,
+        writers: Vec<LogWriter>,
         wal_cfg: WalConfig,
         dir: &Path,
+        records_since_ckpt: u64,
     ) -> WalStore {
-        let log = Arc::new(Mutex::new(writer));
+        let logs: Vec<Arc<Mutex<LogWriter>>> =
+            writers.into_iter().map(|w| Arc::new(Mutex::new(w))).collect();
         let stop_flusher = Arc::new(AtomicBool::new(false));
         let sync_failed = Arc::new(AtomicBool::new(false));
         let flusher = match wal_cfg.sync {
             SyncPolicy::GroupCommitMs(interval_ms) if interval_ms > 0 => {
-                let log = Arc::clone(&log);
+                let logs = logs.clone();
                 let stop = Arc::clone(&stop_flusher);
                 let failed = Arc::clone(&sync_failed);
                 Some(std::thread::spawn(move || {
@@ -823,13 +1195,16 @@ impl WalStore {
                         // Sleep in short slices so Drop joins promptly.
                         std::thread::sleep(std::time::Duration::from_millis(interval_ms.min(20)));
                         if last.elapsed().as_millis() as u64 >= interval_ms {
-                            if let Err(e) = log.lock().unwrap().sync() {
-                                // Poison the store: the next mutating op
-                                // dies instead of acknowledging work the
-                                // disk can no longer persist.
-                                crate::log_error!("wal", "group-commit fsync failed: {e:#}");
-                                failed.store(true, Ordering::SeqCst);
-                                return;
+                            for log in &logs {
+                                if let Err(e) = log.lock().unwrap().sync() {
+                                    // Poison the store: the next
+                                    // mutating op dies instead of
+                                    // acknowledging work the disk can
+                                    // no longer persist.
+                                    crate::log_error!("wal", "group-commit fsync failed: {e:#}");
+                                    failed.store(true, Ordering::SeqCst);
+                                    return;
+                                }
                             }
                             last = Instant::now();
                         }
@@ -840,7 +1215,10 @@ impl WalStore {
         };
         WalStore {
             inner,
-            log,
+            logs,
+            lsn: AtomicU64::new(0),
+            sharded_records: AtomicU64::new(records_since_ckpt),
+            ckpt_in_progress: AtomicBool::new(false),
             wal_cfg,
             dir: dir.to_path_buf(),
             stop_flusher,
@@ -858,13 +1236,19 @@ impl WalStore {
     /// Force a checkpoint + log truncation now (graceful shutdowns make
     /// the next recovery O(checkpoint) instead of O(log)).
     pub fn checkpoint_now(&self) -> Result<()> {
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.checkpoint_sharded();
+        }
+        let mut log = self.logs[0].lock().unwrap();
         log.checkpoint(&self.inner, self.inner.config())
     }
 
     /// Flush and fsync everything appended so far, regardless of policy.
     pub fn sync_now(&self) -> Result<()> {
-        self.log.lock().unwrap().sync()
+        for log in &self.logs {
+            log.lock().unwrap().sync()?;
+        }
+        Ok(())
     }
 
     /// Whether any appended record is still waiting for an fsync.  Test
@@ -872,7 +1256,7 @@ impl WalStore {
     /// (`rust/tests/wal_recovery.rs`): after `complete`/`complete_batch`
     /// returns under [`SyncPolicy::GroupCommitMs`], this must be false.
     pub fn has_unsynced_appends(&self) -> bool {
-        self.log.lock().unwrap().dirty
+        self.logs.iter().any(|l| l.lock().unwrap().dirty)
     }
 
     /// The group-commit acknowledgement fix: under `GroupCommitMs` a
@@ -902,10 +1286,306 @@ impl WalStore {
             .expect("WAL append failed: refusing to continue without durability");
     }
 
+    /// Lock the stream mutexes for `touched` (ascending, deduped) — the
+    /// global ordering that keeps multi-stream ops deadlock-free.
+    fn lock_streams(&self, touched: &[usize]) -> Vec<MutexGuard<'_, LogWriter>> {
+        touched.iter().map(|&s| self.logs[s].lock().unwrap()).collect()
+    }
+
+    /// Sharded-mode append: allocate the next LSN, wrap `record` in an
+    /// [`OP_SEQ`] envelope, and frame it into the already-locked stream
+    /// `log`.  Callers holding several stream guards append to the
+    /// lowest touched one — the LSN is allocated while every touched
+    /// guard is held, which is what makes LSN order equal apply order.
+    /// Only size rotation happens inline; checkpointing needs *all*
+    /// stream locks and is deferred to
+    /// [`maybe_checkpoint_sharded`](Self::maybe_checkpoint_sharded).
+    fn append_stream(&self, log: &mut LogWriter, record: Enc) {
+        assert!(
+            !self.sync_failed.load(Ordering::SeqCst),
+            "WAL group-commit fsync failed earlier: refusing to accept work without durability"
+        );
+        let lsn = self.lsn.fetch_add(1, Ordering::SeqCst);
+        let mut e = Enc::new(OP_SEQ);
+        e.u64(lsn);
+        e.raw(&record.0);
+        (|| -> Result<()> {
+            log.write_frame(&e.frame())?;
+            if matches!(self.wal_cfg.sync, SyncPolicy::EveryRecord | SyncPolicy::GroupCommitMs(0))
+            {
+                log.sync()?;
+            }
+            if log.bytes_in_segment >= self.wal_cfg.segment_max_bytes {
+                log.rotate(self.inner.config())?;
+            }
+            Ok(())
+        })()
+        .expect("WAL append failed: refusing to continue without durability");
+        self.sharded_records.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Run a sharded checkpoint if one is due and nobody else is mid
+    /// checkpoint.  Called after a mutating op has dropped its stream
+    /// guards (the checkpoint takes all of them).
+    fn maybe_checkpoint_sharded(&self) {
+        let every = self.wal_cfg.checkpoint_every;
+        if every == 0 || self.sharded_records.load(Ordering::Relaxed) < every {
+            return;
+        }
+        if self
+            .ckpt_in_progress
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return;
+        }
+        let r = self.checkpoint_sharded();
+        self.ckpt_in_progress.store(false, Ordering::SeqCst);
+        r.expect("WAL checkpoint failed: refusing to continue without durability");
+    }
+
+    /// Sharded checkpoint: freeze every stream (ascending lock order),
+    /// snapshot the store, rotate all streams to one common generation
+    /// `new_seq`, then delete everything older.  Recovery tolerates a
+    /// crash anywhere in this sequence: an unrenamed `.tmp` falls back
+    /// to the previous checkpoint, an unrotated stream shows up as an
+    /// empty replay tail, and an interrupted deletion just leaves stale
+    /// files below `new_seq` that the tail filter ignores.
+    fn checkpoint_sharded(&self) -> Result<()> {
+        let mut guards = self.lock_streams(&(0..self.logs.len()).collect::<Vec<_>>());
+        let new_seq = guards.iter().map(|g| g.seq).max().unwrap_or(0) + 1;
+        let tmp = self.dir.join(format!("checkpoint-{new_seq:08}.tmp"));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&CHECKPOINT_MAGIC)?;
+            f.write_all(&encode_snapshot(&self.inner.snapshot()))?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, checkpoint_path(&self.dir, new_seq))?;
+        let count = guards.len();
+        for (s, g) in guards.iter_mut().enumerate() {
+            g.sync()?;
+            **g = LogWriter::open_stream_segment(
+                &self.dir,
+                s,
+                count,
+                new_seq,
+                self.inner.config(),
+            )?;
+        }
+        guards[0].sync_dir()?;
+        for (kind, seq) in list_state_files(&self.dir)? {
+            if seq < new_seq {
+                let _ = fs::remove_file(state_file_path(&self.dir, kind, seq));
+            }
+        }
+        self.sharded_records.store(0, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Sharded `create_tickets`.  Ids are allocated *before* the stream
+    /// locks — the tickets stay unreachable until `create_tickets_exact`
+    /// publishes them under the locks, and the explicit ids in the
+    /// record make replay immune to allocator interleaving.
+    fn sharded_create(
+        &self,
+        task: TaskId,
+        task_name: &str,
+        args: Vec<Value>,
+        now_ms: u64,
+        payload_json: &[String],
+    ) -> Vec<TicketId> {
+        let n = args.len() as u64;
+        if n == 0 {
+            // Nothing is created (see `create_tickets_exact`), so
+            // nothing needs logging.
+            return Vec::new();
+        }
+        let base = self.inner.allocate_ids(n);
+        let items: Vec<(u64, usize, Value)> = args
+            .into_iter()
+            .enumerate()
+            .map(|(index, payload)| (base + index as u64, index, payload))
+            .collect();
+        let mut touched: Vec<usize> =
+            items.iter().map(|&(id, _, _)| self.inner.dshard(id)).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        let mut guards = self.lock_streams(&touched);
+        self.inner.create_tickets_exact(task, task_name, items, now_ms);
+        let mut e = Enc::new(OP_CREATE_EXACT);
+        e.u64(task.0);
+        e.u64(now_ms);
+        e.str(task_name);
+        e.u32(n as u32);
+        for (i, json) in payload_json.iter().enumerate() {
+            e.u64(base + i as u64);
+            e.u64(i as u64);
+            e.str(json);
+        }
+        self.append_stream(&mut guards[0], e);
+        drop(guards);
+        self.maybe_checkpoint_sharded();
+        (base..base + n).map(TicketId).collect()
+    }
+
+    /// Sharded `next_tickets`: the same home-then-steal scan as the
+    /// in-memory store, but over *stream* locks (home blocking, sibling
+    /// streams under try-lock), with each non-empty per-shard decision
+    /// run logged as one [`OP_DISPATCH_SHARD`] record on that shard's
+    /// own stream — dispatch never serialises on a global log.
+    fn sharded_next_tickets(&self, client: &str, now_ms: u64, k: usize) -> Vec<Ticket> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let nshards = self.logs.len();
+        let home = self.inner.home_shard(client);
+        let mut out: Vec<Ticket> = Vec::new();
+        for i in 0..nshards {
+            if out.len() >= k {
+                break;
+            }
+            let sh = (home + i) % nshards;
+            let mut guard = if i == 0 {
+                self.logs[sh].lock().unwrap()
+            } else {
+                self.inner.note_steal_attempt();
+                match self.logs[sh].try_lock() {
+                    Ok(g) => g,
+                    Err(_) => continue,
+                }
+            };
+            let got = self.inner.next_tickets_from_shard(sh, client, now_ms, k - out.len());
+            if !got.is_empty() {
+                if i > 0 {
+                    self.inner.note_steal_success();
+                }
+                let mut e = Enc::new(OP_DISPATCH_SHARD);
+                e.u32(sh as u32);
+                e.u64(now_ms);
+                e.str(client);
+                e.u32(got.len() as u32);
+                for t in &got {
+                    e.u64(t.id.0);
+                }
+                self.append_stream(&mut guard, e);
+                out.extend(got);
+            }
+            drop(guard);
+        }
+        self.maybe_checkpoint_sharded();
+        out
+    }
+
+    fn sharded_complete(&self, id: TicketId, result: Value, result_json: &str) -> Result<bool> {
+        let mut log = self.logs[self.inner.dshard(id.0)].lock().unwrap();
+        let fresh = self.inner.complete(id, result)?;
+        let mut e = Enc::new(OP_COMPLETE);
+        e.u64(id.0);
+        e.u8(fresh as u8);
+        e.str(result_json);
+        self.append_stream(&mut log, e);
+        self.sync_completions(&mut log)?;
+        drop(log);
+        self.maybe_checkpoint_sharded();
+        Ok(fresh)
+    }
+
+    fn sharded_complete_batch(
+        &self,
+        results: Vec<(TicketId, Value)>,
+        jsons: &[(u64, String)],
+    ) -> Result<usize> {
+        if results.is_empty() {
+            return Ok(0); // nothing to apply, log, or lock
+        }
+        let mut touched: Vec<usize> =
+            results.iter().map(|(id, _)| self.inner.dshard(id.0)).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        let mut guards = self.lock_streams(&touched);
+        let (flags, stopped) = self.inner.complete_batch_flags(results);
+        // Log the applied prefix with its per-entry accepted flags; an
+        // erroring entry was not applied and is not logged.
+        if !flags.is_empty() {
+            let mut e = Enc::new(OP_COMPLETE_BATCH);
+            e.u32(flags.len() as u32);
+            for (i, accepted) in flags.iter().enumerate() {
+                e.u64(jsons[i].0);
+                e.u8(*accepted as u8);
+                e.str(&jsons[i].1);
+            }
+            self.append_stream(&mut guards[0], e);
+        }
+        self.sync_completions(&mut guards[0])?;
+        drop(guards);
+        self.maybe_checkpoint_sharded();
+        match stopped {
+            Some(err) => Err(err),
+            None => Ok(flags.iter().filter(|&&f| f).count()),
+        }
+    }
+
+    fn sharded_report_error(&self, id: TicketId, report: String) -> Result<()> {
+        let mut log = self.logs[self.inner.dshard(id.0)].lock().unwrap();
+        let mut e = Enc::new(OP_ERROR);
+        e.u64(id.0);
+        e.str(&report);
+        self.inner.report_error(id, report)?;
+        self.append_stream(&mut log, e);
+        drop(log);
+        self.maybe_checkpoint_sharded();
+        Ok(())
+    }
+
+    fn sharded_release_batch(&self, ids: &[TicketId]) -> Vec<bool> {
+        if ids.is_empty() {
+            return Vec::new(); // nothing to apply, log, or lock
+        }
+        let mut touched: Vec<usize> = ids.iter().map(|id| self.inner.dshard(id.0)).collect();
+        touched.sort_unstable();
+        touched.dedup();
+        let mut guards = self.lock_streams(&touched);
+        let flags = self.inner.release_batch(ids);
+        let mut e = Enc::new(OP_RELEASE_BATCH);
+        e.u32(ids.len() as u32);
+        for (i, id) in ids.iter().enumerate() {
+            e.u64(id.0);
+            e.u8(flags[i] as u8);
+        }
+        self.append_stream(&mut guards[0], e);
+        drop(guards);
+        self.maybe_checkpoint_sharded();
+        flags
+    }
+
+    fn sharded_drain_errors(&self) -> Vec<(TicketId, String)> {
+        // The drain empties every shard's queue, so its record must
+        // order against every stream's traffic: all streams locked,
+        // ascending.
+        let mut guards = self.lock_streams(&(0..self.logs.len()).collect::<Vec<_>>());
+        let mut drained = Vec::new();
+        for shard in 0..self.logs.len() {
+            drained.extend(self.inner.drain_errors_shard(shard));
+        }
+        if !drained.is_empty() {
+            self.append_stream(&mut guards[0], Enc::new(OP_DRAIN_ERRORS));
+        }
+        drop(guards);
+        self.maybe_checkpoint_sharded();
+        drained
+    }
+
     /// Fresh store in a unique throwaway directory, removed on drop.
     #[cfg(test)]
     pub(crate) fn open_temp_for_tests(cfg: StoreConfig) -> WalStore {
-        use std::sync::atomic::AtomicU64;
+        Self::open_temp_with(cfg, WalConfig::default())
+    }
+
+    /// [`open_temp_for_tests`](Self::open_temp_for_tests) with explicit
+    /// WAL tuning (e.g. a sharded layout).
+    #[cfg(test)]
+    pub(crate) fn open_temp_with(cfg: StoreConfig, wal_cfg: WalConfig) -> WalStore {
         static N: AtomicU64 = AtomicU64::new(0);
         let dir = std::env::temp_dir().join(format!(
             "sashimi-wal-suite-{}-{}",
@@ -913,7 +1593,7 @@ impl WalStore {
             N.fetch_add(1, Ordering::Relaxed)
         ));
         let _ = fs::remove_dir_all(&dir);
-        let mut s = WalStore::open(&dir, cfg, WalConfig::default()).expect("temp WAL store");
+        let mut s = WalStore::open(&dir, cfg, wal_cfg).expect("temp WAL store");
         s.remove_dir_on_drop = true;
         s
     }
@@ -925,8 +1605,10 @@ impl Drop for WalStore {
         if let Some(h) = self.flusher.lock().unwrap().take() {
             let _ = h.join();
         }
-        if let Ok(mut log) = self.log.lock() {
-            let _ = log.sync();
+        for log in &self.logs {
+            if let Ok(mut log) = log.lock() {
+                let _ = log.sync();
+            }
         }
         if self.remove_dir_on_drop {
             let _ = fs::remove_dir_all(&self.dir);
@@ -1069,6 +1751,61 @@ fn replay_record(store: &IndexedStore, payload: &[u8]) -> Result<u64> {
             }
             Ok(1)
         }
+        OP_SHARDS => {
+            let count = d.u32()? as usize;
+            let _stream = d.u32()?;
+            d.done()?;
+            ensure!(
+                count == store.dispatch_shard_count(),
+                "shards record says {count} dispatch shards, recovering store has {}",
+                store.dispatch_shard_count()
+            );
+            Ok(0)
+        }
+        OP_CREATE_EXACT => {
+            let task = TaskId(d.u64()?);
+            let now_ms = d.u64()?;
+            let task_name = d.str()?;
+            let n = d.u32()? as usize;
+            let mut items = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let id = d.u64()?;
+                let index = d.u64()? as usize;
+                let payload = d.value()?;
+                items.push((id, index, payload));
+            }
+            d.done()?;
+            // The record carries explicit ids, so replay re-inserts the
+            // exact originals regardless of merge interleaving.
+            store.create_tickets_exact(task, &task_name, items, now_ms);
+            Ok(1)
+        }
+        OP_DISPATCH_SHARD => {
+            let shard = d.u32()? as usize;
+            let now_ms = d.u64()?;
+            let client = d.str()?;
+            let n = d.u32()? as usize;
+            let mut ids = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                ids.push(d.u64()?);
+            }
+            d.done()?;
+            ensure!(
+                shard < store.dispatch_shard_count(),
+                "dispatch record for shard {shard}, store has {}",
+                store.dispatch_shard_count()
+            );
+            // One shard's decision run is a prefix of that shard's
+            // k-fold VCT sequence, so replaying with k = n re-picks
+            // exactly the logged tickets.
+            let tickets = store.next_tickets_from_shard(shard, &client, now_ms, ids.len());
+            let picked: Vec<u64> = tickets.iter().map(|t| t.id.0).collect();
+            ensure!(
+                picked == ids,
+                "replayed shard-{shard} dispatch picked {picked:?}, log says {ids:?}"
+            );
+            Ok(1)
+        }
         op => bail!("unknown WAL opcode {op}"),
     }
 }
@@ -1106,7 +1843,10 @@ impl Scheduler for WalStore {
     ) -> Vec<TicketId> {
         // Serialise payloads before `args` moves into the inner store.
         let payload_json: Vec<String> = args.iter().map(|v| v.to_string()).collect();
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_create(task, task_name, args, now_ms, &payload_json);
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let ids = self.inner.create_tickets(task, task_name, args, now_ms);
         let mut e = Enc::new(OP_CREATE);
         e.u64(task.0);
@@ -1122,7 +1862,10 @@ impl Scheduler for WalStore {
     }
 
     fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_next_tickets(client, now_ms, 1).pop();
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let t = self.inner.next_ticket(client, now_ms)?;
         let mut e = Enc::new(OP_DISPATCH);
         e.u64(now_ms);
@@ -1133,7 +1876,10 @@ impl Scheduler for WalStore {
     }
 
     fn next_tickets(&self, client: &str, now_ms: u64, k: usize) -> Vec<Ticket> {
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_next_tickets(client, now_ms, k);
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let tickets = self.inner.next_tickets(client, now_ms, k);
         if tickets.is_empty() {
             // Nothing mutated, nothing to log.
@@ -1152,7 +1898,10 @@ impl Scheduler for WalStore {
 
     fn complete(&self, id: TicketId, result: Value) -> Result<bool> {
         let result_json = result.to_string();
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_complete(id, result, &result_json);
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let fresh = self.inner.complete(id, result)?;
         let mut e = Enc::new(OP_COMPLETE);
         e.u64(id.0);
@@ -1170,7 +1919,10 @@ impl Scheduler for WalStore {
         // Serialise payloads before `results` moves into the inner store.
         let jsons: Vec<(u64, String)> =
             results.iter().map(|(id, v)| (id.0, v.to_string())).collect();
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_complete_batch(results, &jsons);
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let (flags, stopped) = self.inner.complete_batch_flags(results);
         // Log the applied prefix with its per-entry accepted flags; an
         // erroring entry was not applied and is not logged.
@@ -1192,7 +1944,10 @@ impl Scheduler for WalStore {
     }
 
     fn report_error(&self, id: TicketId, report: String) -> Result<()> {
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_report_error(id, report);
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let mut e = Enc::new(OP_ERROR);
         e.u64(id.0);
         e.str(&report);
@@ -1209,7 +1964,10 @@ impl Scheduler for WalStore {
         if ids.is_empty() {
             return Vec::new();
         }
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_release_batch(ids);
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let flags = self.inner.release_batch(ids);
         // One framed record per batch, with the per-entry released
         // flags for the replay cross-check (a no-op flag changes no
@@ -1255,12 +2013,19 @@ impl Scheduler for WalStore {
     }
 
     fn drain_errors(&self) -> Vec<(TicketId, String)> {
-        let mut log = self.log.lock().unwrap();
+        if self.logs.len() > 1 {
+            return self.sharded_drain_errors();
+        }
+        let mut log = self.logs[0].lock().unwrap();
         let drained = self.inner.drain_errors();
         if !drained.is_empty() {
             self.append(&mut log, Enc::new(OP_DRAIN_ERRORS));
         }
         drained
+    }
+
+    fn stats(&self) -> SchedStats {
+        self.inner.stats()
     }
 }
 
@@ -1397,6 +2162,7 @@ mod tests {
             sync: SyncPolicy::OsOnly,
             segment_max_bytes: 1 << 20,
             checkpoint_every: 10,
+            dispatch_shards: 1,
         };
         {
             let s = WalStore::open(&dir, cfg(), wal_cfg).unwrap();
@@ -1435,8 +2201,12 @@ mod tests {
     #[test]
     fn size_rotation_splits_segments_and_recovers() {
         let dir = temp_dir("rotate");
-        let wal_cfg =
-            WalConfig { sync: SyncPolicy::OsOnly, segment_max_bytes: 256, checkpoint_every: 0 };
+        let wal_cfg = WalConfig {
+            sync: SyncPolicy::OsOnly,
+            segment_max_bytes: 256,
+            checkpoint_every: 0,
+            dispatch_shards: 1,
+        };
         {
             let s = WalStore::open(&dir, cfg(), wal_cfg).unwrap();
             for i in 0..20u64 {
@@ -1574,6 +2344,157 @@ mod tests {
         assert!(r.is_task_done(TaskId(3)));
         assert_eq!(r.wait_results(TaskId(3)), vec![Value::num(81.0)]);
         drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // --- sharded layout ---------------------------------------------------
+
+    fn wal4() -> WalConfig {
+        WalConfig { sync: SyncPolicy::OsOnly, dispatch_shards: 4, ..WalConfig::default() }
+    }
+
+    /// A representative op mix touching several shards, clients, and
+    /// outcome kinds (21 tickets per call).
+    fn drive_sharded(s: &dyn Scheduler) {
+        let ids = s.create_tickets(
+            TaskId(1),
+            "t",
+            (0..16).map(|i| Value::num(i as f64)).collect(),
+            0,
+        );
+        let more =
+            s.create_tickets(TaskId(2), "u", (0..5).map(|i| Value::num(i as f64)).collect(), 1);
+        let a = s.next_tickets("alice", 2, 6);
+        let b = s.next_tickets("bob", 3, 4);
+        assert_eq!((a.len(), b.len()), (6, 4));
+        s.complete_batch(a.iter().take(3).map(|t| (t.id, Value::num(1.0))).collect()).unwrap();
+        s.report_error(b[0].id, "boom".into()).unwrap();
+        let _ = s.release_batch(&[b[1].id, ids[15], more[4]]);
+        let _ = s.drain_errors();
+        let c = s.next_tickets("carol", 10, 3);
+        assert_eq!(c.len(), 3);
+        s.complete(c[0].id, Value::num(2.0)).unwrap();
+    }
+
+    #[test]
+    fn sharded_open_creates_stream_layout() {
+        let dir = temp_dir("shard-open");
+        let s = WalStore::open(&dir, cfg(), wal4()).unwrap();
+        assert_eq!(s.logs.len(), 4);
+        assert_eq!(s.stats().dispatch_shards, 4);
+        let files = list_state_files(&dir).unwrap();
+        assert!(files.iter().all(|(k, _)| matches!(k, StateFile::Stream(_))));
+        let streams: Vec<usize> = files
+            .iter()
+            .filter_map(|(k, seq)| match k {
+                StateFile::Stream(i) if *seq == 0 => Some(*i),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(streams, vec![0, 1, 2, 3]);
+        drop(s);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_crash_recovery_is_bit_exact() {
+        let dir = temp_dir("shard-recover");
+        let before = {
+            let s = WalStore::open(&dir, cfg(), wal4()).unwrap();
+            drive_sharded(&s);
+            let snap = encode_snapshot(&s.inner.snapshot());
+            std::mem::forget(s); // crash: no flush-on-drop
+            snap
+        };
+        let r = WalStore::recover(&dir).unwrap();
+        assert_eq!(r.logs.len(), 4);
+        assert_eq!(encode_snapshot(&r.inner.snapshot()), before);
+        drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_checkpoint_rotates_and_truncates_all_streams() {
+        let dir = temp_dir("shard-ckpt");
+        let before;
+        {
+            let s = WalStore::open(&dir, cfg(), wal4()).unwrap();
+            drive_sharded(&s);
+            s.checkpoint_now().unwrap();
+            // Post-checkpoint traffic replays on top of the snapshot.
+            drive_sharded(&s);
+            before = encode_snapshot(&s.inner.snapshot());
+        }
+        let files = list_state_files(&dir).unwrap();
+        let ckpts: Vec<u64> =
+            files.iter().filter(|(k, _)| *k == StateFile::Checkpoint).map(|f| f.1).collect();
+        assert_eq!(ckpts.len(), 1, "older state truncated by the checkpoint");
+        for stream in 0..4 {
+            let min = files
+                .iter()
+                .filter_map(|&(k, seq)| (k == StateFile::Stream(stream)).then_some(seq))
+                .min()
+                .unwrap();
+            assert_eq!(min, ckpts[0], "stream {stream} rotated to the checkpoint generation");
+        }
+        let r = WalStore::recover(&dir).unwrap();
+        assert_eq!(encode_snapshot(&r.inner.snapshot()), before);
+        drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_torn_stream_header_is_tolerated() {
+        let dir = temp_dir("shard-torn");
+        let before;
+        {
+            let s = WalStore::open(&dir, cfg(), wal4()).unwrap();
+            drive_sharded(&s);
+            before = encode_snapshot(&s.inner.snapshot());
+        }
+        // A crash mid size-rotation can leave one stream's next segment
+        // as a torn header-only file; recovery treats it as empty.
+        fs::write(stream_segment_path(&dir, 1, 1), b"SW").unwrap();
+        let r = WalStore::recover(&dir).unwrap();
+        assert_eq!(encode_snapshot(&r.inner.snapshot()), before);
+        drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_recovery_spans_generations_in_lsn_order() {
+        let dir = temp_dir("shard-gen");
+        let control = IndexedStore::with_dispatch_shards(cfg(), 4);
+        {
+            let s = WalStore::open(&dir, cfg(), wal4()).unwrap();
+            drive_sharded(&s);
+        }
+        {
+            // Second generation: fresh segments, LSNs resume after the
+            // replayed maximum so the next merge stays in apply order.
+            let s = WalStore::recover(&dir).unwrap();
+            drive_sharded(&s);
+        }
+        drive_sharded(&control);
+        drive_sharded(&control);
+        let r = WalStore::recover(&dir).unwrap();
+        assert_eq!(encode_snapshot(&r.inner.snapshot()), encode_snapshot(&control.snapshot()));
+        drop(r);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_request_on_legacy_dir_keeps_legacy_layout() {
+        let dir = temp_dir("shard-legacy");
+        {
+            let s = WalStore::open(&dir, cfg(), WalConfig::default()).unwrap();
+            s.create_tickets(TaskId(1), "t", vec![Value::num(1.0)], 0);
+        }
+        // The persisted layout wins over the requested shard count.
+        let s = WalStore::open(&dir, cfg(), wal4()).unwrap();
+        assert_eq!(s.logs.len(), 1);
+        assert_eq!(s.progress(None).total, 1);
+        drop(s);
         fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -61,6 +61,30 @@ fn quick_soak_1k_workers_loses_nothing() {
     }
 }
 
+/// The same zero-loss/zero-ghost contract with the dispatch core split
+/// into shards (DESIGN.md §2.6): a quick soak at 2 and 8 dispatch
+/// shards, real worker threads stealing across real per-shard WAL
+/// streams.  The sharded runs must also surface their contention
+/// counters in the metrics JSON.
+#[test]
+fn sharded_soak_loses_nothing_at_every_shard_count() {
+    for shards in [2usize, 8] {
+        let mut cfg = SoakConfig::new(200, 7);
+        cfg.dispatch_shards = shards;
+        cfg.duration_ms = 120_000;
+        let r = run_soak(&cfg).unwrap_or_else(|e| panic!("sharded soak ({shards}) failed: {e}"));
+        assert_eq!(r.done, r.total, "lost tickets at {shards} shards: {}", r.total - r.done);
+        assert_eq!((r.pending, r.in_flight), (0, 0), "store not at rest at {shards} shards");
+        assert_eq!(r.ghosts_after_close, 0, "ghost clients at {shards} shards");
+        assert!(r.vanishes > 0, "churn too gentle at {shards} shards");
+        assert!(
+            r.metrics_json.contains(&format!("\"dispatch_shards\":{shards}")),
+            "metrics must report the shard layout: {}",
+            r.metrics_json
+        );
+    }
+}
+
 /// The passive §2.1.2 baseline at smaller scale: vanished browsers
 /// strand tickets until window expiry, and stranding is bounded by the
 /// window (plus poll slack) — the soak-metrics counterpart of the

@@ -1,0 +1,159 @@
+//! Per-PR contention smoke for the sharded dispatch core (ISSUE 7).
+//!
+//! Two client threads hammer a store with more dispatch shards than
+//! clients, so draining the pool *requires* the work-stealing scan:
+//! each thread empties its home shard, then must pull every remaining
+//! shard's tickets through try-lock steals while the sibling thread
+//! does the same.  The smoke asserts the two properties the sharding
+//! must never trade away:
+//!
+//! * **No deadlock** — every thread finishes inside a hard deadline
+//!   (the steal scan only ever try-locks siblings, and multi-shard ops
+//!   lock shards in ascending order, so no cycle can form).
+//! * **No lost or duplicated tickets** — with redistribution windows
+//!   far beyond the test horizon, every ticket is dispatched exactly
+//!   once per hand-out (one more time than it was released), accepted
+//!   exactly once, and the final progress shows the whole pool done.
+//!
+//! Kept deliberately small (a few thousand tickets, ~a second) so CI
+//! can afford it on every PR; the nightly shard sweep in
+//! `benches/store_throughput.rs` covers throughput at 1M live.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sashimi::store::{
+    IndexedStore, Scheduler, StoreConfig, SyncPolicy, TaskId, WalConfig, WalStore,
+};
+use sashimi::util::json::Value;
+
+/// Redistribution windows far beyond the test horizon: any second
+/// hand-out of a ticket that was not explicitly released is a bug.
+fn quiet_cfg() -> StoreConfig {
+    StoreConfig {
+        requeue_after_ms: 1_000_000_000_000,
+        min_redistribute_ms: 1_000_000_000_000,
+        requeue_on_error: true,
+    }
+}
+
+const DEADLINE: Duration = Duration::from_secs(60);
+
+/// Drive `clients` threads of next_tickets(16) → release-some /
+/// complete-rest cycles until the pool drains, then check conservation.
+fn drain_under_contention(store: Arc<dyn Scheduler>, clients: usize, n: usize) {
+    let ids = store.create_tickets(
+        TaskId(1),
+        "smoke",
+        (0..n).map(|i| Value::num(i as f64)).collect(),
+        0,
+    );
+    assert_eq!(ids.len(), n);
+    let started = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|w| {
+            let store = Arc::clone(&store);
+            std::thread::spawn(move || {
+                let client = format!("smoke-{w}");
+                // (dispatches, releases) seen by this thread, per id.
+                let mut seen: HashMap<u64, (u32, u32)> = HashMap::new();
+                let mut accepted = 0usize;
+                let mut batches = 0u64;
+                loop {
+                    assert!(
+                        started.elapsed() < DEADLINE,
+                        "{client} still dispatching after {DEADLINE:?}: deadlock or livelock"
+                    );
+                    let now = 1 + batches; // virtual clock, monotone
+                    let got = store.next_tickets(&client, now, 16);
+                    if got.is_empty() {
+                        if store.progress(None).pending == 0 {
+                            break; // pool drained (in-flight is the sibling's)
+                        }
+                        std::thread::yield_now();
+                        continue;
+                    }
+                    batches += 1;
+                    for t in &got {
+                        seen.entry(t.id.0).or_insert((0, 0)).0 += 1;
+                    }
+                    // Hand every 7th pick back through the active
+                    // failure path; it must come around again (possibly
+                    // via the sibling's steal scan).
+                    let (dropped, kept): (Vec<_>, Vec<_>) =
+                        got.iter().enumerate().partition(|(i, _)| i % 7 == 6);
+                    let release_ids: Vec<_> = dropped.iter().map(|(_, t)| t.id).collect();
+                    let flags = store.release_batch(&release_ids);
+                    assert!(flags.iter().all(|&f| f), "released an in-flight ticket we hold");
+                    for id in &release_ids {
+                        seen.get_mut(&id.0).unwrap().1 += 1;
+                    }
+                    accepted += store
+                        .complete_batch(
+                            kept.iter().map(|(_, t)| (t.id, Value::num(t.index as f64))).collect(),
+                        )
+                        .expect("complete_batch on held tickets");
+                }
+                (seen, accepted)
+            })
+        })
+        .collect();
+    let mut dispatched: HashMap<u64, (u32, u32)> = HashMap::new();
+    let mut accepted_total = 0usize;
+    for h in handles {
+        let (seen, accepted) = h.join().expect("smoke thread panicked");
+        for (id, (d, r)) in seen {
+            let e = dispatched.entry(id).or_insert((0, 0));
+            e.0 += d;
+            e.1 += r;
+        }
+        accepted_total += accepted;
+    }
+    // Conservation: every created ticket went out, exactly once per
+    // hand-out, and was accepted exactly once across both threads.
+    assert_eq!(dispatched.len(), n, "some tickets were never dispatched");
+    for (id, (d, r)) in &dispatched {
+        assert_eq!(*d, r + 1, "ticket {id} dispatched {d}× for {r} releases");
+    }
+    assert_eq!(accepted_total, n, "accepted completions != pool size");
+    let p = store.progress(None);
+    assert_eq!((p.total, p.done, p.pending, p.in_flight), (n, n, 0, 0), "final progress {p:?}");
+    let st = store.stats();
+    assert!(st.dispatch_locks > 0, "dispatches must count lock acquisitions");
+    assert!(
+        st.steal_successes > 0,
+        "2 clients × {} shards cannot drain without stealing: {st:?}",
+        st.dispatch_shards
+    );
+}
+
+/// The in-memory sharded core: 2 threads, 8 shards — six shards' worth
+/// of tickets are reachable only through steals.
+#[test]
+fn two_threads_eight_shards_no_deadlock_no_lost_tickets() {
+    let store: Arc<dyn Scheduler> = Arc::new(IndexedStore::with_dispatch_shards(quiet_cfg(), 8));
+    drain_under_contention(store, 2, 4_000);
+}
+
+/// The same contract through the per-shard WAL segment streams, where
+/// a steal appends to a sibling's stream and completion batches lock
+/// several streams at once (ascending order — the deadlock-freedom
+/// discipline this smoke exists to catch regressions in).
+#[test]
+fn two_threads_sharded_wal_no_deadlock_no_lost_tickets() {
+    let dir = std::env::temp_dir()
+        .join(format!("sashimi-contention-smoke-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let wal_cfg = WalConfig {
+        sync: SyncPolicy::OsOnly,
+        segment_max_bytes: 1 << 20,
+        checkpoint_every: 128, // several checkpoints mid-contention
+        dispatch_shards: 4,
+    };
+    let store: Arc<dyn Scheduler> =
+        Arc::new(WalStore::open(&dir, quiet_cfg(), wal_cfg).expect("open sharded WAL"));
+    drain_under_contention(Arc::clone(&store), 2, 1_500);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}

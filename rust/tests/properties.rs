@@ -1,9 +1,12 @@
 //! Property-based tests (seeded harness, util::proptest) on the
 //! coordinator's invariants and the substrate codecs.
 
+use std::collections::HashMap;
+
 use sashimi::prop_assert;
 use sashimi::store::{
-    IndexedStore, NaiveStore, Scheduler, StoreConfig, TaskId, TicketId, TicketStatus, TicketStore,
+    IndexedStore, NaiveStore, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
+    TicketStatus, TicketStore,
 };
 use sashimi::util::json::Value;
 use sashimi::util::lru::LruCache;
@@ -299,6 +302,300 @@ fn indexed_scheduler_matches_naive_reference() {
         );
         let (ea, eb) = (indexed.drain_errors(), naive.drain_errors());
         prop_assert!(ea == eb, "buffered error reports diverge");
+        Ok(())
+    });
+}
+
+/// Everything but the id/index (which live in per-store id spaces) must
+/// agree between a sharded pick and its per-shard oracle's pick.
+fn same_modulo_id(a: &Ticket, b: &Ticket) -> bool {
+    a.task == b.task
+        && a.task_name == b.task_name
+        && a.payload == b.payload
+        && a.created_ms == b.created_ms
+        && a.status == b.status
+        && a.last_distributed_ms == b.last_distributed_ms
+        && a.distribution_count == b.distribution_count
+        && a.result == b.result
+        && a.assigned_to == b.assigned_to
+}
+
+/// Field-wise sum of the oracles' progress — every counter is additive
+/// across disjoint ticket populations.
+fn sum_progress(oracles: &[NaiveStore], task: Option<TaskId>) -> Progress {
+    let mut s = Progress::default();
+    for o in oracles {
+        let p = o.progress(task);
+        s.total += p.total;
+        s.pending += p.pending;
+        s.in_flight += p.in_flight;
+        s.done += p.done;
+        s.errors += p.errors;
+        s.redistributions += p.redistributions;
+        s.duplicate_results += p.duplicate_results;
+    }
+    s
+}
+
+/// Mirror one sharded `next_tickets` onto the per-shard oracles: the
+/// return must split into contiguous single-visit shard groups, each
+/// group must be exactly that shard oracle's VCT-ordered pick, and any
+/// shard the scan moved past (or never filled `k` from) must have been
+/// dry — the DESIGN.md §2.6 contract.
+fn mirror_dispatch(
+    indexed: &IndexedStore,
+    oracles: &[NaiveStore],
+    to_oracle: &HashMap<u64, (usize, TicketId)>,
+    client: &str,
+    now: u64,
+    k: usize,
+) -> Result<(), String> {
+    let mask = (oracles.len() - 1) as u64;
+    let got = indexed.next_tickets(client, now, k);
+    prop_assert!(got.len() <= k, "over-dispatch: {} tickets for k={k}", got.len());
+    let mut groups: Vec<(usize, Vec<&Ticket>)> = Vec::new();
+    for t in &got {
+        let sh = (t.id.0 & mask) as usize;
+        match groups.last_mut() {
+            Some((s, ts)) if *s == sh => ts.push(t),
+            _ => {
+                prop_assert!(
+                    groups.iter().all(|(s, _)| *s != sh),
+                    "shard {sh} recurs in one dispatch: the steal scan visits each shard once"
+                );
+                groups.push((sh, vec![t]));
+            }
+        }
+    }
+    let mut taken = 0usize;
+    for (sh, ts) in &groups {
+        let o = oracles[*sh].next_tickets(client, now, ts.len());
+        prop_assert!(
+            o.len() == ts.len(),
+            "oracle shard {sh} dispatched {} tickets, sharded store took {}",
+            o.len(),
+            ts.len()
+        );
+        for (t, ot) in ts.iter().zip(&o) {
+            prop_assert!(
+                to_oracle.get(&t.id.0) == Some(&(*sh, ot.id)),
+                "shard {sh} VCT order diverges: picked {:?}, oracle picked {:?}",
+                t.id,
+                ot.id
+            );
+            prop_assert!(same_modulo_id(t, ot), "ticket fields diverge on {:?}", t.id);
+        }
+        taken += ts.len();
+        if taken < k {
+            // The scan moved on (or stopped short) after this group, so
+            // the shard must have had nothing further ready.
+            let probe = oracles[*sh].next_ticket(client, now);
+            prop_assert!(probe.is_none(), "shard {sh} left ready work behind: {probe:?}");
+        }
+    }
+    if got.len() < k {
+        // A short batch means the scan visited *every* shard.
+        for (sh, oracle) in oracles.iter().enumerate() {
+            if groups.iter().any(|(s, _)| *s == sh) {
+                continue;
+            }
+            let probe = oracle.next_ticket(client, now);
+            prop_assert!(probe.is_none(), "unvisited shard {sh} had ready work: {probe:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Differential test for the sharded dispatch core (DESIGN.md §2.6): an
+/// `IndexedStore` with S dispatch shards against S independent
+/// `NaiveStore` oracles holding the tickets routed to each shard
+/// (`id & (S - 1)`).  S = 1 degenerates to the global-order reference
+/// above; S ∈ {2, 8} pins the relaxed contract — per-shard VCT order,
+/// single-visit steal scans, exhaustion before under-filling a batch,
+/// progress as the field-wise sum over shards, and shard-major error
+/// drains — across random interleaved batch ops at random clocks.
+#[test]
+fn sharded_dispatch_matches_per_shard_naive_oracles() {
+    check("shard-differential", 256, |rng| {
+        let shards = [1usize, 2, 8][rng.gen_range(3) as usize];
+        let mask = (shards - 1) as u64;
+        let cfg = StoreConfig {
+            requeue_after_ms: 20 + rng.gen_range(300),
+            min_redistribute_ms: rng.gen_range(80),
+            requeue_on_error: rng.gen_range(2) == 0,
+        };
+        let indexed = IndexedStore::with_layout(cfg.clone(), 1 + rng.gen_range(4) as usize, shards);
+        let oracles: Vec<NaiveStore> = (0..shards).map(|_| NaiveStore::new(cfg.clone())).collect();
+        // Sharded-store id -> (shard, oracle id), and the reverse.
+        let mut to_oracle: HashMap<u64, (usize, TicketId)> = HashMap::new();
+        let mut from_oracle: HashMap<(usize, u64), TicketId> = HashMap::new();
+        let tasks = [TaskId(1), TaskId(2), TaskId(3)];
+        let mut now = 0u64;
+        let mut created: Vec<TicketId> = Vec::new();
+        for step in 0..160u64 {
+            match rng.gen_range(10) {
+                0 | 1 => {
+                    let task = tasks[rng.gen_range(3) as usize];
+                    let n = 1 + rng.gen_range(3);
+                    let args: Vec<Value> =
+                        (0..n).map(|i| Value::num((step * 10 + i) as f64)).collect();
+                    let ids = indexed.create_tickets(task, "t", args.clone(), now);
+                    for (id, arg) in ids.iter().zip(args) {
+                        let sh = (id.0 & mask) as usize;
+                        let oid = oracles[sh].create_tickets(task, "t", vec![arg], now)[0];
+                        to_oracle.insert(id.0, (sh, oid));
+                        from_oracle.insert((sh, oid.0), *id);
+                    }
+                    created.extend(ids);
+                }
+                2 | 3 | 4 => {
+                    let client = format!("c{}", rng.gen_range(4));
+                    let k = 1 + rng.gen_range(5) as usize;
+                    mirror_dispatch(&indexed, &oracles, &to_oracle, &client, now, k)?;
+                }
+                5 => {
+                    if !created.is_empty() && rng.gen_range(8) != 0 {
+                        let id = created[rng.gen_range(created.len() as u64) as usize];
+                        let (sh, oid) = to_oracle[&id.0];
+                        let v = Value::num(id.0 as f64);
+                        let a = indexed.complete(id, v.clone());
+                        let b = oracles[sh].complete(oid, v);
+                        prop_assert!(
+                            a.is_err() == b.is_err(),
+                            "complete() error status diverges on {id:?}"
+                        );
+                        if let (Ok(x), Ok(y)) = (a, b) {
+                            prop_assert!(x == y, "first-result-wins diverges on {id:?}");
+                        }
+                    } else {
+                        let bogus = TicketId(created.len() as u64 + 1_000);
+                        prop_assert!(
+                            indexed.complete(bogus, Value::Null).is_err(),
+                            "unknown-id complete must error"
+                        );
+                    }
+                }
+                6 => {
+                    if !created.is_empty() {
+                        let id = created[rng.gen_range(created.len() as u64) as usize];
+                        let (sh, oid) = to_oracle[&id.0];
+                        let msg = format!("e{step}");
+                        indexed.report_error(id, msg.clone()).map_err(|e| e.to_string())?;
+                        oracles[sh].report_error(oid, msg).map_err(|e| e.to_string())?;
+                    }
+                }
+                7 => {
+                    // Batched completion over known ids: the accepted
+                    // count must equal item-wise oracle completions.
+                    if !created.is_empty() {
+                        let n = 1 + rng.gen_range(3) as usize;
+                        let ids: Vec<TicketId> = (0..n)
+                            .map(|_| created[rng.gen_range(created.len() as u64) as usize])
+                            .collect();
+                        let entries: Vec<(TicketId, Value)> =
+                            ids.iter().map(|id| (*id, Value::num(id.0 as f64))).collect();
+                        let a = indexed.complete_batch(entries).map_err(|e| e.to_string())?;
+                        let mut want = 0usize;
+                        for id in &ids {
+                            let (sh, oid) = to_oracle[&id.0];
+                            if oracles[sh]
+                                .complete(oid, Value::num(id.0 as f64))
+                                .map_err(|e| e.to_string())?
+                            {
+                                want += 1;
+                            }
+                        }
+                        prop_assert!(a == want, "complete_batch accepted {a} != item-wise {want}");
+                    }
+                }
+                8 => {
+                    // Batched release, unknowns included: flag-for-flag
+                    // against per-id oracle releases.
+                    let n = 1 + rng.gen_range(4) as usize;
+                    let ids: Vec<TicketId> = (0..n)
+                        .map(|_| {
+                            if !created.is_empty() && rng.gen_range(8) != 0 {
+                                created[rng.gen_range(created.len() as u64) as usize]
+                            } else {
+                                TicketId(created.len() as u64 + 1_000)
+                            }
+                        })
+                        .collect();
+                    let a = indexed.release_batch(&ids);
+                    let want: Vec<bool> = ids
+                        .iter()
+                        .map(|id| {
+                            to_oracle
+                                .get(&id.0)
+                                .is_some_and(|&(sh, oid)| oracles[sh].release(oid))
+                        })
+                        .collect();
+                    prop_assert!(
+                        a == want,
+                        "release_batch flags diverge on {ids:?}: {a:?} vs {want:?}"
+                    );
+                }
+                _ => now += rng.gen_range(150),
+            }
+            let (gp, gq) = (indexed.progress(None), sum_progress(&oracles, None));
+            prop_assert!(gp == gq, "progress != shard sum at step {step}: {gp:?} vs {gq:?}");
+            for task in tasks {
+                let (tp, tq) = (indexed.progress(Some(task)), sum_progress(&oracles, Some(task)));
+                prop_assert!(tp == tq, "progress for {task:?} != shard sum: {tp:?} vs {tq:?}");
+            }
+        }
+        let st = indexed.stats();
+        prop_assert!(st.dispatch_shards == shards, "stats() shard count diverges");
+        prop_assert!(st.shard_depths.len() == shards, "stats() depth vector length diverges");
+        prop_assert!(st.dispatch_locks > 0, "dispatches must count lock acquisitions");
+        // Drain to completion, mirroring whichever shard each pick came
+        // from; when the sharded store idles, every oracle must too.
+        for _ in 0..20_000 {
+            now += 17;
+            match indexed.next_ticket("drain", now) {
+                Some(t) => {
+                    let sh = (t.id.0 & mask) as usize;
+                    let oid = match oracles[sh].next_ticket("drain", now) {
+                        Some(o) => o.id,
+                        None => return Err(format!("oracle shard {sh} dry at pick {:?}", t.id)),
+                    };
+                    prop_assert!(
+                        to_oracle[&t.id.0] == (sh, oid),
+                        "drain pick diverges on {:?}",
+                        t.id
+                    );
+                    let v = Value::num(t.id.0 as f64);
+                    let x = indexed.complete(t.id, v.clone()).map_err(|e| e.to_string())?;
+                    let y = oracles[sh].complete(oid, v).map_err(|e| e.to_string())?;
+                    prop_assert!(x == y, "drain completion accounting diverges on {:?}", t.id);
+                }
+                None => {
+                    for (sh, oracle) in oracles.iter().enumerate() {
+                        let probe = oracle.next_ticket("drain", now);
+                        prop_assert!(
+                            probe.is_none(),
+                            "sharded store idle but shard {sh} ready: {probe:?}"
+                        );
+                    }
+                    if tasks.iter().all(|&t| indexed.is_task_done(t)) {
+                        break;
+                    }
+                }
+            }
+        }
+        for task in tasks {
+            prop_assert!(indexed.is_task_done(task), "drain left {task:?} unfinished");
+        }
+        let total_errs: usize = oracles.iter().map(|o| o.error_count()).sum();
+        prop_assert!(indexed.error_count() == total_errs, "cumulative error counts diverge");
+        let drained = indexed.drain_errors();
+        let mut want: Vec<(TicketId, String)> = Vec::new();
+        for (sh, oracle) in oracles.iter().enumerate() {
+            want.extend(
+                oracle.drain_errors().into_iter().map(|(oid, msg)| (from_oracle[&(sh, oid.0)], msg)),
+            );
+        }
+        prop_assert!(drained == want, "error drains diverge from shard-major oracle order");
         Ok(())
     });
 }

@@ -177,7 +177,12 @@ fn assert_same_state(
 
 /// The acceptance suite: 256 random-op runs, each killed at a random
 /// point (often right after a dispatch), recovered, then driven to
-/// completion in lockstep with the uninterrupted control store.
+/// completion in lockstep with the uninterrupted control store.  Each
+/// case draws a dispatch-shard count from {1, 2, 8}: shards = 1 is the
+/// legacy single-stream layout, shards > 1 exercises the per-shard
+/// segment streams and the LSN-ordered merge on recovery (the control
+/// is an in-memory store with the *same* shard layout, so the lockstep
+/// comparison pins the sharded dispatch order too).
 #[test]
 fn recovered_store_is_differential_identical_to_uninterrupted_run() {
     check("wal-crash-recovery", 256, |rng| {
@@ -186,17 +191,20 @@ fn recovered_store_is_differential_identical_to_uninterrupted_run() {
             min_redistribute_ms: rng.gen_range(80),
             requeue_on_error: rng.gen_range(2) == 0,
         };
+        let shards = [1usize, 2, 8][rng.gen_range(3) as usize];
         // Small segments and short checkpoint cadence so the suite also
-        // crashes across rotations and truncations (floors keep the
-        // fsync count per case bounded).
+        // crashes across rotations and truncations — per-shard-stream
+        // rotations included (floors keep the fsync count per case
+        // bounded).
         let wal_cfg = WalConfig {
             sync: SyncPolicy::OsOnly,
             segment_max_bytes: 2048 + rng.gen_range(8192),
             checkpoint_every: 16 + rng.gen_range(64),
+            dispatch_shards: shards,
         };
         let dir = temp_dir("diff");
         let walled = WalStore::open(&dir, cfg.clone(), wal_cfg).map_err(|e| e.to_string())?;
-        let control = IndexedStore::new(cfg);
+        let control = IndexedStore::with_dispatch_shards(cfg, shards);
         let mut now = 0u64;
         let mut created: Vec<TicketId> = Vec::new();
 
@@ -275,7 +283,9 @@ fn recovered_store_is_differential_identical_to_uninterrupted_run() {
     });
 }
 
-/// A second crash *after* recovery must recover again (log-on-log).
+/// A second crash *after* recovery must recover again (log-on-log) —
+/// at every shard layout, so sharded recovery's LSN counter and
+/// per-stream segment seqs survive being re-crashed mid-generation.
 #[test]
 fn recovery_survives_repeated_crashes() {
     check("wal-double-crash", 32, |rng| {
@@ -284,13 +294,15 @@ fn recovery_survives_repeated_crashes() {
             min_redistribute_ms: 1 + rng.gen_range(50),
             requeue_on_error: true,
         };
+        let shards = [1usize, 2, 8][rng.gen_range(3) as usize];
         let wal_cfg = WalConfig {
             sync: SyncPolicy::OsOnly,
             segment_max_bytes: 2048,
             checkpoint_every: 8 + rng.gen_range(16),
+            dispatch_shards: shards,
         };
         let dir = temp_dir("double");
-        let control = IndexedStore::new(cfg.clone());
+        let control = IndexedStore::with_dispatch_shards(cfg.clone(), shards);
         let mut now = 0u64;
         let mut created: Vec<TicketId> = Vec::new();
         let mut step = 0u64;
@@ -310,6 +322,103 @@ fn recovery_survives_repeated_crashes() {
     });
 }
 
+/// Crash with a torn frame at the tail of one shard stream's newest
+/// segment, after forcing every stream through size rotations: the
+/// torn tail must be dropped, every intact record across all segment
+/// generations replayed in LSN order, and the recovered store must
+/// stay in lockstep with the uninterrupted control.
+#[test]
+fn sharded_crash_mid_stream_rotation_recovers() {
+    check("wal-shard-rotation-crash", 16, |rng| {
+        let cfg = StoreConfig {
+            requeue_after_ms: 50 + rng.gen_range(200),
+            min_redistribute_ms: 1 + rng.gen_range(50),
+            requeue_on_error: true,
+        };
+        let wal_cfg = WalConfig {
+            sync: SyncPolicy::OsOnly,
+            segment_max_bytes: 200, // every burst record forces a rotation
+            checkpoint_every: 0,    // keep every segment generation live
+            dispatch_shards: 4,
+        };
+        let dir = temp_dir("rotate");
+        let walled = WalStore::open(&dir, cfg.clone(), wal_cfg).map_err(|e| e.to_string())?;
+        let control = IndexedStore::with_dispatch_shards(cfg, 4);
+        let mut now = 0u64;
+        let mut created: Vec<TicketId> = Vec::new();
+        for step in 0..60 {
+            random_op(rng, &walled, &control, &mut now, &mut created, step)?;
+        }
+        // A deterministic dispatch+complete burst.  Dispatch records are
+        // the per-stream traffic (each visited shard logs its own
+        // DispatchShard record on its own stream), and 200 consecutive
+        // ids put ≥50 tickets on each of the 4 shards — at least two
+        // ~200-byte 20-id dispatch records per stream, each alone past
+        // the rotation threshold, so every stream must have rotated.
+        let drive = |s: &dyn Scheduler, now: &mut u64| -> Result<(), String> {
+            let ids = s.create_tickets(
+                TaskId(1),
+                "t",
+                (0..200).map(|i| Value::num(i as f64)).collect(),
+                *now,
+            );
+            let mut burst_done = 0usize;
+            for _ in 0..ids.len() / 20 {
+                *now += 30;
+                let got = s.next_tickets("burst", *now, 20);
+                prop_assert!(got.len() == 20, "burst dispatch came up short: {}", got.len());
+                burst_done += s
+                    .complete_batch(got.iter().map(|t| (t.id, Value::Null)).collect())
+                    .map_err(|e| e.to_string())?;
+            }
+            prop_assert!(burst_done == 200, "burst completion came up short: {burst_done}");
+            Ok(())
+        };
+        let mut now_w = now;
+        drive(&walled, &mut now_w)?;
+        drive(&control, &mut now)?;
+        prop_assert!(now_w == now, "burst clocks diverged");
+        assert_same_state(&walled, &control, "pre-crash")?;
+        std::mem::forget(walled);
+        // Tear the newest segment of stream 1 mid-frame with garbage.
+        let mut newest: Option<(u64, PathBuf)> = None;
+        let mut stream1_segments = 0usize;
+        for entry in std::fs::read_dir(&dir).map_err(|e| e.to_string())? {
+            let path = entry.map_err(|e| e.to_string())?.path();
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            if let Some(rest) = name.strip_prefix("wal-s001-") {
+                stream1_segments += 1;
+                let seq: u64 =
+                    rest.trim_end_matches(".log").parse().map_err(|e| format!("{e}"))?;
+                if newest.as_ref().map(|(s, _)| seq > *s).unwrap_or(true) {
+                    newest = Some((seq, path));
+                }
+            }
+        }
+        prop_assert!(
+            stream1_segments >= 2,
+            "burst did not rotate stream 1 ({stream1_segments} segments)"
+        );
+        let (_, tail_path) = newest.unwrap();
+        use std::io::Write as _;
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(&tail_path)
+            .and_then(|mut f| f.write_all(&[0xDE, 0xAD, 0xBE, 0xEF, 0x01]))
+            .map_err(|e| e.to_string())?;
+        let recovered = WalStore::recover_with(&dir, wal_cfg).map_err(|e| e.to_string())?;
+        assert_same_state(&recovered, &control, "post-rotation-crash")?;
+        // The recovered store keeps working in lockstep.
+        for step in 300..320 {
+            random_op(rng, &recovered, &control, &mut now, &mut created, step)?;
+            assert_same_state(&recovered, &control, "post-recovery op")?;
+        }
+        drop(recovered);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
 /// fsync-per-record path: same recovery contract under the strictest
 /// durability policy (kept small — every record pays an fsync).
 #[test]
@@ -319,6 +428,7 @@ fn every_record_fsync_recovers_exactly() {
         sync: SyncPolicy::EveryRecord,
         segment_max_bytes: 1 << 20,
         checkpoint_every: 0,
+        dispatch_shards: 1,
     };
     let dir = temp_dir("fsync");
     let s = WalStore::open(&dir, cfg.clone(), wal_cfg).unwrap();
@@ -354,10 +464,15 @@ fn group_commit_completions_are_durable_before_ack() {
         StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 10, requeue_on_error: true };
     // Flush interval far beyond the test horizon: only the ack path can
     // be fsyncing anything.
+    // dispatch_shards stays 1: the ack contract is per *call*, and the
+    // sharded layout syncs only the completion's own stream — earlier
+    // creates on sibling streams may legitimately stay dirty, which is
+    // what `has_unsynced_appends` (any stream) would report.
     let wal_cfg = WalConfig {
         sync: SyncPolicy::GroupCommitMs(600_000),
         segment_max_bytes: 1 << 20,
         checkpoint_every: 0,
+        dispatch_shards: 1,
     };
     let s = WalStore::open(&dir, cfg, wal_cfg).unwrap();
     s.create_tickets(TaskId(1), "t", (0..4).map(|i| Value::num(i as f64)).collect(), 0);
@@ -395,8 +510,12 @@ fn coordinator_restart_resumes_project_mid_dispatch() {
         min_redistribute_ms: 5,
         requeue_on_error: true,
     };
-    let wal_cfg =
-        WalConfig { sync: SyncPolicy::OsOnly, segment_max_bytes: 1 << 20, checkpoint_every: 64 };
+    let wal_cfg = WalConfig {
+        sync: SyncPolicy::OsOnly,
+        segment_max_bytes: 1 << 20,
+        checkpoint_every: 64,
+        dispatch_shards: 4,
+    };
 
     // --- first life -------------------------------------------------------
     let wal = Arc::new(WalStore::open(&dir, store_cfg.clone(), wal_cfg).unwrap());
