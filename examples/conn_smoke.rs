@@ -1,0 +1,165 @@
+//! Connection-scale smoke driver (ISSUE 8 nightly CI job).
+//!
+//! Stands up the epoll gateway, parks `--conns` idle JSON-lines
+//! connections against it, then drives `--workers` real workers through
+//! the crowd until `--tickets` prime tickets complete.  Emits a metrics
+//! JSON document (fd/thread/RSS footprint, timings, gateway counters)
+//! for the nightly artifact trail, and exits non-zero if the crowd was
+//! culled, memory blew up, or threads multiplied.
+//!
+//! ```text
+//! cargo run --release --example conn_smoke -- --conns 5000
+//! cargo run --release --example conn_smoke -- --conns 20000 --workers 8 \
+//!     --tickets 1024 --json conn-smoke.json
+//! ```
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sashimi::coordinator::gateway::{process_rss_kb, process_thread_count, raise_nofile_limit};
+use sashimi::coordinator::{Distributor, Framework, Gateway, GatewayConfig};
+use sashimi::store::Scheduler as _;
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::transport::tcp::TcpConn;
+use sashimi::transport::{Conn, Message};
+use sashimi::util::cli::Args;
+use sashimi::util::json::Value;
+use sashimi::worker::{DeviceProfile, Worker};
+use sashimi::Result;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let conns = args.usize_or("conns", 5_000)?;
+    let workers = args.usize_or("workers", 4)?;
+    let tickets = args.usize_or("tickets", 256)?;
+    let heartbeat_ms = args.u64_or("heartbeat-ms", 0)?;
+    let json_path = args.get("json").map(String::from);
+    args.reject_unknown()?;
+
+    let want_fds = conns as u64 * 2 + 512;
+    let granted = raise_nofile_limit(want_fds)?;
+    anyhow::ensure!(
+        granted >= want_fds,
+        "RLIMIT_NOFILE caps at {granted}, need {want_fds} for {conns} connections"
+    );
+    let threads_before = process_thread_count().unwrap_or(0);
+    let rss_before = process_rss_kb().unwrap_or(0);
+
+    let fw = Framework::builder().build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate(
+        (0..tickets).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+    );
+    let task_id = task.id;
+    let dist = Distributor::new(&fw);
+    let gw = Gateway::bind(&dist, GatewayConfig { heartbeat_ms }, Some("127.0.0.1:0"), None)?;
+    let addr = gw.tcp_addr().unwrap();
+
+    // Park the idle crowd: connect, Hello, silence.
+    let t_crowd = Instant::now();
+    let mut crowd: Vec<TcpStream> = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let mut s = {
+            let mut attempt = 0;
+            loop {
+                match TcpStream::connect(&addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        attempt += 1;
+                        anyhow::ensure!(attempt < 50, "connect {i} of {conns} failed: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+        };
+        let hello = Message::Hello { client: format!("idle-{i}"), profile: "crowd".into() };
+        s.write_all(format!("{}\n", hello.encode()).as_bytes())?;
+        crowd.push(s);
+    }
+    for (i, s) in crowd.iter().enumerate() {
+        s.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let mut r = BufReader::new(s.try_clone()?);
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        anyhow::ensure!(
+            matches!(Message::decode(line.trim_end())?, Message::Ack),
+            "idle-{i} got {line:?} instead of Ack"
+        );
+    }
+    let crowd_s = t_crowd.elapsed().as_secs_f64();
+    println!("parked {conns} idle connections in {crowd_s:.2} s");
+
+    // Drive the active workers through the crowd.
+    let t_drain = Instant::now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for i in 0..workers {
+        let addr = addr.clone();
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        joins.push(std::thread::spawn(move || {
+            let mut w = Worker::new(&format!("active-{i}"), DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(TcpConn::connect(&addr)?) as Box<dyn Conn>), &stop)
+        }));
+    }
+    let results = fw
+        .store()
+        .wait_results_timeout(task_id, 300_000)
+        .ok_or_else(|| anyhow::anyhow!("workers timed out behind the crowd"))?;
+    stop.store(true, Ordering::SeqCst);
+    let mut completed = 0u64;
+    for j in joins {
+        completed += j.join().map_err(|_| anyhow::anyhow!("worker panicked"))?.tickets_completed;
+    }
+    let drain_s = t_drain.elapsed().as_secs_f64();
+    println!("{workers} workers drained {} tickets in {drain_s:.2} s", results.len());
+
+    let threads_now = process_thread_count().unwrap_or(0);
+    let rss_now = process_rss_kb().unwrap_or(0);
+    let open = gw.stats.open.load(Ordering::Relaxed);
+    let peak = gw.stats.peak_open.load(Ordering::Relaxed);
+    let kills = gw.stats.dead_peer_kills.load(Ordering::Relaxed);
+    let proto_errs = gw.stats.protocol_errors.load(Ordering::Relaxed);
+
+    let metrics = Value::obj(vec![
+        ("conns", Value::num(conns as f64)),
+        ("workers", Value::num(workers as f64)),
+        ("tickets", Value::num(tickets as f64)),
+        ("heartbeat_ms", Value::num(heartbeat_ms as f64)),
+        ("crowd_setup_s", Value::num(crowd_s)),
+        ("drain_s", Value::num(drain_s)),
+        ("open_at_end", Value::num(open as f64)),
+        ("peak_open", Value::num(peak as f64)),
+        ("dead_peer_kills", Value::num(kills as f64)),
+        ("protocol_errors", Value::num(proto_errs as f64)),
+        ("threads_before", Value::num(threads_before as f64)),
+        ("threads_after", Value::num(threads_now as f64)),
+        ("rss_kb_before", Value::num(rss_before as f64)),
+        ("rss_kb_after", Value::num(rss_now as f64)),
+        ("client_count", Value::num(dist.client_count() as f64)),
+    ]);
+    let doc = metrics.to_string();
+    if let Some(path) = json_path {
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("metrics written to {path}");
+    } else {
+        println!("{doc}");
+    }
+
+    // The claims the nightly job enforces.
+    anyhow::ensure!(results.len() == tickets && completed == tickets as u64, "tickets lost");
+    anyhow::ensure!(open as usize >= conns, "idle crowd culled: open={open}");
+    anyhow::ensure!(kills == 0 || heartbeat_ms > 0, "killed idle peers with heartbeats off");
+    anyhow::ensure!(
+        threads_now < threads_before + 64,
+        "thread explosion: {threads_before} -> {threads_now}"
+    );
+    anyhow::ensure!(rss_now < 2 * 1_048_576, "RSS {rss_now} KiB — memory is not bounded");
+
+    drop(crowd);
+    gw.shutdown();
+    Ok(())
+}

@@ -268,18 +268,21 @@ impl Distributor {
 
     /// Serve one connection until Shutdown/EOF, accounting its bytes
     /// incrementally (so live benches see traffic as it happens).
-    pub fn handle_conn(&self, mut conn: Box<dyn Conn>) -> Result<()> {
+    pub fn handle_conn(self: &Arc<Self>, mut conn: Box<dyn Conn>) -> Result<()> {
         self.handle_conn_inner(&mut *conn)
     }
 
     /// Open a [`Session`]: the per-connection protocol state machine,
     /// detached from any transport.  The thread-per-conn path pumps it
-    /// from a socket; the churn simulator drives thousands directly.
+    /// from a socket; the churn simulator drives thousands directly;
+    /// the epoll gateway owns one per registered connection (which is
+    /// why the session owns an `Arc` instead of borrowing — its
+    /// lifetime is the connection's, not a stack frame's).
     /// Counts as one connection in [`DistributorStats::connections`].
-    pub fn open_session(&self) -> Session<'_> {
+    pub fn open_session(self: &Arc<Self>) -> Session {
         self.stats.connections.fetch_add(1, Ordering::Relaxed);
         Session {
-            dist: self,
+            dist: Arc::clone(self),
             conn_seq: self.next_conn_seq.fetch_add(1, Ordering::Relaxed),
             client: String::from("unknown"),
             held: HashSet::new(),
@@ -287,7 +290,7 @@ impl Distributor {
         }
     }
 
-    fn handle_conn_inner(&self, conn: &mut dyn Conn) -> Result<()> {
+    fn handle_conn_inner(self: &Arc<Self>, conn: &mut dyn Conn) -> Result<()> {
         let mut session = self.open_session();
         let result = self.conn_loop(conn, &mut session);
         // However the pump ended — orderly shutdown, protocol
@@ -300,7 +303,7 @@ impl Distributor {
     /// The transport pump: recv -> [`Session::handle`] -> send, with
     /// incremental byte accounting.  All protocol behaviour lives in
     /// the session; this loop only moves frames and enforces shutdown.
-    fn conn_loop(&self, conn: &mut dyn Conn, session: &mut Session<'_>) -> Result<()> {
+    fn conn_loop(&self, conn: &mut dyn Conn, session: &mut Session) -> Result<()> {
         let (mut acc_sent, mut acc_recv) = (0u64, 0u64);
         let mut account = |conn: &mut dyn Conn, stats: &DistributorStats| {
             let (s, r) = conn.bytes();
@@ -350,8 +353,8 @@ impl Distributor {
 /// when [`DistributorConfig::release_on_disconnect`] is on) and retires
 /// the client-table entry.  Dropping an unclosed session closes it, so
 /// a vanished connection can never strand its batch by accident.
-pub struct Session<'a> {
-    dist: &'a Distributor,
+pub struct Session {
+    dist: Arc<Distributor>,
     conn_seq: u64,
     client: String,
     /// Tickets dispatched over this session and not yet answered by a
@@ -360,7 +363,7 @@ pub struct Session<'a> {
     closed: bool,
 }
 
-impl Session<'_> {
+impl Session {
     /// The client id announced by Hello (`"unknown"` before it).
     pub fn client(&self) -> &str {
         &self.client
@@ -379,7 +382,7 @@ impl Session<'_> {
     /// is a protocol violation: the caller should close the session
     /// (which releases whatever it still held).
     pub fn handle(&mut self, msg: Message) -> Result<Option<Message>> {
-        let d = self.dist;
+        let d = Arc::clone(&self.dist);
         match msg {
             Message::Hello { client: c, profile } => {
                 self.client = c.clone();
@@ -554,7 +557,7 @@ impl Session<'_> {
             return;
         }
         self.closed = true;
-        let d = self.dist;
+        let d = Arc::clone(&self.dist);
         if d.cfg.release_on_disconnect && !self.held.is_empty() {
             let ids: Vec<TicketId> = self.held.drain().collect();
             let released = d.store.release_batch(&ids).into_iter().filter(|&f| f).count() as u64;
@@ -577,7 +580,7 @@ impl Session<'_> {
     }
 }
 
-impl Drop for Session<'_> {
+impl Drop for Session {
     fn drop(&mut self) {
         self.close();
     }

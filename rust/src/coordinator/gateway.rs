@@ -1,0 +1,828 @@
+//! Async connection gateway: one epoll reactor thread for the whole
+//! fleet.
+//!
+//! The thread-per-connection accept loop ([`Distributor::serve`]) costs
+//! a stack per worker — fine for benches, fatal for the paper's "any
+//! computer that opens a website" fleet.  The gateway multiplexes every
+//! connection onto one reactor thread with level-triggered epoll
+//! (hand-rolled over direct glibc FFI: the crate takes no async
+//! runtime dependency), so idle connections cost one registered fd and
+//! a few hundred bytes of buffer, and 100k of them are a HashMap, not
+//! 100k stacks.
+//!
+//! Two listeners, one protocol:
+//! * a **TCP** port speaking the legacy JSON-lines wire
+//!   ([`LineFraming`]) — existing workers connect unchanged;
+//! * a **WebSocket** port ([`WsFraming`]) — the same JSON documents in
+//!   RFC 6455 text frames, so a browser (or `websocat`) is a complete
+//!   client.
+//!
+//! Each connection owns a [`Session`] — the transport-free protocol
+//! state machine — so wire semantics are byte-identical to the blocking
+//! path and the in-process simulator (pinned by
+//! `tests/transport_conformance.rs`).
+//!
+//! **Heartbeats / dead-peer detection.**  PR 5's release-on-disconnect
+//! is only as fast as disconnect detection, and a silently-dead peer
+//! (yanked cable, suspended laptop, NAT timeout) produces no FIN —
+//! plain TCP would strand its tickets until the OS keepalive fires,
+//! hours later.  The gateway bounds that to seconds: any inbound byte
+//! refreshes a connection's liveness; after `heartbeat_ms` of silence a
+//! WebSocket connection is pinged (browsers pong at transport level,
+//! below the JS app); after `2 × heartbeat_ms` of silence any
+//! connection is killed, dropping its session and releasing its held
+//! tickets.  Plain TCP JSON connections get the silence-kill only — an
+//! unsolicited line would desync the strict request/response protocol —
+//! which is safe because legacy workers poll for tickets far more often
+//! than any sane heartbeat window.  Heartbeats run on the wall clock
+//! (`util::clock::now_ms`), independent of the store's possibly-virtual
+//! clock: liveness of a socket is a real-time property.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, FromRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::distributor::{Distributor, Session};
+use crate::transport::framing::{Framing, Inbound, LineFraming};
+use crate::transport::ws::{self, WsFraming};
+use crate::transport::Message;
+use crate::util::clock::now_ms;
+
+/// Inbound buffer cap per connection (a dataset message is the largest
+/// legitimate document; anything past this is a protocol violation).
+const MAX_BUFFER: usize = 64 << 20;
+/// Handshake header cap.
+const MAX_HANDSHAKE: usize = 64 << 10;
+
+// ---------------------------------------------------------------------
+// Minimal glibc FFI: epoll + eventfd + rlimit.  Deliberately tiny — the
+// five syscalls a reactor needs, nothing more.
+
+mod sys {
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    pub const EFD_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_NONBLOCK: i32 = 0o4000;
+
+    pub const RLIMIT_NOFILE: i32 = 7;
+
+    /// `struct epoll_event` — packed on x86_64 (the kernel ABI),
+    /// naturally aligned elsewhere.  Read its fields by value only.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    pub struct Rlimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn eventfd(initval: u32, flags: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+}
+
+/// RAII epoll instance.
+struct Epoll {
+    fd: i32,
+}
+
+impl Epoll {
+    fn new() -> Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            bail!("epoll_create1 failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, tok: u64, events: u32) -> Result<()> {
+        let mut ev = sys::EpollEvent { events, data: tok };
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc != 0 {
+            bail!("epoll_ctl(op={op}) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: RawFd, tok: u64, events: u32) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, tok, events)
+    }
+
+    fn modify(&self, fd: RawFd, tok: u64, events: u32) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, tok, events)
+    }
+
+    fn del(&self, fd: RawFd) {
+        let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        unsafe { sys::epoll_ctl(self.fd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Wait for events; EINTR counts as zero events.
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: i32) -> usize {
+        let rc = unsafe {
+            sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+        };
+        if rc < 0 {
+            0 // EINTR (or a dying fd at teardown): treat as a timeout tick
+        } else {
+            rc as usize
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Raise `RLIMIT_NOFILE` toward `want` (clamped to the hard limit);
+/// returns the resulting soft limit.  The connection-scale tests call
+/// this and skip when the environment cannot grant enough fds.
+pub fn raise_nofile_limit(want: u64) -> Result<u64> {
+    let mut rl = sys::Rlimit { cur: 0, max: 0 };
+    if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) } != 0 {
+        bail!("getrlimit failed: {}", std::io::Error::last_os_error());
+    }
+    if rl.cur >= want {
+        return Ok(rl.cur);
+    }
+    let target = want.min(rl.max);
+    let newrl = sys::Rlimit { cur: target, max: rl.max };
+    if unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &newrl) } != 0 {
+        bail!("setrlimit to {target} failed: {}", std::io::Error::last_os_error());
+    }
+    Ok(target)
+}
+
+/// `Threads:` from `/proc/self/status` — the scale tests assert the
+/// gateway holds thousands of connections without a thread explosion.
+pub fn process_thread_count() -> Option<u64> {
+    proc_status_field("Threads:")
+}
+
+/// `VmRSS:` in kilobytes from `/proc/self/status`.
+pub fn process_rss_kb() -> Option<u64> {
+    proc_status_field("VmRSS:")
+}
+
+fn proc_status_field(name: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            return rest.split_whitespace().next()?.parse().ok();
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Gateway.
+
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Silence threshold in wall-clock ms: ping (WS) after this much,
+    /// kill any connection after twice this much.  `0` disables
+    /// heartbeats entirely (idle connections live forever — the
+    /// connection-scale smoke uses this).
+    pub heartbeat_ms: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig { heartbeat_ms: 10_000 }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct GatewayStats {
+    /// Connections accepted over the gateway's lifetime.
+    pub accepted: AtomicU64,
+    /// Connections currently registered.
+    pub open: AtomicU64,
+    /// High-water mark of `open`.
+    pub peak_open: AtomicU64,
+    /// Connections killed for heartbeat silence (the dead-peer path).
+    pub dead_peer_kills: AtomicU64,
+    /// Connections killed for malformed frames / documents / handshakes.
+    pub protocol_errors: AtomicU64,
+    /// WS transport pings sent.
+    pub pings_sent: AtomicU64,
+}
+
+/// The async accept front: owns the reactor thread, the listeners, and
+/// the wakeup eventfd.  Construct with [`Gateway::bind`]; stop with
+/// [`Gateway::shutdown`] (or [`Distributor::stop`] — the reactor honors
+/// both).
+pub struct Gateway {
+    pub stats: GatewayStats,
+    cfg: GatewayConfig,
+    stop: AtomicBool,
+    /// eventfd write handle: one 8-byte write wakes a parked reactor.
+    waker: File,
+    tcp_addr: Option<SocketAddr>,
+    ws_addr: Option<SocketAddr>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Gateway {
+    /// Bind the requested listeners (`"host:port"`, port 0 for
+    /// ephemeral) and start the reactor.  At least one of `tcp` / `ws`
+    /// must be given.
+    pub fn bind(
+        dist: &Arc<Distributor>,
+        cfg: GatewayConfig,
+        tcp: Option<&str>,
+        ws: Option<&str>,
+    ) -> Result<Arc<Gateway>> {
+        if tcp.is_none() && ws.is_none() {
+            bail!("gateway needs at least one of a tcp or ws address");
+        }
+        let bind_one = |addr: &str| -> Result<TcpListener> {
+            let l = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+            l.set_nonblocking(true).context("set_nonblocking on listener")?;
+            Ok(l)
+        };
+        let tcp_l = tcp.map(bind_one).transpose()?;
+        let ws_l = ws.map(bind_one).transpose()?;
+
+        let efd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if efd < 0 {
+            bail!("eventfd failed: {}", std::io::Error::last_os_error());
+        }
+        let wake_read = unsafe { File::from_raw_fd(efd) };
+        let waker = wake_read.try_clone().context("cloning eventfd")?;
+
+        let gw = Arc::new(Gateway {
+            stats: GatewayStats::default(),
+            cfg,
+            stop: AtomicBool::new(false),
+            waker,
+            tcp_addr: tcp_l.as_ref().and_then(|l| l.local_addr().ok()),
+            ws_addr: ws_l.as_ref().and_then(|l| l.local_addr().ok()),
+            thread: Mutex::new(None),
+        });
+        let reactor = Reactor {
+            gw: Arc::clone(&gw),
+            dist: Arc::clone(dist),
+            epoll: Epoll::new()?,
+            wake: wake_read,
+            tcp_listener: tcp_l,
+            ws_listener: ws_l,
+            conns: HashMap::new(),
+            next_tok: TOK_FIRST_CONN,
+        };
+        let handle = std::thread::Builder::new()
+            .name("sashimi-gateway".into())
+            .spawn(move || reactor.run())
+            .context("spawning gateway reactor")?;
+        *gw.thread.lock().unwrap() = Some(handle);
+        Ok(gw)
+    }
+
+    /// The bound TCP (JSON-lines) address, if a TCP listener was asked.
+    pub fn tcp_addr(&self) -> Option<String> {
+        self.tcp_addr.map(|a| a.to_string())
+    }
+
+    /// The bound WebSocket address, if a WS listener was asked.
+    pub fn ws_addr(&self) -> Option<String> {
+        self.ws_addr.map(|a| a.to_string())
+    }
+
+    /// Ask the reactor to exit (non-blocking; it notices immediately
+    /// via the eventfd).  Open sessions are closed, releasing whatever
+    /// tickets they held.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = (&self.waker).write_all(&1u64.to_ne_bytes());
+    }
+
+    /// Stop and join the reactor thread.
+    pub fn shutdown(&self) {
+        self.stop();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop();
+        // Joining from drop would deadlock if the reactor's own Arc is
+        // the last one; the thread exits on its own after stop().
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reactor internals.
+
+const TOK_WAKE: u64 = 0;
+const TOK_TCP: u64 = 1;
+const TOK_WS: u64 = 2;
+const TOK_FIRST_CONN: u64 = 3;
+
+enum Phase {
+    /// WS only: accumulating the HTTP upgrade request.
+    Handshake,
+    /// Framed protocol traffic.
+    Open,
+}
+
+/// One registered connection: socket + framing + protocol session +
+/// liveness bookkeeping.  Dropping it closes the socket and the
+/// session (releasing held tickets — the active failure path).
+struct GwConn {
+    tok: u64,
+    stream: TcpStream,
+    is_ws: bool,
+    phase: Phase,
+    framing: Box<dyn Framing>,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    session: Session,
+    /// Wall-clock ms of the last inbound byte (any byte is liveness).
+    last_recv_ms: u64,
+    /// A ping is outstanding; don't ping again until bytes arrive.
+    ping_sent: bool,
+    /// EPOLLOUT interest is currently registered.
+    want_write: bool,
+    /// Orderly close: kill once `outbuf` drains.
+    closing: bool,
+}
+
+struct Reactor {
+    gw: Arc<Gateway>,
+    dist: Arc<Distributor>,
+    epoll: Epoll,
+    wake: File,
+    tcp_listener: Option<TcpListener>,
+    ws_listener: Option<TcpListener>,
+    conns: HashMap<u64, GwConn>,
+    next_tok: u64,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        if let Err(e) = self.register_fixed() {
+            crate::log_warn!("gateway", "reactor setup failed: {e:#}");
+            return;
+        }
+        let timeout_ms: i32 = if self.gw.cfg.heartbeat_ms == 0 {
+            250
+        } else {
+            (self.gw.cfg.heartbeat_ms / 4).clamp(10, 250) as i32
+        };
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 1024];
+        loop {
+            if self.gw.stop.load(Ordering::SeqCst) || self.dist.stopped() {
+                break;
+            }
+            let n = self.epoll.wait(&mut events, timeout_ms);
+            for e in &events[..n] {
+                // Packed struct: copy fields out by value.
+                let tok = e.data;
+                let ev = e.events;
+                match tok {
+                    TOK_WAKE => {
+                        let mut buf = [0u8; 8];
+                        let _ = (&self.wake).read(&mut buf);
+                    }
+                    TOK_TCP => self.accept_all(false),
+                    TOK_WS => self.accept_all(true),
+                    _ => {
+                        if let Some(mut c) = self.conns.remove(&tok) {
+                            if self.drive(&mut c, ev) {
+                                self.conns.insert(tok, c);
+                            } else {
+                                self.deregister(&mut c);
+                            }
+                        }
+                    }
+                }
+            }
+            self.sweep(now_ms());
+        }
+        self.drain_shutdown();
+    }
+
+    fn register_fixed(&self) -> Result<()> {
+        self.epoll.add(self.wake.as_raw_fd(), TOK_WAKE, sys::EPOLLIN)?;
+        if let Some(l) = &self.tcp_listener {
+            self.epoll.add(l.as_raw_fd(), TOK_TCP, sys::EPOLLIN)?;
+        }
+        if let Some(l) = &self.ws_listener {
+            self.epoll.add(l.as_raw_fd(), TOK_WS, sys::EPOLLIN)?;
+        }
+        Ok(())
+    }
+
+    fn accept_all(&mut self, is_ws: bool) {
+        loop {
+            let res = {
+                let l = if is_ws { &self.ws_listener } else { &self.tcp_listener };
+                let Some(l) = l else { return };
+                l.accept()
+            };
+            match res {
+                Ok((stream, _peer)) => self.register(stream, is_ws),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Usually fd exhaustion: log and back off until the
+                    // next readiness tick rather than spinning.
+                    crate::log_warn!("gateway", "accept failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn register(&mut self, stream: TcpStream, is_ws: bool) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        let tok = self.next_tok;
+        self.next_tok += 1;
+        if let Err(e) = self.epoll.add(stream.as_raw_fd(), tok, sys::EPOLLIN | sys::EPOLLRDHUP) {
+            crate::log_warn!("gateway", "registering connection failed: {e:#}");
+            return;
+        }
+        let c = GwConn {
+            tok,
+            stream,
+            is_ws,
+            phase: if is_ws { Phase::Handshake } else { Phase::Open },
+            framing: if is_ws {
+                Box::new(WsFraming::server())
+            } else {
+                Box::new(LineFraming::new())
+            },
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            session: self.dist.open_session(),
+            last_recv_ms: now_ms(),
+            ping_sent: false,
+            want_write: false,
+            closing: false,
+        };
+        self.gw.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        let open = self.gw.stats.open.fetch_add(1, Ordering::Relaxed) + 1;
+        self.gw.stats.peak_open.fetch_max(open, Ordering::Relaxed);
+        self.conns.insert(tok, c);
+    }
+
+    /// Unregister and account; the caller drops `c`, which closes the
+    /// socket and the session (releasing its held tickets).
+    fn deregister(&self, c: &mut GwConn) {
+        self.epoll.del(c.stream.as_raw_fd());
+        self.gw.stats.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Pump one connection for one readiness event.  Returns `false`
+    /// when the connection must die.
+    fn drive(&mut self, c: &mut GwConn, ev: u32) -> bool {
+        if ev & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+            return false;
+        }
+        let mut eof = false;
+        if ev & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+            let mut tmp = [0u8; 16384];
+            loop {
+                match c.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.dist.stats.bytes_received.fetch_add(n as u64, Ordering::Relaxed);
+                        c.inbuf.extend_from_slice(&tmp[..n]);
+                        c.last_recv_ms = now_ms();
+                        c.ping_sent = false;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        eof = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if let Err(e) = self.process(c) {
+            crate::log_debug!(
+                "gateway",
+                "protocol error from {} ({}): {e:#}",
+                c.session.client(),
+                if c.is_ws { "ws" } else { "tcp" }
+            );
+            self.gw.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let close = c.framing.frame_close();
+            c.outbuf.extend_from_slice(&close);
+            let _ = self.flush(c); // best-effort goodbye
+            return false;
+        }
+        if !self.flush(c) {
+            return false;
+        }
+        if c.closing && c.outbuf.is_empty() {
+            return false;
+        }
+        // EOF after processing: whatever was buffered has been handled;
+        // the peer is gone.
+        !eof
+    }
+
+    /// Consume `c.inbuf`: finish the WS handshake if pending, then
+    /// extract and handle protocol documents.  `Err` = protocol
+    /// violation, kill the connection.
+    fn process(&mut self, c: &mut GwConn) -> Result<()> {
+        if matches!(c.phase, Phase::Handshake) {
+            let Some(end) = ws::find_header_end(&c.inbuf) else {
+                if c.inbuf.len() > MAX_HANDSHAKE {
+                    bail!("oversized websocket handshake ({} bytes)", c.inbuf.len());
+                }
+                return Ok(());
+            };
+            let head = String::from_utf8_lossy(&c.inbuf[..end]).into_owned();
+            let resp = ws::server_handshake_response(&head)?;
+            c.outbuf.extend_from_slice(resp.as_bytes());
+            c.inbuf.drain(..end);
+            c.phase = Phase::Open;
+        }
+        while let Some(inbound) = c.framing.extract(&mut c.inbuf)? {
+            match inbound {
+                Inbound::Msg(doc) => {
+                    let msg = Message::decode(&doc)?;
+                    // Same shutdown semantics as the blocking
+                    // conn_loop: a stop that lands while a ticket
+                    // request is in flight answers Shutdown instead of
+                    // dispatching more work.
+                    if self.dist.stopped()
+                        && matches!(
+                            msg,
+                            Message::TicketRequest | Message::TicketBatchRequest { .. }
+                        )
+                    {
+                        let f = c.framing.frame_msg(&Message::Shutdown.encode());
+                        c.outbuf.extend_from_slice(&f);
+                        continue;
+                    }
+                    match c.session.handle(msg)? {
+                        Some(reply) => {
+                            let f = c.framing.frame_msg(&reply.encode());
+                            c.outbuf.extend_from_slice(&f);
+                        }
+                        None => {
+                            // Orderly client Shutdown.
+                            let f = c.framing.frame_close();
+                            c.outbuf.extend_from_slice(&f);
+                            c.closing = true;
+                            return Ok(());
+                        }
+                    }
+                }
+                Inbound::Ping(payload) => {
+                    let f = c.framing.frame_pong(&payload);
+                    c.outbuf.extend_from_slice(&f);
+                }
+                Inbound::Pong => {} // the read already refreshed liveness
+                Inbound::Close => {
+                    let f = c.framing.frame_close();
+                    c.outbuf.extend_from_slice(&f);
+                    c.closing = true;
+                    return Ok(());
+                }
+            }
+        }
+        if c.inbuf.len() > MAX_BUFFER {
+            bail!("inbound buffer overflow ({} bytes without a complete frame)", c.inbuf.len());
+        }
+        Ok(())
+    }
+
+    /// Write as much of `c.outbuf` as the socket accepts, toggling
+    /// EPOLLOUT interest to match.  Returns `false` when the
+    /// connection must die.
+    fn flush(&self, c: &mut GwConn) -> bool {
+        while !c.outbuf.is_empty() {
+            match c.stream.write(&c.outbuf) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    self.dist.stats.bytes_sent.fetch_add(n as u64, Ordering::Relaxed);
+                    c.outbuf.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        let want = !c.outbuf.is_empty();
+        if want != c.want_write {
+            let mut interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+            if want {
+                interest |= sys::EPOLLOUT;
+            }
+            if self.epoll.modify(c.stream.as_raw_fd(), c.tok, interest).is_err() {
+                return false;
+            }
+            c.want_write = want;
+        }
+        true
+    }
+
+    /// Heartbeat pass: ping quiet WS connections at `heartbeat_ms`,
+    /// kill anything silent for `2 × heartbeat_ms`.
+    fn sweep(&mut self, now: u64) {
+        let hb = self.gw.cfg.heartbeat_ms;
+        if hb == 0 {
+            return;
+        }
+        let mut to_kill = Vec::new();
+        let mut to_ping = Vec::new();
+        for (&tok, c) in &self.conns {
+            let silent = now.saturating_sub(c.last_recv_ms);
+            if silent >= hb.saturating_mul(2) {
+                to_kill.push(tok);
+            } else if c.is_ws && !c.ping_sent && silent >= hb && matches!(c.phase, Phase::Open) {
+                to_ping.push(tok);
+            }
+        }
+        for tok in to_ping {
+            if let Some(mut c) = self.conns.remove(&tok) {
+                let f = c.framing.frame_ping();
+                c.outbuf.extend_from_slice(&f);
+                c.ping_sent = true;
+                self.gw.stats.pings_sent.fetch_add(1, Ordering::Relaxed);
+                if self.flush(&mut c) {
+                    self.conns.insert(tok, c);
+                } else {
+                    self.deregister(&mut c);
+                }
+            }
+        }
+        for tok in to_kill {
+            if let Some(mut c) = self.conns.remove(&tok) {
+                crate::log_debug!(
+                    "gateway",
+                    "killing silent peer {} after {}ms (held {} tickets)",
+                    c.session.client(),
+                    now.saturating_sub(c.last_recv_ms),
+                    c.session.held_tickets().len()
+                );
+                self.gw.stats.dead_peer_kills.fetch_add(1, Ordering::Relaxed);
+                self.deregister(&mut c);
+            }
+        }
+    }
+
+    /// Reactor exit: tell every live connection Shutdown (best effort —
+    /// sockets are non-blocking, one write attempt each), then drop
+    /// them all, closing their sessions (and releasing held tickets).
+    fn drain_shutdown(&mut self) {
+        let toks: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in toks {
+            if let Some(mut c) = self.conns.remove(&tok) {
+                if matches!(c.phase, Phase::Open) {
+                    let f = c.framing.frame_msg(&Message::Shutdown.encode());
+                    c.outbuf.extend_from_slice(&f);
+                    let f = c.framing.frame_close();
+                    c.outbuf.extend_from_slice(&f);
+                    let _ = self.flush(&mut c);
+                }
+                self.deregister(&mut c);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Framework;
+    use crate::store::TicketId;
+    use crate::tasks::is_prime::IsPrimeTask;
+    use crate::transport::tcp::TcpConn;
+    use crate::transport::ws::WsConn;
+    use crate::transport::Conn;
+    use crate::util::json::Value;
+
+    fn fw_with_tickets(n: usize) -> Arc<Framework> {
+        let fw = Framework::builder().build();
+        let task = fw.create_task(std::sync::Arc::new(IsPrimeTask));
+        task.calculate(
+            (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+        );
+        fw
+    }
+
+    #[test]
+    fn gateway_serves_tcp_and_ws_hello() {
+        let fw = fw_with_tickets(4);
+        let dist = crate::coordinator::Distributor::new(&fw);
+        let gw = Gateway::bind(
+            &dist,
+            GatewayConfig::default(),
+            Some("127.0.0.1:0"),
+            Some("127.0.0.1:0"),
+        )
+        .unwrap();
+
+        let mut tcp = TcpConn::connect(&gw.tcp_addr().unwrap()).unwrap();
+        tcp.send(&Message::Hello { client: "t0".into(), profile: "test".into() }).unwrap();
+        assert_eq!(tcp.recv().unwrap(), Message::Ack);
+
+        let mut wsc = WsConn::connect(&format!("ws://{}/", gw.ws_addr().unwrap())).unwrap();
+        wsc.send(&Message::Hello { client: "w0".into(), profile: "browser".into() }).unwrap();
+        assert_eq!(wsc.recv().unwrap(), Message::Ack);
+
+        // Both clients pull work from the same store.
+        tcp.send(&Message::TicketRequest).unwrap();
+        let t1 = match tcp.recv().unwrap() {
+            Message::Ticket { ticket, .. } => ticket,
+            other => panic!("{other:?}"),
+        };
+        wsc.send(&Message::TicketRequest).unwrap();
+        let t2 = match wsc.recv().unwrap() {
+            Message::Ticket { ticket, .. } => ticket,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(t1, t2);
+        assert_eq!(dist.client_count(), 2);
+
+        tcp.send(&Message::ReleaseTickets { tickets: vec![t1] }).unwrap();
+        assert_eq!(tcp.recv().unwrap(), Message::Ack);
+        wsc.send(&Message::ReleaseTickets { tickets: vec![t2] }).unwrap();
+        assert_eq!(wsc.recv().unwrap(), Message::Ack);
+
+        tcp.send(&Message::Shutdown).unwrap();
+        wsc.send(&Message::Shutdown).unwrap();
+        gw.shutdown();
+        assert_eq!(dist.stats.tickets_released.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn dropping_a_gateway_client_releases_its_tickets() {
+        let fw = fw_with_tickets(2);
+        let dist = crate::coordinator::Distributor::new(&fw);
+        let gw =
+            Gateway::bind(&dist, GatewayConfig::default(), Some("127.0.0.1:0"), None).unwrap();
+        let held: TicketId;
+        {
+            let mut tcp = TcpConn::connect(&gw.tcp_addr().unwrap()).unwrap();
+            tcp.send(&Message::Hello { client: "t0".into(), profile: "test".into() }).unwrap();
+            assert_eq!(tcp.recv().unwrap(), Message::Ack);
+            tcp.send(&Message::TicketRequest).unwrap();
+            held = match tcp.recv().unwrap() {
+                Message::Ticket { ticket, .. } => ticket,
+                other => panic!("{other:?}"),
+            };
+            // Dropped here: socket closes, reactor sees EOF.
+        }
+        let _ = held;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while dist.stats.tickets_released.load(Ordering::Relaxed) < 1 {
+            assert!(std::time::Instant::now() < deadline, "release never happened");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        gw.shutdown();
+    }
+
+    #[test]
+    fn nofile_helpers_work() {
+        let cur = raise_nofile_limit(64).unwrap();
+        assert!(cur >= 64);
+        assert!(process_thread_count().unwrap_or(1) >= 1);
+        assert!(process_rss_kb().unwrap_or(1) >= 1);
+    }
+}

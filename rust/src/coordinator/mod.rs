@@ -9,12 +9,15 @@
 //! | CalculationFramework    | [`framework::Framework`]     |
 //! | project / task / ticket | [`framework::TaskHandle`], [`crate::store`] |
 //! | TicketDistributor       | [`distributor::Distributor`] |
+//! | WebSocket front         | [`gateway::Gateway`] (epoll reactor, TCP + WS listeners) |
 //! | HTTPServer dataset APIs | `DataRequest` handling in the distributor + [`crate::tasks::DatasetStore`] |
 //! | control console         | [`console`]                  |
 
 pub mod console;
 pub mod distributor;
 pub mod framework;
+pub mod gateway;
 
 pub use distributor::{Distributor, DistributorConfig, Session};
 pub use framework::{Framework, TaskHandle};
+pub use gateway::{Gateway, GatewayConfig};

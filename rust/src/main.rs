@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use sashimi::coordinator::{console, Distributor, Framework};
+use sashimi::coordinator::{console, Distributor, Framework, Gateway, GatewayConfig};
 use sashimi::data;
 use sashimi::data::loader::BatchLoader;
 use sashimi::dist::{self, Cluster, ClusterConfig};
@@ -25,7 +25,8 @@ use sashimi::nn::{NativeEngine, TrainEngine, XlaEngine};
 use sashimi::runtime::Runtime;
 use sashimi::store::{Scheduler, StoreConfig, WalConfig, WalStore};
 use sashimi::tasks::{self, is_prime::IsPrimeTask};
-use sashimi::transport::tcp::{TcpConn, TcpListenerWrap};
+use sashimi::transport::tcp::TcpConn;
+use sashimi::transport::ws::WsConn;
 use sashimi::transport::{Conn, LinkModel};
 use sashimi::util::cli::Args;
 use sashimi::util::json::Value;
@@ -65,8 +66,8 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "usage: sashimi <serve|worker|prime|train|hybrid|mlitb|hesync|info> [--flags]\n\
                  \n\
-                 serve   --port 7070 [--state-dir DIR] [--knn-queries 100] [--knn-train 2000]\n\
-                 worker  --connect 127.0.0.1:7070 [--profile native|desktop|tablet] [--speed X] [--prefetch N]\n\
+                 serve   --port 7070 [--ws-port 7071] [--heartbeat-ms 10000] [--state-dir DIR] [--knn-queries 100] [--knn-train 2000]\n\
+                 worker  --connect 127.0.0.1:7070 | --connect ws://host:7071/ [--profile native|desktop|tablet] [--speed X] [--prefetch N]\n\
                  prime   [--limit 10000] [--workers 2]\n\
                  train   [--engine xla|naive|jnp] [--net cifar|mnist] [--steps 20] [--data 2000]\n\
                  hybrid  [--net mnist] [--clients 2] [--rounds 3] (also mlitb, hesync)\n\
@@ -94,6 +95,11 @@ fn profile_from(args: &Args) -> Result<DeviceProfile> {
 
 fn serve(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 7070)?;
+    // The WebSocket listener rides one port up by default, so `serve
+    // --port 7070` is reachable both from legacy TCP workers (7070) and
+    // from a browser / websocat (ws://host:7071/).
+    let ws_port = args.usize_or("ws-port", port + 1)?;
+    let heartbeat_ms = args.u64_or("heartbeat-ms", 10_000)?;
     let nq = args.usize_or("knn-queries", 100)?;
     let nt = args.usize_or("knn-train", 2000)?;
     let state_dir = args.get("state-dir").map(String::from);
@@ -137,9 +143,20 @@ fn serve(args: &Args) -> Result<()> {
     }
 
     let dist = Distributor::new(&fw);
-    let listener = TcpListenerWrap::bind(&format!("0.0.0.0:{port}"))?;
-    println!("sashimi distributor on {}", listener.local_addr);
-    let handle = dist.serve(Box::new(listener));
+    // One epoll reactor carries both listeners: JSON-lines TCP for
+    // legacy workers, WebSocket for browsers — same protocol, same
+    // ticket pool, dead peers detected within 2× the heartbeat.
+    let gw = Gateway::bind(
+        &dist,
+        GatewayConfig { heartbeat_ms },
+        Some(&format!("0.0.0.0:{port}")),
+        Some(&format!("0.0.0.0:{ws_port}")),
+    )?;
+    println!(
+        "sashimi distributor on {} (tcp) + ws://{}/ (websocket)",
+        gw.tcp_addr().unwrap_or_default(),
+        gw.ws_addr().unwrap_or_default()
+    );
     loop {
         sashimi::util::clock::sleep_ms(5000);
         println!("{}", console::render(&console::snapshot(&dist)));
@@ -147,7 +164,7 @@ fn serve(args: &Args) -> Result<()> {
             break;
         }
     }
-    let _ = handle.join();
+    gw.shutdown();
     Ok(())
 }
 
@@ -164,14 +181,25 @@ fn worker(args: &Args) -> Result<()> {
     registry.register(Arc::new(IsPrimeTask));
     registry.register(Arc::new(tasks::knn::KnnChunkTask::standard()));
     let rt = sashimi::runtime::open_shared()?;
-    let mut w = Worker::new(&format!("tcp-{}", std::process::id()), profile, registry)
+    // `ws://` joins through the WebSocket gateway port; a bare
+    // host:port speaks the legacy JSON-lines wire.
+    let is_ws = addr.starts_with("ws://");
+    let scheme = if is_ws { "ws" } else { "tcp" };
+    let mut w = Worker::new(&format!("{scheme}-{}", std::process::id()), profile, registry)
         .with_runtime(rt)
         .with_prefetch_cap(prefetch);
     if max > 0 {
         w.max_tickets = Some(max);
     }
     let stop = AtomicBool::new(false);
-    let report = w.run(|| Ok(Box::new(TcpConn::connect(&addr)?) as Box<dyn Conn>), &stop);
+    let connect = |addr: &str| -> Result<Box<dyn Conn>> {
+        Ok(if addr.starts_with("ws://") {
+            Box::new(WsConn::connect(addr)?)
+        } else {
+            Box::new(TcpConn::connect(addr)?)
+        })
+    };
+    let report = w.run(|| connect(&addr), &stop);
     println!(
         "worker done: {} tickets, {} errors, {} reloads, busy {:.1} ms",
         report.tickets_completed, report.errors_reported, report.reloads, report.busy_ms

@@ -414,7 +414,7 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
         })
         .collect();
 
-    let mut sessions: Vec<Option<Session<'_>>> = (0..cfg.workers).map(|_| None).collect();
+    let mut sessions: Vec<Option<Session>> = (0..cfg.workers).map(|_| None).collect();
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut seq = 0u64;
     for (wi, w) in fleet.iter_mut().enumerate() {

@@ -1,0 +1,159 @@
+//! Byte-level framing, factored out of the sockets.
+//!
+//! The blocking transports ([`tcp`](super::tcp), [`ws`](super::ws))
+//! and the async gateway ([`crate::coordinator::gateway`]) all move the
+//! same JSON [`Message`](super::Message)s; what differs per transport
+//! is only how a byte stream is cut into documents.  A [`Framing`]
+//! turns an append-only inbound byte buffer into [`Inbound`] events and
+//! outbound strings into wire bytes, with no I/O of its own — so the
+//! epoll reactor can drive any framing from non-blocking reads, and the
+//! conformance suite can byte-compare transports against each other.
+//!
+//! Two implementations:
+//! * [`LineFraming`] — one JSON document per `\n` (the legacy TCP wire);
+//! * [`ws::WsFraming`](super::ws::WsFraming) — RFC 6455 frames, text
+//!   opcode carrying the same JSON documents, plus ping/pong/close
+//!   control frames (which surface as their own [`Inbound`] variants so
+//!   heartbeats never touch the JSON protocol).
+
+use anyhow::{bail, Result};
+
+/// One event extracted from the inbound byte stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inbound {
+    /// A complete protocol document (JSON text, undecoded).
+    Msg(String),
+    /// Transport-level ping (WS control frame); answer with
+    /// [`Framing::frame_pong`] echoing the payload.
+    Ping(Vec<u8>),
+    /// Transport-level pong — liveness evidence, no reply.
+    Pong,
+    /// Orderly transport-level close.
+    Close,
+}
+
+/// A stateful byte-stream codec: cut inbound bytes into [`Inbound`]
+/// events, wrap outbound documents into wire bytes.
+pub trait Framing: Send {
+    /// Try to extract one event from the front of `buf` (consuming its
+    /// bytes).  `Ok(None)` = need more bytes; `Err` = the stream is not
+    /// valid for this framing (protocol violation — close the
+    /// connection).  Call in a loop until `None` to drain a read.
+    fn extract(&mut self, buf: &mut Vec<u8>) -> Result<Option<Inbound>>;
+
+    /// Wrap one encoded protocol document for the wire.
+    fn frame_msg(&mut self, json: &str) -> Vec<u8>;
+
+    /// A transport-level ping, empty if the framing has none (line
+    /// framing: heartbeats are read-timeout-only, because an
+    /// unsolicited line would desync the strict request/response JSON
+    /// protocol).
+    fn frame_ping(&mut self) -> Vec<u8>;
+
+    /// A pong echoing `payload` (empty if the framing has none).
+    fn frame_pong(&mut self, payload: &[u8]) -> Vec<u8>;
+
+    /// An orderly transport-level close (empty if the framing has none).
+    fn frame_close(&mut self) -> Vec<u8>;
+}
+
+/// The legacy wire: one JSON document per `\n`-terminated line
+/// (trailing `\r` tolerated, empty lines skipped).  No control frames —
+/// liveness on this framing is inferred from read silence alone.
+#[derive(Debug, Default)]
+pub struct LineFraming;
+
+impl LineFraming {
+    pub fn new() -> LineFraming {
+        LineFraming
+    }
+}
+
+impl Framing for LineFraming {
+    fn extract(&mut self, buf: &mut Vec<u8>) -> Result<Option<Inbound>> {
+        loop {
+            let Some(pos) = buf.iter().position(|&b| b == b'\n') else {
+                return Ok(None);
+            };
+            let mut line: Vec<u8> = buf.drain(..=pos).collect();
+            line.pop(); // the '\n'
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            if line.is_empty() {
+                continue; // blank keepalive line, skip
+            }
+            match String::from_utf8(line) {
+                Ok(s) => return Ok(Some(Inbound::Msg(s))),
+                Err(_) => bail!("non-UTF-8 line on the JSON-lines wire"),
+            }
+        }
+    }
+
+    fn frame_msg(&mut self, json: &str) -> Vec<u8> {
+        let mut out = Vec::with_capacity(json.len() + 1);
+        out.extend_from_slice(json.as_bytes());
+        out.push(b'\n');
+        out
+    }
+
+    fn frame_ping(&mut self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    fn frame_pong(&mut self, _payload: &[u8]) -> Vec<u8> {
+        Vec::new()
+    }
+
+    fn frame_close(&mut self) -> Vec<u8> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_framing_roundtrip() {
+        let mut f = LineFraming::new();
+        let mut buf = f.frame_msg(r#"{"t":"ack"}"#);
+        buf.extend_from_slice(f.frame_msg(r#"{"t":"reload"}"#).as_slice());
+        assert_eq!(f.extract(&mut buf).unwrap(), Some(Inbound::Msg(r#"{"t":"ack"}"#.into())));
+        assert_eq!(f.extract(&mut buf).unwrap(), Some(Inbound::Msg(r#"{"t":"reload"}"#.into())));
+        assert_eq!(f.extract(&mut buf).unwrap(), None);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn line_framing_partial_then_complete() {
+        let mut f = LineFraming::new();
+        let mut buf = b"{\"t\":\"ac".to_vec();
+        assert_eq!(f.extract(&mut buf).unwrap(), None);
+        buf.extend_from_slice(b"k\"}\n");
+        assert_eq!(f.extract(&mut buf).unwrap(), Some(Inbound::Msg(r#"{"t":"ack"}"#.into())));
+    }
+
+    #[test]
+    fn line_framing_tolerates_crlf_and_blank_lines() {
+        let mut f = LineFraming::new();
+        let mut buf = b"\r\n\n{\"t\":\"ack\"}\r\n".to_vec();
+        assert_eq!(f.extract(&mut buf).unwrap(), Some(Inbound::Msg(r#"{"t":"ack"}"#.into())));
+        assert_eq!(f.extract(&mut buf).unwrap(), None);
+    }
+
+    #[test]
+    fn line_framing_rejects_non_utf8() {
+        let mut f = LineFraming::new();
+        let mut buf = vec![0xFF, 0xFE, b'\n'];
+        assert!(f.extract(&mut buf).is_err());
+    }
+
+    #[test]
+    fn line_framing_has_no_control_frames() {
+        let mut f = LineFraming::new();
+        assert!(f.frame_ping().is_empty());
+        assert!(f.frame_pong(b"x").is_empty());
+        assert!(f.frame_close().is_empty());
+    }
+}

@@ -9,14 +9,24 @@
 //!   multi-process deployments (`sashimi serve` / `sashimi worker`);
 //! * [`local`] — in-process channel pairs with an explicit [`LinkModel`]
 //!   (RTT + bandwidth) and fault injection, used by benches and tests to
-//!   emulate Internet-grade links deterministically.
+//!   emulate Internet-grade links deterministically;
+//! * [`ws`] — RFC 6455 WebSocket, text frames carrying the same JSON
+//!   documents, so an actual browser can join the fleet (the paper's
+//!   deployment story made literal).
+//!
+//! The byte-level cut between documents lives in [`framing`], shared by
+//! the blocking transports here and the async epoll gateway
+//! ([`crate::coordinator::gateway`]) that multiplexes thousands of
+//! connections onto one thread.
 //!
 //! Every message carries its encoded size through the link model, so
 //! communication costs scale with real payload bytes (the quantity the
 //! paper's §4 algorithm is designed to minimise).
 
+pub mod framing;
 pub mod local;
 pub mod tcp;
+pub mod ws;
 
 use anyhow::{bail, Context, Result};
 

@@ -1,0 +1,656 @@
+//! WebSocket transport (RFC 6455), std-only.
+//!
+//! The paper's browsers speak WebSocket to the TicketDistributor; this
+//! module makes that literal.  The same JSON documents as the
+//! JSON-lines wire ride text frames one-per-message, so the protocol
+//! layer ([`super::Message`], [`crate::coordinator::Session`]) is
+//! untouched — a browser `new WebSocket("ws://host:port/")` +
+//! `JSON.stringify`/`JSON.parse` is a complete client.
+//!
+//! Scope (deliberately the subset the protocol needs, hand-rolled so
+//! the crate stays dependency-free):
+//! * HTTP/1.1 upgrade handshake, both sides, with the RFC 6455
+//!   `Sec-WebSocket-Accept` SHA-1/base64 proof;
+//! * text frames (fragmentation supported on receive, never produced on
+//!   send), ping/pong/close control frames;
+//! * client→server masking (required by the RFC; servers send unmasked);
+//! * RSV bits and unknown opcodes are protocol errors — the gateway's
+//!   garbage-frame fault-injection relies on that.
+//!
+//! Two consumers: the blocking [`WsConn`] (a [`Conn`] for workers and
+//! tests, mirroring [`super::tcp::TcpConn`]) and the non-blocking
+//! [`WsFraming`] driven by the epoll gateway.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::framing::{Framing, Inbound};
+use super::{Conn, Message};
+use crate::util::base64;
+use crate::util::rng::SplitMix64;
+
+/// The RFC 6455 handshake GUID.
+const WS_GUID: &str = "258EAFA5-E914-47DA-95CA-C5AB0DC85B11";
+
+/// Largest accepted frame payload (coalesced over fragments): generous
+/// for dataset messages, small enough that a hostile length header
+/// cannot balloon memory.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+const OP_CONT: u8 = 0x0;
+const OP_TEXT: u8 = 0x1;
+const OP_BIN: u8 = 0x2;
+const OP_CLOSE: u8 = 0x8;
+const OP_PING: u8 = 0x9;
+const OP_PONG: u8 = 0xA;
+
+// ---------------------------------------------------------------------
+// SHA-1 (handshake only — not a general-purpose hash).
+
+/// SHA-1 of `data` (RFC 3174).  Used solely for the
+/// `Sec-WebSocket-Accept` proof, which RFC 6455 pins to SHA-1; this is
+/// an integrity token against misrouted proxies, not a security
+/// boundary.
+pub fn sha1(data: &[u8]) -> [u8; 20] {
+    let mut h: [u32; 5] = [0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476, 0xC3D2E1F0];
+    let ml = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&ml.to_be_bytes());
+    let mut w = [0u32; 80];
+    for chunk in msg.chunks_exact(64) {
+        for (i, word) in chunk.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([word[0], word[1], word[2], word[3]]);
+        }
+        for i in 16..80 {
+            w[i] = (w[i - 3] ^ w[i - 8] ^ w[i - 14] ^ w[i - 16]).rotate_left(1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e) = (h[0], h[1], h[2], h[3], h[4]);
+        for (i, &wi) in w.iter().enumerate() {
+            let (f, k) = match i {
+                0..=19 => ((b & c) | ((!b) & d), 0x5A827999u32),
+                20..=39 => (b ^ c ^ d, 0x6ED9EBA1),
+                40..=59 => ((b & c) | (b & d) | (c & d), 0x8F1BBCDC),
+                _ => (b ^ c ^ d, 0xCA62C1D6),
+            };
+            let tmp = a
+                .rotate_left(5)
+                .wrapping_add(f)
+                .wrapping_add(e)
+                .wrapping_add(k)
+                .wrapping_add(wi);
+            e = d;
+            d = c;
+            c = b.rotate_left(30);
+            b = a;
+            a = tmp;
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+    }
+    let mut out = [0u8; 20];
+    for (i, word) in h.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+    }
+    out
+}
+
+/// The `Sec-WebSocket-Accept` value for a client's `Sec-WebSocket-Key`.
+pub fn accept_key_for(key: &str) -> String {
+    let mut buf = key.trim().as_bytes().to_vec();
+    buf.extend_from_slice(WS_GUID.as_bytes());
+    base64::encode(&sha1(&buf))
+}
+
+// ---------------------------------------------------------------------
+// HTTP upgrade handshake.
+
+/// Position *after* the `\r\n\r\n` header terminator, if complete.
+pub fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+fn header_value<'a>(head: &'a str, name: &str) -> Option<&'a str> {
+    for line in head.lines().skip(1) {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case(name) {
+                return Some(v.trim());
+            }
+        }
+    }
+    None
+}
+
+/// Validate a client's upgrade request head (everything before the
+/// blank line) and build the `101 Switching Protocols` response.
+pub fn server_handshake_response(head: &str) -> Result<String> {
+    let first = head.lines().next().unwrap_or("");
+    if !first.starts_with("GET ") {
+        bail!("not an HTTP GET: {first:?}");
+    }
+    let upgrade = header_value(head, "Upgrade").unwrap_or("");
+    if !upgrade.eq_ignore_ascii_case("websocket") {
+        bail!("missing Upgrade: websocket header");
+    }
+    let key = header_value(head, "Sec-WebSocket-Key")
+        .context("missing Sec-WebSocket-Key header")?;
+    Ok(format!(
+        "HTTP/1.1 101 Switching Protocols\r\n\
+         Upgrade: websocket\r\n\
+         Connection: Upgrade\r\n\
+         Sec-WebSocket-Accept: {}\r\n\r\n",
+        accept_key_for(key)
+    ))
+}
+
+/// Build a client upgrade request for `path` on `hostport`; returns
+/// (request, key) — the key validates the server's accept proof.
+pub fn client_handshake_request(hostport: &str, path: &str, rng: &mut SplitMix64) -> (String, String) {
+    let mut nonce = [0u8; 16];
+    for chunk in nonce.chunks_mut(8) {
+        let v = rng.next_u64().to_le_bytes();
+        chunk.copy_from_slice(&v[..chunk.len()]);
+    }
+    let key = base64::encode(&nonce);
+    let req = format!(
+        "GET {path} HTTP/1.1\r\n\
+         Host: {hostport}\r\n\
+         Upgrade: websocket\r\n\
+         Connection: Upgrade\r\n\
+         Sec-WebSocket-Key: {key}\r\n\
+         Sec-WebSocket-Version: 13\r\n\r\n"
+    );
+    (req, key)
+}
+
+// ---------------------------------------------------------------------
+// Frame codec.
+
+/// RFC 6455 framing as a [`Framing`]: text frames carry the JSON
+/// documents; ping/pong/close surface as control [`Inbound`]s.  The
+/// client side masks outbound frames (RFC requirement), the server
+/// side sends unmasked; both sides accept either on receive.
+pub struct WsFraming {
+    mask_outbound: bool,
+    mask_rng: SplitMix64,
+    /// An in-progress fragmented message: (first-frame opcode, bytes).
+    partial: Option<(u8, Vec<u8>)>,
+    max_payload: usize,
+}
+
+impl WsFraming {
+    /// Server side: unmasked outbound frames.
+    pub fn server() -> WsFraming {
+        WsFraming {
+            mask_outbound: false,
+            mask_rng: SplitMix64::new(0),
+            partial: None,
+            max_payload: MAX_FRAME_BYTES,
+        }
+    }
+
+    /// Client side: masked outbound frames (mask bytes from `seed` —
+    /// masking defeats proxy cache poisoning, not eavesdroppers, so a
+    /// deterministic stream is fine and keeps tests reproducible).
+    pub fn client(seed: u64) -> WsFraming {
+        WsFraming {
+            mask_outbound: true,
+            mask_rng: SplitMix64::new(seed),
+            partial: None,
+            max_payload: MAX_FRAME_BYTES,
+        }
+    }
+
+    fn frame(&mut self, opcode: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(payload.len() + 14);
+        out.push(0x80 | opcode); // FIN, no RSV
+        let mask_bit = if self.mask_outbound { 0x80u8 } else { 0 };
+        if payload.len() < 126 {
+            out.push(mask_bit | payload.len() as u8);
+        } else if payload.len() <= u16::MAX as usize {
+            out.push(mask_bit | 126);
+            out.extend_from_slice(&(payload.len() as u16).to_be_bytes());
+        } else {
+            out.push(mask_bit | 127);
+            out.extend_from_slice(&(payload.len() as u64).to_be_bytes());
+        }
+        if self.mask_outbound {
+            let mask = self.mask_rng.next_u64().to_le_bytes();
+            let mask = [mask[0], mask[1], mask[2], mask[3]];
+            out.extend_from_slice(&mask);
+            out.extend(payload.iter().enumerate().map(|(i, &b)| b ^ mask[i % 4]));
+        } else {
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    fn complete(&mut self, opcode: u8, payload: Vec<u8>) -> Result<Inbound> {
+        match opcode {
+            OP_TEXT | OP_BIN => match String::from_utf8(payload) {
+                // Binary frames are accepted as documents too: the
+                // payload is JSON text either way.
+                Ok(s) => Ok(Inbound::Msg(s)),
+                Err(_) => bail!("non-UTF-8 websocket message payload"),
+            },
+            other => bail!("unexpected completed opcode {other:#x}"),
+        }
+    }
+}
+
+impl Framing for WsFraming {
+    fn extract(&mut self, buf: &mut Vec<u8>) -> Result<Option<Inbound>> {
+        loop {
+            if buf.len() < 2 {
+                return Ok(None);
+            }
+            let b0 = buf[0];
+            let b1 = buf[1];
+            if b0 & 0x70 != 0 {
+                bail!("websocket RSV bits set (no extension negotiated)");
+            }
+            let fin = b0 & 0x80 != 0;
+            let opcode = b0 & 0x0F;
+            let masked = b1 & 0x80 != 0;
+            let mut idx = 2usize;
+            let len7 = (b1 & 0x7F) as usize;
+            let len = match len7 {
+                126 => {
+                    if buf.len() < idx + 2 {
+                        return Ok(None);
+                    }
+                    let n = u16::from_be_bytes([buf[idx], buf[idx + 1]]) as usize;
+                    idx += 2;
+                    n
+                }
+                127 => {
+                    if buf.len() < idx + 8 {
+                        return Ok(None);
+                    }
+                    let mut b8 = [0u8; 8];
+                    b8.copy_from_slice(&buf[idx..idx + 8]);
+                    let n = u64::from_be_bytes(b8);
+                    idx += 8;
+                    if n > self.max_payload as u64 {
+                        bail!("websocket frame of {n} bytes exceeds the {} cap", self.max_payload);
+                    }
+                    n as usize
+                }
+                n => n,
+            };
+            if len > self.max_payload {
+                bail!("websocket frame of {len} bytes exceeds the {} cap", self.max_payload);
+            }
+            let mask = if masked {
+                if buf.len() < idx + 4 {
+                    return Ok(None);
+                }
+                let m = [buf[idx], buf[idx + 1], buf[idx + 2], buf[idx + 3]];
+                idx += 4;
+                Some(m)
+            } else {
+                None
+            };
+            if buf.len() < idx + len {
+                return Ok(None);
+            }
+            let mut payload: Vec<u8> = buf[idx..idx + len].to_vec();
+            buf.drain(..idx + len);
+            if let Some(m) = mask {
+                for (i, b) in payload.iter_mut().enumerate() {
+                    *b ^= m[i % 4];
+                }
+            }
+            if opcode >= OP_CLOSE {
+                // Control frames: never fragmented, small.
+                if !fin {
+                    bail!("fragmented websocket control frame");
+                }
+                if len > 125 {
+                    bail!("oversized websocket control frame ({len} bytes)");
+                }
+                match opcode {
+                    OP_CLOSE => return Ok(Some(Inbound::Close)),
+                    OP_PING => return Ok(Some(Inbound::Ping(payload))),
+                    OP_PONG => return Ok(Some(Inbound::Pong)),
+                    other => bail!("unknown websocket control opcode {other:#x}"),
+                }
+            }
+            match opcode {
+                OP_CONT => {
+                    let Some((first_op, mut acc)) = self.partial.take() else {
+                        bail!("websocket continuation frame with nothing to continue");
+                    };
+                    if acc.len() + payload.len() > self.max_payload {
+                        bail!("fragmented websocket message exceeds the {} cap", self.max_payload);
+                    }
+                    acc.extend_from_slice(&payload);
+                    if fin {
+                        return self.complete(first_op, acc).map(Some);
+                    }
+                    self.partial = Some((first_op, acc));
+                }
+                OP_TEXT | OP_BIN => {
+                    if self.partial.is_some() {
+                        bail!("new websocket data frame inside a fragmented message");
+                    }
+                    if fin {
+                        return self.complete(opcode, payload).map(Some);
+                    }
+                    self.partial = Some((opcode, payload));
+                }
+                other => bail!("unknown websocket opcode {other:#x}"),
+            }
+        }
+    }
+
+    fn frame_msg(&mut self, json: &str) -> Vec<u8> {
+        self.frame(OP_TEXT, json.as_bytes())
+    }
+
+    fn frame_ping(&mut self) -> Vec<u8> {
+        self.frame(OP_PING, b"hb")
+    }
+
+    fn frame_pong(&mut self, payload: &[u8]) -> Vec<u8> {
+        self.frame(OP_PONG, payload)
+    }
+
+    fn frame_close(&mut self) -> Vec<u8> {
+        self.frame(OP_CLOSE, &[])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocking Conn.
+
+/// Read from `stream` until the HTTP header terminator, appending to
+/// `buf`; returns the index after `\r\n\r\n`.
+fn read_header(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<usize> {
+    loop {
+        if let Some(end) = find_header_end(buf) {
+            return Ok(end);
+        }
+        if buf.len() > 64 << 10 {
+            bail!("oversized handshake header");
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp).context("ws handshake read")?;
+        if n == 0 {
+            bail!("connection closed during websocket handshake");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// A blocking WebSocket [`Conn`] — the worker-side mirror of
+/// [`super::tcp::TcpConn`].  Transport-level pings are answered inline
+/// inside [`recv`](Conn::recv), invisible to the protocol.
+pub struct WsConn {
+    stream: TcpStream,
+    framing: WsFraming,
+    inbuf: Vec<u8>,
+    sent: u64,
+    received: u64,
+}
+
+impl WsConn {
+    /// Connect and upgrade.  Accepts `ws://host:port/path` or a bare
+    /// `host:port`.
+    pub fn connect(addr: &str) -> Result<WsConn> {
+        let rest = addr.strip_prefix("ws://").unwrap_or(addr);
+        let (hostport, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, "/"),
+        };
+        let mut stream =
+            TcpStream::connect(hostport).with_context(|| format!("connecting to {hostport}"))?;
+        stream.set_nodelay(true).ok();
+        let mut rng = SplitMix64::new(
+            crate::util::clock::now_us() ^ (std::process::id() as u64) << 32 ^ 0x5157_7357,
+        );
+        let (req, key) = client_handshake_request(hostport, path, &mut rng);
+        stream.write_all(req.as_bytes()).context("ws handshake send")?;
+        let mut buf = Vec::new();
+        let end = read_header(&mut stream, &mut buf)?;
+        let head = String::from_utf8_lossy(&buf[..end]).into_owned();
+        let status = head.lines().next().unwrap_or("");
+        if !status.contains(" 101") {
+            bail!("websocket upgrade refused: {status:?}");
+        }
+        let accept = header_value(&head, "Sec-WebSocket-Accept").unwrap_or("");
+        if accept != accept_key_for(&key) {
+            bail!("bad Sec-WebSocket-Accept (got {accept:?})");
+        }
+        let inbuf = buf[end..].to_vec();
+        Ok(WsConn {
+            stream,
+            framing: WsFraming::client(rng.next_u64()),
+            inbuf,
+            sent: 0,
+            received: 0,
+        })
+    }
+
+    /// Server-side upgrade of an accepted socket (the blocking
+    /// counterpart of the gateway's reactor path; used by tests).
+    pub fn accept(mut stream: TcpStream) -> Result<WsConn> {
+        stream.set_nodelay(true).ok();
+        let mut buf = Vec::new();
+        let end = read_header(&mut stream, &mut buf)?;
+        let head = String::from_utf8_lossy(&buf[..end]).into_owned();
+        let resp = server_handshake_response(&head)?;
+        stream.write_all(resp.as_bytes()).context("ws handshake reply")?;
+        let inbuf = buf[end..].to_vec();
+        Ok(WsConn { stream, framing: WsFraming::server(), inbuf, sent: 0, received: 0 })
+    }
+}
+
+impl Conn for WsConn {
+    fn send(&mut self, m: &Message) -> Result<()> {
+        let frame = self.framing.frame_msg(&m.encode());
+        self.stream.write_all(&frame).context("ws send")?;
+        self.sent += frame.len() as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        loop {
+            match self.framing.extract(&mut self.inbuf)? {
+                Some(Inbound::Msg(doc)) => return Message::decode(&doc),
+                Some(Inbound::Ping(payload)) => {
+                    let pong = self.framing.frame_pong(&payload);
+                    self.stream.write_all(&pong).context("ws pong")?;
+                    self.sent += pong.len() as u64;
+                }
+                Some(Inbound::Pong) => {}
+                Some(Inbound::Close) => bail!("connection closed by peer (websocket close)"),
+                None => {
+                    let mut tmp = [0u8; 16384];
+                    let n = self.stream.read(&mut tmp).context("ws recv")?;
+                    if n == 0 {
+                        bail!("connection closed by peer");
+                    }
+                    self.received += n as u64;
+                    self.inbuf.extend_from_slice(&tmp[..n]);
+                }
+            }
+        }
+    }
+
+    fn bytes(&self) -> (u64, u64) {
+        (self.sent, self.received)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{TaskId, TicketId};
+    use crate::util::json::Value;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    /// RFC 3174 test vectors.
+    #[test]
+    fn sha1_known_answers() {
+        assert_eq!(hex(&sha1(b"abc")), "a9993e364706816aba3e25717850c26c9cd0d89d");
+        assert_eq!(hex(&sha1(b"")), "da39a3ee5e6b4b0d3255bfef95601890afd80709");
+        assert_eq!(
+            hex(&sha1(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq")),
+            "84983e441c3bd26ebaae4aa1f95129e5e54670f1"
+        );
+        // A two-block message (>64 bytes).
+        assert_eq!(
+            hex(&sha1(b"The quick brown fox jumps over the lazy dog")),
+            "2fd4e1c67a2d28fced849ee1bb76e7391b93eb12"
+        );
+    }
+
+    /// The RFC 6455 §1.3 handshake example.
+    #[test]
+    fn accept_key_matches_rfc_example() {
+        assert_eq!(accept_key_for("dGhlIHNhbXBsZSBub25jZQ=="), "s3pPLMBiTxaQ9kYGzzhZRbK+xOo=");
+    }
+
+    #[test]
+    fn handshake_request_response_pair() {
+        let mut rng = SplitMix64::new(7);
+        let (req, key) = client_handshake_request("127.0.0.1:9", "/", &mut rng);
+        assert!(req.ends_with("\r\n\r\n"));
+        let resp = server_handshake_response(&req).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 101"));
+        assert!(resp.contains(&accept_key_for(&key)));
+        // A plain HTTP request is refused.
+        assert!(server_handshake_response("GET / HTTP/1.1\r\nHost: x\r\n").is_err());
+        assert!(server_handshake_response("POST / HTTP/1.1\r\n").is_err());
+    }
+
+    fn roundtrip_via(tx: &mut WsFraming, rx: &mut WsFraming, doc: &str) {
+        let mut buf = tx.frame_msg(doc);
+        assert_eq!(rx.extract(&mut buf).unwrap(), Some(Inbound::Msg(doc.to_string())));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn frames_roundtrip_both_directions() {
+        let mut client = WsFraming::client(42);
+        let mut server = WsFraming::server();
+        roundtrip_via(&mut client, &mut server, r#"{"t":"ack"}"#);
+        roundtrip_via(&mut server, &mut client, r#"{"t":"reload"}"#);
+        // Payload sizes straddling the 126 and 65536 length encodings.
+        for n in [0usize, 125, 126, 127, 65_535, 65_536, 70_001] {
+            let doc: String = "x".repeat(n);
+            roundtrip_via(&mut client, &mut server, &doc);
+            roundtrip_via(&mut server, &mut client, &doc);
+        }
+    }
+
+    #[test]
+    fn extract_handles_partial_frames() {
+        let mut client = WsFraming::client(1);
+        let mut server = WsFraming::server();
+        let frame = client.frame_msg(r#"{"t":"ack"}"#);
+        let mut buf = Vec::new();
+        for (i, &b) in frame.iter().enumerate() {
+            buf.push(b);
+            let got = server.extract(&mut buf).unwrap();
+            if i + 1 < frame.len() {
+                assert_eq!(got, None, "complete message before byte {}", i + 1);
+            } else {
+                assert_eq!(got, Some(Inbound::Msg(r#"{"t":"ack"}"#.into())));
+            }
+        }
+    }
+
+    #[test]
+    fn fragmented_text_reassembles() {
+        let mut server = WsFraming::server();
+        // Hand-built: "he" (text, no FIN) + "llo" (continuation, FIN).
+        let mut buf = vec![OP_TEXT, 2, b'h', b'e', 0x80 | OP_CONT, 3, b'l', b'l', b'o'];
+        assert_eq!(server.extract(&mut buf).unwrap(), Some(Inbound::Msg("hello".into())));
+        // A control frame interleaved mid-fragmentation is legal.
+        let mut buf = vec![OP_TEXT, 1, b'a', 0x80 | OP_PING, 1, b'p', 0x80 | OP_CONT, 1, b'b'];
+        assert_eq!(server.extract(&mut buf).unwrap(), Some(Inbound::Ping(vec![b'p'])));
+        assert_eq!(server.extract(&mut buf).unwrap(), Some(Inbound::Msg("ab".into())));
+    }
+
+    #[test]
+    fn control_frames_surface_as_events() {
+        let mut client = WsFraming::client(3);
+        let mut server = WsFraming::server();
+        let mut buf = client.frame_ping();
+        match server.extract(&mut buf).unwrap() {
+            Some(Inbound::Ping(p)) => {
+                let mut pong = server.frame_pong(&p);
+                assert_eq!(client.extract(&mut pong).unwrap(), Some(Inbound::Pong));
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut close = client.frame_close();
+        assert_eq!(server.extract(&mut close).unwrap(), Some(Inbound::Close));
+    }
+
+    #[test]
+    fn garbage_frames_are_protocol_errors() {
+        // RSV bits set.
+        let mut f = WsFraming::server();
+        assert!(f.extract(&mut vec![0xF2, 0x00]).is_err());
+        // Unknown data opcode.
+        let mut f = WsFraming::server();
+        assert!(f.extract(&mut vec![0x83, 0x00]).is_err());
+        // Continuation with nothing to continue.
+        let mut f = WsFraming::server();
+        assert!(f.extract(&mut vec![0x80, 0x01, b'x']).is_err());
+        // Fragmented control frame (PING without FIN).
+        let mut f = WsFraming::server();
+        assert!(f.extract(&mut vec![OP_PING, 0x00]).is_err());
+        // 64-bit length over the cap.
+        let mut f = WsFraming::server();
+        let mut buf = vec![0x80 | OP_TEXT, 127];
+        buf.extend_from_slice(&(u64::MAX).to_be_bytes());
+        assert!(f.extract(&mut buf).is_err());
+    }
+
+    /// Blocking loopback: WsConn client against a WsConn::accept server
+    /// thread, real sockets, full upgrade.
+    #[test]
+    fn ws_conn_roundtrip_on_loopback() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut server = WsConn::accept(stream).unwrap();
+            loop {
+                match server.recv() {
+                    Ok(Message::Shutdown) | Err(_) => break,
+                    Ok(m) => server.send(&m).unwrap(),
+                }
+            }
+        });
+        let mut client = WsConn::connect(&format!("ws://{addr}/")).unwrap();
+        let msg = Message::Ticket {
+            ticket: TicketId(1),
+            task: TaskId(2),
+            task_name: "echo".into(),
+            index: 0,
+            payload: Value::obj(vec![("x", Value::num(1.5))]),
+        };
+        client.send(&msg).unwrap();
+        assert_eq!(client.recv().unwrap(), msg);
+        client.send(&Message::Shutdown).unwrap();
+        h.join().unwrap();
+        let (sent, recv) = client.bytes();
+        assert!(sent > 0 && recv > 0);
+    }
+}

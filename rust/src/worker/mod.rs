@@ -247,6 +247,48 @@ impl PrefetchController {
     }
 }
 
+/// Reconnect pacing: capped exponential backoff with multiplicative
+/// jitter, the same shape as the `NoTicket` idle backoff.
+///
+/// A fixed 10 ms retry turns a briefly-down coordinator into a
+/// re-resolve + re-handshake hammer — and a fleet that lost the
+/// coordinator together retries in lockstep forever.  Instead the nth
+/// consecutive failure sleeps a jittered value in `[c/2, c]` where
+/// `c = min(base × 2ⁿ, cap)`; any success resets the streak.
+#[derive(Debug, Clone)]
+pub struct ReconnectBackoff {
+    base_ms: u64,
+    cap_ms: u64,
+    streak: u32,
+}
+
+impl ReconnectBackoff {
+    pub fn new(base_ms: u64, cap_ms: u64) -> ReconnectBackoff {
+        let base_ms = base_ms.max(1);
+        ReconnectBackoff { base_ms, cap_ms: cap_ms.max(base_ms), streak: 0 }
+    }
+
+    /// Consecutive failures since the last success.
+    pub fn streak(&self) -> u32 {
+        self.streak
+    }
+
+    /// Record a failure and pick the sleep for it, in ms.  The shift is
+    /// clamped far above where `cap_ms` saturates, so the cap — not the
+    /// clamp — is what bounds the ceiling.
+    pub fn on_failure(&mut self, rng: &mut SplitMix64) -> u64 {
+        let ceiling =
+            self.base_ms.saturating_mul(1u64 << self.streak.min(20)).min(self.cap_ms);
+        self.streak = self.streak.saturating_add(1);
+        ceiling / 2 + rng.gen_range(ceiling / 2 + 1)
+    }
+
+    /// A connection made it through Hello/Ack: forget the streak.
+    pub fn reset(&mut self) {
+        self.streak = 0;
+    }
+}
+
 impl Worker {
     pub fn new(id: &str, profile: DeviceProfile, registry: Registry) -> Worker {
         Worker {
@@ -312,6 +354,7 @@ impl Worker {
         let mut queue: VecDeque<WireTicket> = VecDeque::new();
         let mut pending: Vec<(TicketId, Value)> = Vec::new();
         let mut errors: Vec<WireError> = Vec::new();
+        let mut reconnect = ReconnectBackoff::new(10, 2000);
         'outer: while !stop.load(Ordering::SeqCst) {
             let mut conn = match connect() {
                 Ok(c) => c,
@@ -320,7 +363,8 @@ impl Worker {
                     if consecutive_failures > max_reconnects {
                         break;
                     }
-                    self.clock.sleep_ms(10);
+                    let nap = reconnect.on_failure(&mut jitter);
+                    self.clock.sleep_ms(nap);
                     continue;
                 }
             };
@@ -337,10 +381,12 @@ impl Worker {
                 // Same backoff as a failed connect: a half-up
                 // coordinator (socket open, Hello unanswered) must not
                 // be spin-looped against.
-                self.clock.sleep_ms(10);
+                let nap = reconnect.on_failure(&mut jitter);
+                self.clock.sleep_ms(nap);
                 continue;
             }
             consecutive_failures = 0;
+            reconnect.reset();
 
             // Compute time spent on the current batch vs the round trip
             // that fetched it: the adaptive-growth signal, reset per
@@ -949,5 +995,51 @@ mod tests {
                 assert_eq!(p.size(), 1);
             }
         }
+    }
+
+    /// The nth failure sleeps in `[c/2, c]`, `c = min(10·2ⁿ, 2000)`:
+    /// exponential until the cap, jittered, and reset by success.
+    #[test]
+    fn reconnect_backoff_grows_jitters_and_caps() {
+        let mut rng = SplitMix64::new(7);
+        let mut b = ReconnectBackoff::new(10, 2000);
+        for n in 0..16u32 {
+            let ceiling = 10u64.saturating_mul(1 << n).min(2000);
+            let nap = b.on_failure(&mut rng);
+            assert!(
+                nap >= ceiling / 2 && nap <= ceiling,
+                "failure {n}: nap {nap} outside [{}, {ceiling}]",
+                ceiling / 2
+            );
+        }
+        // Deep streaks stay pinned at the cap (the shift clamp cannot
+        // undercut it).
+        for _ in 0..64 {
+            let nap = b.on_failure(&mut rng);
+            assert!(nap >= 1000 && nap <= 2000, "capped nap out of range: {nap}");
+        }
+        assert_eq!(b.streak(), 80);
+        b.reset();
+        assert_eq!(b.streak(), 0);
+        let nap = b.on_failure(&mut rng);
+        assert!(nap <= 10, "post-reset nap should be back at base, got {nap}");
+    }
+
+    /// Different worker seeds take different naps on the same streak —
+    /// the fleet-wide lockstep-retry guard.
+    #[test]
+    fn reconnect_backoff_desynchronises_workers() {
+        let naps: Vec<u64> = (0..8u64)
+            .map(|seed| {
+                let mut rng = SplitMix64::new(seed);
+                let mut b = ReconnectBackoff::new(10, 2000);
+                for _ in 0..8 {
+                    b.on_failure(&mut rng);
+                }
+                b.on_failure(&mut rng)
+            })
+            .collect();
+        let distinct: std::collections::HashSet<u64> = naps.iter().copied().collect();
+        assert!(distinct.len() > 1, "all workers chose the same nap: {naps:?}");
     }
 }

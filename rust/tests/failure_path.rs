@@ -13,16 +13,22 @@
 //! virtual clock by hand to watch the window expire at exactly
 //! VCT + `requeue_after_ms`.
 
+use std::io::{BufRead, BufReader, Read as _, Write as _};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use sashimi::coordinator::{Distributor, DistributorConfig, Framework};
+use sashimi::coordinator::{Distributor, DistributorConfig, Framework, Gateway, GatewayConfig};
 use sashimi::store::{Scheduler as _, StoreConfig, TaskId};
 use sashimi::tasks::is_prime::IsPrimeTask;
 use sashimi::tasks::{TaskContext, TaskDef, TaskOutput};
+use sashimi::transport::framing::{Framing as _, Inbound};
+use sashimi::transport::ws::{self, WsFraming};
 use sashimi::transport::{local, Conn, LinkModel, Message};
 use sashimi::util::clock::VirtualClock;
 use sashimi::util::json::Value;
+use sashimi::util::rng::SplitMix64;
 use sashimi::worker::{DeviceProfile, Worker};
 
 /// A framework on the paper-default store windows whose clock is a
@@ -265,4 +271,254 @@ fn stopped_worker_leaves_nothing_in_flight() {
     assert_eq!(p.in_flight, 0, "a stopping worker must strand nothing: {p:?}");
     assert_eq!(p.done as u64, report.tickets_completed, "acked flushes match the store");
     assert_eq!(p.done + p.pending, 16);
+}
+
+// ---------------------------------------------------------------------
+// Gateway fault injection (ISSUE 8): misbehaving peers against the
+// epoll gateway.  The store clock stays pinned at virtual 0 — its
+// redistribution windows can never elapse — while the gateway's
+// heartbeats run on the wall clock, so every recovered ticket below is
+// proof of the dead-peer detection path, not of a window.
+
+/// A pinned-store framework with `n` prime tickets behind a gateway
+/// (one TCP or one WS listener) with the given heartbeat.
+fn gateway_fixture(
+    n: usize,
+    heartbeat_ms: u64,
+    ws: bool,
+) -> (Arc<Framework>, Arc<Distributor>, Arc<Gateway>) {
+    let (fw, _task, _vclock) = prime_fw(n);
+    let dist = Distributor::new(&fw);
+    let (tcp, wsl) = if ws { (None, Some("127.0.0.1:0")) } else { (Some("127.0.0.1:0"), None) };
+    let gw = Gateway::bind(&dist, GatewayConfig { heartbeat_ms }, tcp, wsl).unwrap();
+    (fw, dist, gw)
+}
+
+fn send_line(s: &mut TcpStream, m: &Message) {
+    s.write_all(format!("{}\n", m.encode()).as_bytes()).unwrap();
+}
+
+fn recv_line(r: &mut BufReader<TcpStream>) -> Message {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    Message::decode(line.trim_end()).unwrap()
+}
+
+/// Poll until `released()` on the distributor reaches `want`; returns
+/// the elapsed wall time since `t0`.
+fn await_release(dist: &Distributor, want: u64, t0: Instant, deadline_ms: u64) -> Duration {
+    let deadline = t0 + Duration::from_millis(deadline_ms);
+    loop {
+        if dist.stats.tickets_released.load(Ordering::Relaxed) >= want {
+            return t0.elapsed();
+        }
+        assert!(
+            Instant::now() < deadline,
+            "release never happened (released {} of {want})",
+            dist.stats.tickets_released.load(Ordering::Relaxed)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A compliant peer that takes a batch and then falls silent — no FIN,
+/// no frames, socket held open (the yanked-cable / suspended-laptop
+/// shape).  Its held tickets must release within 2× the heartbeat
+/// (plus sweep granularity and CI scheduling slack), and never before
+/// the silence threshold — the acceptance pin for ISSUE 8.
+#[test]
+fn silent_tcp_peer_releases_within_two_heartbeats() {
+    const HB: u64 = 500;
+    let (fw, dist, gw) = gateway_fixture(8, HB, false);
+    let mut s = TcpStream::connect(gw.tcp_addr().unwrap()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    send_line(&mut s, &Message::Hello { client: "zombie".into(), profile: "t".into() });
+    assert!(matches!(recv_line(&mut r), Message::Ack));
+    send_line(&mut s, &Message::TicketBatchRequest { max: 4 });
+    match recv_line(&mut r) {
+        Message::Tickets { tickets } => assert_eq!(tickets.len(), 4),
+        m => panic!("expected tickets, got {m:?}"),
+    }
+    assert_eq!(fw.store().progress(None).in_flight, 4);
+    let t0 = Instant::now();
+    // ... and now: nothing.  The socket stays open and silent.
+    let elapsed = await_release(&dist, 4, t0, 15_000);
+    assert!(
+        elapsed.as_millis() as u64 >= 2 * HB - 150,
+        "killed {}ms after last traffic — before the 2×{HB}ms silence threshold",
+        elapsed.as_millis()
+    );
+    assert!(
+        elapsed.as_millis() as u64 <= 2 * HB + 3_000,
+        "released only after {}ms — outside the 2×heartbeat window (+CI slack)",
+        elapsed.as_millis()
+    );
+    assert!(gw.stats.dead_peer_kills.load(Ordering::Relaxed) >= 1);
+    let p = fw.store().progress(None);
+    assert_eq!((p.in_flight, p.pending), (0, 8), "the whole batch re-entered dispatch");
+    gw.shutdown();
+}
+
+/// Half-close: the peer shuts down its write side (FIN) while holding
+/// tickets.  EOF detection — not the heartbeat timer — must release:
+/// the heartbeat here is a minute, the release must land in seconds.
+#[test]
+fn half_closed_peer_releases_on_eof_not_heartbeat() {
+    let (fw, dist, gw) = gateway_fixture(4, 60_000, false);
+    let mut s = TcpStream::connect(gw.tcp_addr().unwrap()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    send_line(&mut s, &Message::Hello { client: "half".into(), profile: "t".into() });
+    assert!(matches!(recv_line(&mut r), Message::Ack));
+    send_line(&mut s, &Message::TicketBatchRequest { max: 2 });
+    match recv_line(&mut r) {
+        Message::Tickets { tickets } => assert_eq!(tickets.len(), 2),
+        m => panic!("expected tickets, got {m:?}"),
+    }
+    let t0 = Instant::now();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let elapsed = await_release(&dist, 2, t0, 10_000);
+    assert!(
+        elapsed.as_millis() < 5_000,
+        "EOF release took {}ms — it must not wait for the 60s heartbeat",
+        elapsed.as_millis()
+    );
+    assert_eq!(gw.stats.dead_peer_kills.load(Ordering::Relaxed), 0, "EOF is not a timeout kill");
+    assert_eq!(fw.store().progress(None).in_flight, 0);
+    gw.shutdown();
+}
+
+/// Garbage on the JSON-lines wire after taking a ticket: the gateway
+/// must classify it as a protocol error, kill the connection, and
+/// release the held ticket.
+#[test]
+fn garbage_tcp_line_kills_and_releases() {
+    let (fw, dist, gw) = gateway_fixture(4, 60_000, false);
+    let mut s = TcpStream::connect(gw.tcp_addr().unwrap()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    send_line(&mut s, &Message::Hello { client: "garbler".into(), profile: "t".into() });
+    assert!(matches!(recv_line(&mut r), Message::Ack));
+    send_line(&mut s, &Message::TicketRequest);
+    assert!(matches!(recv_line(&mut r), Message::Ticket { .. }));
+    let t0 = Instant::now();
+    s.write_all(b"!!!this is not a protocol document!!!\n").unwrap();
+    await_release(&dist, 1, t0, 10_000);
+    assert!(gw.stats.protocol_errors.load(Ordering::Relaxed) >= 1);
+    assert_eq!(fw.store().progress(None).in_flight, 0);
+    gw.shutdown();
+}
+
+/// A raw WebSocket client built from the `transport::ws` pieces, so
+/// tests can misbehave below the `Conn` abstraction: send partial
+/// frames, invalid frames, or nothing at all.
+struct RawWs {
+    stream: TcpStream,
+    framing: WsFraming,
+    inbuf: Vec<u8>,
+}
+
+impl RawWs {
+    fn connect(hostport: &str) -> RawWs {
+        let mut stream = TcpStream::connect(hostport).unwrap();
+        let mut rng = SplitMix64::new(0xFA17);
+        let (req, key) = ws::client_handshake_request(hostport, "/", &mut rng);
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        let end = loop {
+            if let Some(end) = ws::find_header_end(&buf) {
+                break end;
+            }
+            let mut tmp = [0u8; 4096];
+            let n = stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "EOF during ws handshake");
+            buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = String::from_utf8_lossy(&buf[..end]).into_owned();
+        assert!(head.lines().next().unwrap().contains(" 101"), "upgrade refused: {head}");
+        assert!(head.contains(&ws::accept_key_for(&key)), "bad accept proof");
+        let inbuf = buf[end..].to_vec();
+        RawWs { stream, framing: WsFraming::client(0xFA17), inbuf }
+    }
+
+    fn send(&mut self, m: &Message) {
+        let f = self.framing.frame_msg(&m.encode());
+        self.stream.write_all(&f).unwrap();
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).unwrap();
+    }
+
+    fn recv(&mut self) -> Message {
+        loop {
+            match self.framing.extract(&mut self.inbuf).unwrap() {
+                Some(Inbound::Msg(doc)) => return Message::decode(&doc).unwrap(),
+                Some(Inbound::Ping(p)) => {
+                    let f = self.framing.frame_pong(&p);
+                    self.stream.write_all(&f).unwrap();
+                }
+                Some(Inbound::Pong) => {}
+                Some(Inbound::Close) => panic!("server closed mid-script"),
+                None => {
+                    let mut tmp = [0u8; 4096];
+                    let n = self.stream.read(&mut tmp).unwrap();
+                    assert!(n > 0, "server EOF mid-script");
+                    self.inbuf.extend_from_slice(&tmp[..n]);
+                }
+            }
+        }
+    }
+}
+
+/// A WebSocket peer that stalls mid-frame: it sends the first bytes of
+/// a valid text frame and then nothing.  The gateway cannot complete
+/// the frame; the heartbeat must kill it and release its tickets
+/// within the 2× window.
+#[test]
+fn ws_peer_stalled_mid_frame_releases_within_two_heartbeats() {
+    const HB: u64 = 500;
+    let (fw, dist, gw) = gateway_fixture(8, HB, true);
+    let mut c = RawWs::connect(&gw.ws_addr().unwrap());
+    c.send(&Message::Hello { client: "staller".into(), profile: "t".into() });
+    assert!(matches!(c.recv(), Message::Ack));
+    c.send(&Message::TicketBatchRequest { max: 3 });
+    match c.recv() {
+        Message::Tickets { tickets } => assert_eq!(tickets.len(), 3),
+        m => panic!("expected tickets, got {m:?}"),
+    }
+    let frame = c.framing.frame_msg(&Message::TicketRequest.encode());
+    let t0 = Instant::now();
+    c.send_raw(&frame[..frame.len() / 2]); // ...and the rest never comes
+    let elapsed = await_release(&dist, 3, t0, 15_000);
+    assert!(
+        elapsed.as_millis() as u64 <= 2 * HB + 3_000,
+        "stalled frame released only after {}ms",
+        elapsed.as_millis()
+    );
+    assert!(gw.stats.dead_peer_kills.load(Ordering::Relaxed) >= 1);
+    assert_eq!(fw.store().progress(None).in_flight, 0);
+    gw.shutdown();
+}
+
+/// A WebSocket frame with RSV bits set (no extension was negotiated)
+/// is a protocol violation: immediate kill + release, no heartbeat
+/// involved.
+#[test]
+fn ws_garbage_frame_kills_and_releases() {
+    let (fw, dist, gw) = gateway_fixture(4, 60_000, true);
+    let mut c = RawWs::connect(&gw.ws_addr().unwrap());
+    c.send(&Message::Hello { client: "ws-garbler".into(), profile: "t".into() });
+    assert!(matches!(c.recv(), Message::Ack));
+    c.send(&Message::TicketRequest);
+    assert!(matches!(c.recv(), Message::Ticket { .. }));
+    let t0 = Instant::now();
+    c.send_raw(&[0xF2, 0x00]); // FIN + RSV1..3 set, binary, empty
+    let elapsed = await_release(&dist, 1, t0, 10_000);
+    assert!(
+        elapsed.as_millis() < 5_000,
+        "protocol-error release took {}ms — it must not wait for the 60s heartbeat",
+        elapsed.as_millis()
+    );
+    assert!(gw.stats.protocol_errors.load(Ordering::Relaxed) >= 1);
+    assert_eq!(fw.store().progress(None).in_flight, 0);
+    gw.shutdown();
 }

@@ -1,0 +1,346 @@
+//! Transport conformance (ISSUE 8): the same scripted client session,
+//! run over all three transports — in-process local channels, the
+//! gateway's JSON-lines TCP listener, and the gateway's WebSocket
+//! listener — must produce byte-identical reply transcripts.
+//!
+//! Each transport gets a *fresh* framework with the clock pinned at
+//! virtual 0 and an identically-seeded ticket pool, so every reply —
+//! ticket ids, payloads, retry hints, dataset bytes — is deterministic;
+//! `Message::encode` is BTreeMap-ordered, so string equality of the
+//! re-encoded replies is wire-semantics equality.  Any future transport
+//! (or gateway refactor) that forks behaviour breaks the matrix
+//! instead of shipping silently.
+//!
+//! The script walks the whole §2.1.2 surface: hello/ack, the legacy
+//! singular ticket lifecycle (ticket_req / task_req / data_req /
+//! result), batch dispatch with `max` clamping, singular + batched
+//! error reports answered by Reload, explicit release + immediate
+//! re-dispatch, NoTicket, and Shutdown (whose session close releases
+//! everything still held).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sashimi::coordinator::{Distributor, Framework, Gateway, GatewayConfig};
+use sashimi::store::{Scheduler as _, TicketId};
+use sashimi::tasks::is_prime::IsPrimeTask;
+use sashimi::tasks::{TaskContext, TaskDef, TaskOutput};
+use sashimi::transport::tcp::TcpConn;
+use sashimi::transport::ws::WsConn;
+use sashimi::transport::{local, Conn, LinkModel, Message, WireError};
+use sashimi::util::clock::VirtualClock;
+use sashimi::util::json::Value;
+use sashimi::worker::{DeviceProfile, Worker};
+
+/// One conformance server: a fresh pinned-clock framework with 8 prime
+/// tickets and one registered dataset, plus whatever carries the bytes.
+struct Server {
+    fw: Arc<Framework>,
+    dist: Arc<Distributor>,
+    gw: Option<Arc<Gateway>>,
+    connector: Option<local::LocalConnector>,
+}
+
+impl Server {
+    fn fresh() -> (Arc<Framework>, Arc<Distributor>) {
+        let vclock = Arc::new(VirtualClock::new());
+        let fw = Framework::builder().clock(vclock).build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(
+            (0..8).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+        );
+        // A deterministic dataset for the data_req leg (seeded synth).
+        let d = sashimi::data::mnist_train(100, 1);
+        fw.datasets().register("conf_data", d.rows_matrix(0, 4));
+        let dist = Distributor::new(&fw);
+        (fw, dist)
+    }
+
+    fn local() -> Server {
+        let (fw, dist) = Server::fresh();
+        let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+        dist.serve(Box::new(listener));
+        Server { fw, dist, gw: None, connector: Some(connector) }
+    }
+
+    fn gateway_tcp() -> Server {
+        let (fw, dist) = Server::fresh();
+        let gw =
+            Gateway::bind(&dist, GatewayConfig::default(), Some("127.0.0.1:0"), None).unwrap();
+        Server { fw, dist, gw: Some(gw), connector: None }
+    }
+
+    fn gateway_ws() -> Server {
+        let (fw, dist) = Server::fresh();
+        let gw =
+            Gateway::bind(&dist, GatewayConfig::default(), None, Some("127.0.0.1:0")).unwrap();
+        Server { fw, dist, gw: Some(gw), connector: None }
+    }
+
+    fn connect(&self) -> Box<dyn Conn> {
+        if let Some(c) = &self.connector {
+            return Box::new(c.connect().unwrap());
+        }
+        let gw = self.gw.as_ref().unwrap();
+        if let Some(addr) = gw.tcp_addr() {
+            Box::new(TcpConn::connect(&addr).unwrap())
+        } else {
+            Box::new(WsConn::connect(&format!("ws://{}/", gw.ws_addr().unwrap())).unwrap())
+        }
+    }
+}
+
+fn ask(conn: &mut dyn Conn, log: &mut Vec<String>, m: &Message) -> Message {
+    conn.send(m).unwrap();
+    let reply = conn.recv().unwrap();
+    log.push(reply.encode());
+    reply
+}
+
+fn ok_result() -> Value {
+    Value::obj(vec![("is_prime", Value::Bool(true))])
+}
+
+/// The scripted session; returns the encoded reply transcript.
+fn run_script(conn: &mut dyn Conn) -> Vec<String> {
+    let mut log = Vec::new();
+
+    // Hello / Ack.
+    let r = ask(conn, &mut log, &Message::Hello { client: "conf".into(), profile: "test".into() });
+    assert_eq!(r, Message::Ack);
+
+    // Legacy singular lifecycle: ticket, code, data, result.
+    let t1 = match ask(conn, &mut log, &Message::TicketRequest) {
+        Message::Ticket { ticket, task_name, .. } => {
+            assert_eq!(task_name, "is_prime");
+            ticket
+        }
+        m => panic!("expected Ticket, got {m:?}"),
+    };
+    ask(conn, &mut log, &Message::TaskRequest { task_name: "is_prime".into() });
+    match ask(conn, &mut log, &Message::DataRequest { key: "conf_data".into() }) {
+        Message::Data { shape, .. } => assert_eq!(shape[0], 4),
+        m => panic!("expected Data, got {m:?}"),
+    }
+    let r = ask(conn, &mut log, &Message::TicketResult { ticket: t1, result: ok_result() });
+    assert_eq!(r, Message::Ack);
+
+    // Batch dispatch + batched results + a singular error report.
+    let batch = match ask(conn, &mut log, &Message::TicketBatchRequest { max: 3 }) {
+        Message::Tickets { tickets } => tickets,
+        m => panic!("expected Tickets, got {m:?}"),
+    };
+    assert_eq!(batch.len(), 3);
+    let r = ask(
+        conn,
+        &mut log,
+        &Message::TicketResults {
+            results: vec![(batch[0].ticket, ok_result()), (batch[1].ticket, ok_result())],
+        },
+    );
+    assert_eq!(r, Message::Ack);
+    let r = ask(
+        conn,
+        &mut log,
+        &Message::ErrorReport {
+            ticket: batch[2].ticket,
+            message: "boom".into(),
+            stack: "conformance stack".into(),
+        },
+    );
+    assert_eq!(r, Message::Reload, "singular error reports answer Reload");
+
+    // `max: 0` must clamp to 1, not error and not return empty.
+    let b2 = match ask(conn, &mut log, &Message::TicketBatchRequest { max: 0 }) {
+        Message::Tickets { tickets } => tickets,
+        m => panic!("expected Tickets, got {m:?}"),
+    };
+    assert_eq!(b2.len(), 1, "max=0 clamps to a single ticket");
+    let b3 = match ask(conn, &mut log, &Message::TicketBatchRequest { max: 2 }) {
+        Message::Tickets { tickets } => tickets,
+        m => panic!("expected Tickets, got {m:?}"),
+    };
+    assert_eq!(b3.len(), 2);
+
+    // Explicit release: one Ack, and the tickets re-dispatch at once
+    // (no redistribution window — the clock is frozen, so re-dispatch
+    // is proof of the release path).
+    let held: Vec<TicketId> = b2.iter().chain(b3.iter()).map(|t| t.ticket).collect();
+    let r = ask(conn, &mut log, &Message::ReleaseTickets { tickets: held });
+    assert_eq!(r, Message::Ack);
+    let t5 = match ask(conn, &mut log, &Message::TicketRequest) {
+        Message::Ticket { ticket, .. } => ticket,
+        m => panic!("released tickets must re-dispatch immediately, got {m:?}"),
+    };
+
+    // Batched error reports: one Reload for the whole batch.
+    let r = ask(
+        conn,
+        &mut log,
+        &Message::ErrorReports {
+            reports: vec![WireError {
+                ticket: t5,
+                message: "boom2".into(),
+                stack: "conformance stack".into(),
+            }],
+        },
+    );
+    assert_eq!(r, Message::Reload, "batched error reports answer one Reload");
+
+    // Drain the rest (3 done so far, so 5 remain), then an empty pool
+    // answers NoTicket with the configured hint.
+    let rest = match ask(conn, &mut log, &Message::TicketBatchRequest { max: 64 }) {
+        Message::Tickets { tickets } => tickets,
+        m => panic!("expected Tickets, got {m:?}"),
+    };
+    assert_eq!(rest.len(), 5);
+    let r = ask(conn, &mut log, &Message::TicketRequest);
+    assert!(matches!(r, Message::NoTicket { .. }), "empty pool answers NoTicket, got {r:?}");
+
+    // Orderly shutdown; the 5 tickets still held release on close.
+    conn.send(&Message::Shutdown).unwrap();
+    log
+}
+
+fn released(server: &Server) -> u64 {
+    server.dist.stats.tickets_released.load(Ordering::Relaxed)
+}
+
+/// Core matrix: identical transcripts on local, gateway-TCP and
+/// gateway-WS, and identical release accounting (3 explicit + 5 on
+/// session close).
+#[test]
+fn scripted_session_is_byte_identical_across_transports() {
+    let cases: Vec<(&str, Server)> = vec![
+        ("local", Server::local()),
+        ("gateway-tcp", Server::gateway_tcp()),
+        ("gateway-ws", Server::gateway_ws()),
+    ];
+    let mut transcripts: Vec<(&str, Vec<String>)> = Vec::new();
+    for (name, server) in &cases {
+        let mut conn = server.connect();
+        let log = run_script(&mut *conn);
+        drop(conn);
+        // The server notices the shutdown asynchronously (gateway
+        // reactor); wait for the close-release to land.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while released(server) < 8 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "{name}: close-release never completed (released {})",
+                released(server)
+            );
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(released(server), 8, "{name}: 3 explicit + 5 close releases");
+        assert_eq!(server.fw.store().progress(None).done, 3, "{name}: 3 results applied");
+        transcripts.push((name, log));
+    }
+    let (ref_name, reference) = &transcripts[0];
+    for (name, log) in &transcripts[1..] {
+        assert_eq!(
+            log.len(),
+            reference.len(),
+            "{name} transcript length differs from {ref_name}"
+        );
+        for (i, (a, b)) in reference.iter().zip(log.iter()).enumerate() {
+            assert_eq!(a, b, "{name} reply {i} differs from {ref_name}");
+        }
+    }
+    for (_, server) in cases {
+        if let Some(gw) = &server.gw {
+            gw.shutdown();
+        }
+    }
+}
+
+/// Fails the first execution of every ticket, succeeds on retry — so
+/// both workers exercise error reports + Reload mid-run.
+struct FailsOnceEach {
+    failed: std::sync::Mutex<std::collections::HashSet<u64>>,
+}
+
+impl TaskDef for FailsOnceEach {
+    fn name(&self) -> &str {
+        "fails_once_each"
+    }
+    fn execute(&self, input: &Value, _: &mut dyn TaskContext) -> anyhow::Result<TaskOutput> {
+        let n = input.get("n")?.as_u64()?;
+        if self.failed.lock().unwrap().insert(n) {
+            anyhow::bail!("transient failure on {n}");
+        }
+        Ok(TaskOutput::new(Value::num(n as f64)))
+    }
+}
+
+/// The ISSUE 8 acceptance case: a real WebSocket worker and a legacy
+/// TCP JSON worker complete one task set *together* against a single
+/// distributor behind one gateway — full lifecycle including errors and
+/// reloads on both wires.
+#[test]
+fn ws_and_tcp_workers_share_one_distributor() {
+    let fw = Framework::builder().build();
+    let task = fw.create_task(Arc::new(FailsOnceEach { failed: Default::default() }));
+    task.calculate((0..24).map(|i| Value::obj(vec![("n", Value::num(i as f64))])).collect());
+    let task_id = task.id;
+    let dist = Distributor::new(&fw);
+    let gw = Gateway::bind(
+        &dist,
+        GatewayConfig::default(),
+        Some("127.0.0.1:0"),
+        Some("127.0.0.1:0"),
+    )
+    .unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let tcp_addr = gw.tcp_addr().unwrap();
+    let ws_addr = format!("ws://{}/", gw.ws_addr().unwrap());
+    let tcp_worker = {
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("legacy-tcp", DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(TcpConn::connect(&tcp_addr)?) as Box<dyn Conn>), &stop)
+        })
+    };
+    let ws_worker = {
+        let registry = fw.registry_snapshot();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut w = Worker::new("browser-ws", DeviceProfile::native(), registry);
+            w.run(|| Ok(Box::new(WsConn::connect(&ws_addr)?) as Box<dyn Conn>), &stop)
+        })
+    };
+
+    let results = fw
+        .store()
+        .wait_results_timeout(task_id, 60_000)
+        .expect("both transports must finish the shared task");
+    stop.store(true, Ordering::SeqCst);
+    let tcp_report = tcp_worker.join().unwrap();
+    let ws_report = ws_worker.join().unwrap();
+
+    assert_eq!(results.len(), 24);
+    assert_eq!(fw.store().progress(None).done, 24);
+    assert_eq!(
+        tcp_report.tickets_completed + ws_report.tickets_completed,
+        24,
+        "the two transports split the pool: tcp={} ws={}",
+        tcp_report.tickets_completed,
+        ws_report.tickets_completed
+    );
+    assert_eq!(
+        tcp_report.errors_reported + ws_report.errors_reported,
+        24,
+        "every ticket failed exactly once across both wires"
+    );
+    assert!(
+        ws_report.tickets_completed > 0,
+        "the WebSocket worker must have done real work"
+    );
+    assert!(
+        tcp_report.tickets_completed > 0,
+        "the legacy TCP worker must have done real work"
+    );
+    gw.shutdown();
+}
