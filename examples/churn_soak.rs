@@ -11,6 +11,10 @@
 //! cargo run --release --example churn_soak -- --workers 10000 --seed 1 \
 //!     --duration 600000 --json soak-metrics.json
 //! cargo run --release --example churn_soak -- --quick --passive --trace
+//! cargo run --release --example churn_soak -- --adversarial
+//! cargo run --release --example churn_soak -- --workers 10000 \
+//!     --replication 3 --quorum 2 --wrong-permille 150 \
+//!     --corrupt-permille 100 --collude-permille 50 --json soak-metrics.json
 //! ```
 
 use sashimi::sim::{run_soak, SoakConfig};
@@ -20,17 +24,36 @@ use sashimi::Result;
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let quick = args.flag("quick");
-    let base = if quick { SoakConfig::quick() } else { SoakConfig::new(10_000, 1) };
+    let adversarial = args.flag("adversarial");
+    let base = if adversarial {
+        SoakConfig::adversarial_quick()
+    } else if quick {
+        SoakConfig::quick()
+    } else {
+        SoakConfig::new(10_000, 1)
+    };
 
     let mut cfg = SoakConfig::new(
         args.usize_or("workers", base.workers)?,
         args.u64_or("seed", base.seed)?,
     );
+    cfg.store_cfg = base.store_cfg.clone();
+    cfg.adversary_wrong_permille = base.adversary_wrong_permille;
     cfg.duration_ms = args.u64_or("duration", base.duration_ms)?;
     cfg.prime_tickets = args.usize_or("tickets", cfg.prime_tickets)?;
     cfg.prefetch_cap = args.usize_or("prefetch-cap", cfg.prefetch_cap)?;
     cfg.mean_lifetime_ms = args.u64_or("mean-lifetime", cfg.mean_lifetime_ms)?;
     cfg.error_permille = args.u64_or("error-permille", cfg.error_permille)?;
+    // Verification layer (§2.8): replicate tickets across distinct
+    // clients and complete on matching votes; adversary classes seed
+    // the fleet with deterministic liars to soak against.
+    cfg.store_cfg.replication = args.usize_or("replication", cfg.store_cfg.replication)? as u32;
+    cfg.store_cfg.quorum = args.usize_or("quorum", cfg.store_cfg.quorum)? as u32;
+    cfg.adversary_wrong_permille = args.u64_or("wrong-permille", cfg.adversary_wrong_permille)?;
+    cfg.adversary_corrupt_permille =
+        args.u64_or("corrupt-permille", cfg.adversary_corrupt_permille)?;
+    cfg.adversary_collude_permille =
+        args.u64_or("collude-permille", cfg.adversary_collude_permille)?;
     if args.flag("passive") {
         // The paper's §2.1.2 baseline: vanished browsers strand their
         // tickets until the redistribution window expires.
@@ -67,5 +90,10 @@ fn main() -> Result<()> {
 
     anyhow::ensure!(report.done == report.total, "soak lost tickets");
     anyhow::ensure!(report.ghosts_after_close == 0, "soak leaked ghost clients");
+    anyhow::ensure!(
+        report.poisoned_completions == 0,
+        "verification accepted {} poisoned results",
+        report.poisoned_completions
+    );
     Ok(())
 }

@@ -12,7 +12,7 @@
 //! per-client table is still available on demand via [`render_clients`].
 
 use crate::coordinator::distributor::Distributor;
-use crate::store::{Progress, SchedStats, Scheduler as _, TicketId};
+use crate::store::{Progress, SchedStats, Scheduler as _, TicketId, VerifyStats};
 
 /// How many drained error reports one render prints before eliding.
 const MAX_ERRORS_SHOWN: usize = 5;
@@ -29,7 +29,15 @@ pub struct Snapshot {
     pub gone: u64,
     pub tickets_served: u64,
     pub results_accepted: u64,
+    /// Same-client retries of done tickets (see `DistributorStats`).
     pub duplicates: u64,
+    /// Cross-client late answers on done tickets — the shape vote fraud
+    /// takes, reported separately so it cannot hide among retries.
+    pub duplicates_cross: u64,
+    /// Ballots recorded on tickets still short of quorum (R > 1 only).
+    pub pending_quorum: u64,
+    /// Ticket requests refused because the client is quarantined.
+    pub refused_quarantine: u64,
     pub errors: u64,
     /// Tickets handed back through the active failure path (explicit
     /// releases + disconnect releases), immediately re-dispatchable.
@@ -42,6 +50,10 @@ pub struct Snapshot {
     /// (`dispatch_shards == 0` means the backend is uninstrumented and
     /// the line is omitted from the render).
     pub sched: SchedStats,
+    /// Result-verification counters ([`Scheduler::verify_stats`]);
+    /// `replication <= 1` means the layer is inactive and the verify
+    /// line is omitted from the render (legacy output is unchanged).
+    pub verify: VerifyStats,
 }
 
 pub fn snapshot(d: &Distributor) -> Snapshot {
@@ -61,10 +73,14 @@ pub fn snapshot(d: &Distributor) -> Snapshot {
         tickets_served: d.stats.tickets_served.load(Ordering::Relaxed),
         results_accepted: d.stats.results_accepted.load(Ordering::Relaxed),
         duplicates: d.stats.results_duplicate.load(Ordering::Relaxed),
+        duplicates_cross: d.stats.results_duplicate_cross.load(Ordering::Relaxed),
+        pending_quorum: d.stats.results_pending_quorum.load(Ordering::Relaxed),
+        refused_quarantine: d.stats.noticket_quarantined.load(Ordering::Relaxed),
         errors: d.stats.errors_reported.load(Ordering::Relaxed),
         released: d.stats.tickets_released.load(Ordering::Relaxed),
         recent_errors,
         sched: d.store().stats(),
+        verify: d.store().verify_stats(),
     }
 }
 
@@ -94,6 +110,23 @@ pub fn render(s: &Snapshot) -> String {
             s.sched.steal_attempts,
             s.sched.shard_depths.iter().sum::<usize>(),
             s.sched.shard_depths.iter().max().copied().unwrap_or(0),
+        ));
+    }
+    if s.verify.replication > 1 {
+        out.push_str(&format!(
+            "verify: R={} Q={} | {} votes | {} verdicts | {} flagged | {} escalations | {} quarantines ({} active, {} trusted) | {} pending | {} cross-duplicates | {} refused\n",
+            s.verify.replication,
+            s.verify.quorum,
+            s.verify.votes_recorded,
+            s.verify.verdicts,
+            s.verify.votes_flagged,
+            s.verify.escalations,
+            s.verify.quarantines,
+            s.verify.quarantined_now,
+            s.verify.trusted_now,
+            s.pending_quorum,
+            s.duplicates_cross,
+            s.refused_quarantine,
         ));
     }
     for (id, report) in s.recent_errors.iter().take(MAX_ERRORS_SHOWN) {
@@ -143,6 +176,9 @@ mod tests {
             tickets_served: 6,
             results_accepted: 5,
             duplicates: 1,
+            duplicates_cross: 0,
+            pending_quorum: 0,
+            refused_quarantine: 0,
             errors: 1,
             released: 2,
             recent_errors: vec![(TicketId(4), "TypeError: x is undefined\nat task.run".into())],
@@ -152,7 +188,9 @@ mod tests {
                 steal_attempts: 6,
                 steal_successes: 2,
                 shard_depths: vec![1, 0, 2, 0],
+                errors_dropped: 0,
             },
+            verify: VerifyStats::default(),
         };
         let text = render(&s);
         assert!(text.contains("10 total"));
@@ -164,6 +202,46 @@ mod tests {
         assert!(text.contains("ready depth 3 (max 2)"));
         assert!(text.contains("TypeError: x is undefined"));
         assert!(!text.contains("at task.run"), "only the first line of a report renders");
+        assert!(!text.contains("verify:"), "verify line is omitted at R = 1");
+    }
+
+    #[test]
+    fn verify_line_renders_only_when_replicating() {
+        let s = Snapshot {
+            progress: Progress::default(),
+            clients: 0,
+            gone: 0,
+            tickets_served: 0,
+            results_accepted: 0,
+            duplicates: 0,
+            duplicates_cross: 3,
+            pending_quorum: 7,
+            refused_quarantine: 2,
+            errors: 0,
+            released: 0,
+            recent_errors: Vec::new(),
+            sched: SchedStats::default(),
+            verify: VerifyStats {
+                replication: 3,
+                quorum: 2,
+                votes_recorded: 40,
+                verdicts: 18,
+                votes_flagged: 4,
+                escalations: 2,
+                quarantines: 1,
+                quarantined_now: 1,
+                trusted_now: 5,
+            },
+        };
+        let text = render(&s);
+        assert!(text.contains("verify: R=3 Q=2"));
+        assert!(text.contains("40 votes"));
+        assert!(text.contains("18 verdicts"));
+        assert!(text.contains("4 flagged"));
+        assert!(text.contains("1 quarantines (1 active, 5 trusted)"));
+        assert!(text.contains("7 pending"));
+        assert!(text.contains("3 cross-duplicates"));
+        assert!(text.contains("2 refused"));
     }
 
     #[test]
@@ -175,10 +253,14 @@ mod tests {
             tickets_served: 0,
             results_accepted: 0,
             duplicates: 0,
+            duplicates_cross: 0,
+            pending_quorum: 0,
+            refused_quarantine: 0,
             errors: 9,
             released: 0,
             recent_errors: (0..9).map(|i| (TicketId(i), format!("e{i}"))).collect(),
             sched: SchedStats::default(),
+            verify: VerifyStats::default(),
         };
         let text = render(&s);
         assert!(text.contains("e4"));

@@ -56,7 +56,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::coordinator::framework::Framework;
-use crate::store::{Scheduler, TicketId};
+use crate::store::{Scheduler, Standing, TicketId, VoteOutcome};
 use crate::tasks::{DatasetStore, Registry};
 use crate::transport::{Conn, Listener, Message, WireTicket};
 use crate::util::clock::{Clock, WallClock};
@@ -84,7 +84,19 @@ pub struct DistributorStats {
     pub connections: AtomicU64,
     pub tickets_served: AtomicU64,
     pub results_accepted: AtomicU64,
+    /// Same-client retries of an already-done ticket (a reloading
+    /// worker re-sending its answer).  Cross-client duplicates land in
+    /// [`results_duplicate_cross`](Self::results_duplicate_cross) —
+    /// conflating the two would mask vote fraud at R > 1.
     pub results_duplicate: AtomicU64,
+    /// A *different* client answering an already-done ticket (a slower
+    /// replica or a redistribution race) — the legitimate-looking shape
+    /// a vote-fraud attempt also takes, so it is counted separately.
+    pub results_duplicate_cross: AtomicU64,
+    /// Votes recorded on tickets still short of quorum (R > 1 only).
+    pub results_pending_quorum: AtomicU64,
+    /// Ticket requests refused because the client is quarantined.
+    pub noticket_quarantined: AtomicU64,
     pub errors_reported: AtomicU64,
     pub data_requests: AtomicU64,
     pub task_requests: AtomicU64,
@@ -377,6 +389,49 @@ impl Session {
         ids
     }
 
+    /// Dispatch refusal for quarantined clients (R > 1 only).  Returns
+    /// the `NoTicket` reply when the requesting client is serving a
+    /// probation sentence; everything it still holds is handed back
+    /// through the attributed release path so honest workers pick the
+    /// tickets up within one sweep instead of waiting out the
+    /// redistribution window.  `None` means the client is in good
+    /// standing and dispatch proceeds normally.
+    fn quarantine_gate(&mut self, d: &Arc<Distributor>) -> Option<Message> {
+        if !d.store.config().verifying() {
+            return None; // R = 1: no reputation layer, zero cost
+        }
+        if !matches!(
+            d.store.client_standing(&self.client, d.clock.now_ms()),
+            Standing::Quarantined { .. }
+        ) {
+            return None;
+        }
+        if !self.held.is_empty() {
+            let ids = self.held_tickets();
+            self.held.clear();
+            let released = d
+                .store
+                .release_batch_from(&self.client, &ids)
+                .into_iter()
+                .filter(|&f| f)
+                .count() as u64;
+            d.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
+        }
+        d.stats.noticket_quarantined.fetch_add(1, Ordering::Relaxed);
+        Some(Message::NoTicket { retry_after_ms: d.cfg.idle_retry_ms })
+    }
+
+    /// Fold one vote outcome into the distributor counters.
+    fn account_vote(d: &Distributor, out: &VoteOutcome) {
+        let c = match out {
+            VoteOutcome::Accepted { .. } => &d.stats.results_accepted,
+            VoteOutcome::Duplicate { same_client: true } => &d.stats.results_duplicate,
+            VoteOutcome::Duplicate { same_client: false } => &d.stats.results_duplicate_cross,
+            VoteOutcome::Pending | VoteOutcome::Repeat => &d.stats.results_pending_quorum,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Handle one inbound message; returns the reply to send, or
     /// `None` when the session is over (orderly `Shutdown`).  An `Err`
     /// is a protocol violation: the caller should close the session
@@ -399,6 +454,9 @@ impl Session {
                 Ok(Some(Message::Ack))
             }
             Message::TicketRequest => {
+                if let Some(refusal) = self.quarantine_gate(&d) {
+                    return Ok(Some(refusal));
+                }
                 match d.store.next_ticket(&self.client, d.clock.now_ms()) {
                     Some(t) => {
                         d.stats.tickets_served.fetch_add(1, Ordering::Relaxed);
@@ -418,6 +476,9 @@ impl Session {
                 }
             }
             Message::TicketBatchRequest { max } => {
+                if let Some(refusal) = self.quarantine_gate(&d) {
+                    return Ok(Some(refusal));
+                }
                 let k = max.clamp(1, d.cfg.max_batch.max(1));
                 let batch = d.store.next_tickets(&self.client, d.clock.now_ms(), k);
                 if batch.is_empty() {
@@ -462,14 +523,13 @@ impl Session {
             Message::TicketResult { ticket, result } => {
                 // `held` is trimmed only after a successful apply: if
                 // `?` kills the session the close release still covers
-                // the ticket (a no-op when it was already done).
-                let fresh = d.store.complete(ticket, result)?;
+                // the ticket (a no-op when it was already done).  The
+                // vote entry point is the attributed form of complete:
+                // at R = 1 it IS the legacy completion; at R > 1 it is
+                // one ballot toward quorum.
+                let out = d.store.vote(&self.client, ticket, result, d.clock.now_ms())?;
                 self.held.remove(&ticket);
-                if fresh {
-                    d.stats.results_accepted.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    d.stats.results_duplicate.fetch_add(1, Ordering::Relaxed);
-                }
+                Self::account_vote(&d, &out);
                 if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
                     ci.results += 1;
                 }
@@ -487,12 +547,13 @@ impl Session {
                 // skipped for that prefix; the store's progress
                 // counters — the source of truth — stay exact either
                 // way.
-                let accepted = d.store.complete_batch(results)? as u64;
+                let outcomes = d.store.vote_batch(&self.client, results, d.clock.now_ms())?;
                 for id in &ids {
                     self.held.remove(id);
                 }
-                d.stats.results_accepted.fetch_add(accepted, Ordering::Relaxed);
-                d.stats.results_duplicate.fetch_add(n - accepted, Ordering::Relaxed);
+                for out in &outcomes {
+                    Self::account_vote(&d, out);
+                }
                 if let Some(ci) = d.clients.lock().unwrap().get_mut(self.client.as_str()) {
                     ci.results += n;
                 }
@@ -505,7 +566,7 @@ impl Session {
                 }
                 crate::log_warn!("distributor", "error report from {}: {message}", self.client);
                 self.held.remove(&ticket);
-                d.store.report_error(ticket, format!("{message}\n{stack}"))?;
+                d.store.report_error_from(&self.client, ticket, format!("{message}\n{stack}"))?;
                 // The paper: the browser reloads itself after reporting.
                 Ok(Some(Message::Reload))
             }
@@ -523,7 +584,11 @@ impl Session {
                         r.message
                     );
                     self.held.remove(&r.ticket);
-                    d.store.report_error(r.ticket, format!("{}\n{}", r.message, r.stack))?;
+                    d.store.report_error_from(
+                        &self.client,
+                        r.ticket,
+                        format!("{}\n{}", r.message, r.stack),
+                    )?;
                 }
                 // One Reload acknowledges the whole batch: the client
                 // reloads itself once, not once per failure.
@@ -533,8 +598,12 @@ impl Session {
                 for id in &tickets {
                     self.held.remove(id);
                 }
-                let released =
-                    d.store.release_batch(&tickets).into_iter().filter(|&f| f).count() as u64;
+                let released = d
+                    .store
+                    .release_batch_from(&self.client, &tickets)
+                    .into_iter()
+                    .filter(|&f| f)
+                    .count() as u64;
                 d.stats.tickets_released.fetch_add(released, Ordering::Relaxed);
                 Ok(Some(Message::Ack))
             }
@@ -559,8 +628,14 @@ impl Session {
         self.closed = true;
         let d = Arc::clone(&self.dist);
         if d.cfg.release_on_disconnect && !self.held.is_empty() {
-            let ids: Vec<TicketId> = self.held.drain().collect();
-            let released = d.store.release_batch(&ids).into_iter().filter(|&f| f).count() as u64;
+            let mut ids: Vec<TicketId> = self.held.drain().collect();
+            ids.sort(); // deterministic release order for WAL transcripts
+            let released = d
+                .store
+                .release_batch_from(&self.client, &ids)
+                .into_iter()
+                .filter(|&f| f)
+                .count() as u64;
             if released > 0 {
                 crate::log_debug!(
                     "distributor",
@@ -843,6 +918,7 @@ mod tests {
                 requeue_after_ms: 0, // every in-flight ticket is immediately redistributable
                 min_redistribute_ms: 0,
                 requeue_on_error: true,
+                ..crate::store::StoreConfig::default()
             })
             .build();
         let task = fw.create_task(Arc::new(IsPrimeTask));
@@ -882,7 +958,11 @@ mod tests {
         assert_eq!(clients[1].recv().unwrap(), Message::Ack, "duplicate still acked");
 
         assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 1);
-        assert_eq!(dist.stats.results_duplicate.load(Ordering::Relaxed), 1);
+        // The slow answer came from a *different* client than the one
+        // whose result won: it lands in the cross-client counter, not
+        // the same-client retry counter (which would mask vote fraud).
+        assert_eq!(dist.stats.results_duplicate.load(Ordering::Relaxed), 0);
+        assert_eq!(dist.stats.results_duplicate_cross.load(Ordering::Relaxed), 1);
         let p = fw.store().progress(None);
         assert_eq!(p.done, 1);
         assert_eq!(p.duplicate_results, 1);
@@ -1184,5 +1264,113 @@ mod tests {
         }
         assert_eq!(fw.store().progress(None).redistributions, 1);
         probe.close();
+    }
+
+    /// Quorum verification end to end at R = 3 / Q = 2 through the
+    /// wire-protocol surface: an agreeing pair decides one ticket, a
+    /// divergent ticket escalates to a tie-breaker, the lying minority
+    /// is outvoted, flagged, and quarantined, and the quarantined
+    /// client is then refused dispatch until probation expires.
+    #[test]
+    fn quorum_outvotes_flags_and_quarantines_liar() {
+        let vc = Arc::new(crate::util::clock::VirtualClock::new());
+        let fw = Framework::builder()
+            .clock(vc.clone())
+            .store_config(crate::store::StoreConfig {
+                replication: 3,
+                quorum: 2,
+                ..crate::store::StoreConfig::default()
+            })
+            .build();
+        let task = fw.create_task(Arc::new(IsPrimeTask));
+        task.calculate(vec![
+            Value::obj(vec![("candidate", Value::num(7.0))]),
+            Value::obj(vec![("candidate", Value::num(9.0))]),
+        ]);
+        let task_id = task.id;
+        let dist = Distributor::new(&fw);
+
+        let mut sessions: Vec<Session> = (0..3)
+            .map(|i| {
+                let mut s = dist.open_session();
+                s.handle(Message::Hello { client: format!("w{i}"), profile: "t".into() }).unwrap();
+                s
+            })
+            .collect();
+        let take = |sessions: &mut Vec<Session>, i: usize| -> TicketId {
+            match sessions[i].handle(Message::TicketRequest).unwrap().unwrap() {
+                Message::Ticket { ticket, .. } => ticket,
+                m => panic!("{m:?}"),
+            }
+        };
+        // Initial recruitment targets quorum (2) distinct clients per
+        // ticket: w0 and w1 share the first ticket, w2 gets the second.
+        let t1a = take(&mut sessions, 0);
+        let t1b = take(&mut sessions, 1);
+        assert_eq!(t1a, t1b, "one ticket recruits two distinct clients");
+        let t2 = take(&mut sessions, 2);
+        assert_ne!(t2, t1a);
+
+        // w2 lies about its ticket; the vote parks short of quorum.
+        sessions[2].handle(Message::TicketResult { ticket: t2, result: Value::Bool(true) }).unwrap();
+        assert_eq!(dist.stats.results_pending_quorum.load(Ordering::Relaxed), 1);
+        // The honest pair agrees on the first ticket: quorum decides.
+        sessions[0]
+            .handle(Message::TicketResult { ticket: t1a, result: Value::Bool(true) })
+            .unwrap();
+        sessions[1]
+            .handle(Message::TicketResult { ticket: t1b, result: Value::Bool(true) })
+            .unwrap();
+        assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 1);
+
+        // w0 takes the liar's ticket and answers honestly: one wrong
+        // ballot vs one right ballot escalates to a tie-breaker...
+        let t2b = take(&mut sessions, 0);
+        assert_eq!(t2b, t2);
+        sessions[0]
+            .handle(Message::TicketResult { ticket: t2b, result: Value::Bool(false) })
+            .unwrap();
+        // ...and w1 breaks the tie: the liar is outvoted, flagged, and
+        // (a fresh reputation) quarantined on the spot.
+        let t2c = take(&mut sessions, 1);
+        assert_eq!(t2c, t2);
+        sessions[1]
+            .handle(Message::TicketResult { ticket: t2c, result: Value::Bool(false) })
+            .unwrap();
+        assert_eq!(dist.stats.results_accepted.load(Ordering::Relaxed), 2);
+        assert_eq!(dist.stats.results_pending_quorum.load(Ordering::Relaxed), 3);
+
+        let vs = fw.store().verify_stats();
+        assert_eq!((vs.verdicts, vs.votes_flagged), (2, 1));
+        assert_eq!((vs.escalations, vs.quarantines), (1, 1));
+        assert_eq!(fw.store().quarantined_clients(), vec!["w2".to_string()]);
+        assert_eq!(
+            fw.store().wait_results(task_id),
+            vec![Value::Bool(true), Value::Bool(false)],
+            "the liar's ballot never became a result"
+        );
+
+        // The quarantined client is refused dispatch.
+        match sessions[2].handle(Message::TicketRequest).unwrap().unwrap() {
+            Message::NoTicket { .. } => {}
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(dist.stats.noticket_quarantined.load(Ordering::Relaxed), 1);
+
+        // Probation is a timer, not a death sentence: once it expires
+        // the gate no longer refuses (the pool is simply empty now).
+        vc.advance_to(crate::store::ticket::PROBATION_MS);
+        match sessions[2].handle(Message::TicketRequest).unwrap().unwrap() {
+            Message::NoTicket { .. } => {}
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(
+            dist.stats.noticket_quarantined.load(Ordering::Relaxed),
+            1,
+            "post-probation NoTicket is an empty pool, not a quarantine refusal"
+        );
+        for mut s in sessions {
+            s.close();
+        }
     }
 }

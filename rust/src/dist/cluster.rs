@@ -87,6 +87,7 @@ impl ClusterConfig {
                 requeue_after_ms: 600_000,
                 min_redistribute_ms: 600_000,
                 requeue_on_error: true,
+                ..StoreConfig::default()
             },
             prefetch_cap: 4,
             idle_retry_ms: 20,

@@ -66,7 +66,7 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "usage: sashimi <serve|worker|prime|train|hybrid|mlitb|hesync|info> [--flags]\n\
                  \n\
-                 serve   --port 7070 [--ws-port 7071] [--heartbeat-ms 10000] [--state-dir DIR] [--knn-queries 100] [--knn-train 2000]\n\
+                 serve   --port 7070 [--ws-port 7071] [--heartbeat-ms 10000] [--state-dir DIR] [--replication 1] [--quorum 2] [--knn-queries 100] [--knn-train 2000]\n\
                  worker  --connect 127.0.0.1:7070 | --connect ws://host:7071/ [--profile native|desktop|tablet] [--speed X] [--prefetch N]\n\
                  prime   [--limit 10000] [--workers 2]\n\
                  train   [--engine xla|naive|jnp] [--net cifar|mnist] [--steps 20] [--data 2000]\n\
@@ -103,10 +103,18 @@ fn serve(args: &Args) -> Result<()> {
     let nq = args.usize_or("knn-queries", 100)?;
     let nt = args.usize_or("knn-train", 2000)?;
     let state_dir = args.get("state-dir").map(String::from);
+    // --replication/--quorum: quorum result verification (DESIGN.md
+    // §2.8).  The default R = 1 is the bit-exact legacy
+    // first-result-wins store; at R > 1 tickets complete on Q matching
+    // results from distinct clients and minority voters lose
+    // reputation.  Workers need no flag — the wire is unchanged.
+    let replication = args.usize_or("replication", 1)? as u32;
+    let quorum = args.usize_or("quorum", (replication as usize).min(2))? as u32;
     args.reject_unknown()?;
+    let store_cfg = StoreConfig { replication, quorum, ..StoreConfig::default() };
 
     let mut builder = Framework::builder()
-        .store_config(StoreConfig::default())
+        .store_config(store_cfg.clone())
         .register(Arc::new(IsPrimeTask))
         .register(Arc::new(tasks::knn::KnnChunkTask::standard()));
     // --state-dir: durable tickets.  Restart-with-recovery is this same
@@ -114,7 +122,7 @@ fn serve(args: &Args) -> Result<()> {
     // coordinator resumes exactly where it crashed (DESIGN.md §2.2).
     let mut recovered_live = 0usize;
     if let Some(dir) = &state_dir {
-        let wal = WalStore::open(dir, StoreConfig::default(), WalConfig::default())?;
+        let wal = WalStore::open(dir, store_cfg.clone(), WalConfig::default())?;
         let p = wal.progress(None);
         recovered_live = p.pending + p.in_flight;
         if p.total > 0 {

@@ -40,7 +40,7 @@ use anyhow::Result;
 use crate::coordinator::{Distributor, DistributorConfig, Session};
 use crate::runtime::{SharedRuntime, Tensor};
 use crate::store::{
-    Scheduler, StoreConfig, SyncPolicy, TaskId, TicketId, WalConfig, WalStore,
+    Scheduler, StoreConfig, SyncPolicy, TaskId, TicketId, VerifyStats, WalConfig, WalStore,
 };
 use crate::tasks::is_prime::IsPrimeTask;
 use crate::tasks::sweep::{self, SweepTask};
@@ -95,6 +95,17 @@ pub struct SoakConfig {
     /// WAL stream).  `1` — the default, and what every preset uses —
     /// keeps the soak's store byte-identical to the pre-sharding rig.
     pub dispatch_shards: usize,
+    /// Per-mille of workers that *always* fabricate results.  Each liar
+    /// fabricates a value unique to itself, so two of them can never
+    /// corroborate each other (the BOINC wrong-result model).
+    pub adversary_wrong_permille: u64,
+    /// Per-mille of workers that fabricate roughly a quarter of their
+    /// results and answer honestly otherwise (intermittent corruptor).
+    pub adversary_corrupt_permille: u64,
+    /// Per-mille of workers in one colluding ring: their fabrications
+    /// are *identical* — the only class that can corroborate itself,
+    /// and therefore the only one that can poison a quorum.
+    pub adversary_collude_permille: u64,
 }
 
 impl SoakConfig {
@@ -114,12 +125,25 @@ impl SoakConfig {
             error_permille: 5,
             store_cfg: StoreConfig::default(),
             dispatch_shards: 1,
+            adversary_wrong_permille: 0,
+            adversary_corrupt_permille: 0,
+            adversary_collude_permille: 0,
         }
     }
 
     /// The CI per-PR preset: 1k workers, ten simulated minutes.
     pub fn quick() -> SoakConfig {
         SoakConfig::new(1_000, 42)
+    }
+
+    /// The adversarial CI preset: the quick soak with 20 % wrong-result
+    /// workers under R = 3 / Q = 2 quorum verification.
+    pub fn adversarial_quick() -> SoakConfig {
+        let mut cfg = SoakConfig::quick();
+        cfg.store_cfg.replication = 3;
+        cfg.store_cfg.quorum = 2;
+        cfg.adversary_wrong_permille = 200;
+        cfg
     }
 }
 
@@ -205,6 +229,34 @@ enum Kind {
 /// vanish (a dead tab's Finish must not fire).
 type Ev = (u64, u64, usize, u32, Kind);
 
+/// Worker honesty class, assigned per worker from its forked stream (so
+/// the assignment is independent of event order, like every other
+/// per-worker trait).
+#[derive(Clone, Copy, PartialEq)]
+enum Adversary {
+    Honest,
+    /// Fabricates every result, uniquely to itself.
+    WrongResult,
+    /// Fabricates ~25 % of results, uniquely to itself.
+    Corruptor,
+    /// Fabricates every result, identically to every other colluder.
+    Colluder,
+}
+
+/// The shared tag of the colluding ring's fabrications.
+const COLLUDER_TAG: u64 = 999_999;
+
+/// The fabricated result an adversary submits instead of the honest
+/// value: structurally valid JSON, trivially recognisable after the run
+/// (no honest soak task emits a "poisoned" key).
+fn poisoned_value(tag: u64) -> Value {
+    Value::obj(vec![("poisoned", Value::Bool(true)), ("tag", Value::num(tag as f64))])
+}
+
+fn is_poisoned(v: &Value) -> bool {
+    v.get("poisoned").is_ok()
+}
+
 struct SimWorker {
     class: usize,
     mult: f64,
@@ -216,6 +268,7 @@ struct SimWorker {
     idle_streak: u32,
     batch: Vec<WireTicket>,
     batch_exec_ms: u64,
+    adversary: Adversary,
 }
 
 /// Task context for simulated execution: soak tasks are pure
@@ -301,8 +354,21 @@ pub struct SoakReport {
     pub max_strand_ms: f64,
     pub throughput_per_s: f64,
     /// The sweep argmin `(lr, reg)` recovered from ticket results, when
-    /// the sweep grid ran.
+    /// the sweep grid ran.  `None` when the grid's accepted results
+    /// contain a fabrication (no trustworthy argmin exists).
     pub sweep_best: Option<(f64, f64)>,
+    /// Accepted results carrying an adversary's fabrication marker.
+    /// Zero for every mix that cannot corroborate itself (only the
+    /// colluding ring can poison a quorum).
+    pub poisoned_completions: usize,
+    /// Workers assigned a dishonest class by the mix fractions.
+    pub adversaries: usize,
+    /// Adversaries that actually submitted at least one fabrication.
+    pub adversaries_lied: usize,
+    /// Adversaries the reputation layer ever quarantined.
+    pub adversaries_quarantined: usize,
+    /// Verification-layer counters (all zero at R = 1).
+    pub verify: VerifyStats,
 }
 
 fn round3(x: f64) -> f64 {
@@ -399,6 +465,22 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
             }
             let c = &classes[class];
             let rtt = c.rtt_base + rng.gen_range(c.rtt_jitter.max(1));
+            // The honesty draw happens unconditionally so the rest of
+            // the worker's stream is unaffected by the mix fractions.
+            let a = rng.gen_range(1_000);
+            let adversary = if a < cfg.adversary_wrong_permille {
+                Adversary::WrongResult
+            } else if a < cfg.adversary_wrong_permille + cfg.adversary_corrupt_permille {
+                Adversary::Corruptor
+            } else if a
+                < cfg.adversary_wrong_permille
+                    + cfg.adversary_corrupt_permille
+                    + cfg.adversary_collude_permille
+            {
+                Adversary::Colluder
+            } else {
+                Adversary::Honest
+            };
             SimWorker {
                 class,
                 mult: c.mult,
@@ -410,6 +492,7 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
                 idle_streak: 0,
                 batch: Vec::new(),
                 batch_exec_ms: 0,
+                adversary,
             }
         })
         .collect();
@@ -432,6 +515,10 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
     for w in &fleet {
         workers_by_class[w.class] += 1;
     }
+    let adversaries = fleet.iter().filter(|w| w.adversary != Adversary::Honest).count();
+    // Which adversaries actually submitted at least one fabrication —
+    // the set the reputation layer must end up quarantining.
+    let mut adversary_lied = vec![false; cfg.workers];
     let (mut vanishes, mut reloads, mut rescues, mut idle_polls) = (0u64, 0u64, 0u64, 0u64);
     let mut errors_injected = 0u64;
     let mut trace: Vec<String> = Vec::new();
@@ -445,14 +532,32 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
                 break;
             }
             // Every worker churned out with work still undone: bring
-            // worker 0 back so the run cannot deadlock.
+            // worker 0 back so the run cannot deadlock.  Under quorum
+            // verification one client can never decide a ticket alone
+            // (same-client exclusion), so a rotating window of quorum+1
+            // workers reconnects instead — rotation guarantees honest
+            // workers eventually return even if the first window was
+            // all adversaries.
             let now = vclock.now_ms();
-            fleet[0].epoch += 1;
-            fleet[0].online = false;
-            rescues += 1;
-            let ep = fleet[0].epoch;
-            push_ev(&mut heap, &mut seq, now + 1_000, 0, ep, Kind::Connect);
-            trace_line(&mut trace, &mut trace_dropped, format!("t={now} rescue w0"));
+            if cfg.store_cfg.verifying() {
+                let k = (cfg.store_cfg.quorum as usize + 1).min(cfg.workers);
+                for j in 0..k {
+                    let ri = ((rescues as usize).wrapping_mul(k) + j) % cfg.workers;
+                    fleet[ri].epoch += 1;
+                    fleet[ri].online = false;
+                    let ep = fleet[ri].epoch;
+                    push_ev(&mut heap, &mut seq, now + 1_000, ri, ep, Kind::Connect);
+                    trace_line(&mut trace, &mut trace_dropped, format!("t={now} rescue w{ri}"));
+                }
+                rescues += 1;
+            } else {
+                fleet[0].epoch += 1;
+                fleet[0].online = false;
+                rescues += 1;
+                let ep = fleet[0].epoch;
+                push_ev(&mut heap, &mut seq, now + 1_000, 0, ep, Kind::Connect);
+                trace_line(&mut trace, &mut trace_dropped, format!("t={now} rescue w0"));
+            }
         }
         let Reverse((at, _s, wi, epoch, kind)) = heap.pop().unwrap();
         events += 1;
@@ -554,7 +659,24 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
                         continue;
                     }
                     match registry.get(&t.task_name)?.execute(&t.payload, &mut ctx) {
-                        Ok(out) => results.push((t.ticket, out.value)),
+                        Ok(out) => {
+                            let value = match w.adversary {
+                                Adversary::Honest => out.value,
+                                Adversary::WrongResult => poisoned_value(wi as u64),
+                                Adversary::Corruptor => {
+                                    if w.rng.gen_range(4) == 0 {
+                                        poisoned_value(wi as u64)
+                                    } else {
+                                        out.value
+                                    }
+                                }
+                                Adversary::Colluder => poisoned_value(COLLUDER_TAG),
+                            };
+                            if is_poisoned(&value) {
+                                adversary_lied[wi] = true;
+                            }
+                            results.push((t.ticket, value));
+                        }
                         Err(e) => errs.push(WireError {
                             ticket: t.ticket,
                             message: format!("{e:#}"),
@@ -641,10 +763,21 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
 
     let p = store_dyn.progress(None);
     let sched = store_dyn.stats();
+    // Poisoned-completion audit: count accepted results that carry an
+    // adversary's fabrication marker.  Any mix that cannot corroborate
+    // itself (everything but colluders) must score zero here.
+    let mut poisoned_completions =
+        store_dyn.wait_results(prime_task).iter().filter(|v| is_poisoned(v)).count();
     let sweep_best = if cfg.sweep_grid {
         let results = store_dyn.wait_results(sweep_task);
-        let (lr, reg, _loss) = sweep::best(&results)?;
-        Some((lr, reg))
+        let poisoned = results.iter().filter(|v| is_poisoned(v)).count();
+        poisoned_completions += poisoned;
+        if poisoned > 0 {
+            None // a poisoned grid cell has no trustworthy argmin
+        } else {
+            let (lr, reg, _loss) = sweep::best(&results)?;
+            Some((lr, reg))
+        }
     } else {
         None
     };
@@ -659,6 +792,18 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
     let released = stats.tickets_released.load(Ordering::Relaxed);
     let duplicates = stats.results_duplicate.load(Ordering::Relaxed);
     let connections = stats.connections.load(Ordering::Relaxed);
+    let duplicates_cross = stats.results_duplicate_cross.load(Ordering::Relaxed);
+    let pending_quorum = stats.results_pending_quorum.load(Ordering::Relaxed);
+    let refused_quarantine = stats.noticket_quarantined.load(Ordering::Relaxed);
+    let vs = store_dyn.verify_stats();
+    let quarantined: std::collections::HashSet<String> =
+        store_dyn.quarantined_clients().into_iter().collect();
+    let adversaries_lied = adversary_lied.iter().filter(|&&l| l).count();
+    let adversaries_quarantined = (0..cfg.workers)
+        .filter(|&i| {
+            fleet[i].adversary != Adversary::Honest && quarantined.contains(&format!("w{i}"))
+        })
+        .count();
 
     // The summary line rides above the cap so it is always present.
     trace.push(format!(
@@ -737,6 +882,25 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
                 ("ready_depth", Value::num(sched.shard_depths.iter().sum::<usize>() as f64)),
             ]),
         ),
+        (
+            "verify",
+            Value::obj(vec![
+                ("replication", Value::num(vs.replication as f64)),
+                ("quorum", Value::num(vs.quorum as f64)),
+                ("votes", Value::num(vs.votes_recorded as f64)),
+                ("verdicts", Value::num(vs.verdicts as f64)),
+                ("flagged", Value::num(vs.votes_flagged as f64)),
+                ("escalations", Value::num(vs.escalations as f64)),
+                ("quarantines", Value::num(vs.quarantines as f64)),
+                ("pending_quorum", Value::num(pending_quorum as f64)),
+                ("cross_duplicates", Value::num(duplicates_cross as f64)),
+                ("refused_requests", Value::num(refused_quarantine as f64)),
+                ("adversaries", Value::num(adversaries as f64)),
+                ("adversaries_lied", Value::num(adversaries_lied as f64)),
+                ("adversaries_quarantined", Value::num(adversaries_quarantined as f64)),
+                ("poisoned_completions", Value::num(poisoned_completions as f64)),
+            ]),
+        ),
         ("latency_ms", hist_json(&latency)),
         ("stranding_ms", hist_json(&stranding)),
         ("classes", class_json),
@@ -764,6 +928,21 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
         "  dispatch       {} served, {} released, {} redistributed, {} duplicates, {} faults",
         dispatched, released, p.redistributions, duplicates, errors_injected
     );
+    if cfg.store_cfg.verifying() {
+        let _ = writeln!(
+            table,
+            "  verify         R={} Q={}: {} verdicts, {} flagged, {} escalations, {} quarantines, {}/{} adversaries caught, {} poisoned",
+            vs.replication,
+            vs.quorum,
+            vs.verdicts,
+            vs.votes_flagged,
+            vs.escalations,
+            vs.quarantines,
+            adversaries_quarantined,
+            adversaries_lied,
+            poisoned_completions,
+        );
+    }
     let _ = writeln!(table, "  throughput     {:.2} tickets/s (virtual)", throughput);
     let _ = writeln!(
         table,
@@ -829,6 +1008,11 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
         max_strand_ms: stranding.max(),
         throughput_per_s: throughput,
         sweep_best,
+        poisoned_completions,
+        adversaries,
+        adversaries_lied,
+        adversaries_quarantined,
+        verify: vs,
     })
 }
 
@@ -866,6 +1050,41 @@ mod tests {
         assert_eq!(a.trace, b.trace);
         let c = run_soak(&tiny(16, 10)).unwrap();
         assert_ne!(a.trace, c.trace, "a different seed drives a different run");
+    }
+
+    #[test]
+    fn adversaries_are_outvoted_and_quarantined() {
+        let mut cfg = tiny(48, 13);
+        cfg.store_cfg.replication = 3;
+        cfg.store_cfg.quorum = 2;
+        cfg.adversary_wrong_permille = 400;
+        let r = run_soak(&cfg).unwrap();
+        assert_eq!(r.done, r.total, "quorum verification still drains the pool");
+        assert!(r.adversaries > 0, "the mix actually sampled adversaries");
+        assert_eq!(r.poisoned_completions, 0, "lone liars can never reach quorum");
+        assert_eq!(
+            r.adversaries_quarantined, r.adversaries_lied,
+            "every adversary that cast a fabricated ballot ends up quarantined"
+        );
+        assert_eq!(r.sweep_best, Some((sweep::OPT_LR, sweep::OPT_REG)));
+        assert!(r.verify.verdicts as usize >= r.total);
+        assert!(r.metrics_json.contains("\"poisoned_completions\":0"));
+    }
+
+    #[test]
+    fn adversarial_same_seed_is_byte_identical() {
+        for &(wrong, corrupt, collude) in &[(300u64, 0u64, 0u64), (150, 150, 0), (100, 50, 100)] {
+            let mut cfg = tiny(16, 21);
+            cfg.store_cfg.replication = 3;
+            cfg.store_cfg.quorum = 2;
+            cfg.adversary_wrong_permille = wrong;
+            cfg.adversary_corrupt_permille = corrupt;
+            cfg.adversary_collude_permille = collude;
+            let a = run_soak(&cfg).unwrap();
+            let b = run_soak(&cfg).unwrap();
+            assert_eq!(a.metrics_json, b.metrics_json, "mix {wrong}/{corrupt}/{collude}");
+            assert_eq!(a.trace, b.trace, "mix {wrong}/{corrupt}/{collude}");
+        }
     }
 
     #[test]

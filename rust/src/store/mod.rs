@@ -51,7 +51,7 @@ pub mod wal;
 
 pub use naive::NaiveStore;
 pub use sched::IndexedStore;
-pub use ticket::{Ticket, TicketId, TicketStatus};
+pub use ticket::{canonical_hash, Standing, Ticket, TicketId, TicketStatus, Verdict, VoteOutcome};
 pub use wal::{SyncPolicy, WalConfig, WalStore};
 
 use std::sync::{Condvar, MutexGuard};
@@ -104,11 +104,33 @@ pub struct StoreConfig {
     /// On worker error reports, immediately return the ticket to the
     /// undistributed pool instead of waiting out the timeout.
     pub requeue_on_error: bool,
+    /// Maximum number of *distinct* clients a ticket is concurrently
+    /// dispatched to for result verification.  1 (the default) is the
+    /// bit-exact legacy first-result-wins store; R > 1 replicates each
+    /// ticket and completes it by quorum vote (`ticket::TicketVerify`).
+    pub replication: u32,
+    /// Matching votes required to accept a result at `replication > 1`
+    /// (ignored at R = 1).  A trusted client's single vote also decides
+    /// — the BOINC-style adaptive fast path.
+    pub quorum: u32,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        Self { requeue_after_ms: 300_000, min_redistribute_ms: 10_000, requeue_on_error: true }
+        Self {
+            requeue_after_ms: 300_000,
+            min_redistribute_ms: 10_000,
+            requeue_on_error: true,
+            replication: 1,
+            quorum: 1,
+        }
+    }
+}
+
+impl StoreConfig {
+    /// Whether the quorum verification layer is active.
+    pub fn verifying(&self) -> bool {
+        self.replication > 1
     }
 }
 
@@ -153,6 +175,41 @@ pub struct SchedStats {
     pub steal_successes: u64,
     /// Current ready-index depth per shard (live, non-done tickets).
     pub shard_depths: Vec<usize>,
+    /// Error reports dropped from the drain buffer because a shard's
+    /// queue hit its cap (an adversarial error flood); the cumulative
+    /// [`Scheduler::error_count`] still counts them.
+    pub errors_dropped: u64,
+}
+
+/// Per-shard (and, for the unsharded reference store, global) cap on
+/// the buffered-but-undrained error reports: an adversarial error flood
+/// stops growing the queue here and counts
+/// [`SchedStats::errors_dropped`] instead.
+pub const ERROR_QUEUE_CAP: usize = 1024;
+
+/// Counters for the result-verification layer ([`Scheduler::verify_stats`]).
+/// All zeros at `replication == 1` (the layer is inactive).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VerifyStats {
+    pub replication: u32,
+    pub quorum: u32,
+    /// Ballots recorded on undecided tickets (accepted + pending).
+    pub votes_recorded: u64,
+    /// Tickets decided by quorum (or trusted fast-path) vote.
+    pub verdicts: u64,
+    /// Votes judged wrong: minority ballots at verdict time plus late
+    /// mismatching ballots.
+    pub votes_flagged: u64,
+    /// Divergence escalations (recruitment-target bumps — each recruits
+    /// one fresh tie-breaker client).
+    pub escalations: u64,
+    /// Cumulative quarantine events.
+    pub quarantines: u64,
+    /// Clients currently under an unexpired (or not-yet-cleared)
+    /// quarantine.
+    pub quarantined_now: usize,
+    /// Clients currently at [`Standing::Trusted`].
+    pub trusted_now: usize,
 }
 
 /// The scheduling-core boundary consumed by the coordinator
@@ -353,6 +410,70 @@ pub trait Scheduler: Send + Sync {
         SchedStats::default()
     }
 
+    /// Record a result as a *vote* from `client`.  At `replication == 1`
+    /// this is exactly [`complete`](Self::complete) (the default shown
+    /// here), with the outcome mapped onto [`VoteOutcome`]; at R > 1 a
+    /// verifying backend runs the quorum state machine instead: the
+    /// ticket completes only when `quorum` matching ballots (or one
+    /// from a trusted client) have arrived, minority voters are flagged
+    /// and divergent tickets recruit a fresh tie-breaker client.
+    /// Legacy wire clients vote without knowing it — the distributor
+    /// routes every `TicketResult` through here.
+    fn vote(&self, client: &str, id: TicketId, result: Value, now_ms: u64) -> Result<VoteOutcome> {
+        let _ = (client, now_ms);
+        Ok(match self.complete(id, result)? {
+            true => VoteOutcome::Accepted { verdict: None },
+            false => VoteOutcome::Duplicate { same_client: false },
+        })
+    }
+
+    /// Batched [`vote`](Self::vote): entries applied in order, stopping
+    /// at the first error with the prefix applied (the
+    /// [`complete_batch`](Self::complete_batch) contract).
+    fn vote_batch(
+        &self,
+        client: &str,
+        results: Vec<(TicketId, Value)>,
+        now_ms: u64,
+    ) -> Result<Vec<VoteOutcome>> {
+        results.into_iter().map(|(id, v)| self.vote(client, id, v, now_ms)).collect()
+    }
+
+    /// [`release_batch`](Self::release_batch) attributed to the client
+    /// handing the tickets back.  At R > 1 a verifying backend removes
+    /// only *that client* from each ticket's holder set (other replicas
+    /// keep working); the unattributed default releases outright —
+    /// correct at R = 1 where a ticket has one holder.
+    fn release_batch_from(&self, client: &str, ids: &[TicketId]) -> Vec<bool> {
+        let _ = client;
+        self.release_batch(ids)
+    }
+
+    /// [`report_error`](Self::report_error) attributed to the reporting
+    /// client — same relationship to the unattributed form as
+    /// [`release_batch_from`](Self::release_batch_from).
+    fn report_error_from(&self, client: &str, id: TicketId, report: String) -> Result<()> {
+        let _ = client;
+        self.report_error(id, report)
+    }
+
+    /// The client's current reputation standing.  Non-verifying
+    /// backends know nothing and answer [`Standing::Normal`].
+    fn client_standing(&self, client: &str, now_ms: u64) -> Standing {
+        let _ = (client, now_ms);
+        Standing::Normal
+    }
+
+    /// Verification-layer counters; all zeros when inactive.
+    fn verify_stats(&self) -> VerifyStats {
+        VerifyStats::default()
+    }
+
+    /// Every client ever quarantined, sorted by name.
+    fn quarantined_clients(&self) -> Vec<String> {
+        Vec::new()
+    }
+
     /// Block until every ticket of `task` is done (condvar, no polling),
     /// then return results ordered by ticket index — the framework's
     /// `task.block(callback)` from the appendix sample.
@@ -392,7 +513,7 @@ mod tests {
                     let cfg = StoreConfig {
                         requeue_after_ms: requeue_ms,
                         min_redistribute_ms: min_redist,
-                        requeue_on_error: true,
+                        ..StoreConfig::default()
                     };
                     ($make)(cfg)
                 }
@@ -667,6 +788,168 @@ mod tests {
                     } else {
                         assert_eq!(st, Default::default());
                     }
+                }
+
+                /// A verifying store (R = 3, quorum = 2) completes only
+                /// on agreement: replicas go to distinct clients, a
+                /// lone vote pends, the second matching vote decides,
+                /// and stragglers are attributed duplicates.
+                #[test]
+                fn quorum_store_completes_on_agreement() {
+                    let cfg = StoreConfig {
+                        requeue_after_ms: 1000,
+                        min_redistribute_ms: 100,
+                        replication: 3,
+                        quorum: 2,
+                        ..StoreConfig::default()
+                    };
+                    let s = ($make)(cfg);
+                    let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let t1 = s.next_ticket("c1", 0).unwrap();
+                    assert_eq!(t1.id, ids[0]);
+                    // Same-client exclusion: c1 cannot take a replica.
+                    assert!(s.next_ticket("c1", 1).is_none());
+                    // A second client can, immediately (recruiting).
+                    let t2 = s.next_ticket("c2", 1).unwrap();
+                    assert_eq!(t2.id, ids[0]);
+                    // Recruitment target reached: c3 must wait.
+                    assert!(s.next_ticket("c3", 2).is_none());
+                    let v = Value::num(42.0);
+                    assert_eq!(
+                        s.vote("c1", ids[0], v.clone(), 3).unwrap(),
+                        crate::store::VoteOutcome::Pending
+                    );
+                    let p = s.progress(None);
+                    assert_eq!((p.done, p.in_flight), (0, 1), "one vote is not a completion");
+                    match s.vote("c2", ids[0], v.clone(), 4).unwrap() {
+                        crate::store::VoteOutcome::Accepted { verdict: Some(verd) } => {
+                            assert_eq!(verd.winners.len(), 2);
+                            assert!(verd.losers.is_empty());
+                        }
+                        other => panic!("expected verdict, got {other:?}"),
+                    }
+                    assert_eq!(s.progress(None).done, 1);
+                    assert_eq!(s.wait_results(TaskId(1)), vec![v.clone()]);
+                    // Straggler votes are attributed duplicates.
+                    assert_eq!(
+                        s.vote("c3", ids[0], v.clone(), 5).unwrap(),
+                        crate::store::VoteOutcome::Duplicate { same_client: false }
+                    );
+                    assert_eq!(
+                        s.vote("c1", ids[0], v, 6).unwrap(),
+                        crate::store::VoteOutcome::Duplicate { same_client: true }
+                    );
+                    assert_eq!(s.progress(None).duplicate_results, 2);
+                    let vs = s.verify_stats();
+                    assert_eq!((vs.replication, vs.quorum), (3, 2));
+                    assert_eq!(vs.verdicts, 1);
+                    assert_eq!(vs.votes_recorded, 2);
+                }
+
+                /// A wrong minority vote is outvoted, flagged, and (for
+                /// a fresh client) quarantined: it is then served
+                /// nothing until probation expires.
+                #[test]
+                fn minority_voter_is_flagged_and_quarantined() {
+                    let cfg = StoreConfig {
+                        requeue_after_ms: 100_000,
+                        min_redistribute_ms: 10,
+                        replication: 3,
+                        quorum: 2,
+                        ..StoreConfig::default()
+                    };
+                    let s = ($make)(cfg);
+                    let ids = s.create_tickets(TaskId(1), "t", args(2), 0);
+                    let _ = s.next_ticket("evil", 0).unwrap();
+                    let _ = s.next_ticket("good1", 1).unwrap();
+                    assert_eq!(
+                        s.vote("evil", ids[0], Value::num(666.0), 2).unwrap(),
+                        crate::store::VoteOutcome::Pending
+                    );
+                    assert_eq!(
+                        s.vote("good1", ids[0], Value::num(1.0), 3).unwrap(),
+                        crate::store::VoteOutcome::Pending,
+                        "divergence cannot decide"
+                    );
+                    // The divergence recruited a tie-breaker slot.
+                    let t = s.next_ticket("good2", 4).unwrap();
+                    assert_eq!(t.id, ids[0]);
+                    match s.vote("good2", ids[0], Value::num(1.0), 5).unwrap() {
+                        crate::store::VoteOutcome::Accepted { verdict: Some(verd) } => {
+                            assert_eq!(verd.losers, vec!["evil".to_string()]);
+                        }
+                        other => panic!("expected verdict, got {other:?}"),
+                    }
+                    assert_eq!(s.wait_results(TaskId(1)), vec![Value::num(1.0)]);
+                    // The fresh loser is quarantined and served nothing.
+                    match s.client_standing("evil", 6) {
+                        crate::store::Standing::Quarantined { .. } => {}
+                        other => panic!("expected quarantine, got {other:?}"),
+                    }
+                    assert!(s.next_ticket("evil", 7).is_none(), "quarantined client gets NoTicket");
+                    assert_eq!(s.quarantined_clients(), vec!["evil".to_string()]);
+                    let vs = s.verify_stats();
+                    assert_eq!(vs.votes_flagged, 1);
+                    assert_eq!(vs.escalations, 1);
+                    assert_eq!(vs.quarantines, 1);
+                    // Probation expires: served again.
+                    let far = 6 + crate::store::ticket::PROBATION_MS + 1;
+                    assert_eq!(
+                        s.client_standing("evil", far),
+                        crate::store::Standing::Normal
+                    );
+                    assert!(s.next_ticket("evil", far).is_some());
+                }
+
+                /// Attributed release removes one holder without
+                /// disturbing the other replica's in-flight work.
+                #[test]
+                fn release_from_keeps_other_replicas_in_flight() {
+                    let cfg = StoreConfig {
+                        requeue_after_ms: 100_000,
+                        min_redistribute_ms: 100_000,
+                        replication: 2,
+                        quorum: 2,
+                        ..StoreConfig::default()
+                    };
+                    let s = ($make)(cfg);
+                    let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let _ = s.next_ticket("c1", 0).unwrap();
+                    let _ = s.next_ticket("c2", 1).unwrap();
+                    assert_eq!(s.release_batch_from("c1", &ids), vec![true]);
+                    // Still in flight for c2, and the freed slot is
+                    // immediately re-recruitable — but never by c2.
+                    assert_eq!(s.progress(None).in_flight, 1);
+                    assert!(s.next_ticket("c2", 2).is_none(), "exclusion survives release");
+                    let t = s.next_ticket("c3", 2).unwrap();
+                    assert_eq!(t.id, ids[0]);
+                    // Releasing a client that holds nothing is a no-op.
+                    assert_eq!(s.release_batch_from("c1", &ids), vec![false]);
+                }
+
+                /// The drained-error queue is capped: an error flood
+                /// stops growing the buffer at ERROR_QUEUE_CAP, while
+                /// the cumulative count and the requeue side-effect
+                /// still apply to every report.
+                #[test]
+                fn error_queue_is_capped_under_flood() {
+                    let s = store(1_000_000, 1_000_000);
+                    let ids = s.create_tickets(TaskId(1), "t", args(1), 0);
+                    let n = crate::store::ERROR_QUEUE_CAP + 50;
+                    for i in 0..n {
+                        s.report_error(ids[0], format!("e{i}")).unwrap();
+                    }
+                    assert_eq!(s.error_count(), n, "cumulative count sees every report");
+                    let drained = s.drain_errors();
+                    assert_eq!(drained.len(), crate::store::ERROR_QUEUE_CAP);
+                    assert_eq!(drained[0].1, "e0", "oldest reports are kept, overflow dropped");
+                    let st = s.stats();
+                    if st.dispatch_shards > 0 {
+                        assert_eq!(st.errors_dropped, 50);
+                    }
+                    // Drain freed the buffer: new reports are kept again.
+                    s.report_error(ids[0], "fresh".into()).unwrap();
+                    assert_eq!(s.drain_errors().len(), 1);
                 }
 
                 #[test]

@@ -26,9 +26,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::store::ticket::{canonical_hash, Rep, TicketVerify, VoteAction};
 use crate::store::{
-    deadline_after, wait_deadline, Progress, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
-    TicketStatus,
+    deadline_after, wait_deadline, Progress, Scheduler, Standing, StoreConfig, TaskId, Ticket,
+    TicketId, TicketStatus, Verdict, VerifyStats, VoteOutcome, ERROR_QUEUE_CAP,
 };
 use crate::util::json::Value;
 
@@ -37,14 +38,79 @@ struct Inner {
     tickets: BTreeMap<TicketId, Ticket>,
     next_ticket: u64,
     errors: Vec<(TicketId, String)>,
-    /// Cumulative count of reports ever recorded (drain-proof).
+    /// Cumulative count of reports ever recorded (drain-proof, and
+    /// unaffected by the [`ERROR_QUEUE_CAP`] overflow drop).
     errors_reported: usize,
+    /// Reports dropped because the buffer was at [`ERROR_QUEUE_CAP`].
+    errors_dropped: u64,
     redistributions: u64,
     duplicate_results: u64,
     /// FIFO of accepted results, consumed by streaming drivers (the
     /// hybrid trainer reacts to each client's features as they arrive,
     /// §4 "learned concurrently").
     completions: std::collections::VecDeque<(TaskId, usize, Value)>,
+    /// Per-ticket replication state; populated only at `replication > 1`
+    /// (empty ⇒ every path below is the bit-exact legacy store).
+    verify: BTreeMap<u64, TicketVerify>,
+    /// Per-client reputation (R > 1 only); BTreeMap for deterministic
+    /// iteration in `verify_stats`/`quarantined_clients`.
+    reps: BTreeMap<String, Rep>,
+    /// Which client's vote completed each ticket at R = 1 — the
+    /// same-client/cross-client duplicate split.  Best-effort, in-memory
+    /// only (not part of the durable legacy state).
+    completed_by: BTreeMap<u64, String>,
+    // Verification counters (VerifyStats).
+    votes_recorded: u64,
+    verdicts: u64,
+    votes_flagged: u64,
+    escalations: u64,
+    quarantines: u64,
+}
+
+impl Inner {
+    /// Buffer an error report, dropping the overflow beyond
+    /// [`ERROR_QUEUE_CAP`]; the cumulative count sees every report.
+    fn push_error(&mut self, id: TicketId, report: String) {
+        self.errors_reported += 1;
+        if self.errors.len() < ERROR_QUEUE_CAP {
+            self.errors.push((id, report));
+        } else {
+            self.errors_dropped += 1;
+        }
+    }
+
+    fn standing_of(&mut self, client: &str, now_ms: u64) -> Standing {
+        match self.reps.get_mut(client) {
+            Some(r) => r.standing(now_ms),
+            None => Standing::Normal,
+        }
+    }
+
+    /// Apply a verdict's reputation consequences (winners credited,
+    /// losers flagged and possibly quarantined).
+    fn apply_verdict_reps(&mut self, verdict: &Verdict, now_ms: u64) {
+        for w in &verdict.winners {
+            self.reps.entry(w.clone()).or_default().win();
+        }
+        for l in &verdict.losers {
+            self.votes_flagged += 1;
+            if self.reps.entry(l.clone()).or_default().lose(now_ms) {
+                self.quarantines += 1;
+            }
+        }
+    }
+
+    /// Judge one late ballot (`Some(won)`) against the verdict.
+    fn apply_late_rep(&mut self, client: &str, won: bool, now_ms: u64) {
+        if won {
+            self.reps.entry(client.to_string()).or_default().win();
+        } else {
+            self.votes_flagged += 1;
+            if self.reps.entry(client.to_string()).or_default().lose(now_ms) {
+                self.quarantines += 1;
+            }
+        }
+    }
 }
 
 /// Thread-safe ticket store with one global lock and linear scans.
@@ -61,7 +127,15 @@ impl NaiveStore {
     }
 
     /// Virtual created time of a ticket (the paper's ordering key).
-    fn vct(&self, t: &Ticket) -> u64 {
+    /// At R > 1 an undecided ticket still recruiting replicas
+    /// (`enlisted < target`) keys at its creation time — it must reach
+    /// additional distinct clients immediately, not after the window.
+    fn vct(&self, t: &Ticket, verify: Option<&TicketVerify>) -> u64 {
+        if let Some(v) = verify {
+            if v.needs_recruits() {
+                return t.created_ms;
+            }
+        }
         match t.last_distributed_ms {
             None => t.created_ms,
             Some(d) => d + self.cfg.requeue_after_ms,
@@ -109,22 +183,39 @@ impl Scheduler for NaiveStore {
 
     fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
         let mut inner = self.inner.lock().unwrap();
+        let verifying = self.cfg.verifying();
+        // Quarantined clients are served nothing until probation ends.
+        if verifying {
+            if let Standing::Quarantined { .. } = inner.standing_of(client, now_ms) {
+                return None;
+            }
+        }
+        let inner = &mut *inner;
+        // At R > 1 a client never sees a ticket it already holds or has
+        // voted on (same-client exclusion).
+        let excluded = |verify: &BTreeMap<u64, TicketVerify>, id: u64| -> bool {
+            verifying && verify.get(&id).map(|v| v.involves(client)).unwrap_or(false)
+        };
         // Primary: minimum VCT among candidates whose VCT has arrived.
-        let pick = inner
-            .tickets
-            .values()
-            .filter(|t| t.status != TicketStatus::Done)
-            .filter(|t| self.vct(t) <= now_ms)
-            .min_by_key(|t| (self.vct(t), t.id.0))
-            .map(|t| t.id);
+        let pick = {
+            let verify = &inner.verify;
+            inner
+                .tickets
+                .values()
+                .filter(|t| t.status != TicketStatus::Done && !excluded(verify, t.id.0))
+                .filter(|t| self.vct(t, verify.get(&t.id.0)) <= now_ms)
+                .min_by_key(|t| (self.vct(t, verify.get(&t.id.0)), t.id.0))
+                .map(|t| t.id)
+        };
         // Fallback: nothing due -> redistribute the longest-in-flight
         // ticket, provided it was not distributed in the last
         // min_redistribute window (the paper's 10 s rule).
         let pick = pick.or_else(|| {
+            let verify = &inner.verify;
             inner
                 .tickets
                 .values()
-                .filter(|t| t.status != TicketStatus::Done)
+                .filter(|t| t.status != TicketStatus::Done && !excluded(verify, t.id.0))
                 .filter(|t| {
                     t.last_distributed_ms
                         .map(|d| now_ms.saturating_sub(d) >= self.cfg.min_redistribute_ms)
@@ -140,6 +231,21 @@ impl Scheduler for NaiveStore {
         };
         if redistribution {
             inner.redistributions += 1;
+        }
+        if verifying {
+            // First dispatch fixes the recruitment target: a trusted
+            // client earns the R = 1 fast path, everyone else recruits
+            // `quorum` replicas.
+            let trusted = matches!(
+                inner.reps.get_mut(client).map(|r| r.standing(now_ms)),
+                Some(Standing::Trusted)
+            );
+            let quorum = self.cfg.quorum;
+            let v = inner
+                .verify
+                .entry(id.0)
+                .or_insert_with(|| TicketVerify::new(if trusted { 1 } else { quorum }));
+            v.note_dispatch(client, self.cfg.replication);
         }
         let t = inner.tickets.get_mut(&id).unwrap();
         t.status = TicketStatus::InFlight;
@@ -162,9 +268,98 @@ impl Scheduler for NaiveStore {
         t.status = TicketStatus::Done;
         t.result = Some(result.clone());
         let (task, index) = (t.task, t.index);
+        // The clientless infrastructure path stays authoritative at
+        // R > 1 (it bypasses quorum); it seals the verify entry so late
+        // ballots are judged against the accepted hash.
+        if self.cfg.verifying() {
+            if let Some(v) = inner.verify.get_mut(&id.0) {
+                if v.decided.is_none() {
+                    v.holders.clear();
+                    v.decided = Some(Verdict {
+                        ticket: id,
+                        hash: canonical_hash(&result),
+                        winners: Vec::new(),
+                        losers: Vec::new(),
+                    });
+                }
+            }
+        }
         inner.completions.push_back((task, index, result));
         self.done_cv.notify_all();
         Ok(true)
+    }
+
+    fn vote(&self, client: &str, id: TicketId, result: Value, now_ms: u64) -> Result<VoteOutcome> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let t = match inner.tickets.get_mut(&id) {
+            Some(t) => t,
+            None => bail!("unknown ticket {id:?}"),
+        };
+        if !self.cfg.verifying() {
+            // R = 1: bit-exact legacy complete, plus the in-memory
+            // completer record that splits same-client retries from
+            // cross-client duplicates.
+            if t.status == TicketStatus::Done {
+                inner.duplicate_results += 1;
+                let same_client =
+                    inner.completed_by.get(&id.0).map(|c| c == client).unwrap_or(false);
+                return Ok(VoteOutcome::Duplicate { same_client });
+            }
+            t.status = TicketStatus::Done;
+            t.result = Some(result.clone());
+            let (task, index) = (t.task, t.index);
+            inner.completed_by.insert(id.0, client.to_string());
+            inner.completions.push_back((task, index, result));
+            self.done_cv.notify_all();
+            return Ok(VoteOutcome::Accepted { verdict: None });
+        }
+        let hash = canonical_hash(&result);
+        if t.status == TicketStatus::Done {
+            // Legacy duplicate accounting, now attributed — and a late
+            // ballot still moves the straggler's reputation.
+            inner.duplicate_results += 1;
+            return Ok(match inner.verify.get_mut(&id.0) {
+                Some(v) if v.has_voted(client) => VoteOutcome::Duplicate { same_client: true },
+                Some(v) => {
+                    let judged = v.record_late_vote(client, hash);
+                    if let Some(won) = judged {
+                        inner.apply_late_rep(client, won, now_ms);
+                    }
+                    VoteOutcome::Duplicate { same_client: false }
+                }
+                None => VoteOutcome::Duplicate { same_client: false },
+            });
+        }
+        let trusted = matches!(
+            inner.reps.get_mut(client).map(|r| r.standing(now_ms)),
+            Some(Standing::Trusted)
+        );
+        let quorum = self.cfg.quorum;
+        let v = inner.verify.entry(id.0).or_insert_with(|| TicketVerify::new(quorum));
+        match v.record_vote(id, client, hash, &result, trusted, quorum) {
+            VoteAction::Repeat => Ok(VoteOutcome::Repeat),
+            VoteAction::Pending { escalated } => {
+                inner.votes_recorded += 1;
+                if escalated {
+                    inner.escalations += 1;
+                }
+                Ok(VoteOutcome::Pending)
+            }
+            VoteAction::Decide(verdict) => {
+                inner.votes_recorded += 1;
+                inner.verdicts += 1;
+                let winning = v.winning_value();
+                let t = inner.tickets.get_mut(&id).unwrap();
+                t.status = TicketStatus::Done;
+                t.result = Some(winning.clone());
+                let (task, index) = (t.task, t.index);
+                inner.apply_verdict_reps(&verdict, now_ms);
+                inner.completions.push_back((task, index, winning));
+                self.done_cv.notify_all();
+                Ok(VoteOutcome::Accepted { verdict: Some(verdict) })
+            }
+        }
     }
 
     fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
@@ -181,11 +376,41 @@ impl Scheduler for NaiveStore {
 
     fn report_error(&self, id: TicketId, report: String) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
-        inner.errors.push((id, report));
-        inner.errors_reported += 1;
+        inner.push_error(id, report);
         let requeue = self.cfg.requeue_on_error;
+        // The clientless form clears every holder at R > 1 (no
+        // attribution to keep) before the legacy requeue.
+        if self.cfg.verifying() {
+            if let Some(v) = inner.verify.get_mut(&id.0) {
+                v.holders.clear();
+            }
+        }
+        let has_votes = inner.verify.get(&id.0).map(|v| !v.votes.is_empty()).unwrap_or(false);
         if let Some(t) = inner.tickets.get_mut(&id) {
-            if t.status == TicketStatus::InFlight && requeue {
+            if t.status == TicketStatus::InFlight && requeue && !has_votes {
+                t.status = TicketStatus::Pending;
+                t.last_distributed_ms = None; // VCT back to creation time
+            }
+        }
+        Ok(())
+    }
+
+    fn report_error_from(&self, client: &str, id: TicketId, report: String) -> Result<()> {
+        if !self.cfg.verifying() {
+            return self.report_error(id, report);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.push_error(id, report);
+        let (released, empty) = match inner.verify.get_mut(&id.0) {
+            Some(v) => (v.release_from(client), v.holders.is_empty() && v.votes.is_empty()),
+            None => (false, true),
+        };
+        let _ = released;
+        if let Some(t) = inner.tickets.get_mut(&id) {
+            // Only when the erroring client was the last participant
+            // does the ticket return to the undistributed pool; other
+            // replicas keep working and the freed slot re-recruits.
+            if t.status == TicketStatus::InFlight && self.cfg.requeue_on_error && empty {
                 t.status = TicketStatus::Pending;
                 t.last_distributed_ms = None; // VCT back to creation time
             }
@@ -195,14 +420,85 @@ impl Scheduler for NaiveStore {
 
     fn release(&self, id: TicketId) -> bool {
         let mut inner = self.inner.lock().unwrap();
+        // Clientless release at R > 1: clear every holder; the ticket
+        // returns to the pool only if no ballots are pending on it.
+        let has_votes = if self.cfg.verifying() {
+            match inner.verify.get_mut(&id.0) {
+                Some(v) => {
+                    v.holders.clear();
+                    !v.votes.is_empty()
+                }
+                None => false,
+            }
+        } else {
+            false
+        };
         match inner.tickets.get_mut(&id) {
-            Some(t) if t.status == TicketStatus::InFlight => {
+            Some(t) if t.status == TicketStatus::InFlight && !has_votes => {
                 t.status = TicketStatus::Pending;
                 t.last_distributed_ms = None; // VCT back to creation time
                 true
             }
             _ => false,
         }
+    }
+
+    fn release_batch_from(&self, client: &str, ids: &[TicketId]) -> Vec<bool> {
+        if !self.cfg.verifying() {
+            return self.release_batch(ids);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        ids.iter()
+            .map(|&id| {
+                let (released, empty) = match inner.verify.get_mut(&id.0) {
+                    Some(v) => {
+                        (v.release_from(client), v.holders.is_empty() && v.votes.is_empty())
+                    }
+                    None => (false, true),
+                };
+                if let Some(t) = inner.tickets.get_mut(&id) {
+                    if t.status == TicketStatus::InFlight && empty && released {
+                        t.status = TicketStatus::Pending;
+                        t.last_distributed_ms = None; // VCT back to creation time
+                    }
+                }
+                released
+            })
+            .collect()
+    }
+
+    fn client_standing(&self, client: &str, now_ms: u64) -> Standing {
+        self.inner.lock().unwrap().standing_of(client, now_ms)
+    }
+
+    fn verify_stats(&self) -> VerifyStats {
+        let inner = self.inner.lock().unwrap();
+        VerifyStats {
+            replication: self.cfg.replication,
+            quorum: self.cfg.quorum,
+            votes_recorded: inner.votes_recorded,
+            verdicts: inner.verdicts,
+            votes_flagged: inner.votes_flagged,
+            escalations: inner.escalations,
+            quarantines: inner.quarantines,
+            quarantined_now: inner.reps.values().filter(|r| r.quarantined_until.is_some()).count(),
+            trusted_now: inner
+                .reps
+                .values()
+                .filter(|r| r.quarantined_until.is_none() && r.score >= super::ticket::TRUST_SCORE)
+                .count(),
+        }
+    }
+
+    fn quarantined_clients(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .reps
+            .iter()
+            .filter(|(_, r)| r.ever_quarantined)
+            .map(|(c, _)| c.clone())
+            .collect()
     }
 
     // `release_batch` is deliberately not overridden: this store runs

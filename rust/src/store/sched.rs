@@ -60,16 +60,17 @@
 //!
 //! [`NaiveStore`]: super::NaiveStore
 
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::store::ticket::{canonical_hash, Rep, TicketVerify, VoteAction, TRUST_SCORE};
 use crate::store::{
-    deadline_after, wait_deadline, Progress, SchedStats, Scheduler, StoreConfig, TaskId, Ticket,
-    TicketId, TicketStatus,
+    deadline_after, wait_deadline, Progress, SchedStats, Scheduler, Standing, StoreConfig, TaskId,
+    Ticket, TicketId, TicketStatus, Verdict, VerifyStats, VoteOutcome, ERROR_QUEUE_CAP,
 };
 use crate::util::json::Value;
 
@@ -90,6 +91,28 @@ struct Meta {
     status: TicketStatus,
     last_distributed_ms: Option<u64>,
     distribution_count: u32,
+    /// Replication/vote state — `None` on every ticket at R = 1 (the
+    /// legacy store pays one null pointer per ticket for the feature).
+    verify: Option<Box<TicketVerify>>,
+    /// Which client's vote completed the ticket at R = 1 — the
+    /// same-client/cross-client duplicate split.  Best-effort, in-memory
+    /// only (not WAL-logged or snapshotted: after recovery duplicates
+    /// classify as cross-client).
+    completed_by: Option<Box<str>>,
+}
+
+impl Meta {
+    fn fresh(task: TaskId, created_ms: u64) -> Self {
+        Self {
+            task,
+            created_ms,
+            status: TicketStatus::Pending,
+            last_distributed_ms: None,
+            distribution_count: 0,
+            verify: None,
+            completed_by: None,
+        }
+    }
 }
 
 /// One dispatch shard: the §2.1.2 indexes and counters for the tickets
@@ -114,8 +137,73 @@ struct ShardState {
     redistributions: u64,
     duplicate_results: u64,
     /// Buffered error reports for this shard's tickets, oldest first;
-    /// drained shard-major by [`Scheduler::drain_errors`].
+    /// drained shard-major by [`Scheduler::drain_errors`], capped at
+    /// [`ERROR_QUEUE_CAP`].
     errors: Vec<(TicketId, String)>,
+    /// Reports dropped because the buffer was at its cap.
+    errors_dropped: u64,
+}
+
+impl ShardState {
+    /// Buffer an error report, dropping the overflow beyond
+    /// [`ERROR_QUEUE_CAP`] (the cumulative store-wide count still sees
+    /// every report).
+    fn push_error(&mut self, id: TicketId, report: String) {
+        if self.errors.len() < ERROR_QUEUE_CAP {
+            self.errors.push((id, report));
+        } else {
+            self.errors_dropped += 1;
+        }
+    }
+}
+
+/// Store-wide verification state: per-client reputation plus the
+/// verification counters.  Guarded by its own mutex, which — when a
+/// path needs both — is always taken *before* any dispatch-shard mutex
+/// (and never the other way around), extending the module's lock
+/// discipline by one outermost level.  `BTreeMap` so stats and
+/// quarantine listings iterate deterministically.
+#[derive(Default)]
+struct VerifyState {
+    reps: BTreeMap<String, Rep>,
+    votes_recorded: u64,
+    verdicts: u64,
+    votes_flagged: u64,
+    escalations: u64,
+    quarantines: u64,
+}
+
+impl VerifyState {
+    fn standing_of(&mut self, client: &str, now_ms: u64) -> Standing {
+        match self.reps.get_mut(client) {
+            Some(r) => r.standing(now_ms),
+            None => Standing::Normal,
+        }
+    }
+
+    /// Apply a verdict's reputation consequences.
+    fn apply_verdict_reps(&mut self, verdict: &Verdict, now_ms: u64) {
+        for w in &verdict.winners {
+            self.reps.entry(w.clone()).or_default().win();
+        }
+        for l in &verdict.losers {
+            self.votes_flagged += 1;
+            if self.reps.entry(l.clone()).or_default().lose(now_ms) {
+                self.quarantines += 1;
+            }
+        }
+    }
+
+    fn apply_late_rep(&mut self, client: &str, won: bool, now_ms: u64) {
+        if won {
+            self.reps.entry(client.to_string()).or_default().win();
+        } else {
+            self.votes_flagged += 1;
+            if self.reps.entry(client.to_string()).or_default().lose(now_ms) {
+                self.quarantines += 1;
+            }
+        }
+    }
 }
 
 /// Immutable ticket body; mutable scheduling state lives in [`Meta`],
@@ -154,8 +242,17 @@ struct TaskLedger {
     cv: Condvar,
 }
 
-/// Virtual created time of a ticket (the paper's ordering key).
+/// Virtual created time of a ticket (the paper's ordering key).  At
+/// R > 1 an undecided ticket still recruiting replicas keys at its
+/// creation time — it must reach additional distinct clients now, not
+/// after the redistribution window.  Every verify mutation that can
+/// change `needs_recruits` re-keys the ready index accordingly.
 fn vct_of(cfg: &StoreConfig, m: &Meta) -> u64 {
+    if let Some(v) = &m.verify {
+        if v.needs_recruits() {
+            return m.created_ms;
+        }
+    }
     match m.last_distributed_ms {
         None => m.created_ms,
         Some(d) => d + cfg.requeue_after_ms,
@@ -174,6 +271,9 @@ pub(crate) struct TicketSnapshot {
     pub(crate) status: TicketStatus,
     pub(crate) last_distributed_ms: Option<u64>,
     pub(crate) distribution_count: u32,
+    /// Replication/vote state; `None` on every ticket at R = 1 (legacy
+    /// snapshots are unchanged).
+    pub(crate) verify: Option<TicketVerify>,
 }
 
 /// One task ledger's durable state.  Counters are *not* snapshotted —
@@ -207,6 +307,11 @@ pub(crate) struct StoreSnapshot {
     /// queue first), oldest first within a shard — the exact
     /// [`Scheduler::drain_errors`] order.
     pub(crate) errors: Vec<(TicketId, String)>,
+    /// Per-client reputation, sorted by client name; empty at R = 1.
+    pub(crate) reps: Vec<(String, Rep)>,
+    /// Verification counters: (votes_recorded, verdicts, votes_flagged,
+    /// escalations, quarantines); all zero at R = 1.
+    pub(crate) verify_counters: [u64; 5],
 }
 
 /// The indexed, sharded ticket store (aliased as
@@ -222,6 +327,10 @@ pub struct IndexedStore {
     ledgers: RwLock<HashMap<TaskId, Arc<TaskLedger>>>,
     /// Cumulative reports ever recorded (drain-proof, shown on console).
     errors_reported: AtomicUsize,
+    /// Reputation + verification counters (R > 1; untouched at R = 1).
+    /// Lock order: this mutex is outermost — taken before any dispatch
+    /// shard mutex, never after one.
+    verify: Mutex<VerifyState>,
     // Contention observability (ISSUE 7): surfaced by `stats()`.
     dispatch_locks: AtomicU64,
     steal_attempts: AtomicU64,
@@ -271,6 +380,7 @@ impl IndexedStore {
             shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
             ledgers: RwLock::new(HashMap::new()),
             errors_reported: AtomicUsize::new(0),
+            verify: Mutex::new(VerifyState::default()),
             dispatch_locks: AtomicU64::new(0),
             steal_attempts: AtomicU64::new(0),
             steal_successes: AtomicU64::new(0),
@@ -342,11 +452,21 @@ impl IndexedStore {
     }
 
     /// The dispatch decision (under one shard's mutex): same pick as the
-    /// naive scan, from the shard's index tops instead.
-    fn pick(&self, s: &ShardState, now_ms: u64) -> Option<u64> {
-        // Primary: the shard's (vct, id) minimum, if its VCT has arrived.
-        if let Some(&(vct, id)) = s.ready.iter().next() {
-            if vct <= now_ms {
+    /// naive scan, from the shard's index tops instead.  At R > 1 a
+    /// client is excluded from tickets it already holds or has voted on
+    /// (`verify` is `None` on every ticket at R = 1, so the exclusion
+    /// check is a null test on the legacy path).
+    fn pick(&self, s: &ShardState, now_ms: u64, client: &str) -> Option<u64> {
+        let excluded = |id: u64| -> bool {
+            s.meta[&id].verify.as_ref().map(|v| v.involves(client)).unwrap_or(false)
+        };
+        // Primary: the shard's first (vct, id) whose VCT has arrived and
+        // that the client is not excluded from.
+        for &(vct, id) in s.ready.iter() {
+            if vct > now_ms {
+                break;
+            }
+            if !excluded(id) {
                 return Some(id);
             }
         }
@@ -355,16 +475,18 @@ impl IndexedStore {
         // the min-redistribute window elapsed.  Eligibility is monotone
         // against the key, so the scan stops at the first keyed entry
         // that fails the window — only same-key (0) entries after an
-        // ineligible one can still qualify.
+        // ineligible one can still qualify.  Excluded entries are merely
+        // skipped (exclusion is per client, not monotone in the key).
         for &(key, id) in s.fallback.iter() {
             let eligible = match s.meta[&id].last_distributed_ms {
                 None => true,
                 Some(d) => now_ms.saturating_sub(d) >= self.cfg.min_redistribute_ms,
             };
             if eligible {
-                return Some(id);
-            }
-            if key > 0 {
+                if !excluded(id) {
+                    return Some(id);
+                }
+            } else if key > 0 {
                 break;
             }
         }
@@ -375,9 +497,17 @@ impl IndexedStore {
     /// already-held shard guard: the shared core of
     /// [`Scheduler::next_ticket`] and the batched
     /// [`Scheduler::next_tickets`].  Returns `(id, distribution_count,
-    /// was_pending)`.
-    fn dispatch_one(&self, s: &mut ShardState, now_ms: u64) -> Option<(u64, u32, bool)> {
-        let id = self.pick(s, now_ms)?;
+    /// was_pending)`.  `trusted` is the client's standing at call time
+    /// (only consulted at R > 1, where a trusted first dispatchee fixes
+    /// the recruitment target at 1 — the BOINC-style fast path).
+    fn dispatch_one(
+        &self,
+        s: &mut ShardState,
+        now_ms: u64,
+        client: &str,
+        trusted: bool,
+    ) -> Option<(u64, u32, bool)> {
+        let id = self.pick(s, now_ms, client)?;
         let m = s.meta.get_mut(&id).expect("picked ticket has meta");
         let old_vct = vct_of(&self.cfg, m);
         let old_fkey = m.last_distributed_ms.unwrap_or(0);
@@ -387,8 +517,19 @@ impl IndexedStore {
         m.last_distributed_ms = Some(now_ms);
         m.distribution_count += 1;
         let count = m.distribution_count;
+        if self.cfg.verifying() {
+            let quorum = self.cfg.quorum;
+            let v = m
+                .verify
+                .get_or_insert_with(|| Box::new(TicketVerify::new(if trusted { 1 } else { quorum })));
+            v.note_dispatch(client, self.cfg.replication);
+        }
+        // The new ready key is computed *after* every mutation: at R = 1
+        // it is exactly the legacy `now + requeue_after`; at R > 1 a
+        // still-recruiting ticket keys at its creation time instead.
+        let new_vct = vct_of(&self.cfg, m);
         s.ready.remove(&(old_vct, id));
-        s.ready.insert((now_ms + self.cfg.requeue_after_ms, id));
+        s.ready.insert((new_vct, id));
         s.fallback.remove(&(old_fkey, id));
         s.fallback.insert((now_ms, id));
         if redistribution {
@@ -399,6 +540,19 @@ impl IndexedStore {
             s.in_flight += 1;
         }
         Some((id, count, was_pending))
+    }
+
+    /// Standing gate shared by every dispatch entry point: `None` when
+    /// the client is quarantined (served `NoTicket`), otherwise whether
+    /// it is currently trusted.  A no-op `Some(false)` at R = 1.
+    fn dispatch_gate(&self, client: &str, now_ms: u64) -> Option<bool> {
+        if !self.cfg.verifying() {
+            return Some(false);
+        }
+        match self.verify.lock().unwrap().standing_of(client, now_ms) {
+            Standing::Quarantined { .. } => None,
+            s => Some(s == Standing::Trusted),
+        }
     }
 
     /// The pool-return transition shared by the error requeue and the
@@ -430,6 +584,125 @@ impl IndexedStore {
             }
             None => false,
         }
+    }
+
+    /// The *clientless* pool-return at R > 1 (release / unattributed
+    /// error): every holder is cleared (no attribution to keep), and the
+    /// ticket returns to the pool only when no ballots are pending on
+    /// it.  `allow_requeue` gates the status flip (false for error
+    /// reports with `requeue_on_error` off — holders still clear).
+    /// Both index keys are re-computed after the verify mutation, which
+    /// can change `needs_recruits` and therefore the ready key even
+    /// when the status does not move.  Delegates to the bit-exact
+    /// legacy [`requeue_one`](Self::requeue_one) at R = 1.
+    fn requeue_clientless(&self, s: &mut ShardState, id: u64, allow_requeue: bool) -> bool {
+        if !self.cfg.verifying() {
+            return if allow_requeue { self.requeue_one(s, id) } else { false };
+        }
+        let m = match s.meta.get_mut(&id) {
+            Some(m) => m,
+            None => return false,
+        };
+        let old_vct = vct_of(&self.cfg, m);
+        let old_fkey = m.last_distributed_ms.unwrap_or(0);
+        let has_votes = match m.verify.as_deref_mut() {
+            Some(v) => {
+                v.holders.clear();
+                !v.votes.is_empty()
+            }
+            None => false,
+        };
+        if m.status == TicketStatus::Done {
+            return false; // done tickets are not indexed: nothing to re-key
+        }
+        let moved = allow_requeue && m.status == TicketStatus::InFlight && !has_votes;
+        if moved {
+            m.status = TicketStatus::Pending;
+            m.last_distributed_ms = None; // VCT back to creation time
+        }
+        let new_vct = vct_of(&self.cfg, m);
+        let new_fkey = m.last_distributed_ms.unwrap_or(0);
+        if new_vct != old_vct {
+            s.ready.remove(&(old_vct, id));
+            s.ready.insert((new_vct, id));
+        }
+        if new_fkey != old_fkey {
+            s.fallback.remove(&(old_fkey, id));
+            s.fallback.insert((new_fkey, id));
+        }
+        if moved {
+            s.in_flight -= 1;
+            s.pending += 1;
+        }
+        moved
+    }
+
+    /// The *attributed* holder removal at R > 1: only `client` leaves
+    /// the holder set; the ticket returns to the pool only when that
+    /// removal left no participants at all (other replicas keep
+    /// working).  Returns `(released, moved)` — `released` is the
+    /// [`Scheduler::release_batch_from`] flag, `moved` drives the
+    /// ledger counters.  `require_released` distinguishes the release
+    /// path (a no-op release cannot requeue) from the error path (an
+    /// error from a non-holder may still return an otherwise-empty
+    /// ticket).  Caller holds the owning shard's mutex; R > 1 only.
+    fn release_from_one(
+        &self,
+        s: &mut ShardState,
+        id: u64,
+        client: &str,
+        allow_requeue: bool,
+        require_released: bool,
+    ) -> (bool, bool) {
+        let m = match s.meta.get_mut(&id) {
+            Some(m) => m,
+            None => return (false, false),
+        };
+        let old_vct = vct_of(&self.cfg, m);
+        let old_fkey = m.last_distributed_ms.unwrap_or(0);
+        let (released, empty) = match m.verify.as_deref_mut() {
+            Some(v) => (v.release_from(client), v.holders.is_empty() && v.votes.is_empty()),
+            None => (false, true),
+        };
+        if m.status == TicketStatus::Done {
+            return (released, false);
+        }
+        let moved = allow_requeue
+            && m.status == TicketStatus::InFlight
+            && empty
+            && (released || !require_released);
+        if moved {
+            m.status = TicketStatus::Pending;
+            m.last_distributed_ms = None; // VCT back to creation time
+        }
+        let new_vct = vct_of(&self.cfg, m);
+        let new_fkey = m.last_distributed_ms.unwrap_or(0);
+        if new_vct != old_vct {
+            s.ready.remove(&(old_vct, id));
+            s.ready.insert((new_vct, id));
+        }
+        if new_fkey != old_fkey {
+            s.fallback.remove(&(old_fkey, id));
+            s.fallback.insert((new_fkey, id));
+        }
+        if moved {
+            s.in_flight -= 1;
+            s.pending += 1;
+        }
+        (released, moved)
+    }
+
+    /// In-flight→pending ledger counter move for `id` (the tail of
+    /// every requeue path), via the body's cached ledger `Arc`.
+    fn ledger_requeue(&self, id: u64) {
+        let ledger = {
+            let shard = self.shard(id).read().unwrap();
+            let body = shard.get(&id).expect("requeued ticket has a stored body");
+            Arc::clone(&body.ledger)
+        };
+        let mut st = ledger.state.lock().unwrap();
+        st.in_flight -= 1;
+        st.pending += 1;
     }
 
     /// Phases 2–3 of a batched dispatch, shared by
@@ -506,12 +779,16 @@ impl IndexedStore {
         if k == 0 {
             return Vec::new();
         }
+        let trusted = match self.dispatch_gate(client, now_ms) {
+            Some(t) => t,
+            None => return Vec::new(), // quarantined: served nothing
+        };
         let picks: Vec<(u64, u32, bool)> = {
             let mut s = self.dispatch[shard].lock().unwrap();
             self.dispatch_locks.fetch_add(1, Ordering::Relaxed);
             let mut picks = Vec::with_capacity(k.min(64));
             while picks.len() < k {
-                match self.dispatch_one(&mut s, now_ms) {
+                match self.dispatch_one(&mut s, now_ms, client, trusted) {
                     Some(p) => picks.push(p),
                     None => break,
                 }
@@ -536,10 +813,20 @@ impl IndexedStore {
     /// hand-written `complete` loop.  Shared by the trait impl and by
     /// [`wal`](super::wal)'s `CompleteBatch` record, which needs the
     /// per-entry flags for its replay cross-check.
+    ///
+    /// `voter` attributes the completion (the R = 1 [`Scheduler::vote`]
+    /// path): an accepted entry records the completer so a later
+    /// duplicate can be split into same-client retry vs. cross-client
+    /// duplicate — the second flag of each returned pair.  `None` (the
+    /// legacy clientless paths) records nothing and classifies every
+    /// duplicate as cross-client.  At R > 1 a clientless completion
+    /// stays authoritative: it seals an undecided verify entry so late
+    /// ballots are judged against the accepted hash.
     pub(crate) fn complete_batch_flags(
         &self,
         results: Vec<(TicketId, Value)>,
-    ) -> (Vec<bool>, Option<anyhow::Error>) {
+        voter: Option<&str>,
+    ) -> (Vec<(bool, bool)>, Option<anyhow::Error>) {
         // Phase 1: stripe lookups (never under a dispatch mutex).
         let mut entries: Vec<(TicketId, Value, usize, TaskId, Arc<TaskLedger>)> =
             Vec::with_capacity(results.len());
@@ -558,12 +845,12 @@ impl IndexedStore {
             }
         }
         // Phase 2: status transitions, batched per dispatch shard run.
-        let mut flags: Vec<bool> = Vec::with_capacity(entries.len());
+        let mut flags: Vec<(bool, bool)> = Vec::with_capacity(entries.len());
         let mut pendings: Vec<bool> = Vec::with_capacity(entries.len());
         {
             let mut cur_shard = usize::MAX;
             let mut guard: Option<MutexGuard<'_, ShardState>> = None;
-            for (id, _, _, _, _) in &entries {
+            for (id, value, _, _, _) in &entries {
                 let sh = self.dshard(id.0);
                 if sh != cur_shard {
                     // Drop the held guard *before* locking the next
@@ -584,7 +871,12 @@ impl IndexedStore {
                 };
                 if status == TicketStatus::Done {
                     s.duplicate_results += 1;
-                    flags.push(false);
+                    let m = s.meta.get_mut(&id.0).expect("checked above");
+                    let same_client = match voter {
+                        Some(c) => m.completed_by.as_deref() == Some(c),
+                        None => false,
+                    };
+                    flags.push((false, same_client));
                     pendings.push(false);
                     continue;
                 }
@@ -593,6 +885,25 @@ impl IndexedStore {
                 let old_vct = vct_of(&self.cfg, m);
                 let old_fkey = m.last_distributed_ms.unwrap_or(0);
                 m.status = TicketStatus::Done;
+                if let Some(c) = voter {
+                    m.completed_by = Some(c.into());
+                }
+                // Clientless completion at R > 1 stays authoritative (it
+                // bypasses quorum); seal the verify entry so late ballots
+                // are judged against the accepted hash.
+                if self.cfg.verifying() {
+                    if let Some(v) = m.verify.as_deref_mut() {
+                        if v.decided.is_none() {
+                            v.holders.clear();
+                            v.decided = Some(Verdict {
+                                ticket: *id,
+                                hash: canonical_hash(value),
+                                winners: Vec::new(),
+                                losers: Vec::new(),
+                            });
+                        }
+                    }
+                }
                 s.ready.remove(&(old_vct, id.0));
                 s.fallback.remove(&(old_fkey, id.0));
                 if was_pending {
@@ -601,7 +912,7 @@ impl IndexedStore {
                     s.in_flight -= 1;
                 }
                 s.done += 1;
-                flags.push(true);
+                flags.push((true, false));
                 pendings.push(was_pending);
             }
         }
@@ -617,7 +928,7 @@ impl IndexedStore {
             {
                 let mut st = ledger.state.lock().unwrap();
                 while i < entries.len() && entries[i].3 == task {
-                    if flags[i] {
+                    if flags[i].0 {
                         let index = entries[i].2;
                         let id = (entries[i].0).0;
                         let value = std::mem::replace(&mut entries[i].1, Value::Null);
@@ -712,16 +1023,7 @@ impl IndexedStore {
             let count = shard_ids.len();
             let mut s = self.dispatch[sh].lock().unwrap();
             for id in shard_ids {
-                s.meta.insert(
-                    id,
-                    Meta {
-                        task,
-                        created_ms: now_ms,
-                        status: TicketStatus::Pending,
-                        last_distributed_ms: None,
-                        distribution_count: 0,
-                    },
-                );
+                s.meta.insert(id, Meta::fresh(task, now_ms));
                 s.ready.insert((now_ms, id));
                 s.fallback.insert((0, id));
             }
@@ -748,7 +1050,17 @@ impl IndexedStore {
     /// locks are taken one at a time, respecting the module's lock
     /// discipline.
     pub(crate) fn snapshot(&self) -> StoreSnapshot {
-        let mut metas: Vec<(u64, TaskId, u64, TicketStatus, Option<u64>, u32)> = Vec::new();
+        // Verify state first (its mutex is outermost in the lock order;
+        // here every lock is taken one at a time anyway).
+        let (reps, verify_counters) = {
+            let vs = self.verify.lock().unwrap();
+            (
+                vs.reps.iter().map(|(c, r)| (c.clone(), r.clone())).collect::<Vec<_>>(),
+                [vs.votes_recorded, vs.verdicts, vs.votes_flagged, vs.escalations, vs.quarantines],
+            )
+        };
+        let mut metas: Vec<(u64, TaskId, u64, TicketStatus, Option<u64>, u32, Option<TicketVerify>)> =
+            Vec::new();
         let mut redistributions = 0u64;
         let mut duplicate_results = 0u64;
         let mut errors: Vec<(TicketId, String)> = Vec::new();
@@ -762,6 +1074,7 @@ impl IndexedStore {
                     m.status,
                     m.last_distributed_ms,
                     m.distribution_count,
+                    m.verify.as_deref().cloned(),
                 ));
             }
             redistributions += s.redistributions;
@@ -771,7 +1084,7 @@ impl IndexedStore {
         metas.sort_by_key(|&(id, ..)| id);
         let tickets = metas
             .into_iter()
-            .map(|(id, task, created_ms, status, last_distributed_ms, distribution_count)| {
+            .map(|(id, task, created_ms, status, last_distributed_ms, distribution_count, verify)| {
                 let shard = self.shard(id).read().unwrap();
                 let body = shard.get(&id).expect("every meta entry has a stored body");
                 TicketSnapshot {
@@ -784,6 +1097,7 @@ impl IndexedStore {
                     status,
                     last_distributed_ms,
                     distribution_count,
+                    verify,
                 }
             })
             .collect();
@@ -811,6 +1125,8 @@ impl IndexedStore {
             tickets,
             ledgers,
             errors,
+            reps,
+            verify_counters,
         }
     }
 
@@ -822,6 +1138,17 @@ impl IndexedStore {
         let store = IndexedStore::with_layout(snap.cfg, DEFAULT_SHARDS, snap.dispatch_shards);
         store.next_id.store(snap.next_id, Ordering::SeqCst);
         store.errors_reported.store(snap.errors_reported as usize, Ordering::Relaxed);
+        {
+            let mut vs = store.verify.lock().unwrap();
+            vs.reps = snap.reps.into_iter().collect();
+            let [votes_recorded, verdicts, votes_flagged, escalations, quarantines] =
+                snap.verify_counters;
+            vs.votes_recorded = votes_recorded;
+            vs.verdicts = verdicts;
+            vs.votes_flagged = votes_flagged;
+            vs.escalations = escalations;
+            vs.quarantines = quarantines;
+        }
         // The snapshot's error order is shard-major, so pushing by shard
         // of id reconstructs each per-shard queue in its original FIFO
         // order (the shard count is pinned by the snapshot).
@@ -870,6 +1197,8 @@ impl IndexedStore {
                     status: t.status,
                     last_distributed_ms: t.last_distributed_ms,
                     distribution_count: t.distribution_count,
+                    verify: t.verify.map(Box::new),
+                    completed_by: None, // best-effort, not snapshotted
                 },
             ));
         }
@@ -928,6 +1257,9 @@ impl Scheduler for IndexedStore {
     }
 
     fn next_ticket(&self, client: &str, now_ms: u64) -> Option<Ticket> {
+        // Standing gate first (verify mutex, outermost, released before
+        // any shard lock): quarantined clients are served nothing.
+        let trusted = self.dispatch_gate(client, now_ms)?;
         // Home shard first (blocking), then steal from siblings under
         // try_lock — one shard mutex at a time, so no deadlock.
         let nshards = self.dispatch.len();
@@ -945,7 +1277,7 @@ impl Scheduler for IndexedStore {
                 }
             };
             self.dispatch_locks.fetch_add(1, Ordering::Relaxed);
-            if let Some(p) = self.dispatch_one(&mut guard, now_ms) {
+            if let Some(p) = self.dispatch_one(&mut guard, now_ms, client, trusted) {
                 if i > 0 {
                     self.steal_successes.fetch_add(1, Ordering::Relaxed);
                 }
@@ -998,6 +1330,10 @@ impl Scheduler for IndexedStore {
         if k == 1 {
             return self.next_ticket(client, now_ms).into_iter().collect();
         }
+        let trusted = match self.dispatch_gate(client, now_ms) {
+            Some(t) => t,
+            None => return Vec::new(), // quarantined: served nothing
+        };
         // Phase 1: dispatch decisions, home shard then steal scan.
         let nshards = self.dispatch.len();
         let home = self.home_shard(client);
@@ -1019,7 +1355,7 @@ impl Scheduler for IndexedStore {
             self.dispatch_locks.fetch_add(1, Ordering::Relaxed);
             let before = picks.len();
             while picks.len() < k {
-                match self.dispatch_one(&mut guard, now_ms) {
+                match self.dispatch_one(&mut guard, now_ms, client, trusted) {
                     Some(p) => picks.push(p),
                     None => break,
                 }
@@ -1036,10 +1372,10 @@ impl Scheduler for IndexedStore {
     }
 
     fn complete_batch(&self, results: Vec<(TicketId, Value)>) -> Result<usize> {
-        let (flags, stopped) = self.complete_batch_flags(results);
+        let (flags, stopped) = self.complete_batch_flags(results, None);
         match stopped {
             Some(e) => Err(e),
-            None => Ok(flags.iter().filter(|&&f| f).count()),
+            None => Ok(flags.iter().filter(|&&(f, _)| f).count()),
         }
     }
 
@@ -1047,11 +1383,124 @@ impl Scheduler for IndexedStore {
         // One completion state machine: the singular path is a
         // one-entry batch, so the differential suites pin a single
         // implementation instead of two hand-synchronised copies.
-        let (flags, stopped) = self.complete_batch_flags(vec![(id, result)]);
+        let (flags, stopped) = self.complete_batch_flags(vec![(id, result)], None);
         match stopped {
             Some(e) => Err(e),
-            None => Ok(flags[0]),
+            None => Ok(flags[0].0),
         }
+    }
+
+    fn vote(&self, client: &str, id: TicketId, result: Value, now_ms: u64) -> Result<VoteOutcome> {
+        if !self.cfg.verifying() {
+            // R = 1: bit-exact legacy complete, attributed so a later
+            // duplicate splits into same-client retry vs. cross-client.
+            let (flags, stopped) =
+                self.complete_batch_flags(vec![(id, result)], Some(client));
+            return match stopped {
+                Some(e) => Err(e),
+                None => Ok(match flags[0] {
+                    (true, _) => VoteOutcome::Accepted { verdict: None },
+                    (false, same_client) => VoteOutcome::Duplicate { same_client },
+                }),
+            };
+        }
+        // R > 1: the quorum state machine.  The verify mutex (outermost)
+        // is held across the shard transition so standing reads, ballot
+        // recording and reputation consequences are one atomic step.
+        let mut vs = self.verify.lock().unwrap();
+        let trusted = vs.standing_of(client, now_ms) == Standing::Trusted;
+        let hash = canonical_hash(&result);
+        let found = {
+            let shard = self.shard(id.0).read().unwrap();
+            shard.get(&id.0).map(|t| (t.index, Arc::clone(&t.ledger)))
+        };
+        let (index, ledger) = match found {
+            Some(f) => f,
+            None => return Err(anyhow!("unknown ticket {id:?}")),
+        };
+        // Decide(verdict, winning value, was_pending) escapes the shard
+        // guard; the ledger phase runs after it drops.
+        let decided: Option<(Verdict, Value, bool)> = {
+            let mut s = self.dispatch[self.dshard(id.0)].lock().unwrap();
+            let s = &mut *s;
+            let status = match s.meta.get(&id.0) {
+                Some(m) => m.status,
+                None => return Err(anyhow!("unknown ticket {id:?}")),
+            };
+            if status == TicketStatus::Done {
+                // Legacy duplicate accounting, now attributed — and a
+                // late ballot still moves the straggler's reputation.
+                s.duplicate_results += 1;
+                let m = s.meta.get_mut(&id.0).expect("checked above");
+                return Ok(match m.verify.as_deref_mut() {
+                    Some(v) if v.has_voted(client) => VoteOutcome::Duplicate { same_client: true },
+                    Some(v) => {
+                        if let Some(won) = v.record_late_vote(client, hash) {
+                            vs.apply_late_rep(client, won, now_ms);
+                        }
+                        VoteOutcome::Duplicate { same_client: false }
+                    }
+                    None => VoteOutcome::Duplicate { same_client: false },
+                });
+            }
+            let quorum = self.cfg.quorum;
+            let m = s.meta.get_mut(&id.0).expect("checked above");
+            // Old index keys *before* the verify mutation: recording a
+            // ballot can change `needs_recruits` and thus the ready key.
+            let old_vct = vct_of(&self.cfg, m);
+            let old_fkey = m.last_distributed_ms.unwrap_or(0);
+            let action = m
+                .verify
+                .get_or_insert_with(|| Box::new(TicketVerify::new(quorum)))
+                .record_vote(id, client, hash, &result, trusted, quorum);
+            match action {
+                VoteAction::Repeat => return Ok(VoteOutcome::Repeat),
+                VoteAction::Pending { escalated } => {
+                    vs.votes_recorded += 1;
+                    if escalated {
+                        vs.escalations += 1;
+                    }
+                    let new_vct = vct_of(&self.cfg, m);
+                    if new_vct != old_vct {
+                        s.ready.remove(&(old_vct, id.0));
+                        s.ready.insert((new_vct, id.0));
+                    }
+                    return Ok(VoteOutcome::Pending);
+                }
+                VoteAction::Decide(verdict) => {
+                    vs.votes_recorded += 1;
+                    vs.verdicts += 1;
+                    let winning = m.verify.as_deref().expect("just voted").winning_value();
+                    let was_pending = m.status == TicketStatus::Pending;
+                    m.status = TicketStatus::Done;
+                    s.ready.remove(&(old_vct, id.0));
+                    s.fallback.remove(&(old_fkey, id.0));
+                    if was_pending {
+                        s.pending -= 1;
+                    } else {
+                        s.in_flight -= 1;
+                    }
+                    s.done += 1;
+                    vs.apply_verdict_reps(&verdict, now_ms);
+                    Some((verdict, winning, was_pending))
+                }
+            }
+        };
+        drop(vs);
+        let (verdict, winning, was_pending) = decided.expect("non-decide paths returned above");
+        {
+            let mut st = ledger.state.lock().unwrap();
+            if was_pending {
+                st.pending -= 1;
+            } else {
+                st.in_flight -= 1;
+            }
+            st.done += 1;
+            st.results.push((index, id.0, winning.clone()));
+            st.completions.push_back((index, winning));
+        }
+        ledger.cv.notify_all();
+        Ok(VoteOutcome::Accepted { verdict: Some(verdict) })
     }
 
     fn report_error(&self, id: TicketId, report: String) -> Result<()> {
@@ -1061,22 +1510,30 @@ impl Scheduler for IndexedStore {
         // share the one shard acquisition.
         let requeued = {
             let mut s = self.dispatch[self.dshard(id.0)].lock().unwrap();
-            s.errors.push((id, report));
-            if self.cfg.requeue_on_error {
-                self.requeue_one(&mut s, id.0)
-            } else {
-                false
-            }
+            s.push_error(id, report);
+            self.requeue_clientless(&mut s, id.0, self.cfg.requeue_on_error)
         };
         if requeued {
-            let ledger = {
-                let shard = self.shard(id.0).read().unwrap();
-                let body = shard.get(&id.0).expect("requeued ticket has a stored body");
-                Arc::clone(&body.ledger)
-            };
-            let mut st = ledger.state.lock().unwrap();
-            st.in_flight -= 1;
-            st.pending += 1;
+            self.ledger_requeue(id.0);
+        }
+        Ok(())
+    }
+
+    fn report_error_from(&self, client: &str, id: TicketId, report: String) -> Result<()> {
+        if !self.cfg.verifying() {
+            return self.report_error(id, report);
+        }
+        self.errors_reported.fetch_add(1, Ordering::Relaxed);
+        let requeued = {
+            let mut s = self.dispatch[self.dshard(id.0)].lock().unwrap();
+            s.push_error(id, report);
+            // Only when the erroring client was the last participant
+            // does the ticket return to the undistributed pool; other
+            // replicas keep working and the freed slot re-recruits.
+            self.release_from_one(&mut s, id.0, client, self.cfg.requeue_on_error, false).1
+        };
+        if requeued {
+            self.ledger_requeue(id.0);
         }
         Ok(())
     }
@@ -1112,7 +1569,7 @@ impl Scheduler for IndexedStore {
                         cur_shard = sh;
                     }
                     let s = guard.as_mut().expect("guard set for current shard");
-                    self.requeue_one(s, id.0)
+                    self.requeue_clientless(s, id.0, true)
                 })
                 .collect()
         };
@@ -1148,6 +1605,75 @@ impl Scheduler for IndexedStore {
             st.pending += n;
         }
         flags
+    }
+
+    /// The attributed batched release (R > 1): each entry removes only
+    /// `client` from its ticket's holder set; the ticket requeues only
+    /// when that removal emptied it.  Same shard-run batching and
+    /// ledger grouping as [`release_batch`](Self::release_batch), which
+    /// it delegates to outright at R = 1 (one holder per ticket).
+    fn release_batch_from(&self, client: &str, ids: &[TicketId]) -> Vec<bool> {
+        if !self.cfg.verifying() {
+            return self.release_batch(ids);
+        }
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        // Phase 1: holder removal + (maybe) pool return, per shard run.
+        let mut moved: Vec<bool> = Vec::with_capacity(ids.len());
+        let released: Vec<bool> = {
+            let mut cur_shard = usize::MAX;
+            let mut guard: Option<MutexGuard<'_, ShardState>> = None;
+            ids.iter()
+                .map(|&id| {
+                    let sh = self.dshard(id.0);
+                    if sh != cur_shard {
+                        guard = None;
+                        guard = Some(self.dispatch[sh].lock().unwrap());
+                        cur_shard = sh;
+                    }
+                    let s = guard.as_mut().expect("guard set for current shard");
+                    let (rel, mv) = self.release_from_one(s, id.0, client, true, true);
+                    moved.push(mv);
+                    rel
+                })
+                .collect()
+        };
+        // Phase 2: ledger counters for the entries that actually moved.
+        for (i, &id) in ids.iter().enumerate() {
+            if moved[i] {
+                self.ledger_requeue(id.0);
+            }
+        }
+        released
+    }
+
+    fn client_standing(&self, client: &str, now_ms: u64) -> Standing {
+        self.verify.lock().unwrap().standing_of(client, now_ms)
+    }
+
+    fn verify_stats(&self) -> VerifyStats {
+        let vs = self.verify.lock().unwrap();
+        VerifyStats {
+            replication: self.cfg.replication,
+            quorum: self.cfg.quorum,
+            votes_recorded: vs.votes_recorded,
+            verdicts: vs.verdicts,
+            votes_flagged: vs.votes_flagged,
+            escalations: vs.escalations,
+            quarantines: vs.quarantines,
+            quarantined_now: vs.reps.values().filter(|r| r.quarantined_until.is_some()).count(),
+            trusted_now: vs
+                .reps
+                .values()
+                .filter(|r| r.quarantined_until.is_none() && r.score >= TRUST_SCORE)
+                .count(),
+        }
+    }
+
+    fn quarantined_clients(&self) -> Vec<String> {
+        let vs = self.verify.lock().unwrap();
+        vs.reps.iter().filter(|(_, r)| r.ever_quarantined).map(|(c, _)| c.clone()).collect()
     }
 
     fn next_completion(&self, task: TaskId, timeout_ms: u64) -> Option<(usize, Value)> {
@@ -1262,8 +1788,11 @@ impl Scheduler for IndexedStore {
 
     fn stats(&self) -> SchedStats {
         let mut shard_depths = Vec::with_capacity(self.dispatch.len());
+        let mut errors_dropped = 0u64;
         for shard in &self.dispatch {
-            shard_depths.push(shard.lock().unwrap().ready.len());
+            let s = shard.lock().unwrap();
+            shard_depths.push(s.ready.len());
+            errors_dropped += s.errors_dropped;
         }
         SchedStats {
             dispatch_shards: self.dispatch.len(),
@@ -1271,6 +1800,7 @@ impl Scheduler for IndexedStore {
             steal_attempts: self.steal_attempts.load(Ordering::Relaxed),
             steal_successes: self.steal_successes.load(Ordering::Relaxed),
             shard_depths,
+            errors_dropped,
         }
     }
 }
@@ -1280,7 +1810,12 @@ mod tests {
     use super::*;
 
     fn cfg() -> StoreConfig {
-        StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 100, requeue_on_error: true }
+        StoreConfig {
+            requeue_after_ms: 1000,
+            min_redistribute_ms: 100,
+            requeue_on_error: true,
+            ..StoreConfig::default()
+        }
     }
 
     /// The index tops must track every transition: dispatch, timeout
@@ -1442,6 +1977,7 @@ mod tests {
             requeue_after_ms: 600_000,
             min_redistribute_ms: 600_000,
             requeue_on_error: true,
+            ..StoreConfig::default()
         }));
         let n = 800usize;
         s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
@@ -1476,6 +2012,7 @@ mod tests {
             requeue_after_ms: 600_000,
             min_redistribute_ms: 600_000,
             requeue_on_error: true,
+            ..StoreConfig::default()
         }));
         let n = 960usize;
         s.create_tickets(TaskId(1), "t", (0..n).map(|i| Value::num(i as f64)).collect(), 0);
@@ -1516,6 +2053,7 @@ mod tests {
                 requeue_after_ms: 600_000,
                 min_redistribute_ms: 600_000,
                 requeue_on_error: true,
+                ..StoreConfig::default()
             },
             DEFAULT_SHARDS,
             8,

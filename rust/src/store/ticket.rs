@@ -47,6 +47,290 @@ impl Ticket {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Result verification (quorum replication + per-client reputation).
+//
+// With `StoreConfig { replication: R > 1, quorum: Q }` a ticket no longer
+// completes on the first result: results are canonicalised and hashed, and
+// the ticket completes when Q matching *votes* have arrived from distinct
+// clients (or one vote from a long-trusted client — the BOINC-style
+// adaptive fast path).  The pure state machine lives here so the naive
+// reference store, the indexed production store, and WAL replay all run
+// the *same* code — the differential suites then only have to pin the
+// backends' dispatch plumbing, not two hand-synchronised vote machines.
+// At R = 1 none of this is instantiated and every path is bit-for-bit the
+// legacy first-result-wins store.
+// ---------------------------------------------------------------------------
+
+/// Canonical hash of a result value: FNV-1a over the canonical JSON
+/// serialisation.  Two clients "agree" iff their results hash equal.
+pub fn canonical_hash(v: &Value) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in v.to_string().as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// What a [`vote`](crate::store::Scheduler::vote) did.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VoteOutcome {
+    /// This vote completed the ticket.  At R = 1 (the legacy path) the
+    /// verdict is `None`; at R > 1 it names the winning hash and the
+    /// flagged minority voters.
+    Accepted { verdict: Option<Verdict> },
+    /// Recorded; the ticket is still short of quorum (R > 1 only).
+    Pending,
+    /// The ticket was already done when the vote arrived — the legacy
+    /// duplicate, now attributed: a same-client retry vs. a slower
+    /// *different* client answering a replicated/redistributed ticket.
+    Duplicate { same_client: bool },
+    /// The same client re-voting on a still-undecided ticket: ignored
+    /// (one client, one vote).
+    Repeat,
+}
+
+/// The outcome of a decided ticket at R > 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Verdict {
+    pub ticket: TicketId,
+    /// Canonical hash of the accepted result.
+    pub hash: u64,
+    /// Clients whose vote matched the winning hash.
+    pub winners: Vec<String>,
+    /// Minority voters — flagged for reputation loss.
+    pub losers: Vec<String>,
+}
+
+/// A client's scheduling standing, derived from its reputation score.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Standing {
+    /// Long history of winning votes: earns the R = 1 fast path (its
+    /// single vote decides a ticket it was first to receive).
+    Trusted,
+    Normal,
+    /// Lost its way into quarantine: served `NoTicket`, held tickets
+    /// released, until the probation timer expires.
+    Quarantined { until_ms: u64 },
+}
+
+/// Reputation score at (and above) which a client is [`Standing::Trusted`].
+pub(crate) const TRUST_SCORE: i64 = 8;
+/// Score at (or below) which a lost vote tips a client into quarantine.
+pub(crate) const QUARANTINE_SCORE: i64 = -8;
+/// Quarantine probation: how long a quarantined client is served
+/// `NoTicket` before being allowed back (score restarts from 0).
+pub(crate) const PROBATION_MS: u64 = 120_000;
+
+/// One client's reputation record (BOINC-style adaptive replication).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub(crate) struct Rep {
+    /// +1 per vote won; halved-and-docked per vote lost.
+    pub(crate) score: i64,
+    pub(crate) quarantined_until: Option<u64>,
+    /// Sticky: set on the first quarantine, never cleared (surfaced by
+    /// [`quarantined_clients`](crate::store::Scheduler::quarantined_clients)).
+    pub(crate) ever_quarantined: bool,
+    pub(crate) votes_won: u64,
+    pub(crate) votes_lost: u64,
+}
+
+impl Rep {
+    pub(crate) fn win(&mut self) {
+        self.score += 1;
+        self.votes_won += 1;
+    }
+
+    /// A lost vote: halve the accumulated trust and dock a penalty, so
+    /// repeat offenders decay geometrically toward quarantine while one
+    /// bad vote cannot erase a long history linearly.  Returns `true`
+    /// when this loss tipped the client into quarantine.
+    pub(crate) fn lose(&mut self, now_ms: u64) -> bool {
+        self.votes_lost += 1;
+        self.score = self.score / 2 + QUARANTINE_SCORE;
+        if self.score <= QUARANTINE_SCORE {
+            self.score = 0; // probation restarts the ladder from scratch
+            self.quarantined_until = Some(now_ms + PROBATION_MS);
+            self.ever_quarantined = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current standing; lazily clears an expired quarantine.
+    pub(crate) fn standing(&mut self, now_ms: u64) -> Standing {
+        if let Some(until) = self.quarantined_until {
+            if now_ms < until {
+                return Standing::Quarantined { until_ms: until };
+            }
+            self.quarantined_until = None;
+        }
+        if self.score >= TRUST_SCORE {
+            Standing::Trusted
+        } else {
+            Standing::Normal
+        }
+    }
+}
+
+/// What [`TicketVerify::record_vote`] decided — interpreted identically
+/// by every backend.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum VoteAction {
+    /// Quorum (or a trusted voter) reached: complete the ticket with
+    /// the first value recorded under the verdict's hash.
+    Decide(Verdict),
+    /// Recorded, still short of quorum; `escalated` when this vote
+    /// exposed a divergence and bumped the recruitment target (the
+    /// fresh-client tie-breaker).
+    Pending { escalated: bool },
+    /// Same client re-voting on the undecided ticket: ignored.
+    Repeat,
+}
+
+/// Per-ticket replication state (R > 1 only; `None` on every ticket at
+/// R = 1).  `holders` are clients the ticket is currently dispatched to
+/// that have not voted; `votes` are the ballots cast.  A client appears
+/// in at most one of the two, and `enlisted = holders + votes` is the
+/// recruitment level measured against `target`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub(crate) struct TicketVerify {
+    /// How many distinct clients to recruit before waiting on the
+    /// redistribution window: starts at `quorum` (or 1 for a trusted
+    /// first client), +1 per exposed divergence.
+    pub(crate) target: u32,
+    pub(crate) holders: Vec<String>,
+    /// Ballots in arrival order: (client, canonical result hash).
+    pub(crate) votes: Vec<(String, u64)>,
+    /// First value seen per distinct hash — the deterministic result a
+    /// verdict for that hash completes with.
+    pub(crate) values: Vec<(u64, Value)>,
+    pub(crate) decided: Option<Verdict>,
+}
+
+impl TicketVerify {
+    pub(crate) fn new(target: u32) -> Self {
+        Self { target: target.max(1), ..Default::default() }
+    }
+
+    pub(crate) fn enlisted(&self) -> usize {
+        self.holders.len() + self.votes.len()
+    }
+
+    /// Still recruiting: an undecided ticket below its target is
+    /// immediately dispatchable (VCT = creation time) to new clients.
+    pub(crate) fn needs_recruits(&self) -> bool {
+        self.decided.is_none() && self.enlisted() < self.target as usize
+    }
+
+    /// Same-client exclusion: a client never sees a ticket it already
+    /// holds or has voted on.
+    pub(crate) fn involves(&self, client: &str) -> bool {
+        self.holders.iter().any(|c| c == client) || self.votes.iter().any(|(c, _)| c == client)
+    }
+
+    /// Record a dispatch to `client`, evicting the oldest holder when
+    /// the concurrent-holder cap (`replication`) is full — that holder
+    /// is presumed dead (its window expired, which is why we are
+    /// re-dispatching); a late vote from it is still counted.
+    pub(crate) fn note_dispatch(&mut self, client: &str, replication: u32) {
+        if self.holders.len() >= replication.max(1) as usize {
+            self.holders.remove(0);
+        }
+        self.holders.push(client.to_string());
+    }
+
+    /// Remove `client` from the holder set (release / error / vanish).
+    /// Returns whether it actually held the ticket.
+    pub(crate) fn release_from(&mut self, client: &str) -> bool {
+        match self.holders.iter().position(|c| c == client) {
+            Some(i) => {
+                self.holders.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The quorum state machine (undecided tickets only).  A vote
+    /// decides when its voter is trusted *at vote time*, or when
+    /// `quorum` ballots carry the same hash; a full undecided round
+    /// bumps `target` so a fresh client is recruited as tie-breaker.
+    pub(crate) fn record_vote(
+        &mut self,
+        ticket: TicketId,
+        client: &str,
+        hash: u64,
+        value: &Value,
+        voter_trusted: bool,
+        quorum: u32,
+    ) -> VoteAction {
+        if self.votes.iter().any(|(c, _)| c == client) {
+            return VoteAction::Repeat;
+        }
+        self.release_from(client);
+        self.votes.push((client.to_string(), hash));
+        if !self.values.iter().any(|(h, _)| *h == hash) {
+            self.values.push((hash, value.clone()));
+        }
+        let matching = self.votes.iter().filter(|(_, h)| *h == hash).count();
+        if voter_trusted || matching >= quorum.max(1) as usize {
+            let (winners, losers) = self
+                .votes
+                .iter()
+                .map(|(c, h)| (c.clone(), *h))
+                .partition::<Vec<_>, _>(|(_, h)| *h == hash);
+            let verdict = Verdict {
+                ticket,
+                hash,
+                winners: winners.into_iter().map(|(c, _)| c).collect(),
+                losers: losers.into_iter().map(|(c, _)| c).collect(),
+            };
+            self.decided = Some(verdict.clone());
+            return VoteAction::Decide(verdict);
+        }
+        let escalated = self.votes.len() >= self.target as usize;
+        if escalated {
+            self.target += 1; // divergence: recruit a fresh tie-breaker
+        }
+        VoteAction::Pending { escalated }
+    }
+
+    /// The value a [`VoteAction::Decide`] completes the ticket with:
+    /// the first value recorded under the decided hash (deterministic
+    /// regardless of which matching vote tipped the quorum).
+    pub(crate) fn winning_value(&self) -> Value {
+        let hash = self.decided.as_ref().expect("winning_value on decided ticket").hash;
+        self.values
+            .iter()
+            .find(|(h, _)| *h == hash)
+            .map(|(_, v)| v.clone())
+            .expect("decided hash has a recorded value")
+    }
+
+    /// A vote arriving after the ticket is done: a repeat from a client
+    /// that already voted is `None` (no reputation effect); otherwise
+    /// the ballot is recorded and judged against the verdict —
+    /// `Some(true)` won, `Some(false)` lost.  Tickets completed through
+    /// the clientless infrastructure path carry no verdict; late votes
+    /// on them are recorded but unjudged (`None`).
+    pub(crate) fn record_late_vote(&mut self, client: &str, hash: u64) -> Option<bool> {
+        if self.votes.iter().any(|(c, _)| c == client) {
+            return None;
+        }
+        self.release_from(client);
+        self.votes.push((client.to_string(), hash));
+        self.decided.as_ref().map(|v| v.hash == hash)
+    }
+
+    /// Whether a vote on this *done* ticket is a same-client retry.
+    pub(crate) fn has_voted(&self, client: &str) -> bool {
+        self.votes.iter().any(|(c, _)| c == client)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +352,124 @@ mod tests {
         };
         assert_eq!(t.payload_bytes(), t.payload.to_string().len());
         assert!(t.payload_bytes() > 10);
+    }
+
+    #[test]
+    fn canonical_hash_is_serialisation_stable() {
+        let a = Value::obj(vec![("x", Value::num(1.0)), ("y", Value::str("z"))]);
+        let b = Value::obj(vec![("x", Value::num(1.0)), ("y", Value::str("z"))]);
+        assert_eq!(canonical_hash(&a), canonical_hash(&b));
+        assert_ne!(canonical_hash(&a), canonical_hash(&Value::num(1.0)));
+    }
+
+    #[test]
+    fn quorum_of_two_decides_on_second_matching_vote() {
+        let mut v = TicketVerify::new(2);
+        v.note_dispatch("a", 3);
+        v.note_dispatch("b", 3);
+        let h = canonical_hash(&Value::num(7.0));
+        let act = v.record_vote(TicketId(1), "a", h, &Value::num(7.0), false, 2);
+        assert_eq!(act, VoteAction::Pending { escalated: false });
+        assert!(v.has_voted("a") && !v.involves("c"));
+        match v.record_vote(TicketId(1), "b", h, &Value::num(7.0), false, 2) {
+            VoteAction::Decide(verdict) => {
+                assert_eq!(verdict.hash, h);
+                assert_eq!(verdict.winners, vec!["a".to_string(), "b".to_string()]);
+                assert!(verdict.losers.is_empty());
+            }
+            other => panic!("expected decide, got {other:?}"),
+        }
+        assert_eq!(v.winning_value(), Value::num(7.0));
+    }
+
+    #[test]
+    fn divergence_escalates_then_tiebreaker_outvotes_minority() {
+        let mut v = TicketVerify::new(2);
+        let good = canonical_hash(&Value::num(1.0));
+        let bad = canonical_hash(&Value::num(666.0));
+        assert_eq!(
+            v.record_vote(TicketId(9), "honest1", good, &Value::num(1.0), false, 2),
+            VoteAction::Pending { escalated: false }
+        );
+        // Divergent second vote: full round, undecided -> target bumps.
+        assert_eq!(
+            v.record_vote(TicketId(9), "evil", bad, &Value::num(666.0), false, 2),
+            VoteAction::Pending { escalated: true }
+        );
+        assert_eq!(v.target, 3);
+        assert!(v.needs_recruits(), "tie-breaker must be recruitable immediately");
+        match v.record_vote(TicketId(9), "honest2", good, &Value::num(1.0), false, 2) {
+            VoteAction::Decide(verdict) => {
+                assert_eq!(verdict.losers, vec!["evil".to_string()]);
+                assert_eq!(v.winning_value(), Value::num(1.0));
+            }
+            other => panic!("expected decide, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trusted_vote_decides_alone_and_repeats_are_ignored() {
+        let mut v = TicketVerify::new(1);
+        let h = canonical_hash(&Value::Bool(true));
+        assert_eq!(
+            v.record_vote(TicketId(2), "vet", h, &Value::Bool(true), false, 2),
+            VoteAction::Pending { escalated: true },
+            "an untrusted voter alone cannot decide even at target 1"
+        );
+        assert_eq!(
+            v.record_vote(TicketId(2), "vet", h, &Value::Bool(true), false, 2),
+            VoteAction::Repeat
+        );
+        match v.record_vote(TicketId(2), "trusted", h, &Value::Bool(true), true, 2) {
+            VoteAction::Decide(verdict) => assert_eq!(verdict.hash, h),
+            other => panic!("expected decide, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn holder_cap_evicts_oldest() {
+        let mut v = TicketVerify::new(2);
+        v.note_dispatch("a", 2);
+        v.note_dispatch("b", 2);
+        v.note_dispatch("c", 2); // cap 2: evicts "a"
+        assert!(!v.involves("a"));
+        assert!(v.involves("b") && v.involves("c"));
+        assert!(v.release_from("b"));
+        assert!(!v.release_from("b"));
+    }
+
+    #[test]
+    fn reputation_ladder_trust_quarantine_probation() {
+        let mut r = Rep::default();
+        assert_eq!(r.standing(0), Standing::Normal);
+        for _ in 0..TRUST_SCORE {
+            r.win();
+        }
+        assert_eq!(r.standing(0), Standing::Trusted);
+        // One lost vote knocks trust off but does not quarantine...
+        assert!(!r.lose(1_000));
+        assert_eq!(r.standing(1_000), Standing::Normal);
+        // ...the next does (geometric decay toward the floor).
+        assert!(r.lose(2_000));
+        assert_eq!(r.standing(2_000), Standing::Quarantined { until_ms: 2_000 + PROBATION_MS });
+        assert!(r.ever_quarantined);
+        // Probation expiry is lazy; the ladder restarts from zero.
+        assert_eq!(r.standing(2_000 + PROBATION_MS), Standing::Normal);
+        assert_eq!(r.score, 0);
+        // A fresh (score 0) client quarantines on its first lost vote.
+        let mut fresh = Rep::default();
+        assert!(fresh.lose(5));
+    }
+
+    #[test]
+    fn late_votes_are_judged_against_the_verdict() {
+        let mut v = TicketVerify::new(2);
+        let h = canonical_hash(&Value::num(3.0));
+        v.record_vote(TicketId(4), "a", h, &Value::num(3.0), false, 2);
+        v.record_vote(TicketId(4), "b", h, &Value::num(3.0), false, 2);
+        assert!(v.decided.is_some());
+        assert_eq!(v.record_late_vote("straggler", h), Some(true));
+        assert_eq!(v.record_late_vote("liar", canonical_hash(&Value::Null)), Some(false));
+        assert_eq!(v.record_late_vote("a", h), None, "repeat voter is not judged twice");
     }
 }

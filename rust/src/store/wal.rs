@@ -109,9 +109,10 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::store::sched::{LedgerSnapshot, StoreSnapshot, TicketSnapshot};
+use crate::store::ticket::{Rep, TicketVerify};
 use crate::store::{
-    IndexedStore, Progress, SchedStats, Scheduler, StoreConfig, TaskId, Ticket, TicketId,
-    TicketStatus,
+    IndexedStore, Progress, SchedStats, Scheduler, Standing, StoreConfig, TaskId, Ticket,
+    TicketId, TicketStatus, Verdict, VerifyStats, VoteOutcome,
 };
 use crate::util::json::Value;
 
@@ -157,6 +158,16 @@ const OP_CREATE_EXACT: u8 = 12;
 /// per-shard pick (deterministic given the shard's state) and
 /// cross-checks the ids.
 const OP_DISPATCH_SHARD: u8 = 13;
+/// One verification-layer vote (R > 1 only): `[now][client][ticket]
+/// [outcome u8][result json]`.  Replay re-runs the deterministic vote
+/// state machine and cross-checks the logged outcome discriminant.
+const OP_VOTE: u8 = 14;
+/// An attributed release (R > 1 only): `[client][n]` then `(id,
+/// released u8)` per entry.  R = 1 logs the legacy [`OP_RELEASE_BATCH`].
+const OP_RELEASE_FROM: u8 = 15;
+/// An attributed error report (R > 1 only): `[client][ticket][report]`.
+/// R = 1 logs the legacy [`OP_ERROR`].
+const OP_ERROR_FROM: u8 = 16;
 
 /// When the log is fsynced (appends always reach the OS immediately).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -325,6 +336,13 @@ impl<'a> Dec<'a> {
         Ok(())
     }
 
+    /// Bytes not yet decoded — optional trailing sections (verification
+    /// state) are present exactly when this is non-zero after the fixed
+    /// legacy layout has been consumed.
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
     /// Everything not yet decoded — the [`OP_SEQ`] envelope carries a
     /// whole inner record verbatim after its LSN.
     fn rest(&mut self) -> &'a [u8] {
@@ -339,15 +357,38 @@ fn encode_config(cfg: &StoreConfig) -> Enc {
     e.u64(cfg.requeue_after_ms);
     e.u64(cfg.min_redistribute_ms);
     e.u8(cfg.requeue_on_error as u8);
+    // The verification knobs appear only when the layer is active, so
+    // R = 1 config records stay byte-identical to the legacy layout.
+    if cfg.verifying() {
+        e.u32(cfg.replication);
+        e.u32(cfg.quorum);
+    }
     e
 }
 
+/// Decode the fixed legacy config fields; the verification knobs
+/// default to off.  Snapshot bodies use this form (more fields follow
+/// the config lead there, so trailing-presence is ambiguous — the
+/// snapshot carries its verify section at the very end instead).
 fn decode_config(d: &mut Dec) -> Result<StoreConfig> {
     Ok(StoreConfig {
         requeue_after_ms: d.u64()?,
         min_redistribute_ms: d.u64()?,
         requeue_on_error: d.u8()? != 0,
+        ..StoreConfig::default()
     })
+}
+
+/// Decode a standalone config *record*, whose payload is the config and
+/// nothing else: trailing bytes (written only at R > 1) carry the
+/// verification knobs.
+fn decode_config_record(d: &mut Dec) -> Result<StoreConfig> {
+    let mut cfg = decode_config(d)?;
+    if d.remaining() > 0 {
+        cfg.replication = d.u32()?;
+        cfg.quorum = d.u32()?;
+    }
+    Ok(cfg)
 }
 
 fn encode_option_u64(e: &mut Enc, v: Option<u64>) {
@@ -358,6 +399,80 @@ fn encode_option_u64(e: &mut Enc, v: Option<u64>) {
 fn decode_option_u64(d: &mut Dec) -> Result<Option<u64>> {
     let v = d.u64()?;
     Ok(if v == u64::MAX { None } else { Some(v) })
+}
+
+fn encode_verify(e: &mut Enc, v: &TicketVerify) {
+    e.u32(v.target);
+    e.u32(v.holders.len() as u32);
+    for h in &v.holders {
+        e.str(h);
+    }
+    e.u32(v.votes.len() as u32);
+    for (c, h) in &v.votes {
+        e.str(c);
+        e.u64(*h);
+    }
+    e.u32(v.values.len() as u32);
+    for (h, val) in &v.values {
+        e.u64(*h);
+        e.value(val);
+    }
+    match &v.decided {
+        None => e.u8(0),
+        Some(vd) => {
+            e.u8(1);
+            e.u64(vd.ticket.0);
+            e.u64(vd.hash);
+            e.u32(vd.winners.len() as u32);
+            for w in &vd.winners {
+                e.str(w);
+            }
+            e.u32(vd.losers.len() as u32);
+            for l in &vd.losers {
+                e.str(l);
+            }
+        }
+    }
+}
+
+fn decode_verify(d: &mut Dec) -> Result<TicketVerify> {
+    let target = d.u32()?;
+    let n = d.u32()? as usize;
+    let mut holders = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        holders.push(d.str()?);
+    }
+    let n = d.u32()? as usize;
+    let mut votes = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let c = d.str()?;
+        votes.push((c, d.u64()?));
+    }
+    let n = d.u32()? as usize;
+    let mut values = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let h = d.u64()?;
+        values.push((h, d.value()?));
+    }
+    let decided = match d.u8()? {
+        0 => None,
+        _ => {
+            let ticket = TicketId(d.u64()?);
+            let hash = d.u64()?;
+            let n = d.u32()? as usize;
+            let mut winners = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                winners.push(d.str()?);
+            }
+            let n = d.u32()? as usize;
+            let mut losers = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                losers.push(d.str()?);
+            }
+            Some(Verdict { ticket, hash, winners, losers })
+        }
+    };
+    Ok(TicketVerify { target, holders, votes, values, decided })
 }
 
 fn encode_snapshot(snap: &StoreSnapshot) -> Vec<u8> {
@@ -406,13 +521,39 @@ fn encode_snapshot(snap: &StoreSnapshot) -> Vec<u8> {
         e.u64(id.0);
         e.str(report);
     }
+    // Verification layer: a trailing section present only at R > 1.
+    // The legacy layout consumes the payload exactly, so the section's
+    // absence is unambiguous and R = 1 checkpoints stay byte-identical.
+    if snap.cfg.verifying() {
+        e.u32(snap.cfg.replication);
+        e.u32(snap.cfg.quorum);
+        let with_verify: Vec<&TicketSnapshot> =
+            snap.tickets.iter().filter(|t| t.verify.is_some()).collect();
+        e.u64(with_verify.len() as u64);
+        for t in with_verify {
+            e.u64(t.id);
+            encode_verify(&mut e, t.verify.as_ref().expect("filtered on Some"));
+        }
+        e.u64(snap.reps.len() as u64);
+        for (client, rep) in &snap.reps {
+            e.str(client);
+            e.u64(rep.score as u64);
+            encode_option_u64(&mut e, rep.quarantined_until);
+            e.u8(rep.ever_quarantined as u8);
+            e.u64(rep.votes_won);
+            e.u64(rep.votes_lost);
+        }
+        for c in snap.verify_counters {
+            e.u64(c);
+        }
+    }
     e.frame()
 }
 
 fn decode_snapshot(payload: &[u8]) -> Result<StoreSnapshot> {
     let mut d = Dec::new(payload);
     ensure!(d.u8()? == OP_CONFIG, "checkpoint payload must start with a config record");
-    let cfg = decode_config(&mut d)?;
+    let mut cfg = decode_config(&mut d)?;
     let next_id = d.u64()?;
     let redistributions = d.u64()?;
     let duplicate_results = d.u64()?;
@@ -449,6 +590,7 @@ fn decode_snapshot(payload: &[u8]) -> Result<StoreSnapshot> {
             status,
             last_distributed_ms,
             distribution_count,
+            verify: None,
         });
     }
     let n_ledgers = d.u64()?;
@@ -476,6 +618,45 @@ fn decode_snapshot(payload: &[u8]) -> Result<StoreSnapshot> {
         let id = TicketId(d.u64()?);
         errors.push((id, d.str()?));
     }
+    // Trailing verify section (R > 1 checkpoints only).
+    let mut reps: Vec<(String, Rep)> = Vec::new();
+    let mut verify_counters = [0u64; 5];
+    if d.remaining() > 0 {
+        cfg.replication = d.u32()?;
+        cfg.quorum = d.u32()?;
+        let n_verify = d.u64()?;
+        let mut by_id: BTreeMap<u64, TicketVerify> = BTreeMap::new();
+        for _ in 0..n_verify {
+            let id = d.u64()?;
+            by_id.insert(id, decode_verify(&mut d)?);
+        }
+        for t in &mut tickets {
+            if let Some(v) = by_id.remove(&t.id) {
+                t.verify = Some(v);
+            }
+        }
+        ensure!(
+            by_id.is_empty(),
+            "checkpoint carries verify state for {} unknown ticket(s)",
+            by_id.len()
+        );
+        let n_reps = d.u64()?;
+        for _ in 0..n_reps {
+            let client = d.str()?;
+            let score = d.u64()? as i64;
+            let quarantined_until = decode_option_u64(&mut d)?;
+            let ever_quarantined = d.u8()? != 0;
+            let votes_won = d.u64()?;
+            let votes_lost = d.u64()?;
+            reps.push((
+                client,
+                Rep { score, quarantined_until, ever_quarantined, votes_won, votes_lost },
+            ));
+        }
+        for c in &mut verify_counters {
+            *c = d.u64()?;
+        }
+    }
     d.done()?;
     Ok(StoreSnapshot {
         cfg,
@@ -487,6 +668,8 @@ fn decode_snapshot(payload: &[u8]) -> Result<StoreSnapshot> {
         tickets,
         ledgers,
         errors,
+        reps,
+        verify_counters,
     })
 }
 
@@ -938,7 +1121,7 @@ impl WalStore {
                 let head = frames.first().context("empty first segment: nothing to recover")?;
                 let mut d = Dec::new(head);
                 ensure!(d.u8()? == OP_CONFIG, "first WAL record must be a config record");
-                (first, IndexedStore::new(decode_config(&mut d)?))
+                (first, IndexedStore::new(decode_config_record(&mut d)?))
             }
         };
 
@@ -1060,7 +1243,7 @@ impl WalStore {
                 );
                 let mut d = Dec::new(&frames[0]);
                 ensure!(d.u8()? == OP_CONFIG, "first WAL record must be a config record");
-                let cfg = decode_config(&mut d)?;
+                let cfg = decode_config_record(&mut d)?;
                 let mut d = Dec::new(&frames[1]);
                 ensure!(
                     d.u8()? == OP_SHARDS,
@@ -1504,13 +1687,13 @@ impl WalStore {
         touched.sort_unstable();
         touched.dedup();
         let mut guards = self.lock_streams(&touched);
-        let (flags, stopped) = self.inner.complete_batch_flags(results);
+        let (flags, stopped) = self.inner.complete_batch_flags(results, None);
         // Log the applied prefix with its per-entry accepted flags; an
         // erroring entry was not applied and is not logged.
         if !flags.is_empty() {
             let mut e = Enc::new(OP_COMPLETE_BATCH);
             e.u32(flags.len() as u32);
-            for (i, accepted) in flags.iter().enumerate() {
+            for (i, (accepted, _)) in flags.iter().enumerate() {
                 e.u64(jsons[i].0);
                 e.u8(*accepted as u8);
                 e.str(&jsons[i].1);
@@ -1522,7 +1705,7 @@ impl WalStore {
         self.maybe_checkpoint_sharded();
         match stopped {
             Some(err) => Err(err),
-            None => Ok(flags.iter().filter(|&&f| f).count()),
+            None => Ok(flags.iter().filter(|f| f.0).count()),
         }
     }
 
@@ -1625,7 +1808,7 @@ fn replay_record(store: &IndexedStore, payload: &[u8]) -> Result<u64> {
     let mut d = Dec::new(payload);
     match d.u8()? {
         OP_CONFIG => {
-            let cfg = decode_config(&mut d)?;
+            let cfg = decode_config_record(&mut d)?;
             d.done()?;
             ensure!(
                 cfg == *store.config(),
@@ -1806,7 +1989,63 @@ fn replay_record(store: &IndexedStore, payload: &[u8]) -> Result<u64> {
             );
             Ok(1)
         }
+        OP_VOTE => {
+            let now_ms = d.u64()?;
+            let client = d.str()?;
+            let ticket = TicketId(d.u64()?);
+            let logged = d.u8()?;
+            let result = d.value()?;
+            d.done()?;
+            let out = store.vote(&client, ticket, result, now_ms)?;
+            let code = vote_code(&out);
+            ensure!(
+                code == logged,
+                "replayed vote on {ticket:?} by {client} gave outcome {code}, log says {logged}"
+            );
+            Ok(1)
+        }
+        OP_RELEASE_FROM => {
+            let client = d.str()?;
+            let n = d.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let id = TicketId(d.u64()?);
+                let released = d.u8()? != 0;
+                entries.push((id, released));
+            }
+            d.done()?;
+            let ids: Vec<TicketId> = entries.iter().map(|&(id, _)| id).collect();
+            let flags = store.release_batch_from(&client, &ids);
+            for (i, &(id, logged)) in entries.iter().enumerate() {
+                ensure!(
+                    flags[i] == logged,
+                    "replayed release of {id:?} from {client} released={}, log says {logged}",
+                    flags[i]
+                );
+            }
+            Ok(1)
+        }
+        OP_ERROR_FROM => {
+            let client = d.str()?;
+            let ticket = TicketId(d.u64()?);
+            let report = d.str()?;
+            d.done()?;
+            store.report_error_from(&client, ticket, report)?;
+            Ok(1)
+        }
         op => bail!("unknown WAL opcode {op}"),
+    }
+}
+
+/// Stable wire discriminant of a [`VoteOutcome`] for the replay
+/// cross-check (the verdict payload is re-derived, not logged).
+fn vote_code(o: &VoteOutcome) -> u8 {
+    match o {
+        VoteOutcome::Accepted { .. } => 0,
+        VoteOutcome::Pending => 1,
+        VoteOutcome::Duplicate { same_client: false } => 2,
+        VoteOutcome::Duplicate { same_client: true } => 3,
+        VoteOutcome::Repeat => 4,
     }
 }
 
@@ -1923,13 +2162,13 @@ impl Scheduler for WalStore {
             return self.sharded_complete_batch(results, &jsons);
         }
         let mut log = self.logs[0].lock().unwrap();
-        let (flags, stopped) = self.inner.complete_batch_flags(results);
+        let (flags, stopped) = self.inner.complete_batch_flags(results, None);
         // Log the applied prefix with its per-entry accepted flags; an
         // erroring entry was not applied and is not logged.
         if !flags.is_empty() {
             let mut e = Enc::new(OP_COMPLETE_BATCH);
             e.u32(flags.len() as u32);
-            for (i, accepted) in flags.iter().enumerate() {
+            for (i, (accepted, _)) in flags.iter().enumerate() {
                 e.u64(jsons[i].0);
                 e.u8(*accepted as u8);
                 e.str(&jsons[i].1);
@@ -1939,7 +2178,7 @@ impl Scheduler for WalStore {
         self.sync_completions(&mut log)?;
         match stopped {
             Some(err) => Err(err),
-            None => Ok(flags.iter().filter(|&&f| f).count()),
+            None => Ok(flags.iter().filter(|f| f.0).count()),
         }
     }
 
@@ -1954,6 +2193,194 @@ impl Scheduler for WalStore {
         self.inner.report_error(id, report)?;
         self.append(&mut log, e);
         Ok(())
+    }
+
+    fn vote(&self, client: &str, id: TicketId, result: Value, now_ms: u64) -> Result<VoteOutcome> {
+        let result_json = result.to_string();
+        if !self.inner.config().verifying() {
+            // R = 1: the vote *is* the legacy completion.  Log the exact
+            // OP_COMPLETE record the unattributed path writes, so R = 1
+            // transcripts stay byte-identical to pre-verification logs.
+            if self.logs.len() > 1 {
+                let mut log = self.logs[self.inner.dshard(id.0)].lock().unwrap();
+                let out = self.inner.vote(client, id, result, now_ms)?;
+                let mut e = Enc::new(OP_COMPLETE);
+                e.u64(id.0);
+                e.u8(matches!(out, VoteOutcome::Accepted { .. }) as u8);
+                e.str(&result_json);
+                self.append_stream(&mut log, e);
+                self.sync_completions(&mut log)?;
+                drop(log);
+                self.maybe_checkpoint_sharded();
+                return Ok(out);
+            }
+            let mut log = self.logs[0].lock().unwrap();
+            let out = self.inner.vote(client, id, result, now_ms)?;
+            let mut e = Enc::new(OP_COMPLETE);
+            e.u64(id.0);
+            e.u8(matches!(out, VoteOutcome::Accepted { .. }) as u8);
+            e.str(&result_json);
+            self.append(&mut log, e);
+            self.sync_completions(&mut log)?;
+            return Ok(out);
+        }
+        // R > 1: a vote can move cross-shard reputation state, so in
+        // the sharded layout its record must order against *every*
+        // stream (all locks held while the LSN is allocated), exactly
+        // like the drain-errors record.
+        let all: Vec<usize> = (0..self.logs.len()).collect();
+        let mut guards = self.lock_streams(&all);
+        let out = self.inner.vote(client, id, result, now_ms)?;
+        let mut e = Enc::new(OP_VOTE);
+        e.u64(now_ms);
+        e.str(client);
+        e.u64(id.0);
+        e.u8(vote_code(&out));
+        e.str(&result_json);
+        if self.logs.len() > 1 {
+            self.append_stream(&mut guards[0], e);
+            self.sync_completions(&mut guards[0])?;
+            drop(guards);
+            self.maybe_checkpoint_sharded();
+        } else {
+            self.append(&mut guards[0], e);
+            self.sync_completions(&mut guards[0])?;
+        }
+        Ok(out)
+    }
+
+    fn vote_batch(
+        &self,
+        client: &str,
+        results: Vec<(TicketId, Value)>,
+        now_ms: u64,
+    ) -> Result<Vec<VoteOutcome>> {
+        if self.inner.config().verifying() {
+            // R > 1: every ballot is its own replayable OP_VOTE record.
+            return results.into_iter().map(|(id, v)| self.vote(client, id, v, now_ms)).collect();
+        }
+        if results.is_empty() {
+            return Ok(Vec::new());
+        }
+        // R = 1: one OP_COMPLETE_BATCH record, byte-identical to the
+        // unattributed batch path (the logged flags do not depend on
+        // the voter; attribution lives only in memory).
+        let jsons: Vec<(u64, String)> =
+            results.iter().map(|(id, v)| (id.0, v.to_string())).collect();
+        let (flags, stopped) = if self.logs.len() > 1 {
+            let mut touched: Vec<usize> =
+                results.iter().map(|(id, _)| self.inner.dshard(id.0)).collect();
+            touched.sort_unstable();
+            touched.dedup();
+            let mut guards = self.lock_streams(&touched);
+            let (flags, stopped) = self.inner.complete_batch_flags(results, Some(client));
+            if !flags.is_empty() {
+                let mut e = Enc::new(OP_COMPLETE_BATCH);
+                e.u32(flags.len() as u32);
+                for (i, (accepted, _)) in flags.iter().enumerate() {
+                    e.u64(jsons[i].0);
+                    e.u8(*accepted as u8);
+                    e.str(&jsons[i].1);
+                }
+                self.append_stream(&mut guards[0], e);
+            }
+            self.sync_completions(&mut guards[0])?;
+            drop(guards);
+            self.maybe_checkpoint_sharded();
+            (flags, stopped)
+        } else {
+            let mut log = self.logs[0].lock().unwrap();
+            let (flags, stopped) = self.inner.complete_batch_flags(results, Some(client));
+            if !flags.is_empty() {
+                let mut e = Enc::new(OP_COMPLETE_BATCH);
+                e.u32(flags.len() as u32);
+                for (i, (accepted, _)) in flags.iter().enumerate() {
+                    e.u64(jsons[i].0);
+                    e.u8(*accepted as u8);
+                    e.str(&jsons[i].1);
+                }
+                self.append(&mut log, e);
+            }
+            self.sync_completions(&mut log)?;
+            (flags, stopped)
+        };
+        match stopped {
+            Some(err) => Err(err),
+            None => Ok(flags
+                .into_iter()
+                .map(|(accepted, same_client)| {
+                    if accepted {
+                        VoteOutcome::Accepted { verdict: None }
+                    } else {
+                        VoteOutcome::Duplicate { same_client }
+                    }
+                })
+                .collect()),
+        }
+    }
+
+    fn release_batch_from(&self, client: &str, ids: &[TicketId]) -> Vec<bool> {
+        if !self.inner.config().verifying() {
+            // R = 1: holder attribution is vacuous; log the legacy
+            // release record byte-identically.
+            return self.release_batch(ids);
+        }
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        let all: Vec<usize> = (0..self.logs.len()).collect();
+        let mut guards = self.lock_streams(&all);
+        let flags = self.inner.release_batch_from(client, ids);
+        let mut e = Enc::new(OP_RELEASE_FROM);
+        e.str(client);
+        e.u32(ids.len() as u32);
+        for (i, id) in ids.iter().enumerate() {
+            e.u64(id.0);
+            e.u8(flags[i] as u8);
+        }
+        if self.logs.len() > 1 {
+            self.append_stream(&mut guards[0], e);
+            drop(guards);
+            self.maybe_checkpoint_sharded();
+        } else {
+            self.append(&mut guards[0], e);
+        }
+        flags
+    }
+
+    fn report_error_from(&self, client: &str, id: TicketId, report: String) -> Result<()> {
+        if !self.inner.config().verifying() {
+            return self.report_error(id, report);
+        }
+        let all: Vec<usize> = (0..self.logs.len()).collect();
+        let mut guards = self.lock_streams(&all);
+        let mut e = Enc::new(OP_ERROR_FROM);
+        e.str(client);
+        e.u64(id.0);
+        e.str(&report);
+        self.inner.report_error_from(client, id, report)?;
+        if self.logs.len() > 1 {
+            self.append_stream(&mut guards[0], e);
+            drop(guards);
+            self.maybe_checkpoint_sharded();
+        } else {
+            self.append(&mut guards[0], e);
+        }
+        Ok(())
+    }
+
+    fn client_standing(&self, client: &str, now_ms: u64) -> Standing {
+        // Read-only surface (the lazy probation-expiry it may trigger is
+        // recomputed identically from `now_ms` after replay): not logged.
+        self.inner.client_standing(client, now_ms)
+    }
+
+    fn verify_stats(&self) -> VerifyStats {
+        self.inner.verify_stats()
+    }
+
+    fn quarantined_clients(&self) -> Vec<String> {
+        self.inner.quarantined_clients()
     }
 
     fn release(&self, id: TicketId) -> bool {
@@ -2034,7 +2461,12 @@ mod tests {
     use super::*;
 
     fn cfg() -> StoreConfig {
-        StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 100, requeue_on_error: true }
+        StoreConfig {
+            requeue_after_ms: 1000,
+            min_redistribute_ms: 100,
+            requeue_on_error: true,
+            ..StoreConfig::default()
+        }
     }
 
     fn temp_dir(tag: &str) -> PathBuf {

@@ -146,6 +146,7 @@ pub mod project {
                 requeue_after_ms: 10_000,
                 min_redistribute_ms: 1_000,
                 requeue_on_error: true,
+                ..StoreConfig::default()
             })
             .build();
         for (w, start) in (0..cfg.n_queries).step_by(qrows).enumerate() {

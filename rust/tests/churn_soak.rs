@@ -85,6 +85,53 @@ fn sharded_soak_loses_nothing_at_every_shard_count() {
     }
 }
 
+/// The CI adversarial quorum soak: `SoakConfig::adversarial_quick()` —
+/// the 1k-worker quick fleet with 20% wrong-result adversaries,
+/// verified at R = 3, quorum = 2 (DESIGN.md §2.8).  Quorum voting must
+/// let zero fabricated results reach the result set, quarantine every
+/// worker that actually lied, and still converge the sweep to the exact
+/// argmin — while keeping dispatch overhead within the 2.5x budget of
+/// the unverified baseline.
+#[test]
+fn adversarial_quick_soak_poisons_nothing() {
+    let baseline = run_soak(&SoakConfig::quick()).unwrap();
+
+    let cfg = SoakConfig::adversarial_quick();
+    assert_eq!(cfg.workers, 1_000);
+    assert_eq!((cfg.store_cfg.replication, cfg.store_cfg.quorum), (3, 2));
+    assert_eq!(cfg.adversary_wrong_permille, 200);
+    let r = run_soak(&cfg).unwrap();
+
+    // Zero lost tickets, even with a fifth of the fleet lying.
+    assert_eq!(r.done, r.total, "lost tickets: {}", r.total - r.done);
+    assert_eq!((r.pending, r.in_flight), (0, 0), "store not at rest");
+    assert_eq!(r.ghosts_after_close, 0);
+
+    // The adversaries showed up, lied, were outvoted, and none of their
+    // fabrications reached a completed ticket.
+    assert!(r.adversaries > 150, "only {} adversaries in a 20% mix", r.adversaries);
+    assert!(r.adversaries_lied > 0, "no adversary ever got to lie");
+    assert_eq!(r.poisoned_completions, 0, "fabricated results were accepted");
+    assert_eq!(
+        r.adversaries_quarantined, r.adversaries_lied,
+        "every worker that lied must end the run quarantined"
+    );
+    assert!(r.verify.verdicts as usize >= r.total, "every ticket needs a verdict");
+    assert!(r.verify.votes_flagged > 0, "outvoted ballots must be flagged");
+
+    // The sweep argmin is exact — no poisoned grid point shifted it.
+    assert_eq!(r.sweep_best, Some((3e-3, 1e-2)));
+
+    // The metrics JSON carries the verify block CI uploads.
+    assert!(r.metrics_json.contains("\"verify\":{\"replication\":3,\"quorum\":2"));
+    assert!(r.metrics_json.contains("\"poisoned_completions\":0"));
+
+    // Replication costs dispatches; the acceptance budget is 2.5x the
+    // unverified baseline (EXPERIMENTS.md §Verify).
+    let overhead = r.dispatched as f64 / baseline.dispatched as f64;
+    assert!(overhead <= 2.5, "dispatch overhead {overhead:.2}x exceeds the 2.5x budget");
+}
+
 /// The passive §2.1.2 baseline at smaller scale: vanished browsers
 /// strand tickets until window expiry, and stranding is bounded by the
 /// window (plus poll slack) — the soak-metrics counterpart of the

@@ -35,6 +35,7 @@ fn quiet_cfg() -> StoreConfig {
         requeue_after_ms: 1_000_000_000_000,
         min_redistribute_ms: 1_000_000_000_000,
         requeue_on_error: true,
+        ..StoreConfig::default()
     }
 }
 

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use sashimi::coordinator::{Distributor, DistributorConfig, Framework, Gateway, GatewayConfig};
-use sashimi::store::{Scheduler as _, StoreConfig, TaskId};
+use sashimi::store::{Scheduler as _, StoreConfig, TaskId, TicketId};
 use sashimi::tasks::is_prime::IsPrimeTask;
 use sashimi::tasks::{TaskContext, TaskDef, TaskOutput};
 use sashimi::transport::framing::{Framing as _, Inbound};
@@ -497,6 +497,193 @@ fn ws_peer_stalled_mid_frame_releases_within_two_heartbeats() {
     assert!(gw.stats.dead_peer_kills.load(Ordering::Relaxed) >= 1);
     assert_eq!(fw.store().progress(None).in_flight, 0);
     gw.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Byzantine workers (DESIGN.md §2.8): quorum result verification end to
+// end over real connections.  The store clock stays pinned at virtual 0
+// throughout — no redistribution window can elapse — so every decided
+// ticket below is proof of the vote machinery, and every refused
+// request proof of the quarantine gate.
+
+/// A pinned-clock framework with `n` prime tickets verified at the
+/// given replication/quorum, served by a distributor over a local
+/// endpoint.
+fn byzantine_fixture(
+    n: usize,
+    replication: u32,
+    quorum: u32,
+) -> (Arc<Framework>, TaskId, Arc<Distributor>, sashimi::transport::local::LocalConnector) {
+    let vclock = Arc::new(VirtualClock::new());
+    let fw = Framework::builder()
+        .clock(vclock)
+        .store_config(StoreConfig { replication, quorum, ..StoreConfig::default() })
+        .build();
+    let task = fw.create_task(Arc::new(IsPrimeTask));
+    task.calculate(
+        (0..n).map(|i| Value::obj(vec![("candidate", Value::num(i as f64 + 2.0))])).collect(),
+    );
+    let id = task.id;
+    let dist = Distributor::new(&fw);
+    let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
+    dist.serve(Box::new(listener));
+    (fw, id, dist, connector)
+}
+
+fn hello(connector: &sashimi::transport::local::LocalConnector, name: &str) -> local::LocalConn {
+    let mut c = connector.connect().unwrap();
+    c.send(&Message::Hello { client: name.into(), profile: "t".into() }).unwrap();
+    assert!(matches!(c.recv().unwrap(), Message::Ack));
+    c
+}
+
+fn take_one(c: &mut local::LocalConn) -> TicketId {
+    c.send(&Message::TicketRequest).unwrap();
+    match c.recv().unwrap() {
+        Message::Ticket { ticket, .. } => ticket,
+        m => panic!("expected a ticket, got {m:?}"),
+    }
+}
+
+fn vote(c: &mut local::LocalConn, ticket: TicketId, result: Value) {
+    c.send(&Message::TicketResult { ticket, result }).unwrap();
+    assert!(matches!(c.recv().unwrap(), Message::Ack));
+}
+
+/// One liar against an honest quorum at R = 3, Q = 2: the divergence
+/// recruits a fresh tie-breaker, the honest pair decides the ticket,
+/// the fabrication never completes anything, and the outvoted liar is
+/// flagged and quarantined — end to end over connections.
+#[test]
+fn byzantine_minority_is_outvoted_end_to_end() {
+    let (fw, task_id, dist, connector) = byzantine_fixture(1, 3, 2);
+    let mut liar = hello(&connector, "liar");
+    let mut h1 = hello(&connector, "h1");
+    let mut h2 = hello(&connector, "h2");
+
+    let t = take_one(&mut liar);
+    assert_eq!(take_one(&mut h1), t, "a verifying store recruits a second replica at once");
+
+    vote(&mut liar, t, Value::Bool(false)); // the fabrication
+    vote(&mut h1, t, Value::Bool(true));
+    assert_eq!(fw.store().progress(None).done, 0, "a 1-1 split must not decide");
+
+    // The divergence escalates: one fresh client is recruited.
+    assert_eq!(take_one(&mut h2), t, "divergence recruits a tie-breaker");
+    vote(&mut h2, t, Value::Bool(true));
+
+    let results = fw.store().wait_results_timeout(task_id, 5_000).unwrap();
+    assert_eq!(results, vec![Value::Bool(true)], "the honest quorum's value wins");
+    let vs = fw.store().verify_stats();
+    assert_eq!((vs.verdicts, vs.votes_flagged), (1, 1));
+    assert_eq!((vs.escalations, vs.quarantines), (1, 1));
+    assert_eq!(fw.store().quarantined_clients(), vec!["liar".to_string()]);
+
+    // The liar is served NoTicket for the rest of its probation.
+    liar.send(&Message::TicketRequest).unwrap();
+    assert!(matches!(liar.recv().unwrap(), Message::NoTicket { .. }));
+    assert_eq!(dist.stats.noticket_quarantined.load(Ordering::Relaxed), 1);
+}
+
+/// A client that prefetches a batch, answers one ticket wrongly enough
+/// to be quarantined, and sits on the rest: its next request is refused
+/// AND its held tickets are reclaimed in the same round trip, re-entering
+/// dispatch immediately (the PR 5 release path, driven by quarantine).
+#[test]
+fn quarantined_clients_held_tickets_release_on_its_next_request() {
+    let (fw, task_id, dist, connector) = byzantine_fixture(2, 3, 2);
+    let mut sly = hello(&connector, "sly");
+    let mut h1 = hello(&connector, "h1");
+    let mut h2 = hello(&connector, "h2");
+
+    // sly prefetches both tickets, lies on the second, holds the first.
+    sly.send(&Message::TicketBatchRequest { max: 2 }).unwrap();
+    let (t0, t1) = match sly.recv().unwrap() {
+        Message::Tickets { tickets } => {
+            assert_eq!(tickets.len(), 2);
+            (tickets[0].ticket, tickets[1].ticket)
+        }
+        m => panic!("expected tickets, got {m:?}"),
+    };
+    vote(&mut sly, t1, Value::Bool(false));
+
+    // The honest pair outvotes sly on t1; sly lands in quarantine.
+    assert_eq!(take_one(&mut h1), t0, "both tickets are still recruiting; lowest id first");
+    vote(&mut h1, t0, Value::Bool(true));
+    assert_eq!(take_one(&mut h2), t1);
+    vote(&mut h2, t1, Value::Bool(true));
+    assert_eq!(take_one(&mut h1), t1, "the t1 divergence recruits h1 as tie-breaker");
+    vote(&mut h1, t1, Value::Bool(true));
+    assert_eq!(fw.store().quarantined_clients(), vec!["sly".to_string()]);
+
+    // One request from quarantine: refused, and the held t0 reclaimed.
+    let released_before = dist.stats.tickets_released.load(Ordering::Relaxed);
+    sly.send(&Message::TicketRequest).unwrap();
+    assert!(matches!(sly.recv().unwrap(), Message::NoTicket { .. }));
+    assert_eq!(
+        dist.stats.tickets_released.load(Ordering::Relaxed),
+        released_before + 1,
+        "the quarantined client's held ticket is reclaimed in the refusing round trip"
+    );
+
+    // The reclaimed ticket is immediately dispatchable to honest peers.
+    assert_eq!(take_one(&mut h2), t0, "the reclaimed ticket re-enters dispatch at once");
+    vote(&mut h2, t0, Value::Bool(true));
+    let results = fw.store().wait_results_timeout(task_id, 5_000).unwrap();
+    assert_eq!(results, vec![Value::Bool(true), Value::Bool(true)]);
+}
+
+/// A colluding pair voting one identical fabrication at R = 3 with
+/// quorum 3: two matching lies stay below quorum forever, each full
+/// undecided round recruits another fresh client, and the honest
+/// majority eventually decides — both colluders flagged and
+/// quarantined, their value never completing the ticket.
+#[test]
+fn colluding_pair_below_quorum_never_completes() {
+    let (fw, task_id, dist, connector) = byzantine_fixture(1, 3, 3);
+    let mut c1 = hello(&connector, "c1");
+    let mut c2 = hello(&connector, "c2");
+    let mut h1 = hello(&connector, "h1");
+    let mut h2 = hello(&connector, "h2");
+    let mut h3 = hello(&connector, "h3");
+
+    let t = take_one(&mut c1);
+    assert_eq!(take_one(&mut c2), t);
+    assert_eq!(take_one(&mut h1), t);
+
+    // The colluders agree with each other — and stay below quorum.
+    vote(&mut c1, t, Value::Bool(false));
+    vote(&mut c2, t, Value::Bool(false));
+    assert_eq!(
+        fw.store().progress(None).done,
+        0,
+        "two matching fabrications below quorum must not complete the ticket"
+    );
+
+    // Each full undecided round recruits one more fresh client until
+    // the honest side reaches quorum.
+    vote(&mut h1, t, Value::Bool(true));
+    assert_eq!(take_one(&mut h2), t);
+    vote(&mut h2, t, Value::Bool(true));
+    assert_eq!(take_one(&mut h3), t);
+    vote(&mut h3, t, Value::Bool(true));
+
+    let results = fw.store().wait_results_timeout(task_id, 5_000).unwrap();
+    assert_eq!(results, vec![Value::Bool(true)]);
+    let vs = fw.store().verify_stats();
+    assert_eq!(vs.verdicts, 1);
+    assert_eq!(vs.votes_flagged, 2, "both colluders flagged by the verdict");
+    assert_eq!(vs.escalations, 2, "two full undecided rounds each recruited a tie-breaker");
+    assert_eq!(vs.quarantines, 2);
+    assert_eq!(
+        fw.store().quarantined_clients(),
+        vec!["c1".to_string(), "c2".to_string()]
+    );
+    for c in [&mut c1, &mut c2] {
+        c.send(&Message::TicketRequest).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::NoTicket { .. }));
+    }
+    assert_eq!(dist.stats.noticket_quarantined.load(Ordering::Relaxed), 2);
 }
 
 /// A WebSocket frame with RSV bits set (no extension was negotiated)

@@ -27,7 +27,7 @@ fn prime_framework(n: usize, cfg: StoreConfig) -> (Arc<Framework>, sashimi::stor
 /// ticket ... another client can execute the task."
 #[test]
 fn killed_client_tickets_are_redistributed() {
-    let cfg = StoreConfig { requeue_after_ms: 150, min_redistribute_ms: 50, requeue_on_error: true };
+    let cfg = StoreConfig { requeue_after_ms: 150, min_redistribute_ms: 50, requeue_on_error: true, ..StoreConfig::default() };
     let (fw, task_id) = prime_framework(30, cfg);
     let dist = Distributor::new(&fw);
     let (listener, connector) = local::endpoint(LinkModel::FAST_LAN, false);
@@ -100,7 +100,7 @@ fn poisoned_ticket_does_not_block_good_ones() {
     // requeue_on_error=false: the poisoned ticket waits out the timeout
     // instead of ping-ponging, so good tickets drain first.
     let cfg =
-        StoreConfig { requeue_after_ms: 400, min_redistribute_ms: 400, requeue_on_error: false };
+        StoreConfig { requeue_after_ms: 400, min_redistribute_ms: 400, requeue_on_error: false, ..StoreConfig::default() };
     let fw = Framework::builder().store_config(cfg).build();
     let task = fw.create_task(Arc::new(AlwaysFails));
     let mut payloads = vec![Value::obj(vec![("bad", Value::Bool(true))])];
@@ -159,7 +159,7 @@ impl sashimi::tasks::TaskDef for FixedCostTask {
 /// min-redistribute fallback, and first-result-wins dedups.
 #[test]
 fn straggler_is_raced_by_redistribution() {
-    let cfg = StoreConfig { requeue_after_ms: 250, min_redistribute_ms: 30, requeue_on_error: true };
+    let cfg = StoreConfig { requeue_after_ms: 250, min_redistribute_ms: 30, requeue_on_error: true, ..StoreConfig::default() };
     let fw = Framework::builder().store_config(cfg).build();
     let task = fw.create_task(Arc::new(FixedCostTask));
     task.calculate((0..12).map(|i| Value::num(i as f64)).collect());

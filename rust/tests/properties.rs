@@ -24,6 +24,7 @@ fn store_never_loses_or_duplicates_tickets() {
             requeue_after_ms: 50 + rng.gen_range(200),
             min_redistribute_ms: 1 + rng.gen_range(50),
             requeue_on_error: rng.gen_range(2) == 0,
+            ..StoreConfig::default()
         };
         let store = TicketStore::new(cfg);
         let n = 1 + rng.gen_range(20) as usize;
@@ -131,6 +132,7 @@ fn indexed_scheduler_matches_naive_reference() {
             requeue_after_ms: 20 + rng.gen_range(300),
             min_redistribute_ms: rng.gen_range(80),
             requeue_on_error: rng.gen_range(2) == 0,
+            ..StoreConfig::default()
         };
         let indexed = IndexedStore::with_shards(cfg.clone(), 1 + rng.gen_range(8) as usize);
         let naive = NaiveStore::new(cfg);
@@ -306,6 +308,145 @@ fn indexed_scheduler_matches_naive_reference() {
     });
 }
 
+/// Differential test for the result-verification layer (DESIGN.md
+/// §2.8): the indexed scheduler and the naive reference must agree
+/// vote-for-vote across random interleavings of dispatch, honest and
+/// fabricated ballots, attributed errors and releases, and clock
+/// advances, at R ∈ {1, 2, 3}.  Every observable is compared — vote
+/// outcomes, progress counters, verify counters, per-client standing,
+/// the quarantine ledger and the final result set.  The fabrications
+/// all share one value (the worst case: a corroborable lie), so quorum
+/// poisoning, flagging, escalation and quarantine all genuinely occur —
+/// the property is that both stores do them *identically*.
+#[test]
+fn quorum_voting_matches_naive_reference() {
+    check("verify-differential", 256, |rng| {
+        let replication = 1 + rng.gen_range(3) as u32;
+        let cfg = StoreConfig {
+            requeue_after_ms: 20 + rng.gen_range(300),
+            min_redistribute_ms: rng.gen_range(80),
+            requeue_on_error: rng.gen_range(2) == 0,
+            replication,
+            quorum: if replication == 1 { 1 } else { 2 },
+            ..StoreConfig::default()
+        };
+        let indexed = IndexedStore::with_shards(cfg.clone(), 1 + rng.gen_range(4) as usize);
+        let naive = NaiveStore::new(cfg);
+        let clients = ["c0", "c1", "c2", "c3", "c4"];
+        let mut now = 0u64;
+        let mut created: Vec<TicketId> = Vec::new();
+        for step in 0..200u64 {
+            match rng.gen_range(10) {
+                0 | 1 => {
+                    let n = 1 + rng.gen_range(3);
+                    let args: Vec<Value> =
+                        (0..n).map(|i| Value::num((step * 10 + i) as f64)).collect();
+                    let a = indexed.create_tickets(TaskId(1), "t", args.clone(), now);
+                    let b = naive.create_tickets(TaskId(1), "t", args, now);
+                    prop_assert!(a == b, "created ids diverge: {a:?} vs {b:?}");
+                    created.extend(a);
+                }
+                2 | 3 => {
+                    let client = clients[rng.gen_range(5) as usize];
+                    let a = indexed.next_ticket(client, now);
+                    let b = naive.next_ticket(client, now);
+                    prop_assert!(
+                        a == b,
+                        "dispatch diverges for {client} at t={now}: {a:?} vs {b:?}"
+                    );
+                }
+                4 | 5 | 6 => {
+                    // A ballot on a random known (sometimes unknown) id,
+                    // honest three times out of four.
+                    let id = if !created.is_empty() && rng.gen_range(8) != 0 {
+                        created[rng.gen_range(created.len() as u64) as usize]
+                    } else {
+                        TicketId(created.len() as u64 + 1_000)
+                    };
+                    let client = clients[rng.gen_range(5) as usize];
+                    let v = if rng.gen_range(4) == 0 {
+                        Value::num(id.0 as f64 + 10_000.0)
+                    } else {
+                        Value::num(id.0 as f64)
+                    };
+                    let a = indexed.vote(client, id, v.clone(), now);
+                    let b = naive.vote(client, id, v, now);
+                    prop_assert!(a.is_err() == b.is_err(), "vote error status diverges on {id:?}");
+                    if let (Ok(x), Ok(y)) = (a, b) {
+                        prop_assert!(x == y, "vote outcome diverges on {id:?}: {x:?} vs {y:?}");
+                    }
+                    let sa = indexed.client_standing(client, now);
+                    let sb = naive.client_standing(client, now);
+                    prop_assert!(sa == sb, "standing diverges for {client}: {sa:?} vs {sb:?}");
+                }
+                7 => {
+                    // Attributed error report or release from a random
+                    // client — the quarantine-sweep primitives.
+                    if !created.is_empty() {
+                        let id = created[rng.gen_range(created.len() as u64) as usize];
+                        let client = clients[rng.gen_range(5) as usize];
+                        if rng.gen_range(2) == 0 {
+                            let msg = format!("e{step}");
+                            indexed
+                                .report_error_from(client, id, msg.clone())
+                                .map_err(|e| e.to_string())?;
+                            naive.report_error_from(client, id, msg).map_err(|e| e.to_string())?;
+                        } else {
+                            let a = indexed.release_batch_from(client, &[id]);
+                            let b = naive.release_batch_from(client, &[id]);
+                            prop_assert!(
+                                a == b,
+                                "release_from diverges on {id:?}: {a:?} vs {b:?}"
+                            );
+                        }
+                    }
+                }
+                _ => now += rng.gen_range(150),
+            }
+            let (gp, gq) = (indexed.progress(None), naive.progress(None));
+            prop_assert!(gp == gq, "progress diverges at step {step}: {gp:?} vs {gq:?}");
+            let (va, vb) = (indexed.verify_stats(), naive.verify_stats());
+            prop_assert!(va == vb, "verify stats diverge at step {step}: {va:?} vs {vb:?}");
+        }
+        // Drain with a rotation of fresh honest clients — wider than the
+        // quorum, so same-client exclusion can never wedge a ticket.
+        let drainers = ["d0", "d1", "d2", "d3"];
+        'drain: for round in 0..20_000usize {
+            now += 31;
+            if indexed.is_task_done(TaskId(1)) {
+                break;
+            }
+            for k in 0..drainers.len() {
+                let d = drainers[(round + k) % drainers.len()];
+                let a = indexed.next_ticket(d, now);
+                let b = naive.next_ticket(d, now);
+                prop_assert!(a == b, "drain dispatch diverges for {d} at t={now}");
+                if let Some(t) = a {
+                    let v = Value::num(t.id.0 as f64);
+                    let x = indexed.vote(d, t.id, v.clone(), now).map_err(|e| e.to_string())?;
+                    let y = naive.vote(d, t.id, v, now).map_err(|e| e.to_string())?;
+                    prop_assert!(x == y, "drain vote diverges on {:?}: {x:?} vs {y:?}", t.id);
+                    continue 'drain;
+                }
+            }
+        }
+        prop_assert!(indexed.is_task_done(TaskId(1)), "drain left tickets unfinished");
+        prop_assert!(naive.is_task_done(TaskId(1)), "naive drain out of sync");
+        let a = indexed.wait_results_timeout(TaskId(1), 0);
+        let b = naive.wait_results_timeout(TaskId(1), 0);
+        prop_assert!(a == b, "collected results diverge (poisoning must be identical too)");
+        let (va, vb) = (indexed.verify_stats(), naive.verify_stats());
+        prop_assert!(va == vb, "final verify stats diverge: {va:?} vs {vb:?}");
+        prop_assert!(
+            indexed.quarantined_clients() == naive.quarantined_clients(),
+            "quarantine ledgers diverge"
+        );
+        let (ea, eb) = (indexed.drain_errors(), naive.drain_errors());
+        prop_assert!(ea == eb, "buffered error reports diverge");
+        Ok(())
+    });
+}
+
 /// Everything but the id/index (which live in per-store id spaces) must
 /// agree between a sharded pick and its per-shard oracle's pick.
 fn same_modulo_id(a: &Ticket, b: &Ticket) -> bool {
@@ -423,6 +564,7 @@ fn sharded_dispatch_matches_per_shard_naive_oracles() {
             requeue_after_ms: 20 + rng.gen_range(300),
             min_redistribute_ms: rng.gen_range(80),
             requeue_on_error: rng.gen_range(2) == 0,
+            ..StoreConfig::default()
         };
         let indexed = IndexedStore::with_layout(cfg.clone(), 1 + rng.gen_range(4) as usize, shards);
         let oracles: Vec<NaiveStore> = (0..shards).map(|_| NaiveStore::new(cfg.clone())).collect();
@@ -878,6 +1020,17 @@ fn churn_soak_same_seed_same_bytes() {
         cfg.mean_lifetime_ms = 5_000;
         // Half the reps soak the passive window-expiry baseline.
         cfg.release_on_disconnect = rng.gen_range(2) == 0;
+        // A third of the reps also soak the §2.8 verification layer
+        // with a random adversary mix — quorum voting, escalations and
+        // quarantines must not cost reproducibility.
+        if rng.gen_range(3) == 0 {
+            cfg.release_on_disconnect = true;
+            cfg.store_cfg.replication = 2 + rng.gen_range(2) as u32;
+            cfg.store_cfg.quorum = 2;
+            cfg.adversary_wrong_permille = rng.gen_range(250);
+            cfg.adversary_corrupt_permille = rng.gen_range(150);
+            cfg.adversary_collude_permille = rng.gen_range(150);
+        }
         let a = run_soak(&cfg).map_err(|e| e.to_string())?;
         let b = run_soak(&cfg).map_err(|e| e.to_string())?;
         prop_assert!(

@@ -190,6 +190,7 @@ fn recovered_store_is_differential_identical_to_uninterrupted_run() {
             requeue_after_ms: 20 + rng.gen_range(300),
             min_redistribute_ms: rng.gen_range(80),
             requeue_on_error: rng.gen_range(2) == 0,
+            ..StoreConfig::default()
         };
         let shards = [1usize, 2, 8][rng.gen_range(3) as usize];
         // Small segments and short checkpoint cadence so the suite also
@@ -293,6 +294,7 @@ fn recovery_survives_repeated_crashes() {
             requeue_after_ms: 50 + rng.gen_range(200),
             min_redistribute_ms: 1 + rng.gen_range(50),
             requeue_on_error: true,
+            ..StoreConfig::default()
         };
         let shards = [1usize, 2, 8][rng.gen_range(3) as usize];
         let wal_cfg = WalConfig {
@@ -334,6 +336,7 @@ fn sharded_crash_mid_stream_rotation_recovers() {
             requeue_after_ms: 50 + rng.gen_range(200),
             min_redistribute_ms: 1 + rng.gen_range(50),
             requeue_on_error: true,
+            ..StoreConfig::default()
         };
         let wal_cfg = WalConfig {
             sync: SyncPolicy::OsOnly,
@@ -423,7 +426,7 @@ fn sharded_crash_mid_stream_rotation_recovers() {
 /// durability policy (kept small — every record pays an fsync).
 #[test]
 fn every_record_fsync_recovers_exactly() {
-    let cfg = StoreConfig { requeue_after_ms: 100, min_redistribute_ms: 10, requeue_on_error: true };
+    let cfg = StoreConfig { requeue_after_ms: 100, min_redistribute_ms: 10, requeue_on_error: true, ..StoreConfig::default() };
     let wal_cfg = WalConfig {
         sync: SyncPolicy::EveryRecord,
         segment_max_bytes: 1 << 20,
@@ -461,7 +464,7 @@ fn every_record_fsync_recovers_exactly() {
 fn group_commit_completions_are_durable_before_ack() {
     let dir = temp_dir("ack");
     let cfg =
-        StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 10, requeue_on_error: true };
+        StoreConfig { requeue_after_ms: 1000, min_redistribute_ms: 10, requeue_on_error: true, ..StoreConfig::default() };
     // Flush interval far beyond the test horizon: only the ack path can
     // be fsyncing anything.
     // dispatch_shards stays 1: the ack contract is per *call*, and the
@@ -509,6 +512,7 @@ fn coordinator_restart_resumes_project_mid_dispatch() {
         requeue_after_ms: 50, // orphaned in-flight tickets redistribute fast
         min_redistribute_ms: 5,
         requeue_on_error: true,
+        ..StoreConfig::default()
     };
     let wal_cfg = WalConfig {
         sync: SyncPolicy::OsOnly,
