@@ -3,7 +3,7 @@
 
 ARTIFACTS := artifacts/manifest.json
 
-.PHONY: artifacts test bench bench-store fmt doc
+.PHONY: artifacts test bench bench-store fmt lint doc
 
 artifacts: $(ARTIFACTS)
 
@@ -23,6 +23,13 @@ bench-store:
 
 fmt:
 	cargo fmt --check
+
+# Repo-specific static pass (DESIGN.md §2.9): lock discipline,
+# determinism, SAFETY coverage, WAL replay parity.  The self-test run
+# first proves every rule still fires on its fixture.
+lint:
+	cargo run -p pallas-lint -- --self-test
+	cargo run -p pallas-lint
 
 # API docs, warning-free (the advisory CI step runs the same command).
 doc:

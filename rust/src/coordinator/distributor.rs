@@ -50,7 +50,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -60,6 +60,7 @@ use crate::store::{Scheduler, Standing, TicketId, VoteOutcome};
 use crate::tasks::{DatasetStore, Registry};
 use crate::transport::{Conn, Listener, Message, WireTicket};
 use crate::util::clock::{Clock, WallClock};
+use crate::util::lockcheck::{CheckedMutex, Rank};
 
 /// Per-client info shown on the console.
 #[derive(Debug, Clone, Default)]
@@ -147,7 +148,7 @@ pub struct Distributor {
     registry: Registry,
     datasets: Arc<DatasetStore>,
     pub stats: DistributorStats,
-    clients: Mutex<HashMap<String, ClientInfo>>,
+    clients: CheckedMutex<HashMap<String, ClientInfo>>,
     stop: AtomicBool,
     /// Hands out one [`ClientInfo::conn_seq`] per handled connection.
     next_conn_seq: AtomicU64,
@@ -213,7 +214,7 @@ impl Distributor {
             registry,
             datasets,
             stats: DistributorStats::default(),
-            clients: Mutex::new(HashMap::new()),
+            clients: CheckedMutex::new(Rank::distributor_clients(), HashMap::new()),
             stop: AtomicBool::new(false),
             next_conn_seq: AtomicU64::new(0),
             cfg,

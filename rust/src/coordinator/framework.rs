@@ -29,6 +29,7 @@ use crate::store::{Progress, Scheduler, StoreConfig, TaskId, TicketStore};
 use crate::tasks::{DatasetStore, Registry, TaskDef};
 use crate::util::clock::{Clock, WallClock};
 use crate::util::json::Value;
+use crate::util::lockcheck::{CheckedMutex, Rank};
 
 pub struct FrameworkBuilder {
     store_cfg: StoreConfig,
@@ -79,7 +80,7 @@ impl FrameworkBuilder {
         let next_task = store.max_task_id().map(|t| t.0 + 1).unwrap_or(1);
         Arc::new(Framework {
             store,
-            registry: Arc::new(std::sync::Mutex::new(self.registry)),
+            registry: Arc::new(CheckedMutex::new(Rank::framework_registry(), self.registry)),
             datasets: Arc::new(DatasetStore::new()),
             next_task: AtomicU64::new(next_task),
             clock: self.clock,
@@ -90,7 +91,7 @@ impl FrameworkBuilder {
 /// The running framework: ticket store + task registry + dataset store.
 pub struct Framework {
     store: Arc<dyn Scheduler>,
-    registry: Arc<std::sync::Mutex<Registry>>,
+    registry: Arc<CheckedMutex<Registry>>,
     datasets: Arc<DatasetStore>,
     next_task: AtomicU64,
     clock: Arc<dyn Clock>,

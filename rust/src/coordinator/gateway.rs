@@ -44,7 +44,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::{AsRawFd, FromRawFd, RawFd};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
@@ -54,6 +54,7 @@ use crate::transport::framing::{Framing, Inbound, LineFraming};
 use crate::transport::ws::{self, WsFraming};
 use crate::transport::Message;
 use crate::util::clock::now_ms;
+use crate::util::lockcheck::{CheckedMutex, Rank};
 
 /// Inbound buffer cap per connection (a dataset message is the largest
 /// legitimate document; anything past this is a protocol violation).
@@ -116,6 +117,8 @@ struct Epoll {
 
 impl Epoll {
     fn new() -> Result<Epoll> {
+        // SAFETY: epoll_create1 takes no pointers; any flag value is
+        // accepted by the kernel and errors surface as fd < 0.
         let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
         if fd < 0 {
             bail!("epoll_create1 failed: {}", std::io::Error::last_os_error());
@@ -125,6 +128,9 @@ impl Epoll {
 
     fn ctl(&self, op: i32, fd: RawFd, tok: u64, events: u32) -> Result<()> {
         let mut ev = sys::EpollEvent { events, data: tok };
+        // SAFETY: `ev` is a live, properly aligned EpollEvent for the
+        // duration of the call; the kernel only reads it during
+        // epoll_ctl and keeps no reference afterwards.
         let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
         if rc != 0 {
             bail!("epoll_ctl(op={op}) failed: {}", std::io::Error::last_os_error());
@@ -142,11 +148,18 @@ impl Epoll {
 
     fn del(&self, fd: RawFd) {
         let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        // SAFETY: `ev` is live and aligned for the call (pre-2.6.9
+        // kernels require a non-null event even for DEL); failure is
+        // benign here — the fd is being torn down anyway.
         unsafe { sys::epoll_ctl(self.fd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
     }
 
     /// Wait for events; EINTR counts as zero events.
     fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: i32) -> usize {
+        // SAFETY: `events` is a live mutable slice and the length
+        // passed as maxevents is exactly its capacity, so the kernel
+        // writes only within bounds; EpollEvent is plain-old-data, so
+        // partially filled tails stay valid.
         let rc = unsafe {
             sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
         };
@@ -160,6 +173,9 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is a valid epoll fd owned exclusively by
+        // this struct (created in `new`, never duplicated or exposed),
+        // and Drop runs once — no double-close, no use-after-close.
         unsafe { sys::close(self.fd) };
     }
 }
@@ -169,6 +185,8 @@ impl Drop for Epoll {
 /// this and skip when the environment cannot grant enough fds.
 pub fn raise_nofile_limit(want: u64) -> Result<u64> {
     let mut rl = sys::Rlimit { cur: 0, max: 0 };
+    // SAFETY: `rl` is a live, aligned Rlimit the kernel fills in; it
+    // holds no pointers, so any written value is valid.
     if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) } != 0 {
         bail!("getrlimit failed: {}", std::io::Error::last_os_error());
     }
@@ -177,6 +195,8 @@ pub fn raise_nofile_limit(want: u64) -> Result<u64> {
     }
     let target = want.min(rl.max);
     let newrl = sys::Rlimit { cur: target, max: rl.max };
+    // SAFETY: `newrl` is a live, aligned Rlimit read (not retained) by
+    // the kernel for the duration of the call.
     if unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &newrl) } != 0 {
         bail!("setrlimit to {target} failed: {}", std::io::Error::last_os_error());
     }
@@ -250,7 +270,7 @@ pub struct Gateway {
     waker: File,
     tcp_addr: Option<SocketAddr>,
     ws_addr: Option<SocketAddr>,
-    thread: Mutex<Option<JoinHandle<()>>>,
+    thread: CheckedMutex<Option<JoinHandle<()>>>,
 }
 
 impl Gateway {
@@ -274,10 +294,15 @@ impl Gateway {
         let tcp_l = tcp.map(bind_one).transpose()?;
         let ws_l = ws.map(bind_one).transpose()?;
 
+        // SAFETY: eventfd takes no pointers; errors surface as efd < 0.
         let efd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
         if efd < 0 {
             bail!("eventfd failed: {}", std::io::Error::last_os_error());
         }
+        // SAFETY: `efd` was just returned by a successful eventfd call,
+        // so it is a valid, open fd owned by nobody else; `File` takes
+        // sole ownership (the waker below is a dup'd clone, not a second
+        // owner of this fd).
         let wake_read = unsafe { File::from_raw_fd(efd) };
         let waker = wake_read.try_clone().context("cloning eventfd")?;
 
@@ -288,7 +313,7 @@ impl Gateway {
             waker,
             tcp_addr: tcp_l.as_ref().and_then(|l| l.local_addr().ok()),
             ws_addr: ws_l.as_ref().and_then(|l| l.local_addr().ok()),
-            thread: Mutex::new(None),
+            thread: CheckedMutex::new(Rank::gateway_thread(), None),
         });
         let reactor = Reactor {
             gw: Arc::clone(&gw),

@@ -39,6 +39,9 @@ pub struct Executable {
 // worker threads execute artifacts in parallel.
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
+// SAFETY: Runtime holds only the PJRT client (see above) and immutable
+// compile options; the PJRT C API permits concurrent compilation and
+// execution on one client, and no interior mutability is exposed.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 

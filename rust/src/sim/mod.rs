@@ -31,7 +31,7 @@
 //! tickets, zero ghost workers, bounded stranding).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -508,8 +508,8 @@ fn run_soak_in(cfg: &SoakConfig, wal_dir: &std::path::Path) -> Result<SoakReport
     // -- Bookkeeping.
     let mut latency = Histogram::new();
     let mut stranding = Histogram::new();
-    let mut dispatch_at: HashMap<TicketId, u64> = HashMap::new();
-    let mut strand_start: HashMap<TicketId, u64> = HashMap::new();
+    let mut dispatch_at: BTreeMap<TicketId, u64> = BTreeMap::new();
+    let mut strand_start: BTreeMap<TicketId, u64> = BTreeMap::new();
     let mut completed_by_class = vec![0u64; classes.len()];
     let mut workers_by_class = vec![0u64; classes.len()];
     for w in &fleet {

@@ -54,12 +54,12 @@ pub use sched::IndexedStore;
 pub use ticket::{canonical_hash, Standing, Ticket, TicketId, TicketStatus, Verdict, VoteOutcome};
 pub use wal::{SyncPolicy, WalConfig, WalStore};
 
-use std::sync::{Condvar, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::util::json::Value;
+use crate::util::lockcheck::{CheckedCondvar, CheckedMutexGuard};
 
 /// A millisecond timeout as a deadline; `None` when it overflows the
 /// platform clock — callers treat that as "wait forever".
@@ -72,10 +72,10 @@ pub(crate) fn deadline_after(timeout_ms: u64) -> Option<Instant> {
 /// guard after a (possibly spurious) wakeup.  Shared by both backends'
 /// `next_completion` / `wait_results_deadline` loops.
 pub(crate) fn wait_deadline<'a, T>(
-    cv: &Condvar,
-    guard: MutexGuard<'a, T>,
+    cv: &CheckedCondvar,
+    guard: CheckedMutexGuard<'a, T>,
     deadline: Option<Instant>,
-) -> Option<MutexGuard<'a, T>> {
+) -> Option<CheckedMutexGuard<'a, T>> {
     match deadline {
         None => Some(cv.wait(guard).unwrap()),
         Some(d) => {

@@ -21,7 +21,6 @@
 //! (`rust/tests/properties.rs`).
 
 use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -32,6 +31,7 @@ use crate::store::{
     TicketId, TicketStatus, Verdict, VerifyStats, VoteOutcome, ERROR_QUEUE_CAP,
 };
 use crate::util::json::Value;
+use crate::util::lockcheck::{CheckedCondvar, CheckedMutex, Rank};
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -116,14 +116,18 @@ impl Inner {
 /// Thread-safe ticket store with one global lock and linear scans.
 pub struct NaiveStore {
     cfg: StoreConfig,
-    inner: Mutex<Inner>,
+    inner: CheckedMutex<Inner>,
     /// Signalled on completions so waits can block without polling.
-    done_cv: Condvar,
+    done_cv: CheckedCondvar,
 }
 
 impl NaiveStore {
     pub fn new(cfg: StoreConfig) -> Self {
-        Self { cfg, inner: Mutex::new(Inner::default()), done_cv: Condvar::new() }
+        Self {
+            cfg,
+            inner: CheckedMutex::new(Rank::naive_inner(), Inner::default()),
+            done_cv: CheckedCondvar::new(),
+        }
     }
 
     /// Virtual created time of a ticket (the paper's ordering key).

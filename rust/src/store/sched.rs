@@ -48,21 +48,25 @@
 //! windows, first-result-wins) are unchanged because every ticket lives
 //! in exactly one shard.
 //!
-//! Lock discipline: no two of {dispatch-shard mutex, stripe lock,
-//! ledger mutex} are ever held at once, and no two dispatch-shard
-//! mutexes are ever held at once (batch paths drop the current shard's
-//! guard before locking the next; stealing uses `try_lock`), so there
-//! is no lock order to violate.  Consequence: per-task ledger counters
-//! may lag a dispatch decision by a few instructions; counters are kept
-//! as signed ints and clamped at the reporting edge, and every
-//! quiescent value is exact (asserted by the differential property
-//! suite against [`NaiveStore`]).
+//! Lock discipline: every lock here is a ranked
+//! [`lockcheck`](crate::util::lockcheck) wrapper — verify state, then
+//! dispatch shards, then body stripes, then the ledger registry, then
+//! per-task ledgers, and blocking acquisition must ascend (full table
+//! in `util::lockcheck`; debug builds panic on inversion).  Mostly the
+//! code holds one lock at a time: no two dispatch-shard mutexes are
+//! ever held at once (batch paths drop the current shard's guard
+//! before locking the next; stealing uses `try_lock`, the witness's
+//! escape hatch).  Consequence: per-task ledger counters may lag a
+//! dispatch decision by a few instructions; counters are kept as
+//! signed ints and clamped at the reporting edge, and every quiescent
+//! value is exact (asserted by the differential property suite against
+//! [`NaiveStore`]).
 //!
 //! [`NaiveStore`]: super::NaiveStore
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -73,6 +77,9 @@ use crate::store::{
     Ticket, TicketId, TicketStatus, Verdict, VerifyStats, VoteOutcome, ERROR_QUEUE_CAP,
 };
 use crate::util::json::Value;
+use crate::util::lockcheck::{
+    CheckedCondvar, CheckedMutex, CheckedMutexGuard, CheckedRwLock, Rank,
+};
 
 /// Default number of lock stripes for the ticket-body map.
 pub const DEFAULT_SHARDS: usize = 16;
@@ -236,10 +243,18 @@ struct LedgerState {
     completions: VecDeque<(usize, Value)>,
 }
 
-#[derive(Default)]
 struct TaskLedger {
-    state: Mutex<LedgerState>,
-    cv: Condvar,
+    state: CheckedMutex<LedgerState>,
+    cv: CheckedCondvar,
+}
+
+impl Default for TaskLedger {
+    fn default() -> Self {
+        TaskLedger {
+            state: CheckedMutex::new(Rank::task_ledger(), LedgerState::default()),
+            cv: CheckedCondvar::new(),
+        }
+    }
 }
 
 /// Virtual created time of a ticket (the paper's ordering key).  At
@@ -321,16 +336,17 @@ pub struct IndexedStore {
     next_id: AtomicU64,
     /// The dispatch shards; length is a power of two, ticket `id` maps
     /// to shard `id & shard_mask`.
-    dispatch: Vec<Mutex<ShardState>>,
+    dispatch: Vec<CheckedMutex<ShardState>>,
     shard_mask: u64,
-    shards: Vec<RwLock<HashMap<u64, StoredTicket>>>,
-    ledgers: RwLock<HashMap<TaskId, Arc<TaskLedger>>>,
+    shards: Vec<CheckedRwLock<HashMap<u64, StoredTicket>>>,
+    ledgers: CheckedRwLock<HashMap<TaskId, Arc<TaskLedger>>>,
     /// Cumulative reports ever recorded (drain-proof, shown on console).
     errors_reported: AtomicUsize,
     /// Reputation + verification counters (R > 1; untouched at R = 1).
-    /// Lock order: this mutex is outermost — taken before any dispatch
-    /// shard mutex, never after one.
-    verify: Mutex<VerifyState>,
+    /// Lock order: this mutex is outermost among the in-store locks —
+    /// taken before any dispatch shard mutex, never after one (rank
+    /// `verify_state`, enforced by the lockcheck witness).
+    verify: CheckedMutex<VerifyState>,
     // Contention observability (ISSUE 7): surfaced by `stats()`.
     dispatch_locks: AtomicU64,
     steal_attempts: AtomicU64,
@@ -375,12 +391,16 @@ impl IndexedStore {
         Self {
             cfg,
             next_id: AtomicU64::new(0),
-            dispatch: (0..d).map(|_| Mutex::new(ShardState::default())).collect(),
+            dispatch: (0..d)
+                .map(|i| CheckedMutex::new(Rank::dispatch_shard(i), ShardState::default()))
+                .collect(),
             shard_mask: (d - 1) as u64,
-            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
-            ledgers: RwLock::new(HashMap::new()),
+            shards: (0..n)
+                .map(|i| CheckedRwLock::new(Rank::body_stripe(i), HashMap::new()))
+                .collect(),
+            ledgers: CheckedRwLock::new(Rank::ledger_registry(), HashMap::new()),
             errors_reported: AtomicUsize::new(0),
-            verify: Mutex::new(VerifyState::default()),
+            verify: CheckedMutex::new(Rank::verify_state(), VerifyState::default()),
             dispatch_locks: AtomicU64::new(0),
             steal_attempts: AtomicU64::new(0),
             steal_successes: AtomicU64::new(0),
@@ -430,7 +450,7 @@ impl IndexedStore {
         (h & self.shard_mask) as usize
     }
 
-    fn shard(&self, id: u64) -> &RwLock<HashMap<u64, StoredTicket>> {
+    fn shard(&self, id: u64) -> &CheckedRwLock<HashMap<u64, StoredTicket>> {
         &self.shards[id as usize % self.shards.len()]
     }
 
@@ -849,7 +869,7 @@ impl IndexedStore {
         let mut pendings: Vec<bool> = Vec::with_capacity(entries.len());
         {
             let mut cur_shard = usize::MAX;
-            let mut guard: Option<MutexGuard<'_, ShardState>> = None;
+            let mut guard: Option<CheckedMutexGuard<'_, ShardState>> = None;
             for (id, value, _, _, _) in &entries {
                 let sh = self.dshard(id.0);
                 if sh != cur_shard {
@@ -1559,7 +1579,7 @@ impl Scheduler for IndexedStore {
         // before the next shard's lock is taken.
         let flags: Vec<bool> = {
             let mut cur_shard = usize::MAX;
-            let mut guard: Option<MutexGuard<'_, ShardState>> = None;
+            let mut guard: Option<CheckedMutexGuard<'_, ShardState>> = None;
             ids.iter()
                 .map(|&id| {
                     let sh = self.dshard(id.0);
@@ -1623,7 +1643,7 @@ impl Scheduler for IndexedStore {
         let mut moved: Vec<bool> = Vec::with_capacity(ids.len());
         let released: Vec<bool> = {
             let mut cur_shard = usize::MAX;
-            let mut guard: Option<MutexGuard<'_, ShardState>> = None;
+            let mut guard: Option<CheckedMutexGuard<'_, ShardState>> = None;
             ids.iter()
                 .map(|&id| {
                     let sh = self.dshard(id.0);

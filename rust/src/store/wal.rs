@@ -102,7 +102,7 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -115,6 +115,7 @@ use crate::store::{
     TicketId, TicketStatus, Verdict, VerifyStats, VoteOutcome,
 };
 use crate::util::json::Value;
+use crate::util::lockcheck::{CheckedMutex, CheckedMutexGuard, Rank};
 
 /// Segment header: magic + format version.
 const SEGMENT_MAGIC: [u8; 8] = *b"SWAL\x01\0\0\0";
@@ -968,7 +969,7 @@ pub struct WalStore {
     /// several shards locks every touched stream in ascending index
     /// order (the global ordering that makes multi-stream ops
     /// deadlock-free) and appends one record to the lowest one.
-    logs: Vec<Arc<Mutex<LogWriter>>>,
+    logs: Vec<Arc<CheckedMutex<LogWriter>>>,
     /// Global log-sequence-number allocator (sharded layout only).
     /// Every sharded record carries its LSN in an [`OP_SEQ`] envelope;
     /// recovery merges the stream tails in LSN order, which equals the
@@ -986,7 +987,7 @@ pub struct WalStore {
     wal_cfg: WalConfig,
     dir: PathBuf,
     stop_flusher: Arc<AtomicBool>,
-    flusher: Mutex<Option<JoinHandle<()>>>,
+    flusher: CheckedMutex<Option<JoinHandle<()>>>,
     /// Set by the group-commit flusher when an fsync fails; mutating
     /// ops refuse to proceed once durability is gone.
     sync_failed: Arc<AtomicBool>,
@@ -1363,8 +1364,11 @@ impl WalStore {
         dir: &Path,
         records_since_ckpt: u64,
     ) -> WalStore {
-        let logs: Vec<Arc<Mutex<LogWriter>>> =
-            writers.into_iter().map(|w| Arc::new(Mutex::new(w))).collect();
+        let logs: Vec<Arc<CheckedMutex<LogWriter>>> = writers
+            .into_iter()
+            .enumerate()
+            .map(|(i, w)| Arc::new(CheckedMutex::new(Rank::wal_stream(i), w)))
+            .collect();
         let stop_flusher = Arc::new(AtomicBool::new(false));
         let sync_failed = Arc::new(AtomicBool::new(false));
         let flusher = match wal_cfg.sync {
@@ -1373,6 +1377,10 @@ impl WalStore {
                 let stop = Arc::clone(&stop_flusher);
                 let failed = Arc::clone(&sync_failed);
                 Some(std::thread::spawn(move || {
+                    // Wall clock on purpose (pallas-lint allow-listed):
+                    // fsync pacing batches real disk I/O and never
+                    // orders records — log order is fixed under the
+                    // stream locks, so transcripts stay seed-pure.
                     let mut last = Instant::now();
                     while !stop.load(Ordering::Relaxed) {
                         // Sleep in short slices so Drop joins promptly.
@@ -1405,7 +1413,7 @@ impl WalStore {
             wal_cfg,
             dir: dir.to_path_buf(),
             stop_flusher,
-            flusher: Mutex::new(flusher),
+            flusher: CheckedMutex::new(Rank::wal_flusher(), flusher),
             sync_failed,
             remove_dir_on_drop: false,
         }
@@ -1471,7 +1479,7 @@ impl WalStore {
 
     /// Lock the stream mutexes for `touched` (ascending, deduped) — the
     /// global ordering that keeps multi-stream ops deadlock-free.
-    fn lock_streams(&self, touched: &[usize]) -> Vec<MutexGuard<'_, LogWriter>> {
+    fn lock_streams(&self, touched: &[usize]) -> Vec<CheckedMutexGuard<'_, LogWriter>> {
         touched.iter().map(|&s| self.logs[s].lock().unwrap()).collect()
     }
 

@@ -1,0 +1,630 @@
+//! Ranked lock wrappers: the lock-ordering rules of DESIGN.md §2.6/§2.9
+//! as an executable, debug-build runtime witness.
+//!
+//! Every long-lived lock in the store, WAL and coordinator is built as a
+//! [`CheckedMutex`] / [`CheckedRwLock`] carrying a [`Rank`].  In release
+//! builds the wrappers are passthroughs over `std::sync`; in debug
+//! builds (`cfg(debug_assertions)` — the profile every tier-1 `cargo
+//! test` run uses) each thread keeps a stack of the ranks it currently
+//! holds, and a **blocking** acquire panics unless the new rank is
+//! strictly greater than every rank already held.  Since "some thread
+//! blocks while holding a lock another thread wants, and vice versa" is
+//! exactly a rank cycle, a clean debug test suite is a machine-checked
+//! proof that the suite exercised no deadlock-capable interleaving.
+//!
+//! `try_lock` / `try_read` / `try_write` are the escape hatch: they
+//! record the acquired rank (so later blocking acquires still see it)
+//! but never assert ordering, because a failed probe is dropped, not
+//! waited on — the work-stealing scans in `sched.rs` / `wal.rs` probe
+//! lower-ranked shards by design and cannot deadlock.
+//!
+//! # Rank table
+//!
+//! The order is the *observed* nesting of the code (verified by the
+//! debug test suite), outermost first.  Note it deliberately corrects
+//! the pre-PR-10 prose in DESIGN.md §2.6, which described the verify
+//! mutex as outermost: in reality every sharded WAL operation holds its
+//! stream lock(s) **across** the inner store call, so WAL streams are
+//! the outermost store-side rank.
+//!
+//! | level | rank constructor          | lock                                            |
+//! |-------|---------------------------|-------------------------------------------------|
+//! | 0     | [`Rank::wal_flusher`]     | `WalStore.flusher` (group-commit thread handle) |
+//! | 1.i   | [`Rank::wal_stream`]      | `WalStore.logs[i]`, ascending stream index      |
+//! | 2     | [`Rank::verify_state`]    | `IndexedStore.verify` (quorum state)            |
+//! | 3.i   | [`Rank::dispatch_shard`]  | `IndexedStore.dispatch[i]`, ascending shard     |
+//! | 4.i   | [`Rank::body_stripe`]     | `IndexedStore.shards[i]` (ticket-body stripes)  |
+//! | 5     | [`Rank::ledger_registry`] | `IndexedStore.ledgers` (task → ledger map)      |
+//! | 6     | [`Rank::task_ledger`]     | `TaskLedger.state` (per-task results + condvar) |
+//! | 7     | [`Rank::naive_inner`]     | `NaiveStore.inner` (reference store, one lock)  |
+//! | 8.i   | coordinator ranks         | distributor `clients` / framework registry /    |
+//! |       |                           | gateway thread handle — never held across a     |
+//! |       |                           | store call, pinned innermost so holding one     |
+//! |       |                           | over a blocking store acquire fails loudly      |
+//!
+//! Within a level the low 32 bits are the shard/stream index, so
+//! ascending-index multi-acquisition (`WalStore::lock_streams`) is
+//! legal and any descending blocking acquisition panics.
+//!
+//! The static half of the contract lives in `tools/pallas-lint`: raw
+//! `std::sync` lock construction in `store/`, `coordinator/` and
+//! `transport/` is a lint error, so new locks must come through here
+//! and name a rank.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::mem::ManuallyDrop;
+use std::sync::{
+    Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard, TryLockError, TryLockResult, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Ranks
+// ---------------------------------------------------------------------------
+
+/// A position in the global lock order: `(level << 32) | index`.
+/// Compared as the packed key; the label only decorates panics.
+#[derive(Clone, Copy)]
+pub struct Rank {
+    key: u64,
+    label: &'static str,
+}
+
+impl Rank {
+    const fn new(level: u32, index: u32, label: &'static str) -> Rank {
+        Rank { key: ((level as u64) << 32) | index as u64, label }
+    }
+
+    /// `WalStore.flusher` — the group-commit thread's join handle.
+    pub const fn wal_flusher() -> Rank {
+        Rank::new(0, 0, "wal-flusher-handle")
+    }
+
+    /// `WalStore.logs[i]` — per-shard WAL stream writers, held across
+    /// the inner store call (the outermost store-side rank); multi-
+    /// stream ops acquire in ascending index order.
+    pub const fn wal_stream(i: usize) -> Rank {
+        Rank::new(1, i as u32, "wal-stream")
+    }
+
+    /// `IndexedStore.verify` — the quorum/reputation state, taken under
+    /// the stream locks and held across a dispatch-shard acquire in
+    /// `vote()`.
+    pub const fn verify_state() -> Rank {
+        Rank::new(2, 0, "verify-state")
+    }
+
+    /// `IndexedStore.dispatch[i]` — one blocking home acquire per
+    /// operation; non-home shards are only ever `try_lock` probed.
+    pub const fn dispatch_shard(i: usize) -> Rank {
+        Rank::new(3, i as u32, "dispatch-shard")
+    }
+
+    /// `IndexedStore.shards[i]` — ticket-body stripe RwLocks.
+    pub const fn body_stripe(i: usize) -> Rank {
+        Rank::new(4, i as u32, "body-stripe")
+    }
+
+    /// `IndexedStore.ledgers` — the task → ledger registry RwLock,
+    /// held (read) across per-ledger acquires in `snapshot()`.
+    pub const fn ledger_registry() -> Rank {
+        Rank::new(5, 0, "ledger-registry")
+    }
+
+    /// `TaskLedger.state` — per-task result ledgers (innermost store
+    /// rank; the completion condvars wait on these).
+    pub const fn task_ledger() -> Rank {
+        Rank::new(6, 0, "task-ledger")
+    }
+
+    /// `NaiveStore.inner` — the reference store's single lock.
+    pub const fn naive_inner() -> Rank {
+        Rank::new(7, 0, "naive-inner")
+    }
+
+    /// `Distributor.clients` — per-client counters; never held across a
+    /// store call (innermost band makes the reverse a loud failure).
+    pub const fn distributor_clients() -> Rank {
+        Rank::new(8, 0, "distributor-clients")
+    }
+
+    /// `Framework.registry` — task registry snapshots.
+    pub const fn framework_registry() -> Rank {
+        Rank::new(8, 1, "framework-registry")
+    }
+
+    /// `Gateway.thread` — the reactor thread's join handle.
+    pub const fn gateway_thread() -> Rank {
+        Rank::new(8, 2, "gateway-thread")
+    }
+
+    /// Ad-hoc rank for tests and fixtures.
+    pub const fn test(level: u32, index: u32) -> Rank {
+        Rank::new(level, index, "test")
+    }
+
+    fn level(self) -> u32 {
+        (self.key >> 32) as u32
+    }
+
+    fn index(self) -> u32 {
+        self.key as u32
+    }
+}
+
+impl fmt::Debug for Rank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}.{}]", self.label, self.level(), self.index())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The witness (debug builds only)
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks this thread currently holds, in acquisition order (guards
+    /// may drop out of order; release removes the last occurrence).
+    static HELD: RefCell<Vec<Rank>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Record an acquisition.  `blocking` acquires assert the rank is
+/// strictly greater than everything already held — the ordering proof;
+/// try-acquires only record, because a failed probe never waits.
+#[cfg(debug_assertions)]
+fn witness_acquire(rank: Rank, blocking: bool) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if blocking {
+            if let Some(&worst) = held.iter().max_by_key(|r| r.key) {
+                assert!(
+                    rank.key > worst.key,
+                    "lock rank inversion: blocking acquire of {rank:?} while holding {worst:?} \
+                     (full stack: {:?}) — see util::lockcheck rank table",
+                    &held[..],
+                );
+            }
+        }
+        held.push(rank);
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn witness_acquire(_rank: Rank, _blocking: bool) {}
+
+#[cfg(debug_assertions)]
+fn witness_release(rank: Rank) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|r| r.key == rank.key) {
+            held.remove(pos);
+        }
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn witness_release(_rank: Rank) {}
+
+/// Number of checked locks the current thread holds (debug builds;
+/// always 0 in release).  Test hook.
+pub fn held_count() -> usize {
+    #[cfg(debug_assertions)]
+    {
+        HELD.with(|h| h.borrow().len())
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CheckedMutex
+// ---------------------------------------------------------------------------
+
+/// A `std::sync::Mutex` that knows its place in the global lock order.
+pub struct CheckedMutex<T: ?Sized> {
+    rank: Rank,
+    inner: Mutex<T>,
+}
+
+impl<T> CheckedMutex<T> {
+    pub const fn new(rank: Rank, value: T) -> CheckedMutex<T> {
+        CheckedMutex { rank, inner: Mutex::new(value) }
+    }
+}
+
+impl<T: ?Sized> CheckedMutex<T> {
+    /// Blocking acquire; panics (debug builds) on rank inversion.  The
+    /// check runs *before* blocking, so an inversion fails loudly
+    /// instead of deadlocking first.
+    pub fn lock(&self) -> LockResult<CheckedMutexGuard<'_, T>> {
+        witness_acquire(self.rank, true);
+        match self.inner.lock() {
+            Ok(g) => Ok(CheckedMutexGuard::wrap(self.rank, g)),
+            Err(p) => Err(PoisonError::new(CheckedMutexGuard::wrap(self.rank, p.into_inner()))),
+        }
+    }
+
+    /// Non-blocking probe: records the rank but never asserts order
+    /// (the work-stealing escape hatch).
+    pub fn try_lock(&self) -> TryLockResult<CheckedMutexGuard<'_, T>> {
+        match self.inner.try_lock() {
+            Ok(g) => {
+                witness_acquire(self.rank, false);
+                Ok(CheckedMutexGuard::wrap(self.rank, g))
+            }
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            Err(TryLockError::Poisoned(p)) => {
+                witness_acquire(self.rank, false);
+                Err(TryLockError::Poisoned(PoisonError::new(CheckedMutexGuard::wrap(
+                    self.rank,
+                    p.into_inner(),
+                ))))
+            }
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for CheckedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CheckedMutex").field("rank", &self.rank).field("inner", &self.inner).finish()
+    }
+}
+
+/// Guard for [`CheckedMutex`]; pops its rank from the witness on drop.
+pub struct CheckedMutexGuard<'a, T: ?Sized> {
+    rank: Rank,
+    inner: ManuallyDrop<MutexGuard<'a, T>>,
+}
+
+impl<'a, T: ?Sized> CheckedMutexGuard<'a, T> {
+    fn wrap(rank: Rank, inner: MutexGuard<'a, T>) -> CheckedMutexGuard<'a, T> {
+        CheckedMutexGuard { rank, inner: ManuallyDrop::new(inner) }
+    }
+
+    /// Dismantle without running `Drop` (the condvar handoff): the
+    /// caller takes the raw guard and responsibility for the witness.
+    fn into_parts(self) -> (Rank, MutexGuard<'a, T>) {
+        let mut me = ManuallyDrop::new(self);
+        // SAFETY: `me` is wrapped in ManuallyDrop so CheckedMutexGuard's
+        // Drop never runs; the inner guard is moved out exactly once here.
+        let g = unsafe { ManuallyDrop::take(&mut me.inner) };
+        (me.rank, g)
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for CheckedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for CheckedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T: ?Sized> Drop for CheckedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        witness_release(self.rank);
+        // SAFETY: the guard is only constructed around a live inner
+        // guard, `into_parts` skips this Drop entirely (ManuallyDrop
+        // wrap), and Drop runs at most once — so the inner guard is
+        // still initialised and is dropped exactly once.
+        unsafe { ManuallyDrop::drop(&mut self.inner) };
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for CheckedMutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CheckedCondvar
+// ---------------------------------------------------------------------------
+
+/// A `Condvar` that waits on [`CheckedMutex`] guards.  The held rank is
+/// popped for the duration of the wait (the mutex really is released)
+/// and re-recorded — with the full ordering check — on wakeup.
+pub struct CheckedCondvar {
+    inner: Condvar,
+}
+
+impl CheckedCondvar {
+    pub const fn new() -> CheckedCondvar {
+        CheckedCondvar { inner: Condvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        guard: CheckedMutexGuard<'a, T>,
+    ) -> LockResult<CheckedMutexGuard<'a, T>> {
+        let (rank, inner) = guard.into_parts();
+        witness_release(rank);
+        match self.inner.wait(inner) {
+            Ok(g) => {
+                witness_acquire(rank, true);
+                Ok(CheckedMutexGuard::wrap(rank, g))
+            }
+            Err(p) => {
+                witness_acquire(rank, true);
+                Err(PoisonError::new(CheckedMutexGuard::wrap(rank, p.into_inner())))
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: CheckedMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(CheckedMutexGuard<'a, T>, WaitTimeoutResult)> {
+        let (rank, inner) = guard.into_parts();
+        witness_release(rank);
+        match self.inner.wait_timeout(inner, dur) {
+            Ok((g, timed_out)) => {
+                witness_acquire(rank, true);
+                Ok((CheckedMutexGuard::wrap(rank, g), timed_out))
+            }
+            Err(p) => {
+                witness_acquire(rank, true);
+                let (g, timed_out) = p.into_inner();
+                Err(PoisonError::new((CheckedMutexGuard::wrap(rank, g), timed_out)))
+            }
+        }
+    }
+}
+
+impl Default for CheckedCondvar {
+    fn default() -> CheckedCondvar {
+        CheckedCondvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CheckedRwLock
+// ---------------------------------------------------------------------------
+
+/// A `std::sync::RwLock` that knows its place in the global lock order.
+/// Read and write acquires carry the same rank: the witness proves
+/// ordering, not reader/writer exclusion (std already does that).
+pub struct CheckedRwLock<T: ?Sized> {
+    rank: Rank,
+    inner: RwLock<T>,
+}
+
+impl<T> CheckedRwLock<T> {
+    pub const fn new(rank: Rank, value: T) -> CheckedRwLock<T> {
+        CheckedRwLock { rank, inner: RwLock::new(value) }
+    }
+}
+
+impl<T: ?Sized> CheckedRwLock<T> {
+    pub fn read(&self) -> LockResult<CheckedRwLockReadGuard<'_, T>> {
+        witness_acquire(self.rank, true);
+        match self.inner.read() {
+            Ok(g) => Ok(CheckedRwLockReadGuard { rank: self.rank, inner: ManuallyDrop::new(g) }),
+            Err(p) => Err(PoisonError::new(CheckedRwLockReadGuard {
+                rank: self.rank,
+                inner: ManuallyDrop::new(p.into_inner()),
+            })),
+        }
+    }
+
+    pub fn write(&self) -> LockResult<CheckedRwLockWriteGuard<'_, T>> {
+        witness_acquire(self.rank, true);
+        match self.inner.write() {
+            Ok(g) => Ok(CheckedRwLockWriteGuard { rank: self.rank, inner: ManuallyDrop::new(g) }),
+            Err(p) => Err(PoisonError::new(CheckedRwLockWriteGuard {
+                rank: self.rank,
+                inner: ManuallyDrop::new(p.into_inner()),
+            })),
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for CheckedRwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CheckedRwLock")
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Shared guard for [`CheckedRwLock`].
+pub struct CheckedRwLockReadGuard<'a, T: ?Sized> {
+    rank: Rank,
+    inner: ManuallyDrop<RwLockReadGuard<'a, T>>,
+}
+
+impl<T: ?Sized> std::ops::Deref for CheckedRwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ?Sized> Drop for CheckedRwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        witness_release(self.rank);
+        // SAFETY: constructed around a live inner guard and Drop runs at
+        // most once, so the inner guard is dropped exactly once.
+        unsafe { ManuallyDrop::drop(&mut self.inner) };
+    }
+}
+
+/// Exclusive guard for [`CheckedRwLock`].
+pub struct CheckedRwLockWriteGuard<'a, T: ?Sized> {
+    rank: Rank,
+    inner: ManuallyDrop<RwLockWriteGuard<'a, T>>,
+}
+
+impl<T: ?Sized> std::ops::Deref for CheckedRwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for CheckedRwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T: ?Sized> Drop for CheckedRwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        witness_release(self.rank);
+        // SAFETY: constructed around a live inner guard and Drop runs at
+        // most once, so the inner guard is dropped exactly once.
+        unsafe { ManuallyDrop::drop(&mut self.inner) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn ascending_acquisition_is_clean() {
+        let a = CheckedMutex::new(Rank::test(1, 0), 1u32);
+        let b = CheckedMutex::new(Rank::test(1, 1), 2u32);
+        let c = CheckedMutex::new(Rank::test(2, 0), 3u32);
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        let gc = c.lock().unwrap();
+        assert_eq!(*ga + *gb + *gc, 6);
+        assert_eq!(held_count(), if cfg!(debug_assertions) { 3 } else { 0 });
+        drop((ga, gb, gc));
+        assert_eq!(held_count(), 0);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "witness is debug-only")]
+    #[should_panic(expected = "lock rank inversion")]
+    fn descending_blocking_acquire_panics() {
+        let outer = CheckedMutex::new(Rank::test(2, 0), ());
+        let inner = CheckedMutex::new(Rank::test(1, 0), ());
+        let _g = outer.lock().unwrap();
+        let _bad = inner.lock().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "witness is debug-only")]
+    #[should_panic(expected = "lock rank inversion")]
+    fn same_rank_reacquire_panics() {
+        // Self-deadlock shape: same key is not strictly greater.
+        let a = CheckedMutex::new(Rank::test(3, 7), ());
+        let b = CheckedMutex::new(Rank::test(3, 7), ());
+        let _g = a.lock().unwrap();
+        let _bad = b.lock().unwrap();
+    }
+
+    #[test]
+    fn try_lock_descending_never_panics() {
+        let outer = CheckedMutex::new(Rank::test(2, 0), ());
+        let inner = CheckedMutex::new(Rank::test(1, 0), 41u32);
+        let _g = outer.lock().unwrap();
+        // The work-stealing shape: a lower-ranked probe is fine...
+        let stolen = inner.try_lock().unwrap();
+        assert_eq!(*stolen + 1, 42);
+        drop(stolen);
+        // ...and a held probe still participates in later checks.
+        let _again = inner.try_lock().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_drop_keeps_witness_balanced() {
+        let a = CheckedMutex::new(Rank::test(1, 0), ());
+        let b = CheckedMutex::new(Rank::test(2, 0), ());
+        let c = CheckedMutex::new(Rank::test(3, 0), ());
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        drop(ga); // drop the outermost first
+        let gc = c.lock().unwrap();
+        drop((gb, gc));
+        assert_eq!(held_count(), 0);
+    }
+
+    #[test]
+    fn rwlock_orders_and_releases() {
+        let stripe = CheckedRwLock::new(Rank::test(4, 0), vec![1, 2, 3]);
+        let registry = CheckedRwLock::new(Rank::test(5, 0), 0u64);
+        {
+            let r = stripe.read().unwrap();
+            let mut w = registry.write().unwrap();
+            *w += r.len() as u64;
+        }
+        assert_eq!(held_count(), 0);
+        assert_eq!(*registry.read().unwrap(), 3);
+    }
+
+    #[test]
+    fn condvar_wait_releases_and_reacquires_rank() {
+        let pair = Arc::new((CheckedMutex::new(Rank::test(6, 0), false), CheckedCondvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let waker = thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+        drop(g);
+        assert_eq!(held_count(), 0);
+        waker.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_times_out_and_rebalances() {
+        let m = CheckedMutex::new(Rank::test(6, 0), ());
+        let cv = CheckedCondvar::new();
+        let g = m.lock().unwrap();
+        let (g, timed_out) = cv.wait_timeout(g, Duration::from_millis(5)).unwrap();
+        assert!(timed_out.timed_out());
+        drop(g);
+        assert_eq!(held_count(), 0);
+    }
+
+    #[test]
+    fn contended_mutex_still_excludes() {
+        // The wrapper must not weaken the lock itself.
+        let m = Arc::new(CheckedMutex::new(Rank::test(1, 0), 0u64));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = Arc::clone(&m);
+            handles.push(thread::spawn(move || {
+                for _ in 0..1000 {
+                    *m.lock().unwrap() += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*m.lock().unwrap(), 4000);
+    }
+}

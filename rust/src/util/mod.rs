@@ -11,6 +11,7 @@ pub mod bench;
 pub mod cli;
 pub mod clock;
 pub mod json;
+pub mod lockcheck;
 pub mod log;
 pub mod lru;
 pub mod proptest;

@@ -1,0 +1,222 @@
+//! The ranked-lock witness in anger (DESIGN.md §2.9).
+//!
+//! Tier-1 `cargo test` runs in debug, so every store/WAL lock in these
+//! tests goes through the live `util::lockcheck` witness: a clean run
+//! *is* the machine-checked proof that the exercised interleavings obey
+//! the global rank order.  The negative tests prove the witness is
+//! actually on: a seeded inversion against the real rank table must
+//! panic, and the `try_lock` escape hatch must not.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use sashimi::store::{
+    Scheduler, StoreConfig, SyncPolicy, TaskId, TicketStore, WalConfig, WalStore,
+};
+use sashimi::store::NaiveStore;
+use sashimi::util::json::Value;
+use sashimi::util::lockcheck::{held_count, CheckedMutex, Rank};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "sashimi-lockcheck-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn args(n: usize) -> Vec<Value> {
+    (0..n).map(|i| Value::num(i as f64)).collect()
+}
+
+/// A blocking acquire that descends the *real* rank table (a dispatch
+/// shard held, then the verify mutex wanted) is exactly the shape that
+/// can deadlock against `vote()`'s verify→shard order; the witness must
+/// refuse it before blocking.
+#[test]
+#[cfg_attr(not(debug_assertions), ignore = "lockcheck witness is debug-only")]
+#[should_panic(expected = "lock rank inversion")]
+fn seeded_rank_inversion_panics_in_debug() {
+    let shard = CheckedMutex::new(Rank::dispatch_shard(0), ());
+    let verify = CheckedMutex::new(Rank::verify_state(), ());
+    let _held = shard.lock().unwrap();
+    let _inverted = verify.lock().unwrap();
+}
+
+/// The work-stealing escape hatch: a lower-ranked `try_lock` probe
+/// (stealing scans probe shards below the home shard) records but never
+/// asserts, because a failed probe is dropped, not waited on.
+#[test]
+fn try_lock_steal_shape_never_panics() {
+    let high = CheckedMutex::new(Rank::dispatch_shard(3), 0u32);
+    let low = CheckedMutex::new(Rank::dispatch_shard(1), 7u32);
+    let _home = high.lock().unwrap();
+    let stolen = low.try_lock().unwrap();
+    assert_eq!(*stolen, 7);
+    drop(stolen);
+    drop(_home);
+    assert_eq!(held_count(), 0);
+}
+
+/// Drive a sharded, verifying `IndexedStore` from concurrent clients
+/// through every lock-nesting path the store has: create (stripes +
+/// ledger registry), dispatch + steal (shard mutexes), quorum votes
+/// (verify held across a shard acquire), release/error, and the
+/// condvar-backed result wait.  Zero rank panics = the discipline
+/// holds under contention.
+#[test]
+fn wrapped_indexed_store_runs_clean_under_contention() {
+    let cfg = StoreConfig { replication: 2, quorum: 2, ..StoreConfig::default() };
+    let store = Arc::new(TicketStore::with_dispatch_shards(cfg, 4));
+    let task = TaskId(1);
+    let n = 24usize;
+    store.create_tickets(task, "lockcheck", args(n), 0);
+
+    let mut workers = Vec::new();
+    for w in 0..4u64 {
+        let store = Arc::clone(&store);
+        workers.push(thread::spawn(move || {
+            let client = format!("client-{w}");
+            for round in 0..400u64 {
+                let now = round * 50;
+                let got = store.next_tickets(&client, now, 4);
+                for (i, t) in got.iter().enumerate() {
+                    match i % 3 {
+                        // Matching votes: two clients voting num(id)
+                        // reach quorum and complete the ticket.
+                        0 | 1 => {
+                            let v = Value::num(t.id.0 as f64);
+                            let _ = store.vote(&client, t.id, v, now);
+                        }
+                        _ => {
+                            if round % 2 == 0 {
+                                store.release_batch_from(&client, &[t.id]);
+                            } else {
+                                let _ = store.report_error_from(&client, t.id, "flaky".into());
+                            }
+                        }
+                    }
+                }
+                if store.progress(Some(task)).done == n {
+                    break;
+                }
+            }
+        }));
+    }
+    for w in workers {
+        w.join().expect("no rank-inversion panic in any worker");
+    }
+
+    // Finish any stragglers single-threaded, then collect through the
+    // ledger condvar path.
+    let mut now = 1_000_000u64;
+    while store.progress(Some(task)).done < n {
+        now += 400_000;
+        for t in store.next_tickets("finisher-a", now, n) {
+            let _ = store.vote("finisher-a", t.id, Value::num(t.id.0 as f64), now);
+        }
+        for t in store.next_tickets("finisher-b", now + 1, n) {
+            let _ = store.vote("finisher-b", t.id, Value::num(t.id.0 as f64), now + 1);
+        }
+    }
+    let results = store.wait_results_timeout(task, 10_000).expect("task done");
+    assert_eq!(results.len(), n);
+    let _ = store.drain_errors();
+    assert_eq!(held_count(), 0);
+}
+
+/// Same discipline proof for the durable store: per-shard WAL stream
+/// locks are held *across* the inner store calls (the outermost store
+/// rank), the group-commit flusher thread takes stream locks from its
+/// own thread, and a sharded checkpoint takes all of them plus the
+/// full snapshot nesting (stripes → ledger registry → ledgers under
+/// stream locks).  Recovery then replays single-threaded through the
+/// same wrappers.
+#[test]
+fn wrapped_wal_store_sharded_suite_runs_clean() {
+    let dir = temp_dir("sharded");
+    let cfg = StoreConfig::default();
+    let wal_cfg = WalConfig {
+        sync: SyncPolicy::GroupCommitMs(5),
+        checkpoint_every: 64,
+        dispatch_shards: 4,
+        ..WalConfig::default()
+    };
+    let task = TaskId(7);
+    let n = 32usize;
+    let done_before = {
+        let store = Arc::new(WalStore::open(&dir, cfg.clone(), wal_cfg.clone()).unwrap());
+        store.create_tickets(task, "wal-lockcheck", args(n), 0);
+        let mut workers = Vec::new();
+        for w in 0..4u64 {
+            let store = Arc::clone(&store);
+            workers.push(thread::spawn(move || {
+                let client = format!("wal-client-{w}");
+                for round in 0..200u64 {
+                    let now = round * 1_000;
+                    let batch = store.next_tickets(&client, now, 4);
+                    if batch.is_empty() && store.progress(Some(TaskId(7))).done == 32 {
+                        break;
+                    }
+                    let votes: Vec<_> = batch
+                        .iter()
+                        .map(|t| (t.id, Value::num(t.id.0 as f64)))
+                        .collect();
+                    if round % 5 == 4 {
+                        if let Some(first) = batch.first() {
+                            store.release_batch_from(&client, &[first.id]);
+                        }
+                    }
+                    let _ = store.vote_batch(&client, votes, now);
+                }
+            }));
+        }
+        for w in workers {
+            w.join().expect("no rank-inversion panic in any WAL worker");
+        }
+        store.checkpoint_now().unwrap();
+        store.sync_now().unwrap();
+        store.progress(Some(task)).done
+    };
+
+    let reopened = WalStore::open(&dir, cfg, wal_cfg).unwrap();
+    assert_eq!(reopened.progress(Some(task)).done, done_before);
+    assert_eq!(held_count(), 0);
+    drop(reopened);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The reference store's single mutex + condvar pair through the
+/// checked wrappers: a consumer blocks in `next_completion` (the rank
+/// is released for the wait, re-asserted on wake) while a producer
+/// completes from another thread.
+#[test]
+fn naive_store_condvar_paths_run_clean() {
+    let store = Arc::new(NaiveStore::new(StoreConfig::default()));
+    let task = TaskId(3);
+    let ids = store.create_tickets(task, "naive-lockcheck", args(2), 0);
+
+    let producer = {
+        let store = Arc::clone(&store);
+        let ids = ids.clone();
+        thread::spawn(move || {
+            for id in ids {
+                let t = store.next_ticket("naive-client", 0).expect("ticket available");
+                assert_eq!(t.id, id);
+                store.complete(t.id, Value::num(1.0)).unwrap();
+            }
+        })
+    };
+    for _ in 0..2 {
+        let got = store.next_completion(task, 10_000);
+        assert!(got.is_some(), "completion arrived before the deadline");
+    }
+    producer.join().unwrap();
+    assert!(store.wait_results_timeout(task, 10_000).is_some());
+    assert_eq!(held_count(), 0);
+}

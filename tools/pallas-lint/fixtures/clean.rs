@@ -1,0 +1,25 @@
+// pallas-lint-fixture: rust/src/store/fixture_clean.rs expect=none
+// Disciplined code: ranked wrapper lock, SAFETY-commented unsafe, and
+// test-region residue that the #[cfg(test)] exemption must ignore.
+
+use crate::util::lockcheck::{CheckedMutex, Rank};
+
+pub fn build() -> CheckedMutex<u32> {
+    CheckedMutex::new(Rank::test(1, 0), 0)
+}
+
+pub fn read_first(p: *const u8) -> u8 {
+    // SAFETY: callers pass a pointer to at least one readable byte.
+    unsafe { *p }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    #[test]
+    fn test_residue_is_exempt() {
+        let _ = Mutex::new(Instant::now());
+    }
+}

@@ -1,0 +1,9 @@
+// pallas-lint-fixture: rust/src/sim/fixture.rs expect=determinism
+// Wall-clock time in a determinism-critical path: a soak transcript
+// that reads the host clock is no longer a pure function of the seed.
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,9 @@
+// pallas-lint-fixture: rust/src/store/fixture.rs expect=raw-lock
+// A raw std::sync lock constructed in lock-disciplined code: the ranked
+// witness cannot see it, so the linter must refuse it.
+
+use std::sync::Mutex;
+
+pub fn build() -> Mutex<u32> {
+    Mutex::new(0)
+}

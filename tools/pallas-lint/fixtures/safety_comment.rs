@@ -1,0 +1,6 @@
+// pallas-lint-fixture: rust/src/transport/fixture.rs expect=safety-comment
+// An unsafe block with no `// SAFETY:` justification above it.
+
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,24 @@
+// pallas-lint-fixture: rust/src/store/wal.rs expect=wal-replay
+// OP_ORPHAN is emitted by an append site but recover() has no replay
+// arm for it — a record type that would be silently lost on restart.
+
+const OP_KEPT: u8 = 1;
+const OP_ORPHAN: u8 = 2;
+
+struct Enc(Vec<u8>);
+impl Enc {
+    fn new(op: u8) -> Enc {
+        Enc(vec![op])
+    }
+}
+
+pub fn append_both() -> (Vec<u8>, Vec<u8>) {
+    (Enc::new(OP_KEPT).0, Enc::new(OP_ORPHAN).0)
+}
+
+pub fn replay(op: u8) {
+    match op {
+        OP_KEPT => {}
+        _ => {}
+    }
+}

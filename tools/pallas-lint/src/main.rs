@@ -1,0 +1,664 @@
+//! `pallas-lint` — repo-specific static checks the stock toolchain
+//! cannot express (DESIGN.md §2.9).  Std-only by design, like the rest
+//! of the tree; a hand-rolled line scanner, not a parser, because every
+//! rule here is lexical.
+//!
+//! Rules:
+//!
+//! * **raw-lock** — no raw `std::sync::Mutex`/`RwLock`/`Condvar`
+//!   construction in `store/`, `coordinator/`, `transport/`: every lock
+//!   there must be a ranked `util::lockcheck` wrapper so the debug-build
+//!   deadlock witness sees it.
+//! * **determinism** — no `Instant::now`/`SystemTime::now`/`HashMap` in
+//!   the determinism-critical paths (`sim/`, `store/wal.rs`): soak
+//!   transcripts and WAL replay must be a pure function of the seed, so
+//!   time comes from `util::clock::Clock` and iteration order from
+//!   `BTreeMap`.
+//! * **safety-comment** — every `unsafe` site carries a `// SAFETY:`
+//!   comment in its immediately preceding comment block (or same line).
+//! * **wal-replay** — every WAL opcode emitted by an append site in
+//!   `store/wal.rs` has a matching replay arm, so a new record type
+//!   cannot ship without recovery coverage.
+//!
+//! Findings in `#[cfg(test)]` regions (tests sit at file bottoms
+//! throughout this tree) are exempt.  Residue that is genuinely fine is
+//! suppressed via `allowlist.txt` (`rule|path-suffix|pattern|why`), one
+//! justified line per entry.
+//!
+//! `--self-test` runs the rules over `fixtures/` — each fixture's
+//! header names the rule it must trip (or `none`), which is the CI
+//! proof that every rule actually fires.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Debug)]
+struct Finding {
+    path: String,
+    line: usize, // 1-based
+    rule: &'static str,
+    msg: String,
+}
+
+/// One `rule|path-suffix|pattern|justification` suppression.
+struct Allow {
+    rule: String,
+    path_suffix: String,
+    pattern: String,
+    #[allow(dead_code)]
+    justification: String,
+    used: std::cell::Cell<bool>,
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut allowlist_path: Option<PathBuf> = None;
+    let mut self_test = false;
+    let mut args = env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = PathBuf::from(args.next().expect("--root needs a dir")),
+            "--allowlist" => {
+                allowlist_path = Some(PathBuf::from(args.next().expect("--allowlist needs a file")))
+            }
+            "--self-test" => self_test = true,
+            other => {
+                eprintln!("pallas-lint: unknown argument {other:?}");
+                eprintln!("usage: pallas-lint [--root DIR] [--allowlist FILE] [--self-test]");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if self_test {
+        return run_self_test();
+    }
+
+    let allowlist_path = allowlist_path
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("allowlist.txt"));
+    let allows = match load_allowlist(&allowlist_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-lint: cannot read {}: {e}", allowlist_path.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("pallas-lint: no .rs files under {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for f in &files {
+        let src = match fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("pallas-lint: cannot read {}: {e}", f.display());
+                return ExitCode::from(2);
+            }
+        };
+        let path = f.to_string_lossy().replace('\\', "/");
+        for finding in lint_file(&path, &src) {
+            let raw_line = src.lines().nth(finding.line - 1).unwrap_or("");
+            if allows.iter().any(|a| a.matches(&finding, raw_line)) {
+                suppressed += 1;
+            } else {
+                findings.push(finding);
+            }
+        }
+    }
+
+    for a in &allows {
+        if !a.used.get() {
+            eprintln!(
+                "pallas-lint: warning: stale allow-list entry ({}|{}|{})",
+                a.rule, a.path_suffix, a.pattern
+            );
+        }
+    }
+
+    if findings.is_empty() {
+        println!(
+            "pallas-lint: {} file(s) clean ({} finding(s) allow-listed)",
+            files.len(),
+            suppressed
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+        }
+        println!("pallas-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn load_allowlist(path: &Path) -> std::io::Result<Vec<Allow>> {
+    let mut out = Vec::new();
+    for (i, line) in fs::read_to_string(path)?.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(4, '|');
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(rule), Some(suffix), Some(pattern), Some(why)) if !why.trim().is_empty() => {
+                out.push(Allow {
+                    rule: rule.trim().to_string(),
+                    path_suffix: suffix.trim().to_string(),
+                    pattern: pattern.trim().to_string(),
+                    justification: why.trim().to_string(),
+                    used: std::cell::Cell::new(false),
+                });
+            }
+            _ => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "{}:{}: expected rule|path-suffix|pattern|justification",
+                        path.display(),
+                        i + 1
+                    ),
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+impl Allow {
+    fn matches(&self, f: &Finding, raw_line: &str) -> bool {
+        let hit =
+            self.rule == f.rule && f.path.ends_with(&self.path_suffix) && raw_line.contains(&self.pattern);
+        if hit {
+            self.used.set(true);
+        }
+        hit
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scanner: per-line code with strings and comments blanked out
+// ---------------------------------------------------------------------------
+
+/// Blank every string/char literal and comment to spaces, preserving
+/// line structure, so the rules match only real code tokens.  The raw
+/// lines stay available for comment-text checks (`// SAFETY:`).
+fn blank_noncode(src: &str) -> Vec<String> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let b = src.as_bytes();
+    let mut out = String::with_capacity(src.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    let mut prev_ident = false; // was the previous code byte an identifier byte?
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push('\n');
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    st = St::LineComment;
+                    out.push(' ');
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    st = St::BlockComment(1);
+                    out.push(' ');
+                } else if c == b'"' {
+                    st = St::Str;
+                    out.push(' ');
+                } else if (c == b'r' || c == b'R') && !prev_ident && is_raw_string_start(b, i) {
+                    let hashes = count_hashes(b, i + 1);
+                    st = St::RawStr(hashes);
+                    out.push(' ');
+                    // Skip the r##…# prefix and opening quote.
+                    for _ in 0..(hashes as usize + 1) {
+                        i += 1;
+                        out.push(' ');
+                    }
+                } else if c == b'\'' && !prev_ident && is_char_literal(b, i) {
+                    st = St::Char;
+                    out.push(' ');
+                } else {
+                    out.push(c as char);
+                    prev_ident = c.is_ascii_alphanumeric() || c == b'_';
+                    i += 1;
+                    continue;
+                }
+                prev_ident = false;
+            }
+            St::LineComment => out.push(' '),
+            St::BlockComment(depth) => {
+                if c == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    continue;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    st = St::BlockComment(depth + 1);
+                    continue;
+                }
+                out.push(' ');
+            }
+            St::Str => {
+                if c == b'\\' && i + 1 < b.len() {
+                    out.push(' ');
+                    if b[i + 1] != b'\n' {
+                        out.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                } else {
+                    out.push(' ');
+                    if c == b'"' {
+                        st = St::Code;
+                    }
+                }
+            }
+            St::RawStr(hashes) => {
+                out.push(' ');
+                if c == b'"' && closes_raw_string(b, i, hashes) {
+                    for _ in 0..hashes as usize {
+                        i += 1;
+                        out.push(' ');
+                    }
+                    st = St::Code;
+                }
+            }
+            St::Char => {
+                if c == b'\\' && i + 1 < b.len() && b[i + 1] != b'\n' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    continue;
+                }
+                out.push(' ');
+                if c == b'\'' {
+                    st = St::Code;
+                }
+            }
+        }
+        i += 1;
+    }
+    out.lines().map(|l| l.to_string()).collect()
+}
+
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+fn count_hashes(b: &[u8], mut i: usize) -> u32 {
+    let mut n = 0;
+    while i < b.len() && b[i] == b'#' {
+        n += 1;
+        i += 1;
+    }
+    n
+}
+
+fn closes_raw_string(b: &[u8], i: usize, hashes: u32) -> bool {
+    let mut j = i + 1;
+    for _ in 0..hashes {
+        if j >= b.len() || b[j] != b'#' {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// `'x'` / `'\n'` is a char literal; `'a` in `<'a>` is a lifetime.
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    if i + 2 < b.len() && b[i + 1] == b'\\' {
+        return true;
+    }
+    i + 2 < b.len() && b[i + 2] == b'\''
+}
+
+/// Byte offset of every `needle` occurrence in `code` not preceded by
+/// an identifier byte (so `Mutex::new` does not match `CheckedMutex::new`).
+fn token_positions(code: &str, needle: &str) -> Vec<usize> {
+    let needs_boundary = needle
+        .as_bytes()
+        .first()
+        .is_some_and(|c| c.is_ascii_alphanumeric() || *c == b'_');
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(needle) {
+        let at = from + rel;
+        let bounded = !needs_boundary || at == 0 || {
+            let prev = code.as_bytes()[at - 1];
+            !(prev.is_ascii_alphanumeric() || prev == b'_')
+        };
+        if bounded {
+            out.push(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    out
+}
+
+fn has_token(code: &str, needle: &str) -> bool {
+    !token_positions(code, needle).is_empty()
+}
+
+/// Index of the first `#[cfg(test)]` line — everything from there to EOF
+/// is test code (house style keeps tests at the bottom) and exempt.
+fn test_region_start(code_lines: &[String]) -> usize {
+    code_lines
+        .iter()
+        .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+        .unwrap_or(code_lines.len())
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn lint_file(path: &str, src: &str) -> Vec<Finding> {
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let code_lines = blank_noncode(src);
+    let limit = test_region_start(&code_lines);
+    let mut out = Vec::new();
+
+    let in_lock_scope = ["/store/", "/coordinator/", "/transport/"]
+        .iter()
+        .any(|d| path.contains(d));
+    let in_determinism_scope = path.contains("/sim/") || path.ends_with("store/wal.rs");
+
+    for (i, code) in code_lines.iter().enumerate().take(limit) {
+        if in_lock_scope {
+            for raw_ctor in ["Mutex::new", "RwLock::new", "Condvar::new"] {
+                if has_token(code, raw_ctor) {
+                    out.push(Finding {
+                        path: path.to_string(),
+                        line: i + 1,
+                        rule: "raw-lock",
+                        msg: format!(
+                            "raw std::sync::{raw_ctor} in lock-disciplined code; use the ranked \
+                             util::lockcheck wrapper (or allow-list with a justification)"
+                        ),
+                    });
+                }
+            }
+        }
+        if in_determinism_scope {
+            for (tok, fix) in [
+                ("Instant::now(", "util::clock::Clock"),
+                ("SystemTime::now(", "util::clock::Clock"),
+                ("HashMap", "BTreeMap"),
+            ] {
+                if has_token(code, tok) {
+                    out.push(Finding {
+                        path: path.to_string(),
+                        line: i + 1,
+                        rule: "determinism",
+                        msg: format!(
+                            "{} in a determinism-critical path; use {fix} so transcripts stay a \
+                             pure function of the seed (or allow-list with a justification)",
+                            tok.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+        if has_token(code, "unsafe") && !has_safety_comment(&raw_lines, &code_lines, i) {
+            out.push(Finding {
+                path: path.to_string(),
+                line: i + 1,
+                rule: "safety-comment",
+                msg: "unsafe without a `// SAFETY:` comment in the preceding comment block"
+                    .to_string(),
+            });
+        }
+    }
+
+    if path.ends_with("store/wal.rs") {
+        out.extend(check_wal_replay(path, &code_lines, limit));
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// `// SAFETY:` on the same line, or anywhere in the contiguous block of
+/// comments/attributes directly above.  Consecutive one-line
+/// `unsafe impl`s may share one block (the runtime Send/Sync pattern).
+fn has_safety_comment(raw: &[&str], code: &[String], i: usize) -> bool {
+    if raw[i].contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if t.contains("SAFETY:") {
+            return true;
+        }
+        let ct = code[j].trim();
+        let skippable = t.is_empty()
+            || t.starts_with("//")
+            || t.starts_with("#[")
+            || ct.starts_with("unsafe impl");
+        if !skippable {
+            return false;
+        }
+    }
+    false
+}
+
+/// Every opcode emitted by an append site (`Enc::new(OP_X)` / `.u8(OP_X`)
+/// must have a replay arm (`OP_X =>`) somewhere in the file.
+fn check_wal_replay(path: &str, code_lines: &[String], limit: usize) -> Vec<Finding> {
+    let mut emitted: Vec<(String, usize)> = Vec::new(); // (opcode, first emit line)
+    let mut armed: Vec<String> = Vec::new();
+    for (i, code) in code_lines.iter().enumerate() {
+        for pat in ["Enc::new(OP_", ".u8(OP_"] {
+            for at in token_positions(code, pat) {
+                if i >= limit {
+                    continue; // test-only emitters don't demand arms
+                }
+                let name = opcode_at(code, at + pat.len() - "OP_".len());
+                if !name.is_empty() && !emitted.iter().any(|(n, _)| *n == name) {
+                    emitted.push((name, i + 1));
+                }
+            }
+        }
+        for at in token_positions(code, "OP_") {
+            let name = opcode_at(code, at);
+            if !name.is_empty() && code[at + name.len()..].trim_start().starts_with("=>") {
+                armed.push(name);
+            }
+        }
+    }
+    emitted
+        .into_iter()
+        .filter(|(name, _)| !armed.contains(name))
+        .map(|(name, line)| Finding {
+            path: path.to_string(),
+            line,
+            rule: "wal-replay",
+            msg: format!("opcode {name} is emitted by an append site but has no replay arm"),
+        })
+        .collect()
+}
+
+/// The `OP_…` identifier starting at byte `at`.
+fn opcode_at(code: &str, at: usize) -> String {
+    code[at..]
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Self-test over fixtures/
+// ---------------------------------------------------------------------------
+
+fn run_self_test() -> ExitCode {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    let mut files = Vec::new();
+    collect_rs(&dir, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("pallas-lint: no fixtures under {}", dir.display());
+        return ExitCode::from(2);
+    }
+    let mut failed = false;
+    for f in &files {
+        let src = fs::read_to_string(f).expect("fixture readable");
+        let header = src.lines().next().unwrap_or("");
+        let Some(rest) = header.strip_prefix("// pallas-lint-fixture: ") else {
+            eprintln!("{}: missing `// pallas-lint-fixture: <path> expect=<rule>` header", f.display());
+            failed = true;
+            continue;
+        };
+        let mut parts = rest.split_whitespace();
+        let (Some(vpath), Some(expect)) = (parts.next(), parts.next().and_then(|e| e.strip_prefix("expect="))) else {
+            eprintln!("{}: malformed fixture header", f.display());
+            failed = true;
+            continue;
+        };
+        let findings = lint_file(vpath, &src);
+        let ok = if expect == "none" {
+            findings.is_empty()
+        } else {
+            findings.len() == 1 && findings[0].rule == expect
+        };
+        if ok {
+            println!("self-test ok: {} trips {expect}", f.file_name().unwrap().to_string_lossy());
+        } else {
+            eprintln!(
+                "self-test FAILED: {} expected exactly one `{expect}` finding, got {:?}",
+                f.display(),
+                findings
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanking_strips_strings_and_comments() {
+        let src = "let a = \"Mutex::new\"; // Mutex::new in a comment\nlet b = Mutex::new(0);\n";
+        let lines = blank_noncode(src);
+        assert!(!has_token(&lines[0], "Mutex::new"));
+        assert!(has_token(&lines[1], "Mutex::new"));
+    }
+
+    #[test]
+    fn blanking_handles_raw_strings_and_chars() {
+        let src = "let s = r#\"Instant::now()\"#;\nlet c = '\"';\nlet t = Instant::now();\n";
+        let lines = blank_noncode(src);
+        assert!(!has_token(&lines[0], "Instant::now("));
+        assert!(has_token(&lines[2], "Instant::now("));
+        // The char literal must not open a string state.
+        assert!(has_token(&lines[1], "let"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet m = Mutex::new(1);\n";
+        let lines = blank_noncode(src);
+        assert!(has_token(&lines[1], "Mutex::new"));
+    }
+
+    #[test]
+    fn token_boundary_excludes_wrappers() {
+        assert!(!has_token("CheckedMutex::new(rank, v)", "Mutex::new"));
+        assert!(has_token("std::sync::Mutex::new(v)", "Mutex::new"));
+        assert!(!has_token("let unsafer = 1;", "unsafe"));
+    }
+
+    #[test]
+    fn safety_walkback_accepts_block_and_rejects_bare() {
+        let src = "// SAFETY: fine because reasons.\nlet x = unsafe { f() };\nlet y = unsafe { g() };\n";
+        let raw: Vec<&str> = src.lines().collect();
+        let code = blank_noncode(src);
+        assert!(has_safety_comment(&raw, &code, 1));
+        assert!(!has_safety_comment(&raw, &code, 2));
+    }
+
+    #[test]
+    fn safety_walkback_shares_block_across_unsafe_impls() {
+        let src = "// SAFETY: shared justification.\nunsafe impl Send for A {}\nunsafe impl Sync for A {}\n";
+        let raw: Vec<&str> = src.lines().collect();
+        let code = blank_noncode(src);
+        assert!(has_safety_comment(&raw, &code, 1));
+        assert!(has_safety_comment(&raw, &code, 2));
+    }
+
+    #[test]
+    fn test_region_is_exempt() {
+        let src = "fn main() {}\n#[cfg(test)]\nmod tests {\n    use std::sync::Mutex;\n    fn f() { let _ = Mutex::new(0); }\n}\n";
+        let findings = lint_file("rust/src/store/x.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn wal_replay_flags_armless_opcode() {
+        let src = "const OP_A: u8 = 1;\nconst OP_B: u8 = 2;\nfn f() { let e = Enc::new(OP_A); }\nfn g(x: u8) { match x { OP_A => {} _ => {} } }\nfn h() { let e = Enc::new(OP_B); }\n";
+        let findings = lint_file("rust/src/store/wal.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "wal-replay");
+        assert!(findings[0].msg.contains("OP_B"));
+    }
+
+    #[test]
+    fn determinism_scope_is_path_limited() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(lint_file("rust/src/sim/mod.rs", src).len(), 1);
+        assert_eq!(lint_file("rust/src/store/wal.rs", src).len(), 1);
+        assert!(lint_file("rust/src/store/sched.rs", src).is_empty());
+    }
+}
